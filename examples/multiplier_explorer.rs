@@ -1,0 +1,84 @@
+//! Multiplier design-space explorer: every architecture × width, resources
+//! + timing + power as a table or CSV — the ablation behind the paper's
+//! §IV choice of the Karatsuba-Ofman multiplier.
+//!
+//! ```sh
+//! cargo run --release --example multiplier_explorer [-- --csv out.csv]
+//! ```
+
+use kom_accel::cli::Args;
+use kom_accel::multipliers::{generate, karatsuba, MultKind, MultiplierSpec};
+use kom_accel::report::Table;
+use kom_accel::{power, sta, techmap};
+
+fn main() -> kom_accel::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let mut table = Table::new(&[
+        "multiplier",
+        "width",
+        "stages",
+        "LUTs",
+        "regs",
+        "carry",
+        "CP(ns)",
+        "fmax(MHz)",
+        "power(mW)",
+    ]);
+
+    for kind in MultKind::ALL {
+        for width in [8u32, 16, 32] {
+            if kind == MultKind::Booth && width % 2 != 0 {
+                continue;
+            }
+            for stages in [None, Some(4u32)] {
+                let spec = match stages {
+                    None => MultiplierSpec::comb(kind, width),
+                    Some(s) => MultiplierSpec::pipelined(kind, width, s),
+                };
+                let g = generate(spec)?;
+                let mapped = techmap::map(&g.netlist)?;
+                let t = sta::analyze(&mapped);
+                let f_hz = t.fmax_mhz.map(|m| m * 1e6).unwrap_or(100e6);
+                let p = power::estimate(&mapped, f_hz, 120)?;
+                table.row(vec![
+                    kind.name().to_string(),
+                    width.to_string(),
+                    stages.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
+                    mapped.report.slice_luts.to_string(),
+                    mapped.report.slice_registers.to_string(),
+                    mapped.report.carry_cells.to_string(),
+                    format!("{:.2}", t.critical_path_ns),
+                    t.fmax_mhz
+                        .map(|m| format!("{m:.0}"))
+                        .unwrap_or_else(|| "-".into()),
+                    format!("{:.1}", p.total_mw()),
+                ]);
+            }
+        }
+    }
+
+    // Karatsuba leaf-size ablation (the "area optimized" design choice)
+    println!("== Karatsuba leaf-size ablation (32-bit) ==");
+    let mut ablate = Table::new(&["leaf", "LUTs", "CP(ns)", "leaf mults"]);
+    for leaf in [3usize, 4, 6, 8, 12, 16] {
+        let nl = karatsuba::build_with_leaf(32, leaf)?;
+        let mapped = techmap::map(&nl)?;
+        let t = sta::analyze(&mapped);
+        ablate.row(vec![
+            leaf.to_string(),
+            mapped.report.slice_luts.to_string(),
+            format!("{:.2}", t.critical_path_ns),
+            karatsuba::leaf_mult_count(32, leaf).to_string(),
+        ]);
+    }
+    println!("{}", ablate.to_ascii());
+
+    match args.get("csv") {
+        Some(path) => {
+            std::fs::write(path, table.to_csv())?;
+            println!("wrote {path}");
+        }
+        None => println!("{}", table.to_ascii()),
+    }
+    Ok(())
+}

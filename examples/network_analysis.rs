@@ -1,0 +1,69 @@
+//! §V network analysis: AlexNet / VGG16 / VGG19 kernel histograms and the
+//! matrix-unit resource model, side by side with the paper's claims.
+//!
+//! ```sh
+//! cargo run --release --example network_analysis
+//! ```
+
+use kom_accel::cnn::analysis;
+use kom_accel::cnn::networks::{Network, NetworkKind};
+use kom_accel::multipliers::{MultKind, MultiplierSpec};
+use kom_accel::report::Table;
+
+fn main() -> kom_accel::Result<()> {
+    // paper §I claims: (network, k, filters)
+    let paper_claims = [
+        ("AlexNet", 11usize, 96usize),
+        ("AlexNet", 5, 256),
+        ("AlexNet", 3, 1024),
+        ("VGG16", 3, 3968),
+        ("VGG19", 3, 4992),
+    ];
+
+    let mut t = Table::new(&["network", "kernel", "filters (ours)", "filters (paper)", "match"]);
+    for kind in [NetworkKind::AlexNet, NetworkKind::Vgg16, NetworkKind::Vgg19] {
+        let net = Network::build(kind);
+        let h = analysis::filter_histogram(&net);
+        for (k, count) in &h {
+            let paper = paper_claims
+                .iter()
+                .find(|(n, pk, _)| *n == net.name && pk == k)
+                .map(|(_, _, c)| *c);
+            t.row(vec![
+                net.name.clone(),
+                format!("{k}x{k}"),
+                count.to_string(),
+                paper.map(|c| c.to_string()).unwrap_or_else(|| "-".into()),
+                match paper {
+                    Some(p) if p == *count => "exact".into(),
+                    Some(p) => format!("{:+.1}%", (*count as f64 - p as f64) / p as f64 * 100.0),
+                    None => "-".into(),
+                },
+            ]);
+        }
+    }
+    println!("== Kernel histograms vs paper §I ==\n{}", t.to_ascii());
+
+    // per-network totals + matrix-unit aggregation
+    let spec = MultiplierSpec::pipelined(MultKind::KaratsubaOfman, 16, 3);
+    let mut t2 = Table::new(&[
+        "network",
+        "weights(M)",
+        "GMAC/inf",
+        "engine LUTs (multiplexed)",
+        "worst CP (ns)",
+    ]);
+    for kind in [NetworkKind::AlexNet, NetworkKind::Vgg16, NetworkKind::Vgg19] {
+        let net = Network::build(kind);
+        let r = analysis::network_resources(&net, spec)?;
+        t2.row(vec![
+            net.name.clone(),
+            format!("{:.1}", net.total_weights()? as f64 / 1e6),
+            format!("{:.2}", net.total_macs()? as f64 / 1e9),
+            r.total_multiplexed.slice_luts.to_string(),
+            format!("{:.2}", r.worst_cp_ns),
+        ]);
+    }
+    println!("== Network-level accelerator model (16-bit KOM engine) ==\n{}", t2.to_ascii());
+    Ok(())
+}

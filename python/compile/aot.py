@@ -1,0 +1,96 @@
+"""AOT lowering: jax graphs -> HLO *text* artifacts for the rust runtime.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` 0.1.6 crate binds) rejects; the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md and gen_hlo.py there.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_tuple(fn):
+    """Wrap so outputs are a 1-tuple (rust side unwraps with to_tuple1)."""
+
+    def wrapped(*args):
+        return (fn(*args),)
+
+    return wrapped
+
+
+def artifact_specs():
+    """name -> (fn, example arg ShapeDtypeStructs)."""
+    i32 = jnp.int32
+    s = jax.ShapeDtypeStruct
+    return {
+        # the end-to-end model: input + 6 parameter tensors
+        "tiny_cnn": (
+            model.tiny_forward,
+            [s((1, 16, 16), i32)] + model.tiny_param_shapes(),
+        ),
+        # standalone Karatsuba kernel at a bench-friendly size
+        "kom_matmul_64": (
+            model.kom_matmul_graph,
+            [s((64, 64), i32), s((64, 64), i32)],
+        ),
+        # one conv layer (8 ch, 16x16, 3x3)
+        "conv3x3": (
+            model.conv3x3_graph,
+            [s((1, 16, 16), i32), s((8, 1, 3, 3), i32)],
+        ),
+        # Fig 2 FIR: 8 taps x 64 samples
+        "fir8": (
+            model.fir_graph,
+            [s((8,), i32), s((64,), i32)],
+        ),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = []
+    for name, (fn, arg_specs) in artifact_specs().items():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(lower_tuple(fn)).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        shapes = ";".join(
+            f"{spec.dtype}[{','.join(map(str, spec.shape))}]" for spec in arg_specs
+        )
+        manifest.append(f"{name}\t{shapes}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.tsv"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {os.path.join(args.out, 'manifest.tsv')}")
+
+
+if __name__ == "__main__":
+    main()

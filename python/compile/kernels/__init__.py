@@ -1,0 +1,6 @@
+"""L1 Pallas kernels: the paper's compute hot-spot (§IV Karatsuba-Ofman
+multiplication) re-expressed for the MXU, plus the tiled fixed-point matmul
+used by the conv layers. See DESIGN.md §6 (Hardware-Adaptation)."""
+
+from .karatsuba import karatsuba_matmul, split_q88  # noqa: F401
+from . import ref  # noqa: F401

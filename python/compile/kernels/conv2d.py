@@ -1,0 +1,49 @@
+"""L1/L2 bridge: integer conv2d whose hot loop is the Karatsuba Pallas
+matmul.
+
+"In the case of the 2D convolution utilised by CNN, multiplication refers
+to matrix multiplication followed by shifting and adding" (§II) — the conv
+is lowered to im2col patches × reshaped weights, and that matmul is the
+Pallas kernel. Patch extraction is plain jax (gather/reshape — cheap,
+bandwidth-bound); the MXU-shaped work all lands in the kernel.
+"""
+
+import jax.numpy as jnp
+
+from .karatsuba import karatsuba_matmul
+
+
+def _round_up(x, m):
+    return (x + m - 1) // m * m
+
+
+def conv2d_kom(x, w, stride=1, pad=0):
+    """Integer conv2d via im2col + Karatsuba matmul.
+
+    x: [cin, h, wd] int32 (Q8.8 payload), w: [cout, cin, k, k] int32.
+    Returns [cout, ho, wo] int32 (full Q16.16 products, unshifted).
+    """
+    cin, h, wd = x.shape
+    cout, cin2, kh, kw = w.shape
+    assert cin == cin2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (wd + 2 * pad - kw) // stride + 1
+    patches = jnp.stack(
+        [
+            xp[:, i * stride : i * stride + kh, j * stride : j * stride + kw].reshape(-1)
+            for i in range(ho)
+            for j in range(wo)
+        ]
+    )  # [ho*wo, cin*kh*kw]
+    wmat = w.reshape(cout, -1).T  # [cin*kh*kw, cout]
+
+    # pad M/N to tile multiples for the kernel grid
+    m, n = patches.shape[0], wmat.shape[1]
+    bm = 8 if m % 8 == 0 else 1
+    bn = 8 if n % 8 == 0 else 1
+    mp, np_ = _round_up(m, bm), _round_up(n, bn)
+    patches_p = jnp.pad(patches, ((0, mp - m), (0, 0)))
+    wmat_p = jnp.pad(wmat, ((0, 0), (0, np_ - n)))
+    out = karatsuba_matmul(patches_p, wmat_p, bm=bm, bn=bn)[:m, :n]
+    return out.T.reshape(cout, ho, wo)

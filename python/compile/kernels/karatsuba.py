@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: Karatsuba-Ofman fixed-point matmul.
+
+The paper's §IV insight — replace one w-bit multiply with three w/2-bit
+multiplies plus shifts/adds — adapted from FPGA LUT fabric to the TPU MXU
+(DESIGN.md §6): the MXU natively multiplies *low-precision* operands, so a
+16-bit fixed-point matmul is realised as **three 8-bit-operand matmuls**,
+
+    A·B = 2^16·Ah·Bh + 2^8·[(Ah+Al)(Bh+Bl) − Ah·Bh − Al·Bl] + Al·Bl
+
+exactly Karatsuba's identity lifted from scalars to matrices (the cross
+terms Ah·Bl + Al·Bh of the schoolbook decomposition cost two products;
+Karatsuba's middle term costs one).
+
+Tiling: `BlockSpec((bm, K), ...)` / `((K, bn), ...)` stream A-row-panels and
+B-col-panels through VMEM — the HBM↔VMEM schedule standing in for the
+paper's memory→systolic-cell streaming. interpret=True everywhere: the CPU
+PJRT client cannot execute Mosaic custom-calls (see /opt/xla-example).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def split_q88(x):
+    """Split int32-carried Q8.8 operands into (hi, lo) with x = 256*hi + lo,
+    lo in [0, 256). Signed-safe: hi picks up the sign."""
+    hi = jnp.right_shift(x, 8)
+    lo = jnp.bitwise_and(x, 255)
+    return hi, lo
+
+
+def _kom_matmul_kernel(a_ref, b_ref, o_ref):
+    """One (bm, bn) output tile: three half-width products + recombine."""
+    a = a_ref[...]
+    b = b_ref[...]
+    ah, al = split_q88(a)
+    bh, bl = split_q88(b)
+    # three MXU products (z2, z0, middle) — not four
+    z2 = jnp.dot(ah, bh, preferred_element_type=jnp.int32)
+    z0 = jnp.dot(al, bl, preferred_element_type=jnp.int32)
+    zm = jnp.dot(ah + al, bh + bl, preferred_element_type=jnp.int32)
+    z1 = zm - z2 - z0
+    o_ref[...] = (z2 << 16) + (z1 << 8) + z0
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def karatsuba_matmul(a, b, bm=32, bn=32):
+    """Fixed-point (int32-carried, 16-bit-valued) matmul via the Karatsuba
+    Pallas kernel. a: [M, K], b: [K, N] -> [M, N] int32 (exact)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"K mismatch {k} vs {k2}"
+    bm = min(bm, m)
+    bn = min(bn, n)
+    assert m % bm == 0 and n % bn == 0, f"tile ({bm},{bn}) must divide ({m},{n})"
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _kom_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a.astype(jnp.int32), b.astype(jnp.int32))
+
+
+def vmem_bytes(bm, bn, k):
+    """VMEM footprint estimate of one kernel invocation (bytes): A panel +
+    B panel + three half products + output tile, all int32. Used by the
+    §Perf analysis to check tiles against the ~16 MiB VMEM budget."""
+    a_panel = bm * k * 4
+    b_panel = k * bn * 4
+    halves = 4 * (bm * k + k * bn)  # hi/lo copies of both panels (int8-ish payloads in i32 lanes)
+    out = 3 * bm * bn * 4 + bm * bn * 4
+    return a_panel + b_panel + halves + out
+
+
+def mxu_products(m, n, k, schoolbook=False):
+    """Number of 8-bit MXU MACs: Karatsuba needs 3·M·N·K, schoolbook 4·M·N·K
+    (the paper's per-level 3/4 saving, lifted to matrices)."""
+    per = 4 if schoolbook else 3
+    return per * m * n * k

@@ -1,0 +1,105 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and the L2 model.
+
+Everything here is straight-line jax.numpy with no Pallas — the semantics
+the kernels must match bit-exactly (integer arithmetic end to end).
+"""
+
+import jax.numpy as jnp
+import jax
+
+
+def matmul_ref(a, b):
+    """Exact int32 matmul oracle."""
+    return jnp.matmul(a.astype(jnp.int32), b.astype(jnp.int32), preferred_element_type=jnp.int32)
+
+
+def split_q88_ref(x):
+    """Split int32-carried Q8.8 values into (hi, lo): x == 256*hi + lo,
+    lo in [0, 256). hi is the arithmetic high half (signed)."""
+    hi = jnp.right_shift(x, 8)
+    lo = jnp.bitwise_and(x, 255)
+    return hi, lo
+
+
+def karatsuba_matmul_ref(a, b):
+    """The Karatsuba identity lifted to matrices (three products instead of
+    the schoolbook four) — must equal matmul_ref exactly on 16-bit inputs:
+
+        A·B = 2^16·Ah·Bh + 2^8·[(Ah+Al)(Bh+Bl) − Ah·Bh − Al·Bl] + Al·Bl
+    """
+    ah, al = split_q88_ref(a)
+    bh, bl = split_q88_ref(b)
+    z2 = matmul_ref(ah, bh)
+    z0 = matmul_ref(al, bl)
+    z1 = matmul_ref(ah + al, bh + bl) - z2 - z0
+    return (z2 << 16) + (z1 << 8) + z0
+
+
+def requant_ref(x, shift=8, relu=False):
+    """Arithmetic right shift + optional ReLU (the engine's output stage)."""
+    y = jnp.right_shift(x, shift)
+    if relu:
+        y = jnp.maximum(y, 0)
+    return y
+
+
+def conv2d_ref(x, w, stride=1, pad=0):
+    """Exact integer conv2d oracle. x: [cin,h,wd] int32, w: [cout,cin,k,k].
+
+    Implemented with explicit patch gathering so the arithmetic is
+    transparently integer (no XLA convolution fast paths with float
+    accumulation ambiguity).
+    """
+    cin, h, wd = x.shape
+    cout, cin2, kh, kw = w.shape
+    assert cin == cin2, f"cin {cin} != {cin2}"
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (wd + 2 * pad - kw) // stride + 1
+    # im2col: [ho*wo, cin*kh*kw]
+    patches = jnp.stack(
+        [
+            xp[:, i * stride : i * stride + kh, j * stride : j * stride + kw].reshape(-1)
+            for i in range(ho)
+            for j in range(wo)
+        ]
+    )
+    wmat = w.reshape(cout, -1)  # [cout, cin*kh*kw]
+    out = matmul_ref(patches, wmat.T)  # [ho*wo, cout]
+    return out.T.reshape(cout, ho, wo)
+
+
+def maxpool_ref(x, k, stride):
+    """Exact max pooling. x: [c,h,w]."""
+    c, h, w = x.shape
+    ho = (h - k) // stride + 1
+    wo = (w - k) // stride + 1
+    cols = jnp.stack(
+        [
+            x[:, i * stride : i * stride + k, j * stride : j * stride + k].reshape(c, -1)
+            for i in range(ho)
+            for j in range(wo)
+        ],
+        axis=1,
+    )  # [c, ho*wo, k*k]
+    return jnp.max(cols, axis=2).reshape(c, ho, wo)
+
+
+def fc_ref(x, w, b):
+    """y = W·x + b; x: [n_in], w: [n_out, n_in]."""
+    return matmul_ref(w, x[:, None])[:, 0] + b
+
+
+def fir_ref(taps, signal):
+    """y[n] = sum_k h(k)·x[n-k], zero history (paper Fig 2 equation)."""
+    n = signal.shape[0]
+    padded = jnp.concatenate([jnp.zeros(taps.shape[0] - 1, signal.dtype), signal])
+    return jnp.stack(
+        [
+            jnp.sum(
+                jax.lax.dynamic_slice(padded, (i,), (taps.shape[0],))
+                * taps[::-1]
+            )
+            for i in range(n)
+        ]
+    )

@@ -1,0 +1,50 @@
+"""Ablation baseline: schoolbook (4-product) decomposition of the 16-bit
+fixed-point matmul — the thing Karatsuba §IV beats.
+
+    A·B = 2^16·Ah·Bh + 2^8·(Ah·Bl + Al·Bh) + Al·Bl      (FOUR products)
+
+Same tiling and interchange as `karatsuba.py`; used by the kernel tests and
+the §Perf MXU-op comparison (4 products vs 3).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .karatsuba import split_q88
+
+
+def _schoolbook_kernel(a_ref, b_ref, o_ref):
+    a = a_ref[...]
+    b = b_ref[...]
+    ah, al = split_q88(a)
+    bh, bl = split_q88(b)
+    z2 = jnp.dot(ah, bh, preferred_element_type=jnp.int32)
+    zhl = jnp.dot(ah, bl, preferred_element_type=jnp.int32)
+    zlh = jnp.dot(al, bh, preferred_element_type=jnp.int32)
+    z0 = jnp.dot(al, bl, preferred_element_type=jnp.int32)
+    o_ref[...] = (z2 << 16) + ((zhl + zlh) << 8) + z0
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def schoolbook_matmul(a, b, bm=32, bn=32):
+    """4-product decomposition matmul; must equal karatsuba_matmul exactly."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    bm = min(bm, m)
+    bn = min(bn, n)
+    assert m % bm == 0 and n % bn == 0
+    return pl.pallas_call(
+        _schoolbook_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(a.astype(jnp.int32), b.astype(jnp.int32))

@@ -1,0 +1,70 @@
+"""L2: the quantised CNN forward pass (and the Fig 2 FIR demo graph).
+
+Integer (Q8.8-carried-in-int32) arithmetic end to end, matching the rust
+systolic engine's semantics *bit-exactly*: conv/fc products are Q16.16,
+requantised with an arithmetic right shift of 8, ReLU fused. The conv hot
+loop is the L1 Karatsuba Pallas kernel (`kernels.conv2d.conv2d_kom`).
+
+The rust runtime loads the AOT-lowered HLO of these functions and feeds
+weights as runtime arguments, so one artifact serves every weight set.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.conv2d import conv2d_kom
+from .kernels.karatsuba import karatsuba_matmul
+from .kernels import ref
+
+
+def requant(x, relu):
+    """Q16.16 -> Q8.8: arithmetic shift right 8, optional ReLU."""
+    y = jnp.right_shift(x, 8)
+    return jnp.maximum(y, 0) if relu else y
+
+
+def tiny_forward(x, c1w, c2w, f1w, f1b, f2w, f2b):
+    """TinyCNN forward (mirrors rust `cnn::networks::NetworkKind::Tiny`).
+
+    x: [1,16,16] int32; returns logits [10] int32.
+    Layer table: conv(8,3,p1)+relu -> maxpool2 -> conv(16,3,p1)+relu ->
+    maxpool2 -> flatten -> fc(32)+relu -> fc(10).
+    """
+    a = requant(conv2d_kom(x, c1w, stride=1, pad=1), relu=True)
+    a = ref.maxpool_ref(a, 2, 2)
+    a = requant(conv2d_kom(a, c2w, stride=1, pad=1), relu=True)
+    a = ref.maxpool_ref(a, 2, 2)
+    a = a.reshape(-1)
+    a = requant(ref.fc_ref(a, f1w, f1b), relu=True)
+    a = requant(ref.fc_ref(a, f2w, f2b), relu=False)
+    return a
+
+
+def tiny_param_shapes():
+    """Parameter ShapeDtypeStructs for AOT lowering (order matters — the
+    rust runtime feeds literals in this order after the input)."""
+    import jax
+
+    i32 = jnp.int32
+    return [
+        jax.ShapeDtypeStruct((8, 1, 3, 3), i32),  # c1w
+        jax.ShapeDtypeStruct((16, 8, 3, 3), i32),  # c2w
+        jax.ShapeDtypeStruct((32, 256), i32),  # f1w
+        jax.ShapeDtypeStruct((32,), i32),  # f1b
+        jax.ShapeDtypeStruct((10, 32), i32),  # f2w
+        jax.ShapeDtypeStruct((10,), i32),  # f2b
+    ]
+
+
+def kom_matmul_graph(a, b):
+    """Standalone Karatsuba matmul graph (kernel benchmark artifact)."""
+    return karatsuba_matmul(a, b)
+
+
+def conv3x3_graph(x, w):
+    """One 3×3 conv layer (+requant/ReLU) — the paper's headline layer."""
+    return requant(conv2d_kom(x, w, stride=1, pad=1), relu=True)
+
+
+def fir_graph(taps, signal):
+    """Fig 2's 1-D FIR as a jax graph."""
+    return ref.fir_ref(taps, signal)

@@ -1,0 +1,149 @@
+"""L1 kernel correctness: Pallas Karatsuba matmul vs pure-jnp oracles.
+
+hypothesis sweeps shapes and values; every case must be bit-exact (integer
+arithmetic, no tolerance).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.karatsuba import karatsuba_matmul, split_q88, mxu_products
+from compile.kernels.conv2d import conv2d_kom
+
+Q16_MIN, Q16_MAX = -(1 << 15), (1 << 15) - 1
+
+
+def rand_q88(rng, shape):
+    return rng.integers(Q16_MIN, Q16_MAX + 1, size=shape, dtype=np.int32)
+
+
+class TestSplit:
+    def test_split_reconstructs(self):
+        x = jnp.array([-32768, -257, -256, -255, -1, 0, 1, 255, 256, 32767], dtype=jnp.int32)
+        hi, lo = split_q88(x)
+        np.testing.assert_array_equal(np.asarray(hi) * 256 + np.asarray(lo), np.asarray(x))
+        assert (np.asarray(lo) >= 0).all() and (np.asarray(lo) < 256).all()
+
+    @given(st.integers(Q16_MIN, Q16_MAX))
+    @settings(max_examples=200, deadline=None)
+    def test_split_identity_hypothesis(self, v):
+        hi, lo = split_q88(jnp.array([v], dtype=jnp.int32))
+        assert int(hi[0]) * 256 + int(lo[0]) == v
+
+
+class TestKaratsubaIdentity:
+    def test_ref_identity_matches_matmul(self):
+        rng = np.random.default_rng(0)
+        a = rand_q88(rng, (16, 24))
+        b = rand_q88(rng, (24, 8))
+        got = ref.karatsuba_matmul_ref(jnp.array(a), jnp.array(b))
+        want = ref.matmul_ref(jnp.array(a), jnp.array(b))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_three_vs_four_products(self):
+        assert mxu_products(64, 64, 64) * 4 == mxu_products(64, 64, 64, schoolbook=True) * 3
+
+
+class TestPallasKernel:
+    @pytest.mark.parametrize(
+        "m,k,n,bm,bn",
+        [
+            (8, 8, 8, 8, 8),
+            (16, 32, 8, 8, 8),
+            (32, 16, 32, 32, 32),
+            (64, 64, 64, 32, 32),
+            (8, 128, 16, 8, 16),
+            (3, 5, 7, 1, 1),  # degenerate tiles
+        ],
+    )
+    def test_matches_oracle(self, m, k, n, bm, bn):
+        rng = np.random.default_rng(m * 1000 + k * 10 + n)
+        a = rand_q88(rng, (m, k))
+        b = rand_q88(rng, (k, n))
+        got = karatsuba_matmul(jnp.array(a), jnp.array(b), bm=bm, bn=bn)
+        want = ref.matmul_ref(jnp.array(a), jnp.array(b))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_extreme_values(self):
+        a = jnp.full((8, 8), Q16_MIN, dtype=jnp.int32)
+        b = jnp.full((8, 8), Q16_MAX, dtype=jnp.int32)
+        got = karatsuba_matmul(a, b)
+        want = ref.matmul_ref(a, b)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @given(
+        m=st.sampled_from([1, 2, 4, 8]),
+        k=st.sampled_from([1, 3, 8, 17]),
+        n=st.sampled_from([1, 2, 8]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_shape_sweep_hypothesis(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        a = rand_q88(rng, (m, k))
+        b = rand_q88(rng, (k, n))
+        got = karatsuba_matmul(jnp.array(a), jnp.array(b), bm=1, bn=1)
+        want = ref.matmul_ref(jnp.array(a), jnp.array(b))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestConvKernel:
+    @pytest.mark.parametrize(
+        "cin,h,w,cout,k,stride,pad",
+        [
+            (1, 8, 8, 4, 3, 1, 1),
+            (3, 8, 8, 2, 3, 1, 0),
+            (2, 12, 12, 4, 5, 2, 2),
+            (1, 16, 16, 1, 11, 1, 0),  # AlexNet-style big kernel
+        ],
+    )
+    def test_conv_matches_oracle(self, cin, h, w, cout, k, stride, pad):
+        rng = np.random.default_rng(k * 100 + h)
+        x = jnp.array(rng.integers(-512, 512, size=(cin, h, w), dtype=np.int32))
+        wts = jnp.array(rng.integers(-64, 64, size=(cout, cin, k, k), dtype=np.int32))
+        got = conv2d_kom(x, wts, stride=stride, pad=pad)
+        want = ref.conv2d_ref(x, wts, stride=stride, pad=pad)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_conv_random_hypothesis(self, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.array(rng.integers(-256, 256, size=(2, 6, 6), dtype=np.int32))
+        wts = jnp.array(rng.integers(-32, 32, size=(3, 2, 3, 3), dtype=np.int32))
+        got = conv2d_kom(x, wts, stride=1, pad=1)
+        want = ref.conv2d_ref(x, wts, stride=1, pad=1)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestSchoolbookAblation:
+    """4-product schoolbook decomposition: same results, more MXU work."""
+
+    def test_schoolbook_equals_karatsuba(self):
+        from compile.kernels.schoolbook import schoolbook_matmul
+
+        rng = np.random.default_rng(77)
+        a = rand_q88(rng, (32, 48))
+        b = rand_q88(rng, (48, 16))
+        kar = karatsuba_matmul(jnp.array(a), jnp.array(b), bm=16, bn=16)
+        sch = schoolbook_matmul(jnp.array(a), jnp.array(b), bm=16, bn=16)
+        np.testing.assert_array_equal(np.asarray(kar), np.asarray(sch))
+        np.testing.assert_array_equal(
+            np.asarray(kar), np.asarray(ref.matmul_ref(jnp.array(a), jnp.array(b)))
+        )
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_schoolbook_hypothesis(self, seed):
+        from compile.kernels.schoolbook import schoolbook_matmul
+
+        rng = np.random.default_rng(seed)
+        a = rand_q88(rng, (8, 8))
+        b = rand_q88(rng, (8, 8))
+        got = schoolbook_matmul(jnp.array(a), jnp.array(b), bm=8, bn=8)
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(ref.matmul_ref(jnp.array(a), jnp.array(b)))
+        )

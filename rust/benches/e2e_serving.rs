@@ -1,0 +1,89 @@
+//! End-to-end serving bench: throughput/latency across worker counts and
+//! batch policies, plus the XLA-artifact execution path (when built).
+
+use kom_accel::cnn::networks::{Network, NetworkInstance, NetworkKind};
+use kom_accel::cnn::Tensor;
+use kom_accel::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use kom_accel::report::Table;
+use kom_accel::runtime::{golden, ArtifactStore, Runtime};
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+fn main() {
+    println!("\n===== E2E serving bench (Tiny CNN) =====");
+    let inst = NetworkInstance::random(Network::build(NetworkKind::Tiny), 42).unwrap();
+    let n_requests = 128;
+    let inputs: Vec<Tensor> = (0..n_requests)
+        .map(|i| Tensor::random(vec![1, 16, 16], 127, i as u64 + 1))
+        .collect();
+
+    let mut t = Table::new(&[
+        "workers",
+        "max batch",
+        "wall (ms)",
+        "req/s",
+        "p50 (us)",
+        "p99 (us)",
+        "mean batch",
+        "accel cycles/req",
+    ]);
+    for workers in [1usize, 2, 4] {
+        for max_batch in [1usize, 8] {
+            let coord = Coordinator::start(
+                CoordinatorConfig {
+                    workers,
+                    batch: BatchPolicy {
+                        max_batch,
+                        max_wait: Duration::from_micros(500),
+                    },
+                    ..Default::default()
+                },
+                &inst,
+            )
+            .unwrap();
+            let t0 = Instant::now();
+            let rxs: Vec<_> = inputs
+                .iter()
+                .map(|img| coord.submit(img.clone()).unwrap())
+                .collect();
+            for (_, rx) in rxs {
+                rx.recv().unwrap();
+            }
+            let wall = t0.elapsed();
+            let stats = coord.shutdown();
+            let lat = stats.latency();
+            t.row(vec![
+                workers.to_string(),
+                max_batch.to_string(),
+                format!("{:.1}", wall.as_secs_f64() * 1e3),
+                format!("{:.0}", n_requests as f64 / wall.as_secs_f64()),
+                lat.p50_us.to_string(),
+                lat.p99_us.to_string(),
+                format!("{:.1}", stats.mean_batch()),
+                format!("{:.0}", stats.accel_cycles as f64 / n_requests as f64),
+            ]);
+        }
+    }
+    println!("{}", t.to_ascii());
+
+    // XLA-artifact execution path (the L1/L2 kernels through PJRT)
+    match ArtifactStore::open(Path::new("artifacts")) {
+        Ok(store) => match Runtime::cpu() {
+            Ok(rt) => {
+                let module = rt.load_hlo_text(&store.path("tiny_cnn")).unwrap();
+                let args = golden::tiny_args(&inst, &inputs[0]).unwrap();
+                // time 32 executions
+                let t0 = Instant::now();
+                let iters = 32;
+                for _ in 0..iters {
+                    std::hint::black_box(module.run_i32(&args).unwrap());
+                }
+                let per = t0.elapsed() / iters;
+                println!("XLA tiny_cnn execution: {per:?} per inference ({:.0} inf/s)", 1.0 / per.as_secs_f64());
+            }
+            Err(e) => println!("(XLA path unavailable: {e})"),
+        },
+        Err(e) => println!("({e})"),
+    }
+    println!("e2e_serving bench complete");
+}

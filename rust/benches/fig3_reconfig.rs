@@ -1,0 +1,108 @@
+//! Fig 3 bench: the Reconfigurable Systolic Engine — cost of reconfiguring
+//! the same fabric between conv / pool / fc modules (§III), and how the
+//! configuration overhead amortises across layer work.
+
+use kom_accel::bench_harness::Bench;
+use kom_accel::report::Table;
+use kom_accel::systolic::{Engine, EngineConfig, EngineMode, PoolKind};
+
+fn conv_cfg(cout: usize, cin: usize, k: usize) -> EngineConfig {
+    EngineConfig {
+        mode: EngineMode::Conv2d {
+            cout,
+            cin,
+            kh: k,
+            kw: k,
+            stride: 1,
+            pad: 1,
+            weights: vec![1; cout * cin * k * k],
+        },
+        relu: true,
+        out_shift: 8,
+    }
+}
+
+fn main() {
+    let bench = Bench::quick();
+    println!("\n===== Fig 3 — reconfigurable systolic engine =====");
+
+    // reconfiguration cost per module type
+    let mut t = Table::new(&["module", "config words", "compute cycles (16x16 input)", "config overhead"]);
+    let input: Vec<i64> = (0..8 * 16 * 16).map(|i| (i % 251) as i64 - 125).collect();
+    let configs: Vec<(&str, EngineConfig, Vec<usize>)> = vec![
+        ("conv 8->8 3x3", conv_cfg(8, 8, 3), vec![8, 16, 16]),
+        (
+            "pool 2x2",
+            EngineConfig {
+                mode: EngineMode::Pool { k: 2, stride: 2, kind: PoolKind::Max },
+                relu: false,
+                out_shift: 0,
+            },
+            vec![8, 16, 16],
+        ),
+        (
+            "fc 2048->64",
+            EngineConfig {
+                mode: EngineMode::Fc {
+                    n_in: 2048,
+                    n_out: 64,
+                    weights: vec![1; 2048 * 64],
+                    bias: vec![0; 64],
+                },
+                relu: true,
+                out_shift: 8,
+            },
+            vec![2048],
+        ),
+    ];
+    for (name, cfg, shape) in &configs {
+        let mut e = Engine::new(256);
+        e.reconfigure(cfg.clone()).unwrap();
+        let out = e.run(&input[..shape.iter().product()], shape).unwrap();
+        t.row(vec![
+            name.to_string(),
+            cfg.config_words().to_string(),
+            out.cycles.to_string(),
+            format!("{:.2}%", cfg.config_words() as f64 / out.cycles as f64 * 100.0),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+
+    // full conv->pool->fc pipeline with reconfiguration between layers
+    let m = bench.run("conv->pool->fc with 3 reconfigs", || {
+        let mut e = Engine::new(256);
+        e.reconfigure(conv_cfg(8, 8, 3)).unwrap();
+        let a = e.run(&input, &[8, 16, 16]).unwrap();
+        e.reconfigure(configs[1].1.clone()).unwrap();
+        let b = e.run(&a.data, &a.shape).unwrap();
+        e.reconfigure(EngineConfig {
+            mode: EngineMode::Fc {
+                n_in: b.data.len(),
+                n_out: 10,
+                weights: vec![1; b.data.len() * 10],
+                bias: vec![0; 10],
+            },
+            relu: false,
+            out_shift: 8,
+        })
+        .unwrap();
+        let c = e.run(&b.data, &[b.data.len()]).unwrap();
+        (c.data, e.stats)
+    });
+    let _ = m;
+
+    let mut e = Engine::new(256);
+    e.reconfigure(conv_cfg(8, 8, 3)).unwrap();
+    let a = e.run(&input, &[8, 16, 16]).unwrap();
+    e.reconfigure(configs[1].1.clone()).unwrap();
+    let b = e.run(&a.data, &a.shape).unwrap();
+    println!(
+        "pipeline stats: {} reconfigs, {} config cycles vs {} compute cycles ({:.2}% overhead)",
+        e.stats.reconfigs,
+        e.stats.config_cycles,
+        e.stats.compute_cycles,
+        e.stats.config_cycles as f64 / e.stats.compute_cycles.max(1) as f64 * 100.0
+    );
+    let _ = b;
+    println!("fig3_reconfig complete");
+}

@@ -1,0 +1,76 @@
+//! §Perf harness: the L3 hot paths that EXPERIMENTS.md §Perf tracks.
+//!
+//! * gate-sim net-evals/s (cycle + event simulators),
+//! * technology mapping wall time (kom32 and the Table-4-sized composite),
+//! * systolic engine MAC-cycles/s (conv workload),
+//! * coordinator round-trip overhead.
+
+use kom_accel::bench_harness::Bench;
+use kom_accel::bits::BitVec;
+use kom_accel::cnn::networks::{Network, NetworkInstance, NetworkKind};
+use kom_accel::cnn::Tensor;
+use kom_accel::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use kom_accel::multipliers::{generate, MultKind, MultiplierSpec};
+use kom_accel::sim::CycleSim;
+use kom_accel::systolic::conv2d::conv2d;
+use kom_accel::techmap;
+
+fn main() {
+    let bench = Bench::default();
+    println!("\n===== §Perf hot paths =====");
+
+    // 1. cycle simulator
+    let g = generate(MultiplierSpec::comb(MultKind::KaratsubaOfman, 32)).unwrap();
+    let nl = &g.netlist;
+    let a_bus = nl.inputs()["a"].clone();
+    let b_bus = nl.inputs()["b"].clone();
+    let nets = nl.num_nets() as f64;
+    let m = bench.run("cycle-sim settle (kom32 comb)", || {
+        let mut sim = CycleSim::new(nl).unwrap();
+        sim.set_bus(&a_bus, &BitVec::from_u128(0xDEADBEEF, 32));
+        sim.set_bus(&b_bus, &BitVec::from_u128(0x12345678, 32));
+        sim.settle();
+        sim.get_bus(&nl.outputs()["p"]).to_u128()
+    });
+    println!("  -> {:.1} M net-evals/s", m.per_second(nets) / 1e6);
+
+    // 2. techmap
+    let m = bench.run("techmap kom32 (simplify+cover+pack)", || {
+        techmap::map(nl).unwrap().report
+    });
+    println!("  -> {:.2} ms per map", m.median_ns() / 1e6);
+
+    // 3. systolic conv
+    let input: Vec<i64> = (0..8 * 32 * 32).map(|i| (i % 255) as i64 - 127).collect();
+    let weights: Vec<i64> = (0..16 * 8 * 3 * 3).map(|i| (i % 49) as i64 - 24).collect();
+    let m = bench.run("systolic conv2d 8x32x32 -> 16 (3x3)", || {
+        conv2d(&input, 8, 32, 32, &weights, 16, 3, 3, 1, 1, 256).unwrap().macs
+    });
+    let macs = conv2d(&input, 8, 32, 32, &weights, 16, 3, 3, 1, 1, 256)
+        .unwrap()
+        .macs as f64;
+    println!("  -> {:.1} M MACs/s simulated", m.per_second(macs) / 1e6);
+
+    // 4. coordinator round trip
+    let inst = NetworkInstance::random(Network::build(NetworkKind::Tiny), 42).unwrap();
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 2,
+            batch: BatchPolicy {
+                max_batch: 8,
+                max_wait: std::time::Duration::from_micros(200),
+            },
+            ..Default::default()
+        },
+        &inst,
+    )
+    .unwrap();
+    let img = Tensor::random(vec![1, 16, 16], 127, 3);
+    let m = bench.run("coordinator round-trip (tiny cnn)", || {
+        let (_, rx) = coord.submit(img.clone()).unwrap();
+        rx.recv().unwrap().latency_us
+    });
+    println!("  -> {:.2} ms round trip", m.median_ns() / 1e6);
+    drop(coord);
+    println!("hotpath bench complete");
+}

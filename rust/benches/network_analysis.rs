@@ -1,0 +1,58 @@
+//! §V bench: network-level analysis cost and accelerator cycle estimates
+//! for AlexNet / VGG16 / VGG19 on the engine model.
+
+use kom_accel::bench_harness::Bench;
+use kom_accel::cnn::analysis;
+use kom_accel::cnn::networks::{Network, NetworkKind};
+use kom_accel::multipliers::{generate, MultKind, MultiplierSpec};
+use kom_accel::report::Table;
+use kom_accel::{sta, techmap};
+
+fn main() {
+    let bench = Bench::quick();
+    println!("\n===== §V — network analysis on the engine model =====");
+
+    let spec = MultiplierSpec::pipelined(MultKind::KaratsubaOfman, 16, 3);
+    let g = generate(spec).unwrap();
+    let mapped = techmap::map(&g.netlist).unwrap();
+    let clock_mhz = sta::analyze(&mapped).fmax_mhz.unwrap();
+    println!("engine clock (16-bit KOM stage): {clock_mhz:.0} MHz");
+
+    let mut t = Table::new(&[
+        "network",
+        "GMAC/inf",
+        "engine MACs/cycle (4096 cells)",
+        "est. ms/inference",
+        "est. inf/s",
+    ]);
+    for kind in [NetworkKind::AlexNet, NetworkKind::Vgg16, NetworkKind::Vgg19] {
+        let net = Network::build(kind);
+        let macs = net.total_macs().unwrap();
+        // fully-busy upper bound on a 4096-cell fabric
+        let cells = 4096f64;
+        let cycles = macs as f64 / cells;
+        let ms = cycles / (clock_mhz * 1e3);
+        t.row(vec![
+            net.name.clone(),
+            format!("{:.2}", macs as f64 / 1e9),
+            format!("{cells:.0}"),
+            format!("{ms:.2}"),
+            format!("{:.1}", 1000.0 / ms),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+
+    bench.run("filter_histogram x3 networks", || {
+        let mut total = 0usize;
+        for kind in [NetworkKind::AlexNet, NetworkKind::Vgg16, NetworkKind::Vgg19] {
+            total += analysis::filter_histogram(&Network::build(kind)).len();
+        }
+        total
+    });
+    bench.run("network_resources alexnet (3 kernel sizes)", || {
+        analysis::network_resources(&Network::build(NetworkKind::AlexNet), spec)
+            .unwrap()
+            .total_multiplexed
+    });
+    println!("network_analysis bench complete");
+}

@@ -1,0 +1,356 @@
+//! Layer descriptors — the configuration "instructions" of §III.
+//!
+//! The host driver encodes each network layer as a fixed-layout block of
+//! u32 words in control RAM; the RISC-V control program walks the table
+//! and hands each block to the engine through MMIO. All data-plane
+//! addresses are DRAM word addresses.
+
+use crate::error::{Error, Result};
+use crate::systolic::PoolKind;
+
+/// Maximum words a descriptor occupies in control RAM.
+pub const DESC_WORDS: usize = 16;
+
+/// One layer of work for the engine.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LayerDesc {
+    /// 2-D convolution.
+    Conv {
+        /// Output channels.
+        cout: u32,
+        /// Input channels.
+        cin: u32,
+        /// Kernel size (square kernels — AlexNet/VGG all qualify).
+        k: u32,
+        /// Stride.
+        stride: u32,
+        /// Padding.
+        pad: u32,
+        /// DRAM word address of the `cout·cin·k·k` weights.
+        w_addr: u32,
+        /// DRAM input address (`cin·h·w` words).
+        in_addr: u32,
+        /// Input height.
+        h: u32,
+        /// Input width.
+        w: u32,
+        /// DRAM output address.
+        out_addr: u32,
+        /// Fused ReLU.
+        relu: bool,
+        /// Fixed-point requantisation shift.
+        out_shift: u32,
+    },
+    /// Pooling.
+    Pool {
+        /// Window.
+        k: u32,
+        /// Stride.
+        stride: u32,
+        /// Max or average.
+        kind: PoolKind,
+        /// Input address.
+        in_addr: u32,
+        /// Channels.
+        c: u32,
+        /// Height.
+        h: u32,
+        /// Width.
+        w: u32,
+        /// Output address.
+        out_addr: u32,
+    },
+    /// Fully connected.
+    Fc {
+        /// Input features.
+        n_in: u32,
+        /// Output features.
+        n_out: u32,
+        /// Weights address (`n_out·n_in`).
+        w_addr: u32,
+        /// Bias address (`n_out`).
+        b_addr: u32,
+        /// Input address.
+        in_addr: u32,
+        /// Output address.
+        out_addr: u32,
+        /// Fused ReLU.
+        relu: bool,
+        /// Requantisation shift.
+        out_shift: u32,
+    },
+    /// 1-D FIR (Fig 2 demo mode).
+    Fir {
+        /// Taps address.
+        taps_addr: u32,
+        /// Number of taps.
+        n_taps: u32,
+        /// Input address.
+        in_addr: u32,
+        /// Signal length.
+        n: u32,
+        /// Output address.
+        out_addr: u32,
+    },
+    /// End of table.
+    End,
+}
+
+impl LayerDesc {
+    /// Encode into `DESC_WORDS` u32 words.
+    pub fn encode(&self) -> [u32; DESC_WORDS] {
+        let mut w = [0u32; DESC_WORDS];
+        match *self {
+            LayerDesc::Conv {
+                cout,
+                cin,
+                k,
+                stride,
+                pad,
+                w_addr,
+                in_addr,
+                h,
+                w: iw,
+                out_addr,
+                relu,
+                out_shift,
+            } => {
+                w[0] = 1;
+                w[1] = relu as u32;
+                w[2] = out_shift;
+                w[3] = cout;
+                w[4] = cin;
+                w[5] = k;
+                w[6] = stride;
+                w[7] = pad;
+                w[8] = w_addr;
+                w[9] = in_addr;
+                w[10] = h;
+                w[11] = iw;
+                w[12] = out_addr;
+            }
+            LayerDesc::Pool {
+                k,
+                stride,
+                kind,
+                in_addr,
+                c,
+                h,
+                w: iw,
+                out_addr,
+            } => {
+                w[0] = 2;
+                w[1] = (kind == PoolKind::Avg) as u32;
+                w[3] = k;
+                w[4] = stride;
+                w[5] = in_addr;
+                w[6] = c;
+                w[7] = h;
+                w[8] = iw;
+                w[9] = out_addr;
+            }
+            LayerDesc::Fc {
+                n_in,
+                n_out,
+                w_addr,
+                b_addr,
+                in_addr,
+                out_addr,
+                relu,
+                out_shift,
+            } => {
+                w[0] = 3;
+                w[1] = relu as u32;
+                w[2] = out_shift;
+                w[3] = n_in;
+                w[4] = n_out;
+                w[5] = w_addr;
+                w[6] = b_addr;
+                w[7] = in_addr;
+                w[8] = out_addr;
+            }
+            LayerDesc::Fir {
+                taps_addr,
+                n_taps,
+                in_addr,
+                n,
+                out_addr,
+            } => {
+                w[0] = 4;
+                w[3] = taps_addr;
+                w[4] = n_taps;
+                w[5] = in_addr;
+                w[6] = n;
+                w[7] = out_addr;
+            }
+            LayerDesc::End => {
+                w[0] = 0;
+            }
+        }
+        w
+    }
+
+    /// Decode from control-RAM words.
+    pub fn decode(w: &[u32]) -> Result<LayerDesc> {
+        if w.len() < DESC_WORDS {
+            return Err(Error::Accel("descriptor truncated".into()));
+        }
+        Ok(match w[0] {
+            0 => LayerDesc::End,
+            1 => LayerDesc::Conv {
+                cout: w[3],
+                cin: w[4],
+                k: w[5],
+                stride: w[6],
+                pad: w[7],
+                w_addr: w[8],
+                in_addr: w[9],
+                h: w[10],
+                w: w[11],
+                out_addr: w[12],
+                relu: w[1] != 0,
+                out_shift: w[2],
+            },
+            2 => LayerDesc::Pool {
+                k: w[3],
+                stride: w[4],
+                kind: if w[1] != 0 { PoolKind::Avg } else { PoolKind::Max },
+                in_addr: w[5],
+                c: w[6],
+                h: w[7],
+                w: w[8],
+                out_addr: w[9],
+            },
+            3 => LayerDesc::Fc {
+                n_in: w[3],
+                n_out: w[4],
+                w_addr: w[5],
+                b_addr: w[6],
+                in_addr: w[7],
+                out_addr: w[8],
+                relu: w[1] != 0,
+                out_shift: w[2],
+            },
+            4 => LayerDesc::Fir {
+                taps_addr: w[3],
+                n_taps: w[4],
+                in_addr: w[5],
+                n: w[6],
+                out_addr: w[7],
+            },
+            op => return Err(Error::Accel(format!("bad descriptor opcode {op}"))),
+        })
+    }
+
+    /// Output element count given the descriptor geometry.
+    pub fn out_len(&self) -> usize {
+        match *self {
+            LayerDesc::Conv {
+                cout,
+                k,
+                stride,
+                pad,
+                h,
+                w,
+                ..
+            } => {
+                let ho = (h + 2 * pad - k) / stride + 1;
+                let wo = (w + 2 * pad - k) / stride + 1;
+                (cout * ho * wo) as usize
+            }
+            LayerDesc::Pool {
+                k, stride, c, h, w, ..
+            } => {
+                let ho = (h - k) / stride + 1;
+                let wo = (w - k) / stride + 1;
+                (c * ho * wo) as usize
+            }
+            LayerDesc::Fc { n_out, .. } => n_out as usize,
+            LayerDesc::Fir { n, .. } => n as usize,
+            LayerDesc::End => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_variants() {
+        let descs = vec![
+            LayerDesc::Conv {
+                cout: 8,
+                cin: 3,
+                k: 3,
+                stride: 1,
+                pad: 1,
+                w_addr: 100,
+                in_addr: 0,
+                h: 16,
+                w: 16,
+                out_addr: 5000,
+                relu: true,
+                out_shift: 8,
+            },
+            LayerDesc::Pool {
+                k: 2,
+                stride: 2,
+                kind: PoolKind::Max,
+                in_addr: 5000,
+                c: 8,
+                h: 16,
+                w: 16,
+                out_addr: 8000,
+            },
+            LayerDesc::Fc {
+                n_in: 128,
+                n_out: 10,
+                w_addr: 900,
+                b_addr: 2200,
+                in_addr: 8000,
+                out_addr: 9000,
+                relu: false,
+                out_shift: 8,
+            },
+            LayerDesc::Fir {
+                taps_addr: 1,
+                n_taps: 8,
+                in_addr: 10,
+                n: 64,
+                out_addr: 100,
+            },
+            LayerDesc::End,
+        ];
+        for d in descs {
+            assert_eq!(LayerDesc::decode(&d.encode()).unwrap(), d);
+        }
+    }
+
+    #[test]
+    fn bad_opcode_rejected() {
+        let mut w = [0u32; DESC_WORDS];
+        w[0] = 99;
+        assert!(LayerDesc::decode(&w).is_err());
+    }
+
+    #[test]
+    fn out_len_geometry() {
+        let c = LayerDesc::Conv {
+            cout: 4,
+            cin: 1,
+            k: 3,
+            stride: 2,
+            pad: 1,
+            w_addr: 0,
+            in_addr: 0,
+            h: 8,
+            w: 8,
+            out_addr: 0,
+            relu: false,
+            out_shift: 0,
+        };
+        // (8+2-3)/2+1 = 4
+        assert_eq!(c.out_len(), 4 * 4 * 4);
+    }
+}

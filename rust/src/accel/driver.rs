@@ -1,0 +1,224 @@
+//! Host-side driver: the API applications (and the L3 coordinator) use to
+//! talk to the accelerator.
+//!
+//! The driver owns a [`Soc`], a bump allocator over its DRAM, and the
+//! control-program generator: for every submitted descriptor table it
+//! assembles a §III control program (a loop that pokes each descriptor's
+//! address into the engine's MMIO DESC register), loads it into program
+//! ROM, and lets the RISC-V core sequence the run.
+
+use super::desc::{LayerDesc, DESC_WORDS};
+use super::soc::{map, Soc, SocConfig};
+use crate::error::{Error, Result};
+use crate::riscv::asm::{reg, Assembler};
+use crate::riscv::cpu::{Cpu, StopReason};
+
+/// Metrics from one accelerator run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RunMetrics {
+    /// Control-CPU cycles.
+    pub cpu_cycles: u64,
+    /// Engine compute + reconfiguration cycles.
+    pub compute_cycles: u64,
+    /// DMA/memory cycles.
+    pub mem_cycles: u64,
+    /// Engine reconfigurations.
+    pub reconfigs: u64,
+    /// Layers executed.
+    pub layers: u64,
+    /// MAC/reduce operations.
+    pub ops: u64,
+}
+
+impl RunMetrics {
+    /// Total accelerator cycles (serial control/compute/memory model).
+    pub fn total_cycles(&self) -> u64 {
+        self.cpu_cycles + self.compute_cycles + self.mem_cycles
+    }
+
+    /// Wall-clock estimate at `clock_mhz`.
+    pub fn time_ms(&self, clock_mhz: f64) -> f64 {
+        self.total_cycles() as f64 / (clock_mhz * 1e3)
+    }
+
+    /// Effective MACs/cycle.
+    pub fn macs_per_cycle(&self) -> f64 {
+        if self.total_cycles() == 0 {
+            0.0
+        } else {
+            self.ops as f64 / self.total_cycles() as f64
+        }
+    }
+}
+
+/// Host driver over an accelerator instance.
+pub struct Driver {
+    /// The SoC (exposed for tests and metrics).
+    pub soc: Soc,
+    next_dram: usize,
+    /// Control-program cache keyed by descriptor-table length (the program
+    /// only depends on the layer count — EXPERIMENTS.md §Perf).
+    program_cache: std::collections::HashMap<usize, Vec<u32>>,
+}
+
+impl Driver {
+    /// Bring up an accelerator.
+    pub fn new(cfg: SocConfig) -> Self {
+        Driver {
+            soc: Soc::new(cfg),
+            next_dram: 0,
+            program_cache: std::collections::HashMap::new(),
+        }
+    }
+
+    /// Allocate `len` DRAM words.
+    pub fn alloc(&mut self, len: usize) -> Result<u32> {
+        if self.next_dram + len > self.soc.dram.len() {
+            return Err(Error::Accel(format!(
+                "DRAM exhausted: need {len} at {}",
+                self.next_dram
+            )));
+        }
+        let at = self.next_dram;
+        self.next_dram += len;
+        Ok(at as u32)
+    }
+
+    /// Allocate + preload data (host-side, zero cycle cost — model load).
+    pub fn upload(&mut self, data: &[i64]) -> Result<u32> {
+        let at = self.alloc(data.len())?;
+        self.soc.dram.preload(at as usize, data)?;
+        Ok(at)
+    }
+
+    /// Overwrite an existing region (e.g. per-request input tensor).
+    pub fn write_region(&mut self, addr: u32, data: &[i64]) -> Result<()> {
+        self.soc.invalidate_weights(addr, data.len());
+        self.soc.dram.preload(addr as usize, data)
+    }
+
+    /// Read back a DRAM region without charging cycles (host readback).
+    pub fn read_region(&mut self, addr: u32, len: usize) -> Result<Vec<i64>> {
+        let c0 = self.soc.dram.cycles;
+        let v = self.soc.dram.read_burst(addr as usize, len)?;
+        self.soc.dram.cycles = c0;
+        Ok(v)
+    }
+
+    /// Build the §III control program for an `n_layers` descriptor table
+    /// based at control-RAM word index 0.
+    fn control_program(n_layers: usize) -> Result<Vec<u32>> {
+        let mut a = Assembler::new();
+        // t0 = descriptor byte address, t1 = end, t2 = stride
+        a.li(reg::T0, map::RAM_BASE as i32);
+        a.li(reg::T2, (DESC_WORDS * 4) as i32);
+        a.li(
+            reg::T1,
+            (map::RAM_BASE as usize + n_layers * DESC_WORDS * 4) as i32,
+        );
+        a.li(reg::A0, map::R_DESC as i32);
+        a.label("next");
+        a.beq(reg::T0, reg::T1, "done");
+        a.sw(reg::T0, reg::A0, 0); // poke DESC_ADDR -> SoC executes layer
+        a.add(reg::T0, reg::T0, reg::T2);
+        a.j("next");
+        a.label("done");
+        a.ecall();
+        a.assemble()
+    }
+
+    /// Execute a descriptor table end-to-end under RISC-V control.
+    pub fn run_table(&mut self, descs: &[LayerDesc]) -> Result<RunMetrics> {
+        self.soc.write_descriptors(0, descs)?;
+        let program = match self.program_cache.get(&descs.len()) {
+            Some(p) => p.clone(),
+            None => {
+                let p = Self::control_program(descs.len())?;
+                self.program_cache.insert(descs.len(), p.clone());
+                p
+            }
+        };
+        let mut cpu = Cpu::new(program, map::ROM_BASE);
+        let ops0 = self.soc.engine.stats.ops;
+        let cc0 = self.soc.compute_cycles();
+        let mc0 = self.soc.mem_cycles();
+        let lr0 = self.soc.layers_run;
+        let rc0 = self.soc.engine.stats.reconfigs;
+        let stop = cpu.run(&mut self.soc, 10_000_000)?;
+        if stop != StopReason::Ecall {
+            return Err(Error::Accel("control program exceeded budget".into()));
+        }
+        Ok(RunMetrics {
+            cpu_cycles: cpu.cycles,
+            compute_cycles: self.soc.compute_cycles() - cc0,
+            mem_cycles: self.soc.mem_cycles() - mc0,
+            reconfigs: self.soc.engine.stats.reconfigs - rc0,
+            layers: self.soc.layers_run - lr0,
+            ops: self.soc.engine.stats.ops - ops0,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::systolic::PoolKind;
+
+    #[test]
+    fn riscv_drives_two_layer_pipeline() {
+        let mut drv = Driver::new(SocConfig {
+            dram_words: 8192,
+            spad_words: 1024,
+            ..Default::default()
+        });
+        // conv 1x4x4 (2x2 all-ones kernel, stride 1) -> 1x3x3, then 3x3 max pool
+        let img: Vec<i64> = (0..16).collect();
+        let in_addr = drv.upload(&img).unwrap();
+        let w_addr = drv.upload(&[1, 1, 1, 1]).unwrap();
+        let conv_out = drv.alloc(9).unwrap();
+        let pool_out = drv.alloc(1).unwrap();
+        let m = drv
+            .run_table(&[
+                LayerDesc::Conv {
+                    cout: 1,
+                    cin: 1,
+                    k: 2,
+                    stride: 1,
+                    pad: 0,
+                    w_addr,
+                    in_addr,
+                    h: 4,
+                    w: 4,
+                    out_addr: conv_out,
+                    relu: false,
+                    out_shift: 0,
+                },
+                LayerDesc::Pool {
+                    k: 3,
+                    stride: 1,
+                    kind: PoolKind::Max,
+                    in_addr: conv_out,
+                    c: 1,
+                    h: 3,
+                    w: 3,
+                    out_addr: pool_out,
+                },
+            ])
+            .unwrap();
+        assert_eq!(m.layers, 2);
+        assert_eq!(m.reconfigs, 2);
+        assert!(m.cpu_cycles > 0 && m.compute_cycles > 0 && m.mem_cycles > 0);
+        // conv max window = 10+11+14+15 = 50
+        assert_eq!(drv.read_region(pool_out, 1).unwrap(), vec![50]);
+    }
+
+    #[test]
+    fn dram_exhaustion_reported() {
+        let mut drv = Driver::new(SocConfig {
+            dram_words: 8,
+            ..Default::default()
+        });
+        assert!(drv.alloc(6).is_ok());
+        assert!(drv.alloc(6).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! The accelerator SoC of Fig 1: RISC-V control processor + Reconfigurable
+//! Systolic Engine + memory subsystem, plus the host-side driver.
+//!
+//! * [`desc`] — layer descriptors (the "instructions to configure systolic
+//!   cells" of §III) with a packed u32 in-memory format,
+//! * [`soc`] — the SoC: memory map, MMIO bridge between the control CPU
+//!   and the engine, cycle accounting,
+//! * [`driver`] — host API: load weights, submit a descriptor table, run
+//!   the control program, read back outputs and metrics.
+
+pub mod desc;
+pub mod driver;
+pub mod soc;
+
+pub use desc::LayerDesc;
+pub use driver::{Driver, RunMetrics};
+pub use soc::{Soc, SocConfig};

@@ -1,0 +1,397 @@
+//! The accelerator SoC (Fig 1): memory map, MMIO bridge, cycle accounting.
+//!
+//! ```text
+//!   0x0000_0000  program ROM (control program, word fetch)
+//!   0x1000_0000  control RAM (descriptor table, u32 words)
+//!   0xF000_0000  MMIO:
+//!        +0x00   DESC_ADDR  (W: control-RAM byte address of a descriptor;
+//!                            executes the layer synchronously)
+//!        +0x04   STATUS     (R: 1 = idle/done)
+//!        +0x08   CYCLES_LO  (R: engine+dma cycle counter)
+//!        +0x0C   CYCLES_HI
+//!        +0x10   RECONFIGS  (R)
+//!        +0x14   LAYERS     (R: layers executed)
+//! ```
+//!
+//! The data plane (weights/activations, i64) lives in [`Dram`] and streams
+//! through a [`Scratchpad`] via [`Dma`] before each layer — the §I memory
+//! bottleneck is visible in [`Soc::mem_cycles`] vs [`Soc::compute_cycles`].
+
+use super::desc::{LayerDesc, DESC_WORDS};
+use crate::error::{Error, Result};
+use crate::mem::{Dma, Dram, Scratchpad};
+use crate::riscv::cpu::Bus;
+use crate::systolic::{Engine, EngineConfig, EngineMode};
+
+/// Memory-map constants.
+pub mod map {
+    /// Program ROM base.
+    pub const ROM_BASE: u32 = 0x0000_0000;
+    /// Control RAM base.
+    pub const RAM_BASE: u32 = 0x1000_0000;
+    /// MMIO base.
+    pub const MMIO_BASE: u32 = 0xF000_0000;
+    /// DESC_ADDR register.
+    pub const R_DESC: u32 = MMIO_BASE;
+    /// STATUS register.
+    pub const R_STATUS: u32 = MMIO_BASE + 4;
+    /// CYCLES_LO register.
+    pub const R_CYC_LO: u32 = MMIO_BASE + 8;
+    /// CYCLES_HI register.
+    pub const R_CYC_HI: u32 = MMIO_BASE + 12;
+    /// RECONFIGS register.
+    pub const R_RECONF: u32 = MMIO_BASE + 16;
+    /// LAYERS register.
+    pub const R_LAYERS: u32 = MMIO_BASE + 20;
+}
+
+/// SoC sizing.
+#[derive(Clone, Copy, Debug)]
+pub struct SocConfig {
+    /// Systolic cells in the engine fabric.
+    pub cells: usize,
+    /// Control RAM words.
+    pub ctrl_ram_words: usize,
+    /// DRAM words (i64 data plane).
+    pub dram_words: usize,
+    /// Scratchpad words.
+    pub spad_words: usize,
+    /// Scratchpad banks.
+    pub spad_banks: usize,
+}
+
+impl Default for SocConfig {
+    fn default() -> Self {
+        SocConfig {
+            cells: 256,
+            ctrl_ram_words: 16 * 1024,
+            dram_words: 64 * 1024 * 1024,
+            spad_words: 256 * 1024,
+            spad_banks: 8,
+        }
+    }
+}
+
+/// The SoC device tree.
+pub struct Soc {
+    /// Control RAM (u32 words).
+    pub ctrl_ram: Vec<u32>,
+    /// Data-plane DRAM.
+    pub dram: Dram,
+    /// On-chip scratchpad.
+    pub spad: Scratchpad,
+    /// DMA engine.
+    pub dma: Dma,
+    /// The systolic engine.
+    pub engine: Engine,
+    /// Layers executed.
+    pub layers_run: u64,
+    /// Weight-stationary cache: weights staged once stay resident in the
+    /// scratchpad across inferences (addr, len) → data. Repeat layers skip
+    /// the DRAM burst entirely — the standard CNN-accelerator optimisation
+    /// (EXPERIMENTS.md §Perf records the cycle impact).
+    weight_cache: std::collections::HashMap<(u32, u32), Vec<i64>>,
+    cfg: SocConfig,
+}
+
+impl Soc {
+    /// Build a SoC.
+    pub fn new(cfg: SocConfig) -> Self {
+        Soc {
+            ctrl_ram: vec![0; cfg.ctrl_ram_words],
+            dram: Dram::new(cfg.dram_words),
+            spad: Scratchpad::new(cfg.spad_words, cfg.spad_banks),
+            dma: Dma::new(),
+            engine: Engine::new(cfg.cells),
+            layers_run: 0,
+            weight_cache: std::collections::HashMap::new(),
+            cfg,
+        }
+    }
+
+    /// Invalidate cached weights overlapping `[addr, addr+len)` — called by
+    /// the driver when the host rewrites a DRAM region.
+    pub fn invalidate_weights(&mut self, addr: u32, len: usize) {
+        let end = addr as u64 + len as u64;
+        self.weight_cache
+            .retain(|&(a, l), _| (a as u64 + l as u64) <= addr as u64 || a as u64 >= end);
+    }
+
+    /// Stage a weight region: first touch pays the DMA, repeats are free
+    /// (weight-stationary scratchpad residency).
+    fn stage_weights(&mut self, dram_addr: u32, len: u32) -> Result<Vec<i64>> {
+        if let Some(w) = self.weight_cache.get(&(dram_addr, len)) {
+            return Ok(w.clone());
+        }
+        let data = self.stage_in(dram_addr as usize, len as usize)?;
+        self.weight_cache.insert((dram_addr, len), data.clone());
+        Ok(data)
+    }
+
+    /// Config used to build this SoC.
+    pub fn config(&self) -> &SocConfig {
+        &self.cfg
+    }
+
+    /// Engine + reconfiguration cycles.
+    pub fn compute_cycles(&self) -> u64 {
+        self.engine.stats.total_cycles()
+    }
+
+    /// DRAM + DMA traffic cycles.
+    pub fn mem_cycles(&self) -> u64 {
+        self.dma.cycles
+    }
+
+    /// Write a descriptor table into control RAM at word index `at`.
+    pub fn write_descriptors(&mut self, at: usize, descs: &[LayerDesc]) -> Result<()> {
+        let need = (descs.len() + 1) * DESC_WORDS;
+        if at + need > self.ctrl_ram.len() {
+            return Err(Error::Accel(format!(
+                "descriptor table ({need} words at {at}) exceeds control RAM"
+            )));
+        }
+        let mut idx = at;
+        for d in descs.iter().chain(std::iter::once(&LayerDesc::End)) {
+            self.ctrl_ram[idx..idx + DESC_WORDS].copy_from_slice(&d.encode());
+            idx += DESC_WORDS;
+        }
+        Ok(())
+    }
+
+    /// Execute one layer descriptor (invoked via the MMIO DESC register).
+    ///
+    /// Streams inputs/weights DRAM→scratchpad (DMA), runs the engine, and
+    /// streams the result back — charging every stage's cycles.
+    pub fn exec_descriptor(&mut self, desc: &LayerDesc) -> Result<()> {
+        match *desc {
+            LayerDesc::End => Ok(()),
+            LayerDesc::Conv {
+                cout,
+                cin,
+                k,
+                stride,
+                pad,
+                w_addr,
+                in_addr,
+                h,
+                w,
+                out_addr,
+                relu,
+                out_shift,
+            } => {
+                let in_len = (cin * h * w) as usize;
+                let w_len = (cout * cin * k * k) as usize;
+                let input = self.stage_in(in_addr as usize, in_len)?;
+                let weights = self.stage_weights(w_addr, w_len as u32)?;
+                self.engine.reconfigure(EngineConfig {
+                    mode: EngineMode::Conv2d {
+                        cout: cout as usize,
+                        cin: cin as usize,
+                        kh: k as usize,
+                        kw: k as usize,
+                        stride: stride as usize,
+                        pad: pad as usize,
+                        weights,
+                    },
+                    relu,
+                    out_shift,
+                })?;
+                let out = self
+                    .engine
+                    .run(&input, &[cin as usize, h as usize, w as usize])?;
+                self.stage_out(out_addr as usize, &out.data)?;
+                self.layers_run += 1;
+                Ok(())
+            }
+            LayerDesc::Pool {
+                k,
+                stride,
+                kind,
+                in_addr,
+                c,
+                h,
+                w,
+                out_addr,
+            } => {
+                let input = self.stage_in(in_addr as usize, (c * h * w) as usize)?;
+                self.engine.reconfigure(EngineConfig {
+                    mode: EngineMode::Pool {
+                        k: k as usize,
+                        stride: stride as usize,
+                        kind,
+                    },
+                    relu: false,
+                    out_shift: 0,
+                })?;
+                let out = self
+                    .engine
+                    .run(&input, &[c as usize, h as usize, w as usize])?;
+                self.stage_out(out_addr as usize, &out.data)?;
+                self.layers_run += 1;
+                Ok(())
+            }
+            LayerDesc::Fc {
+                n_in,
+                n_out,
+                w_addr,
+                b_addr,
+                in_addr,
+                out_addr,
+                relu,
+                out_shift,
+            } => {
+                let input = self.stage_in(in_addr as usize, n_in as usize)?;
+                let weights = self.stage_weights(w_addr, n_in * n_out)?;
+                let bias = self.stage_weights(b_addr, n_out)?;
+                self.engine.reconfigure(EngineConfig {
+                    mode: EngineMode::Fc {
+                        n_in: n_in as usize,
+                        n_out: n_out as usize,
+                        weights,
+                        bias,
+                    },
+                    relu,
+                    out_shift,
+                })?;
+                let out = self.engine.run(&input, &[n_in as usize])?;
+                self.stage_out(out_addr as usize, &out.data)?;
+                self.layers_run += 1;
+                Ok(())
+            }
+            LayerDesc::Fir {
+                taps_addr,
+                n_taps,
+                in_addr,
+                n,
+                out_addr,
+            } => {
+                let taps = self.stage_weights(taps_addr, n_taps)?;
+                let input = self.stage_in(in_addr as usize, n as usize)?;
+                self.engine.reconfigure(EngineConfig {
+                    mode: EngineMode::Fir { taps },
+                    relu: false,
+                    out_shift: 0,
+                })?;
+                let out = self.engine.run(&input, &[n as usize])?;
+                self.stage_out(out_addr as usize, &out.data)?;
+                self.layers_run += 1;
+                Ok(())
+            }
+        }
+    }
+
+    /// DMA a DRAM region into the scratchpad (tiled if larger) and return
+    /// it. Cycle costs land on the DMA/DRAM/scratchpad counters.
+    fn stage_in(&mut self, dram_addr: usize, len: usize) -> Result<Vec<i64>> {
+        let mut out = Vec::with_capacity(len);
+        let tile = self.spad.len();
+        let mut off = 0;
+        while off < len {
+            let chunk = tile.min(len - off);
+            self.dma
+                .load(&mut self.dram, &mut self.spad, dram_addr + off, 0, chunk)?;
+            out.extend(self.spad.read_block(0, chunk)?);
+            off += chunk;
+        }
+        Ok(out)
+    }
+
+    fn stage_out(&mut self, dram_addr: usize, data: &[i64]) -> Result<()> {
+        let tile = self.spad.len();
+        let mut off = 0;
+        while off < data.len() {
+            let chunk = tile.min(data.len() - off);
+            self.spad.write_block(0, &data[off..off + chunk])?;
+            self.dma
+                .store(&mut self.dram, &mut self.spad, 0, dram_addr + off, chunk)?;
+            off += chunk;
+        }
+        Ok(())
+    }
+}
+
+impl Bus for Soc {
+    fn load(&mut self, addr: u32) -> Result<u32> {
+        match addr {
+            map::RAM_BASE..=0xEFFF_FFFF => {
+                let idx = ((addr - map::RAM_BASE) / 4) as usize;
+                self.ctrl_ram
+                    .get(idx)
+                    .copied()
+                    .ok_or_else(|| Error::Accel(format!("ctrl RAM OOB read {addr:#x}")))
+            }
+            map::R_STATUS => Ok(1),
+            map::R_CYC_LO => Ok((self.compute_cycles() + self.mem_cycles()) as u32),
+            map::R_CYC_HI => Ok(((self.compute_cycles() + self.mem_cycles()) >> 32) as u32),
+            map::R_RECONF => Ok(self.engine.stats.reconfigs as u32),
+            map::R_LAYERS => Ok(self.layers_run as u32),
+            _ => Err(Error::Accel(format!("bus read {addr:#x}"))),
+        }
+    }
+
+    fn store(&mut self, addr: u32, value: u32) -> Result<()> {
+        match addr {
+            map::RAM_BASE..=0xEFFF_FFFF => {
+                let idx = ((addr - map::RAM_BASE) / 4) as usize;
+                if idx >= self.ctrl_ram.len() {
+                    return Err(Error::Accel(format!("ctrl RAM OOB write {addr:#x}")));
+                }
+                self.ctrl_ram[idx] = value;
+                Ok(())
+            }
+            map::R_DESC => {
+                // value = control-RAM byte address of the descriptor
+                let idx = ((value - map::RAM_BASE) / 4) as usize;
+                if idx + DESC_WORDS > self.ctrl_ram.len() {
+                    return Err(Error::Accel(format!("descriptor OOB at {value:#x}")));
+                }
+                let words: Vec<u32> = self.ctrl_ram[idx..idx + DESC_WORDS].to_vec();
+                let desc = LayerDesc::decode(&words)?;
+                self.exec_descriptor(&desc)
+            }
+            _ => Err(Error::Accel(format!("bus write {addr:#x} = {value:#x}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mmio_descriptor_execution() {
+        let mut soc = Soc::new(SocConfig {
+            dram_words: 4096,
+            spad_words: 512,
+            ..Default::default()
+        });
+        // FIR: taps [1,1] over [1,2,3,4] -> [1,3,5,7]
+        soc.dram.preload(0, &[1, 1]).unwrap();
+        soc.dram.preload(10, &[1, 2, 3, 4]).unwrap();
+        let desc = LayerDesc::Fir {
+            taps_addr: 0,
+            n_taps: 2,
+            in_addr: 10,
+            n: 4,
+            out_addr: 100,
+        };
+        soc.write_descriptors(0, &[desc]).unwrap();
+        // execute via the bus, as the CPU would
+        soc.store(map::R_DESC, map::RAM_BASE).unwrap();
+        assert_eq!(soc.dram.read_burst(100, 4).unwrap(), vec![1, 3, 5, 7]);
+        assert_eq!(soc.load(map::R_LAYERS).unwrap(), 1);
+        assert!(soc.load(map::R_CYC_LO).unwrap() > 0);
+    }
+
+    #[test]
+    fn bus_faults_on_unmapped() {
+        let mut soc = Soc::new(SocConfig {
+            dram_words: 16,
+            ctrl_ram_words: 16,
+            ..Default::default()
+        });
+        assert!(soc.load(0xDEAD_0000).is_err());
+        assert!(soc.store(0xF000_00FF & !3, 0).is_err());
+    }
+}

@@ -1,0 +1,146 @@
+//! Criterion-style benchmark harness (criterion itself is unavailable in
+//! this offline environment — see DESIGN.md §2).
+//!
+//! `cargo bench` runs `harness = false` binaries that drive this module:
+//! warmup, timed iterations, robust statistics (median + MAD), and
+//! side-by-side paper-vs-measured table rendering.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    /// Median iteration time.
+    pub median: Duration,
+    /// Median absolute deviation.
+    pub mad: Duration,
+    /// Iterations measured.
+    pub iters: usize,
+    /// Best iteration.
+    pub min: Duration,
+}
+
+impl Measurement {
+    /// Median in nanoseconds.
+    pub fn median_ns(&self) -> f64 {
+        self.median.as_secs_f64() * 1e9
+    }
+
+    /// Throughput given work items per iteration.
+    pub fn per_second(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.median.as_secs_f64()
+    }
+}
+
+/// Benchmark runner with warmup and adaptive iteration count.
+pub struct Bench {
+    /// Target measuring time per benchmark.
+    pub measure_time: Duration,
+    /// Warmup time.
+    pub warmup: Duration,
+    /// Max iterations (cap for slow benches).
+    pub max_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            measure_time: Duration::from_millis(600),
+            warmup: Duration::from_millis(150),
+            max_iters: 10_000,
+        }
+    }
+}
+
+impl Bench {
+    /// Quick profile for slow end-to-end benches.
+    pub fn quick() -> Self {
+        Bench {
+            measure_time: Duration::from_millis(300),
+            warmup: Duration::from_millis(50),
+            max_iters: 200,
+        }
+    }
+
+    /// Measure `f`, which performs one iteration per call and returns a
+    /// value that is black-boxed to keep the optimiser honest.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Measurement {
+        // warmup + calibration
+        let t0 = Instant::now();
+        let mut calib_iters = 0usize;
+        while t0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / calib_iters.max(1) as f64;
+        let iters = ((self.measure_time.as_secs_f64() / per_iter.max(1e-9)) as usize)
+            .clamp(5, self.max_iters);
+
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let s = Instant::now();
+            std::hint::black_box(f());
+            samples.push(s.elapsed());
+        }
+        samples.sort_unstable();
+        let median = samples[samples.len() / 2];
+        let mut devs: Vec<Duration> = samples
+            .iter()
+            .map(|&s| if s > median { s - median } else { median - s })
+            .collect();
+        devs.sort_unstable();
+        let m = Measurement {
+            median,
+            mad: devs[devs.len() / 2],
+            iters,
+            min: samples[0],
+        };
+        println!(
+            "bench {name:<44} median {:>12?} (± {:?}, n={})",
+            m.median, m.mad, m.iters
+        );
+        m
+    }
+}
+
+/// Render a paper-vs-measured comparison table (markdown).
+pub fn compare_table(
+    title: &str,
+    headers: &[&str],
+    rows: &[(String, Vec<String>)],
+) -> String {
+    let mut s = format!("\n### {title}\n\n");
+    s.push_str(&format!("| {} |\n", headers.join(" | ")));
+    s.push_str(&format!("|{}\n", "---|".repeat(headers.len())));
+    for (label, cells) in rows {
+        s.push_str(&format!("| {} | {} |\n", label, cells.join(" | ")));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench {
+            measure_time: Duration::from_millis(20),
+            warmup: Duration::from_millis(5),
+            max_iters: 1000,
+        };
+        let m = b.run("noop-ish", || (0..100).sum::<u64>());
+        assert!(m.iters >= 5);
+        assert!(m.median_ns() >= 0.0);
+    }
+
+    #[test]
+    fn table_renders() {
+        let t = compare_table(
+            "Table 1",
+            &["metric", "paper", "ours"],
+            &[("LUTs".into(), vec!["616".into(), "804".into()])],
+        );
+        assert!(t.contains("| LUTs | 616 | 804 |"));
+    }
+}

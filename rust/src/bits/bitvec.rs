@@ -1,0 +1,166 @@
+//! Little-endian arbitrary-width bit vector.
+
+use std::fmt;
+
+/// A little-endian bit vector (bit 0 = LSB), backed by `u64` limbs.
+///
+/// Used to carry word-level stimulus/response values across the bit-level
+/// netlist boundary, and by the CNN quantiser for operand packing.
+#[derive(Clone, PartialEq, Eq, Hash, Default)]
+pub struct BitVec {
+    limbs: Vec<u64>,
+    len: usize,
+}
+
+impl BitVec {
+    /// All-zero vector of `len` bits.
+    pub fn zeros(len: usize) -> Self {
+        BitVec {
+            limbs: vec![0; (len + 63) / 64],
+            len,
+        }
+    }
+
+    /// Build from the low `len` bits of `v`.
+    pub fn from_u128(v: u128, len: usize) -> Self {
+        let mut bv = BitVec::zeros(len);
+        for i in 0..len.min(128) {
+            if (v >> i) & 1 == 1 {
+                bv.set(i, true);
+            }
+        }
+        bv
+    }
+
+    /// Build from an i128, two's-complement truncated to `len` bits.
+    pub fn from_i128(v: i128, len: usize) -> Self {
+        Self::from_u128(v as u128, len)
+    }
+
+    /// Build from an iterator of bools, LSB first.
+    pub fn from_bits<I: IntoIterator<Item = bool>>(bits: I) -> Self {
+        let bits: Vec<bool> = bits.into_iter().collect();
+        let mut bv = BitVec::zeros(bits.len());
+        for (i, b) in bits.iter().enumerate() {
+            bv.set(i, *b);
+        }
+        bv
+    }
+
+    /// Number of bits.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if zero-width.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Get bit `i`.
+    pub fn get(&self, i: usize) -> bool {
+        assert!(i < self.len, "bit index {i} out of range {}", self.len);
+        (self.limbs[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Set bit `i`.
+    pub fn set(&mut self, i: usize, v: bool) {
+        assert!(i < self.len, "bit index {i} out of range {}", self.len);
+        let limb = &mut self.limbs[i / 64];
+        if v {
+            *limb |= 1 << (i % 64);
+        } else {
+            *limb &= !(1 << (i % 64));
+        }
+    }
+
+    /// Interpret as unsigned; panics if len > 128.
+    pub fn to_u128(&self) -> u128 {
+        assert!(self.len <= 128, "BitVec too wide for u128");
+        let mut v = 0u128;
+        for i in (0..self.len).rev() {
+            v = (v << 1) | self.get(i) as u128;
+        }
+        v
+    }
+
+    /// Interpret as signed two's complement; panics if len > 128.
+    pub fn to_i128(&self) -> i128 {
+        let raw = self.to_u128();
+        super::sign_extend(raw, self.len as u32)
+    }
+
+    /// Iterator over bits, LSB first.
+    pub fn iter(&self) -> impl Iterator<Item = bool> + '_ {
+        (0..self.len).map(move |i| self.get(i))
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> usize {
+        self.iter().filter(|&b| b).count()
+    }
+
+    /// Concatenate `other` above self (self stays the LSBs).
+    pub fn concat(&self, other: &BitVec) -> BitVec {
+        BitVec::from_bits(self.iter().chain(other.iter()))
+    }
+
+    /// Slice bits `[lo, hi)` (LSB-first indices).
+    pub fn slice(&self, lo: usize, hi: usize) -> BitVec {
+        assert!(lo <= hi && hi <= self.len);
+        BitVec::from_bits((lo..hi).map(|i| self.get(i)))
+    }
+}
+
+impl fmt::Debug for BitVec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}'b", self.len)?;
+        for i in (0..self.len).rev() {
+            write!(f, "{}", self.get(i) as u8)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_u128() {
+        for &(v, w) in &[(0u128, 1usize), (1, 1), (0xAB, 8), (0xDEADBEEF, 32), (u64::MAX as u128, 64)] {
+            let mask = if w >= 128 { u128::MAX } else { (1u128 << w) - 1 };
+            assert_eq!(BitVec::from_u128(v, w).to_u128(), v & mask);
+        }
+        assert_eq!(BitVec::from_u128(0xFFFF, 8).to_u128(), 0xFF, "truncates");
+    }
+
+    #[test]
+    fn roundtrip_signed() {
+        assert_eq!(BitVec::from_i128(-1, 16).to_i128(), -1);
+        assert_eq!(BitVec::from_i128(-32768, 16).to_i128(), -32768);
+        assert_eq!(BitVec::from_i128(32767, 16).to_i128(), 32767);
+        assert_eq!(BitVec::from_i128(-5, 4).to_i128(), -5);
+    }
+
+    #[test]
+    fn wide_vectors() {
+        let mut bv = BitVec::zeros(200);
+        bv.set(0, true);
+        bv.set(64, true);
+        bv.set(199, true);
+        assert_eq!(bv.count_ones(), 3);
+        assert!(bv.get(64));
+        assert!(!bv.get(63));
+    }
+
+    #[test]
+    fn concat_slice() {
+        let lo = BitVec::from_u128(0b1010, 4);
+        let hi = BitVec::from_u128(0b0110, 4);
+        let cat = lo.concat(&hi);
+        assert_eq!(cat.to_u128(), 0b0110_1010);
+        assert_eq!(cat.slice(4, 8).to_u128(), 0b0110);
+        assert_eq!(cat.slice(0, 4).to_u128(), 0b1010);
+    }
+}

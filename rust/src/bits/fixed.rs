@@ -1,0 +1,149 @@
+//! Fixed-point formats used by the quantised CNN path.
+
+use std::fmt;
+
+/// A Q-format descriptor: `total_bits` two's-complement bits with
+/// `frac_bits` fractional bits (e.g. Q8.8 = 16 total, 8 frac).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct QFormat {
+    /// Total width in bits (including sign).
+    pub total_bits: u32,
+    /// Fractional bits.
+    pub frac_bits: u32,
+}
+
+impl QFormat {
+    /// Construct a format; panics on zero/overwide formats.
+    pub const fn new(total_bits: u32, frac_bits: u32) -> Self {
+        assert!(total_bits >= 2 && total_bits <= 64);
+        assert!(frac_bits < total_bits);
+        QFormat { total_bits, frac_bits }
+    }
+
+    /// Q8.8 — the default activation/weight format of the accelerator.
+    pub const Q8_8: QFormat = QFormat::new(16, 8);
+    /// Q16.16 — the wide accumulator-facing format.
+    pub const Q16_16: QFormat = QFormat::new(32, 16);
+
+    /// Smallest representable value.
+    pub fn min_value(&self) -> i64 {
+        -(1i64 << (self.total_bits - 1))
+    }
+
+    /// Largest representable value.
+    pub fn max_value(&self) -> i64 {
+        (1i64 << (self.total_bits - 1)) - 1
+    }
+
+    /// Scale factor (2^frac).
+    pub fn scale(&self) -> f64 {
+        (1u64 << self.frac_bits) as f64
+    }
+}
+
+/// A fixed-point number: raw integer + format.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Fixed {
+    /// Raw two's-complement integer payload.
+    pub raw: i64,
+    /// Format of `raw`.
+    pub fmt: QFormat,
+}
+
+impl Fixed {
+    /// Quantise an f64 into `fmt`, saturating at the format bounds.
+    pub fn from_f64(v: f64, fmt: QFormat) -> Self {
+        let scaled = (v * fmt.scale()).round();
+        let raw = if scaled.is_nan() {
+            0
+        } else {
+            scaled.clamp(fmt.min_value() as f64, fmt.max_value() as f64) as i64
+        };
+        Fixed { raw, fmt }
+    }
+
+    /// Back to f64.
+    pub fn to_f64(&self) -> f64 {
+        self.raw as f64 / self.fmt.scale()
+    }
+
+    /// Saturating add in the same format.
+    pub fn sat_add(&self, other: &Fixed) -> Fixed {
+        assert_eq!(self.fmt, other.fmt);
+        let sum = (self.raw as i128 + other.raw as i128)
+            .clamp(self.fmt.min_value() as i128, self.fmt.max_value() as i128);
+        Fixed { raw: sum as i64, fmt: self.fmt }
+    }
+
+    /// Full-precision multiply: result format doubles width and frac bits
+    /// (Q8.8 × Q8.8 → Q16.16), matching the accelerator datapath.
+    pub fn mul_full(&self, other: &Fixed) -> Fixed {
+        assert_eq!(self.fmt, other.fmt);
+        let f = QFormat::new(
+            (self.fmt.total_bits * 2).min(64),
+            self.fmt.frac_bits * 2,
+        );
+        Fixed { raw: self.raw * other.raw, fmt: f }
+    }
+
+    /// Requantise to a narrower format with round-to-nearest and saturation.
+    pub fn requantize(&self, fmt: QFormat) -> Fixed {
+        let shift = self.fmt.frac_bits as i64 - fmt.frac_bits as i64;
+        let v = if shift > 0 {
+            // round-to-nearest-even-free: add half ulp then arithmetic shift
+            let half = 1i64 << (shift - 1);
+            (self.raw + half) >> shift
+        } else {
+            self.raw << (-shift)
+        };
+        Fixed {
+            raw: v.clamp(fmt.min_value(), fmt.max_value()),
+            fmt,
+        }
+    }
+}
+
+impl fmt::Display for Fixed {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.6}q{}.{}", self.to_f64(), self.fmt.total_bits - self.fmt.frac_bits, self.fmt.frac_bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantise_roundtrip() {
+        let f = QFormat::Q8_8;
+        for v in [-0.5, 0.0, 1.25, 3.14159, -100.0, 127.99] {
+            let q = Fixed::from_f64(v, f);
+            assert!((q.to_f64() - v).abs() <= 0.5 / f.scale() + 1e-12, "v={v} q={q}");
+        }
+    }
+
+    #[test]
+    fn saturation() {
+        let f = QFormat::Q8_8;
+        assert_eq!(Fixed::from_f64(1e9, f).raw, f.max_value());
+        assert_eq!(Fixed::from_f64(-1e9, f).raw, f.min_value());
+    }
+
+    #[test]
+    fn mul_widens() {
+        let f = QFormat::Q8_8;
+        let a = Fixed::from_f64(2.5, f);
+        let b = Fixed::from_f64(-4.0, f);
+        let p = a.mul_full(&b);
+        assert_eq!(p.fmt, QFormat::Q16_16);
+        assert!((p.to_f64() - -10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn requantize_rounds() {
+        let wide = Fixed { raw: 3 << 7, fmt: QFormat::new(32, 16) }; // 3 * 2^-9
+        let narrow = wide.requantize(QFormat::Q8_8);
+        // 3*2^-9 = 0.00586 -> nearest Q8.8 is 2 (0.0078) or 1 (0.0039); 1.5 rounds up to 2
+        assert_eq!(narrow.raw, 2);
+    }
+}

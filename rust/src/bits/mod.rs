@@ -1,0 +1,87 @@
+//! Bit-level utilities: arbitrary-width bit vectors and fixed-point helpers.
+//!
+//! The multiplier generators, the gate simulator and the CNN quantiser all
+//! move word-level values in and out of single-bit netlist ports; `BitVec`
+//! is the little-endian carrier for those values.
+
+mod bitvec;
+mod fixed;
+
+pub use bitvec::BitVec;
+pub use fixed::{Fixed, QFormat};
+
+/// Ceil(log2(n)) for n >= 1; 0 for n in {0, 1}.
+pub fn clog2(n: usize) -> u32 {
+    if n <= 1 {
+        0
+    } else {
+        (usize::BITS - (n - 1).leading_zeros()) as u32
+    }
+}
+
+/// Number of bits needed to represent `n` (1 for 0).
+pub fn bit_width(n: u128) -> u32 {
+    if n == 0 {
+        1
+    } else {
+        128 - n.leading_zeros()
+    }
+}
+
+/// Sign-extend the low `width` bits of `v` into an i128.
+pub fn sign_extend(v: u128, width: u32) -> i128 {
+    assert!(width >= 1 && width <= 128);
+    let shift = 128 - width;
+    ((v << shift) as i128) >> shift
+}
+
+/// Truncate `v` to its low `width` bits.
+pub fn truncate(v: u128, width: u32) -> u128 {
+    if width >= 128 {
+        v
+    } else {
+        v & ((1u128 << width) - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clog2_basics() {
+        assert_eq!(clog2(0), 0);
+        assert_eq!(clog2(1), 0);
+        assert_eq!(clog2(2), 1);
+        assert_eq!(clog2(3), 2);
+        assert_eq!(clog2(4), 2);
+        assert_eq!(clog2(5), 3);
+        assert_eq!(clog2(1024), 10);
+        assert_eq!(clog2(1025), 11);
+    }
+
+    #[test]
+    fn bit_width_basics() {
+        assert_eq!(bit_width(0), 1);
+        assert_eq!(bit_width(1), 1);
+        assert_eq!(bit_width(2), 2);
+        assert_eq!(bit_width(255), 8);
+        assert_eq!(bit_width(256), 9);
+    }
+
+    #[test]
+    fn sign_extend_basics() {
+        assert_eq!(sign_extend(0b1111, 4), -1);
+        assert_eq!(sign_extend(0b0111, 4), 7);
+        assert_eq!(sign_extend(0b1000, 4), -8);
+        assert_eq!(sign_extend(0xFFFF_FFFF, 32), -1);
+        assert_eq!(sign_extend(0x7FFF_FFFF, 32), i32::MAX as i128);
+    }
+
+    #[test]
+    fn truncate_basics() {
+        assert_eq!(truncate(0x1FF, 8), 0xFF);
+        assert_eq!(truncate(0x100, 8), 0);
+        assert_eq!(truncate(u128::MAX, 128), u128::MAX);
+    }
+}

@@ -1,0 +1,113 @@
+//! Minimal CLI argument parser (clap is unavailable offline — DESIGN.md §2).
+//!
+//! Supports `program <subcommand> --flag value --switch` with typed
+//! accessors and generated usage text.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed arguments: a subcommand plus `--key value` / `--switch` pairs.
+#[derive(Debug, Default)]
+pub struct Args {
+    /// First positional token (subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining positionals.
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator (first element = program name is skipped by
+    /// the caller passing `std::env::args().skip(1)`).
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // --key=value | --key value | --switch
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.flags.insert(name.to_string(), v);
+                } else {
+                    args.switches.push(name.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// String flag.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// String flag with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Required string flag.
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key)
+            .ok_or_else(|| Error::Usage(format!("missing required --{key}")))
+    }
+
+    /// Typed numeric flag.
+    pub fn get_num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Usage(format!("--{key} expects a number, got '{v}'"))),
+        }
+    }
+
+    /// Boolean switch present?
+    pub fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("tables --n 5 --mult kom --verbose");
+        assert_eq!(a.command.as_deref(), Some("tables"));
+        assert_eq!(a.get("n"), Some("5"));
+        assert_eq!(a.get("mult"), Some("kom"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_num("n", 0usize).unwrap(), 5);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("sta --width=32");
+        assert_eq!(a.get("width"), Some("32"));
+    }
+
+    #[test]
+    fn missing_required() {
+        let a = parse("emit");
+        assert!(a.require("mult").is_err());
+    }
+
+    #[test]
+    fn bad_number() {
+        let a = parse("x --n abc");
+        assert!(a.get_num("n", 0usize).is_err());
+    }
+}

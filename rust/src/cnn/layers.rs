@@ -1,0 +1,165 @@
+//! Layer descriptors with shape inference.
+
+use crate::error::{Error, Result};
+use crate::systolic::PoolKind;
+
+/// Activation/weight spatial shape `[c, h, w]` or flat `[n]`.
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub enum LayerShape {
+    /// Channels × height × width.
+    Chw(usize, usize, usize),
+    /// Flat features.
+    Flat(usize),
+}
+
+impl LayerShape {
+    /// Element count.
+    pub fn volume(&self) -> usize {
+        match *self {
+            LayerShape::Chw(c, h, w) => c * h * w,
+            LayerShape::Flat(n) => n,
+        }
+    }
+
+    /// As a shape vector.
+    pub fn dims(&self) -> Vec<usize> {
+        match *self {
+            LayerShape::Chw(c, h, w) => vec![c, h, w],
+            LayerShape::Flat(n) => vec![n],
+        }
+    }
+}
+
+/// One network layer (weights not included — see `networks::Network`).
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub enum Layer {
+    /// Square-kernel convolution + fused ReLU.
+    Conv {
+        /// Output channels.
+        cout: usize,
+        /// Kernel size.
+        k: usize,
+        /// Stride.
+        stride: usize,
+        /// Padding.
+        pad: usize,
+    },
+    /// Pooling.
+    Pool {
+        /// Window.
+        k: usize,
+        /// Stride.
+        stride: usize,
+        /// Operator.
+        kind: PoolKind,
+    },
+    /// Fully connected (+ ReLU unless final).
+    Fc {
+        /// Output features.
+        n_out: usize,
+        /// ReLU after.
+        relu: bool,
+    },
+    /// Flatten CHW to features.
+    Flatten,
+}
+
+impl Layer {
+    /// Output shape given `input`, or an error if incompatible.
+    pub fn out_shape(&self, input: &LayerShape) -> Result<LayerShape> {
+        match (self, input) {
+            (Layer::Conv { cout, k, stride, pad }, LayerShape::Chw(_, h, w)) => {
+                if h + 2 * pad < *k || w + 2 * pad < *k {
+                    return Err(Error::Shape(format!(
+                        "conv k={k} larger than padded {h}x{w}"
+                    )));
+                }
+                Ok(LayerShape::Chw(
+                    *cout,
+                    (h + 2 * pad - k) / stride + 1,
+                    (w + 2 * pad - k) / stride + 1,
+                ))
+            }
+            (Layer::Pool { k, stride, .. }, LayerShape::Chw(c, h, w)) => {
+                if h < k || w < k {
+                    return Err(Error::Shape(format!("pool k={k} larger than {h}x{w}")));
+                }
+                Ok(LayerShape::Chw(*c, (h - k) / stride + 1, (w - k) / stride + 1))
+            }
+            (Layer::Flatten, s @ LayerShape::Chw(..)) => Ok(LayerShape::Flat(s.volume())),
+            (Layer::Fc { n_out, .. }, LayerShape::Flat(_)) => Ok(LayerShape::Flat(*n_out)),
+            (l, s) => Err(Error::Shape(format!("{l:?} on {s:?}"))),
+        }
+    }
+
+    /// Weight element count for this layer given its input shape.
+    pub fn weight_count(&self, input: &LayerShape) -> usize {
+        match (self, input) {
+            (Layer::Conv { cout, k, .. }, LayerShape::Chw(c, ..)) => cout * c * k * k,
+            (Layer::Fc { n_out, .. }, LayerShape::Flat(n_in)) => n_out * n_in + n_out,
+            _ => 0,
+        }
+    }
+
+    /// Number of k×k kernel matrices this layer contributes (the unit the
+    /// paper's §I/§V analysis counts: cout × cin kernels per conv layer).
+    pub fn kernel_count(&self, input: &LayerShape) -> usize {
+        match (self, input) {
+            (Layer::Conv { cout, .. }, LayerShape::Chw(c, ..)) => cout * c,
+            _ => 0,
+        }
+    }
+
+    /// MAC count to evaluate this layer once.
+    pub fn macs(&self, input: &LayerShape) -> Result<u64> {
+        let out = self.out_shape(input)?;
+        Ok(match (self, input, &out) {
+            (Layer::Conv { k, .. }, LayerShape::Chw(c, ..), LayerShape::Chw(co, ho, wo)) => {
+                (co * ho * wo * c * k * k) as u64
+            }
+            (Layer::Fc { n_out, .. }, LayerShape::Flat(n_in), _) => (n_in * n_out) as u64,
+            _ => 0,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shapes_alexnet_first() {
+        // AlexNet conv1: 227x227x3, 96 kernels 11x11 stride 4 -> 55x55x96
+        let s = Layer::Conv { cout: 96, k: 11, stride: 4, pad: 0 }
+            .out_shape(&LayerShape::Chw(3, 227, 227))
+            .unwrap();
+        assert_eq!(s, LayerShape::Chw(96, 55, 55));
+    }
+
+    #[test]
+    fn vgg_conv_preserves_hw() {
+        let s = Layer::Conv { cout: 64, k: 3, stride: 1, pad: 1 }
+            .out_shape(&LayerShape::Chw(3, 224, 224))
+            .unwrap();
+        assert_eq!(s, LayerShape::Chw(64, 224, 224));
+    }
+
+    #[test]
+    fn incompatible_rejected() {
+        assert!(Layer::Fc { n_out: 10, relu: false }
+            .out_shape(&LayerShape::Chw(1, 2, 2))
+            .is_err());
+        assert!(Layer::Conv { cout: 1, k: 5, stride: 1, pad: 0 }
+            .out_shape(&LayerShape::Chw(1, 3, 3))
+            .is_err());
+    }
+
+    #[test]
+    fn kernel_counting() {
+        // 96 kernels × 3 input channels = 288 3-channel... the paper counts
+        // cout*cin kernel matrices
+        let k = Layer::Conv { cout: 96, k: 11, stride: 4, pad: 0 }
+            .kernel_count(&LayerShape::Chw(3, 227, 227));
+        assert_eq!(k, 288);
+    }
+}

@@ -1,0 +1,21 @@
+//! CNN layer/network definitions, integer tensors and quantisation — the
+//! substrate for the paper's §V network analysis and for the end-to-end
+//! inference path.
+//!
+//! * [`tensor`] — NCHW integer tensors with reference conv/pool/fc ops,
+//! * [`quant`] — fixed-point (Q8.8) quantisation of float models,
+//! * [`layers`] — layer descriptors with shape inference,
+//! * [`networks`] — **full** AlexNet / VGG16 / VGG19 layer tables plus the
+//!   scaled-down variants used for end-to-end runs,
+//! * [`analysis`] — kernel-count histograms and network-level
+//!   resource/delay/multiplier aggregation (§V, Tables 1–4 context).
+
+pub mod analysis;
+pub mod layers;
+pub mod networks;
+pub mod quant;
+pub mod tensor;
+
+pub use layers::{Layer, LayerShape};
+pub use networks::{Network, NetworkKind};
+pub use tensor::Tensor;

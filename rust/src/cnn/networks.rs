@@ -1,0 +1,444 @@
+//! Network definitions: the paper's three reference CNNs (§I) in full,
+//! plus scaled-down variants for end-to-end simulation, and deployment
+//! onto the accelerator.
+
+use super::layers::{Layer, LayerShape};
+use super::tensor::{self, Tensor};
+use crate::accel::{Driver, LayerDesc};
+use crate::error::{Error, Result};
+use crate::systolic::PoolKind;
+
+/// Which network.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum NetworkKind {
+    /// Krizhevsky et al., 227×227×3 input.
+    AlexNet,
+    /// Simonyan & Zisserman configuration D.
+    Vgg16,
+    /// Simonyan & Zisserman configuration E.
+    Vgg19,
+    /// 16×16 grayscale toy CNN for end-to-end runs.
+    Tiny,
+    /// AlexNet-structured small model (11/5/3 kernels preserved).
+    AlexNetMini,
+    /// VGG-structured small model (3×3 stacks).
+    VggMini,
+}
+
+impl NetworkKind {
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "alexnet" => NetworkKind::AlexNet,
+            "vgg16" => NetworkKind::Vgg16,
+            "vgg19" => NetworkKind::Vgg19,
+            "tiny" => NetworkKind::Tiny,
+            "alexnet-mini" => NetworkKind::AlexNetMini,
+            "vgg-mini" => NetworkKind::VggMini,
+            other => return Err(Error::Usage(format!("unknown network '{other}'"))),
+        })
+    }
+}
+
+/// A network: input shape + layer list (weights live in
+/// [`NetworkInstance`]).
+#[derive(Clone, Debug)]
+pub struct Network {
+    /// Name for reports.
+    pub name: String,
+    /// Kind.
+    pub kind: NetworkKind,
+    /// Input activation shape.
+    pub input: LayerShape,
+    /// Layers in execution order.
+    pub layers: Vec<Layer>,
+}
+
+fn conv(cout: usize, k: usize, stride: usize, pad: usize) -> Layer {
+    Layer::Conv { cout, k, stride, pad }
+}
+fn maxpool(k: usize, stride: usize) -> Layer {
+    Layer::Pool { k, stride, kind: PoolKind::Max }
+}
+fn fc(n_out: usize, relu: bool) -> Layer {
+    Layer::Fc { n_out, relu }
+}
+
+impl Network {
+    /// Build a network by kind.
+    pub fn build(kind: NetworkKind) -> Network {
+        match kind {
+            NetworkKind::AlexNet => Network {
+                name: "AlexNet".into(),
+                kind,
+                input: LayerShape::Chw(3, 227, 227),
+                layers: vec![
+                    conv(96, 11, 4, 0),
+                    maxpool(3, 2),
+                    conv(256, 5, 1, 2),
+                    maxpool(3, 2),
+                    conv(384, 3, 1, 1),
+                    conv(384, 3, 1, 1),
+                    conv(256, 3, 1, 1),
+                    maxpool(3, 2),
+                    Layer::Flatten,
+                    fc(4096, true),
+                    fc(4096, true),
+                    fc(1000, false),
+                ],
+            },
+            NetworkKind::Vgg16 => Network {
+                name: "VGG16".into(),
+                kind,
+                input: LayerShape::Chw(3, 224, 224),
+                layers: vec![
+                    conv(64, 3, 1, 1),
+                    conv(64, 3, 1, 1),
+                    maxpool(2, 2),
+                    conv(128, 3, 1, 1),
+                    conv(128, 3, 1, 1),
+                    maxpool(2, 2),
+                    conv(256, 3, 1, 1),
+                    conv(256, 3, 1, 1),
+                    conv(256, 3, 1, 1),
+                    maxpool(2, 2),
+                    conv(512, 3, 1, 1),
+                    conv(512, 3, 1, 1),
+                    conv(512, 3, 1, 1),
+                    maxpool(2, 2),
+                    conv(512, 3, 1, 1),
+                    conv(512, 3, 1, 1),
+                    conv(512, 3, 1, 1),
+                    maxpool(2, 2),
+                    Layer::Flatten,
+                    fc(4096, true),
+                    fc(4096, true),
+                    fc(1000, false),
+                ],
+            },
+            NetworkKind::Vgg19 => {
+                let mut layers = vec![
+                    conv(64, 3, 1, 1),
+                    conv(64, 3, 1, 1),
+                    maxpool(2, 2),
+                    conv(128, 3, 1, 1),
+                    conv(128, 3, 1, 1),
+                    maxpool(2, 2),
+                ];
+                for _ in 0..4 {
+                    layers.push(conv(256, 3, 1, 1));
+                }
+                layers.push(maxpool(2, 2));
+                for _ in 0..4 {
+                    layers.push(conv(512, 3, 1, 1));
+                }
+                layers.push(maxpool(2, 2));
+                for _ in 0..4 {
+                    layers.push(conv(512, 3, 1, 1));
+                }
+                layers.push(maxpool(2, 2));
+                layers.push(Layer::Flatten);
+                layers.push(fc(4096, true));
+                layers.push(fc(4096, true));
+                layers.push(fc(1000, false));
+                Network {
+                    name: "VGG19".into(),
+                    kind,
+                    input: LayerShape::Chw(3, 224, 224),
+                    layers,
+                }
+            }
+            NetworkKind::Tiny => Network {
+                name: "TinyCNN".into(),
+                kind,
+                input: LayerShape::Chw(1, 16, 16),
+                layers: vec![
+                    conv(8, 3, 1, 1),
+                    maxpool(2, 2),
+                    conv(16, 3, 1, 1),
+                    maxpool(2, 2),
+                    Layer::Flatten,
+                    fc(32, true),
+                    fc(10, false),
+                ],
+            },
+            NetworkKind::AlexNetMini => Network {
+                name: "AlexNet-mini".into(),
+                kind,
+                input: LayerShape::Chw(3, 33, 33),
+                layers: vec![
+                    conv(8, 11, 2, 0), // 33 -> 12
+                    maxpool(3, 2),     // 12 -> 5
+                    conv(16, 5, 1, 2), // 5 -> 5
+                    conv(16, 3, 1, 1),
+                    Layer::Flatten,
+                    fc(64, true),
+                    fc(10, false),
+                ],
+            },
+            NetworkKind::VggMini => Network {
+                name: "VGG-mini".into(),
+                kind,
+                input: LayerShape::Chw(3, 32, 32),
+                layers: vec![
+                    conv(8, 3, 1, 1),
+                    conv(8, 3, 1, 1),
+                    maxpool(2, 2),
+                    conv(16, 3, 1, 1),
+                    conv(16, 3, 1, 1),
+                    maxpool(2, 2),
+                    Layer::Flatten,
+                    fc(64, true),
+                    fc(10, false),
+                ],
+            },
+        }
+    }
+
+    /// Activation shape after every layer (index 0 = input).
+    pub fn shapes(&self) -> Result<Vec<LayerShape>> {
+        let mut out = vec![self.input.clone()];
+        for l in &self.layers {
+            let next = l.out_shape(out.last().unwrap())?;
+            out.push(next);
+        }
+        Ok(out)
+    }
+
+    /// Total weights (incl. biases).
+    pub fn total_weights(&self) -> Result<u64> {
+        let shapes = self.shapes()?;
+        Ok(self
+            .layers
+            .iter()
+            .zip(&shapes)
+            .map(|(l, s)| l.weight_count(s) as u64)
+            .sum())
+    }
+
+    /// Total MACs for one inference.
+    pub fn total_macs(&self) -> Result<u64> {
+        let shapes = self.shapes()?;
+        let mut total = 0;
+        for (l, s) in self.layers.iter().zip(&shapes) {
+            total += l.macs(s)?;
+        }
+        Ok(total)
+    }
+}
+
+/// A network with concrete (quantised) weights.
+pub struct NetworkInstance {
+    /// The architecture.
+    pub net: Network,
+    /// `(weights, bias)` per layer (`None` for pool/flatten).
+    pub params: Vec<Option<(Tensor, Tensor)>>,
+}
+
+impl NetworkInstance {
+    /// Instantiate with deterministic pseudo-random Q8.8 weights — small
+    /// magnitudes so repeated requantisation stays in range.
+    pub fn random(net: Network, seed: u64) -> Result<Self> {
+        let shapes = net.shapes()?;
+        let mut params = Vec::with_capacity(net.layers.len());
+        for (i, (l, s)) in net.layers.iter().zip(&shapes).enumerate() {
+            let p = match (l, s) {
+                (Layer::Conv { cout, k, .. }, LayerShape::Chw(c, ..)) => {
+                    let w = Tensor::random(
+                        vec![*cout, *c, *k, *k],
+                        24, // small Q8.8 weights (~0.09 max)
+                        seed.wrapping_add(i as u64 * 7919),
+                    );
+                    let b = Tensor::zeros(vec![*cout]);
+                    Some((w, b))
+                }
+                (Layer::Fc { n_out, .. }, LayerShape::Flat(n_in)) => {
+                    let w = Tensor::random(
+                        vec![*n_out, *n_in],
+                        12,
+                        seed.wrapping_add(i as u64 * 104729),
+                    );
+                    let b = Tensor::random(vec![*n_out], 64, seed.wrapping_add(i as u64 * 31));
+                    Some((w, b))
+                }
+                _ => None,
+            };
+            params.push(p);
+        }
+        Ok(NetworkInstance { net, params })
+    }
+
+    /// Golden forward pass on the host (reference semantics; the systolic
+    /// engine and the XLA artifact must both match this bit-exactly).
+    pub fn forward_ref(&self, input: &Tensor) -> Result<Tensor> {
+        let mut act = input.clone();
+        for (l, p) in self.net.layers.iter().zip(&self.params) {
+            act = match l {
+                Layer::Conv { stride, pad, .. } => {
+                    let (w, _b) = p.as_ref().unwrap();
+                    tensor::conv2d_ref(&act, w, *stride, *pad, true, 8)?
+                }
+                Layer::Pool { k, stride, kind } => tensor::pool2d_ref(&act, *k, *stride, *kind)?,
+                Layer::Flatten => act.flatten(),
+                Layer::Fc { relu, .. } => {
+                    let (w, b) = p.as_ref().unwrap();
+                    tensor::fc_ref(&act, w, b, *relu, 8)?
+                }
+            };
+        }
+        Ok(act)
+    }
+
+    /// Deploy onto an accelerator: upload weights, allocate activation
+    /// buffers, return `(descriptor table, input address, output address)`.
+    pub fn deploy(&self, drv: &mut Driver) -> Result<(Vec<LayerDesc>, u32, u32)> {
+        let shapes = self.net.shapes()?;
+        let in_addr = drv.alloc(shapes[0].volume())?;
+        let mut cur_addr = in_addr;
+        let mut descs = Vec::new();
+        for (i, (l, p)) in self.net.layers.iter().zip(&self.params).enumerate() {
+            let in_shape = &shapes[i];
+            let out_shape = &shapes[i + 1];
+            match l {
+                Layer::Conv { cout, k, stride, pad } => {
+                    let (w, _b) = p.as_ref().unwrap();
+                    let w_addr = drv.upload(&w.data)?;
+                    let out_addr = drv.alloc(out_shape.volume())?;
+                    let LayerShape::Chw(c, h, wd) = *in_shape else {
+                        return Err(Error::Shape("conv on flat".into()));
+                    };
+                    descs.push(LayerDesc::Conv {
+                        cout: *cout as u32,
+                        cin: c as u32,
+                        k: *k as u32,
+                        stride: *stride as u32,
+                        pad: *pad as u32,
+                        w_addr,
+                        in_addr: cur_addr,
+                        h: h as u32,
+                        w: wd as u32,
+                        out_addr,
+                        relu: true,
+                        out_shift: 8,
+                    });
+                    cur_addr = out_addr;
+                }
+                Layer::Pool { k, stride, kind } => {
+                    let out_addr = drv.alloc(out_shape.volume())?;
+                    let LayerShape::Chw(c, h, wd) = *in_shape else {
+                        return Err(Error::Shape("pool on flat".into()));
+                    };
+                    descs.push(LayerDesc::Pool {
+                        k: *k as u32,
+                        stride: *stride as u32,
+                        kind: *kind,
+                        in_addr: cur_addr,
+                        c: c as u32,
+                        h: h as u32,
+                        w: wd as u32,
+                        out_addr,
+                    });
+                    cur_addr = out_addr;
+                }
+                Layer::Flatten => { /* same buffer, new view */ }
+                Layer::Fc { n_out, relu } => {
+                    let (w, b) = p.as_ref().unwrap();
+                    let w_addr = drv.upload(&w.data)?;
+                    let b_addr = drv.upload(&b.data)?;
+                    let out_addr = drv.alloc(out_shape.volume())?;
+                    let LayerShape::Flat(n_in) = *in_shape else {
+                        return Err(Error::Shape("fc on chw".into()));
+                    };
+                    descs.push(LayerDesc::Fc {
+                        n_in: n_in as u32,
+                        n_out: *n_out as u32,
+                        w_addr,
+                        b_addr,
+                        in_addr: cur_addr,
+                        out_addr,
+                        relu: *relu,
+                        out_shift: 8,
+                    });
+                    cur_addr = out_addr;
+                }
+            }
+        }
+        Ok((descs, in_addr, cur_addr))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::SocConfig;
+
+    #[test]
+    fn full_networks_shape_check() {
+        for kind in [NetworkKind::AlexNet, NetworkKind::Vgg16, NetworkKind::Vgg19] {
+            let n = Network::build(kind);
+            let shapes = n.shapes().unwrap();
+            assert_eq!(
+                *shapes.last().unwrap(),
+                LayerShape::Flat(1000),
+                "{:?} must end at 1000 classes",
+                kind
+            );
+        }
+    }
+
+    #[test]
+    fn alexnet_landmark_shapes() {
+        let n = Network::build(NetworkKind::AlexNet);
+        let shapes = n.shapes().unwrap();
+        assert_eq!(shapes[1], LayerShape::Chw(96, 55, 55)); // conv1
+        assert_eq!(shapes[2], LayerShape::Chw(96, 27, 27)); // pool1
+        assert_eq!(shapes[8], LayerShape::Chw(256, 6, 6)); // pool3
+        assert_eq!(shapes[9], LayerShape::Flat(9216));
+    }
+
+    #[test]
+    fn vgg16_has_13_convs_3_fcs() {
+        // the paper says "12" — the canonical configuration D has 13
+        let n = Network::build(NetworkKind::Vgg16);
+        let convs = n.layers.iter().filter(|l| matches!(l, Layer::Conv { .. })).count();
+        let fcs = n.layers.iter().filter(|l| matches!(l, Layer::Fc { .. })).count();
+        assert_eq!((convs, fcs), (13, 3));
+    }
+
+    #[test]
+    fn vgg19_has_16_convs() {
+        let n = Network::build(NetworkKind::Vgg19);
+        let convs = n.layers.iter().filter(|l| matches!(l, Layer::Conv { .. })).count();
+        assert_eq!(convs, 16);
+    }
+
+    #[test]
+    fn macs_magnitudes() {
+        // AlexNet ≈ 0.7 GMAC, VGG16 ≈ 15.5 GMAC
+        let a = Network::build(NetworkKind::AlexNet).total_macs().unwrap();
+        let v = Network::build(NetworkKind::Vgg16).total_macs().unwrap();
+        assert!(a > 500_000_000 && a < 1_200_000_000, "alexnet {a}");
+        assert!(v > 14_000_000_000 && v < 17_000_000_000, "vgg16 {v}");
+    }
+
+    #[test]
+    fn tiny_runs_on_accelerator_and_matches_reference() {
+        let net = Network::build(NetworkKind::Tiny);
+        let inst = NetworkInstance::random(net, 42).unwrap();
+        let input = Tensor::random(vec![1, 16, 16], 127, 7);
+        let want = inst.forward_ref(&input).unwrap();
+
+        let mut drv = Driver::new(SocConfig {
+            dram_words: 1 << 20,
+            spad_words: 1 << 14,
+            ..Default::default()
+        });
+        let (descs, in_addr, out_addr) = inst.deploy(&mut drv).unwrap();
+        drv.write_region(in_addr, &input.data).unwrap();
+        let metrics = drv.run_table(&descs).unwrap();
+        let got = drv.read_region(out_addr, want.len()).unwrap();
+        assert_eq!(got, want.data, "systolic engine ≡ reference");
+        assert_eq!(metrics.layers as usize, descs.len());
+        assert!(metrics.ops > 0);
+    }
+}

@@ -1,0 +1,66 @@
+//! Float → fixed-point quantisation for the accelerator data plane.
+//!
+//! The datapath is Q8.8 (see `crate::bits::QFormat`): activations and
+//! weights are 16-bit fixed point carried in i64 lanes; products are Q16.16
+//! and requantised with an arithmetic right shift of 8 — the same
+//! convention the Pallas kernel uses on the XLA side, so both paths are
+//! bit-comparable.
+
+use crate::bits::{Fixed, QFormat};
+use crate::cnn::tensor::Tensor;
+use crate::error::Result;
+
+/// Quantise a float tensor to Q8.8 raw integers.
+pub fn quantize(data: &[f64], shape: Vec<usize>) -> Result<Tensor> {
+    let q: Vec<i64> = data
+        .iter()
+        .map(|&v| Fixed::from_f64(v, QFormat::Q8_8).raw)
+        .collect();
+    Tensor::new(q, shape)
+}
+
+/// Dequantise Q8.8 raw integers back to floats.
+pub fn dequantize(t: &Tensor) -> Vec<f64> {
+    t.data
+        .iter()
+        .map(|&raw| Fixed { raw, fmt: QFormat::Q8_8 }.to_f64())
+        .collect()
+}
+
+/// Max |error| introduced by quantising `data` (for accuracy reports).
+pub fn quant_error(data: &[f64]) -> f64 {
+    data.iter()
+        .map(|&v| {
+            let q = Fixed::from_f64(v, QFormat::Q8_8).to_f64();
+            (q - v).abs()
+        })
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_within_half_ulp() {
+        let vals = [0.0, 0.5, -0.25, 1.0 / 3.0, -100.7, 127.996];
+        let t = quantize(&vals, vec![6]).unwrap();
+        let back = dequantize(&t);
+        for (a, b) in vals.iter().zip(back) {
+            assert!((a - b).abs() <= 0.5 / 256.0 + 1e-12, "{a} -> {b}");
+        }
+    }
+
+    #[test]
+    fn saturates_out_of_range() {
+        let t = quantize(&[1e6, -1e6], vec![2]).unwrap();
+        assert_eq!(t.data[0], i16::MAX as i64);
+        assert_eq!(t.data[1], i16::MIN as i64);
+    }
+
+    #[test]
+    fn error_bound() {
+        let vals: Vec<f64> = (0..100).map(|i| (i as f64) * 0.013 - 0.65).collect();
+        assert!(quant_error(&vals) <= 0.5 / 256.0 + 1e-12);
+    }
+}

@@ -1,0 +1,199 @@
+//! Integer NCHW tensors and golden layer ops.
+//!
+//! The accelerator data plane is integer (Q8.8 fixed point); these
+//! reference implementations define the semantics the systolic engine must
+//! match bit-exactly and are also the host-side check against the XLA
+//! golden path.
+
+use crate::error::{Error, Result};
+
+/// A dense integer tensor with explicit shape.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tensor {
+    /// Flattened data, row-major over `shape`.
+    pub data: Vec<i64>,
+    /// Dimensions.
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    /// Build from parts (checks volume).
+    pub fn new(data: Vec<i64>, shape: Vec<usize>) -> Result<Self> {
+        let vol: usize = shape.iter().product();
+        if vol != data.len() {
+            return Err(Error::Shape(format!(
+                "data {} != shape {:?} volume {vol}",
+                data.len(),
+                shape
+            )));
+        }
+        Ok(Tensor { data, shape })
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        Tensor {
+            data: vec![0; shape.iter().product()],
+            shape,
+        }
+    }
+
+    /// Deterministic pseudo-random tensor in `[-range, range]`.
+    pub fn random(shape: Vec<usize>, range: i64, seed: u64) -> Self {
+        let mut s = seed | 1;
+        let data = (0..shape.iter().product())
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                (s % (2 * range as u64 + 1)) as i64 - range
+            })
+            .collect();
+        Tensor { data, shape }
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Flatten to 1-D.
+    pub fn flatten(mut self) -> Tensor {
+        self.shape = vec![self.data.len()];
+        self
+    }
+
+    /// Index of the maximum element (argmax — classification readout).
+    pub fn argmax(&self) -> usize {
+        self.data
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &v)| v)
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+/// Reference conv2d on `[c,h,w]` input, `[cout,cin,k,k]` weights.
+pub fn conv2d_ref(
+    input: &Tensor,
+    weights: &Tensor,
+    stride: usize,
+    pad: usize,
+    relu: bool,
+    out_shift: u32,
+) -> Result<Tensor> {
+    let [c, h, w] = input.shape[..] else {
+        return Err(Error::Shape(format!("conv input {:?}", input.shape)));
+    };
+    let [cout, cin, kh, kw] = weights.shape[..] else {
+        return Err(Error::Shape(format!("conv weights {:?}", weights.shape)));
+    };
+    if cin != c {
+        return Err(Error::Shape(format!("conv cin {cin} != input c {c}")));
+    }
+    let (data, ho, wo) = crate::systolic::conv2d::conv2d_reference(
+        &input.data,
+        c,
+        h,
+        w,
+        &weights.data,
+        cout,
+        kh,
+        kw,
+        stride,
+        pad,
+    );
+    let mut out = data;
+    for v in out.iter_mut() {
+        *v >>= out_shift;
+        if relu {
+            *v = (*v).max(0);
+        }
+    }
+    Tensor::new(out, vec![cout, ho, wo])
+}
+
+/// Reference max/avg pooling.
+pub fn pool2d_ref(
+    input: &Tensor,
+    k: usize,
+    stride: usize,
+    kind: crate::systolic::PoolKind,
+) -> Result<Tensor> {
+    let [c, h, w] = input.shape[..] else {
+        return Err(Error::Shape(format!("pool input {:?}", input.shape)));
+    };
+    let r = crate::systolic::pool::pool2d(&input.data, c, h, w, k, stride, kind, 1 << 40)?;
+    Tensor::new(r.data, vec![c, r.ho, r.wo])
+}
+
+/// Reference fully-connected layer.
+pub fn fc_ref(
+    input: &Tensor,
+    weights: &Tensor,
+    bias: &Tensor,
+    relu: bool,
+    out_shift: u32,
+) -> Result<Tensor> {
+    let [n_out, n_in] = weights.shape[..] else {
+        return Err(Error::Shape(format!("fc weights {:?}", weights.shape)));
+    };
+    if input.len() != n_in || bias.len() != n_out {
+        return Err(Error::Shape(format!(
+            "fc shapes in={} w={:?} b={}",
+            input.len(),
+            weights.shape,
+            bias.len()
+        )));
+    }
+    let r = crate::systolic::fc::fc(&input.data, &weights.data, &bias.data, n_in, n_out, 1 << 40)?;
+    let mut out = r.data;
+    for v in out.iter_mut() {
+        *v >>= out_shift;
+        if relu {
+            *v = (*v).max(0);
+        }
+    }
+    Tensor::new(out, vec![n_out])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checked() {
+        assert!(Tensor::new(vec![1, 2, 3], vec![2, 2]).is_err());
+        assert!(Tensor::new(vec![1, 2, 3, 4], vec![2, 2]).is_ok());
+    }
+
+    #[test]
+    fn argmax_readout() {
+        let t = Tensor::new(vec![3, -1, 99, 0], vec![4]).unwrap();
+        assert_eq!(t.argmax(), 2);
+    }
+
+    #[test]
+    fn conv_shift_relu() {
+        let input = Tensor::new(vec![-4, 4, 8, -8], vec![1, 2, 2]).unwrap();
+        let w = Tensor::new(vec![4], vec![1, 1, 1, 1]).unwrap();
+        let out = conv2d_ref(&input, &w, 1, 0, true, 2).unwrap();
+        // v*4>>2 = v, relu
+        assert_eq!(out.data, vec![0, 4, 8, 0]);
+    }
+
+    #[test]
+    fn fc_matches_manual() {
+        let x = Tensor::new(vec![1, 2], vec![2]).unwrap();
+        let w = Tensor::new(vec![3, 4, -1, 1], vec![2, 2]).unwrap();
+        let b = Tensor::new(vec![0, 10], vec![2]).unwrap();
+        let y = fc_ref(&x, &w, &b, false, 0).unwrap();
+        assert_eq!(y.data, vec![11, 11]);
+    }
+}

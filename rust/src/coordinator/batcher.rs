@@ -1,0 +1,121 @@
+//! Dynamic batching: group requests under a max-size / max-wait policy.
+
+use super::request::InferenceRequest;
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Maximum requests per batch.
+    pub max_batch: usize,
+    /// Maximum time the first request of a batch waits for company.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Pulls requests from the front-door channel and forms batches.
+pub struct Batcher {
+    rx: Receiver<InferenceRequest>,
+    policy: BatchPolicy,
+}
+
+impl Batcher {
+    /// New batcher over the submission channel.
+    pub fn new(rx: Receiver<InferenceRequest>, policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch >= 1);
+        Batcher { rx, policy }
+    }
+
+    /// Block for the next batch. `None` when the channel is closed and
+    /// drained (shutdown).
+    pub fn next_batch(&self) -> Option<Vec<InferenceRequest>> {
+        // block for the batch's first request
+        let first = self.rx.recv().ok()?;
+        let deadline = Instant::now() + self.policy.max_wait;
+        let mut batch = vec![first];
+        while batch.len() < self.policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(req) => batch.push(req),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::tensor::Tensor;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn req(id: u64, reply: mpsc::Sender<super::super::request::InferenceResponse>) -> InferenceRequest {
+        InferenceRequest {
+            id,
+            input: Tensor::zeros(vec![1]),
+            submitted: Instant::now(),
+            reply,
+        }
+    }
+
+    #[test]
+    fn batches_up_to_max() {
+        let (tx, rx) = mpsc::channel();
+        let (rtx, _rrx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(req(i, rtx.clone())).unwrap();
+        }
+        let b = Batcher::new(
+            rx,
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(50),
+            },
+        );
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 4);
+        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3], "FIFO within batch");
+    }
+
+    #[test]
+    fn flushes_partial_batch_on_timeout() {
+        let (tx, rx) = mpsc::channel();
+        let (rtx, _rrx) = mpsc::channel();
+        tx.send(req(0, rtx)).unwrap();
+        let b = Batcher::new(
+            rx,
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(5),
+            },
+        );
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn none_on_shutdown() {
+        let (tx, rx) = mpsc::channel::<InferenceRequest>();
+        drop(tx);
+        let b = Batcher::new(rx, BatchPolicy::default());
+        assert!(b.next_batch().is_none());
+    }
+}

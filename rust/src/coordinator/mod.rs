@@ -1,0 +1,19 @@
+//! L3 inference coordinator: request routing, dynamic batching and a pool
+//! of accelerator workers (std-thread + mpsc — tokio is unavailable in
+//! this offline environment, see DESIGN.md §2).
+//!
+//! Shape: a vLLM-router-style serving loop scaled to this paper — clients
+//! submit images, the [`batcher`] groups them under a max-batch/max-wait
+//! policy, and [`server`] workers (each owning a private accelerator SoC
+//! simulation, optionally cross-checked against the XLA artifact) execute
+//! batches and report per-request latency to [`stats`].
+
+pub mod batcher;
+pub mod request;
+pub mod server;
+pub mod stats;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use request::{InferenceRequest, InferenceResponse, RequestId};
+pub use server::{Coordinator, CoordinatorConfig};
+pub use stats::{LatencyStats, StatsCollector};

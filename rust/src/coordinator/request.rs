@@ -1,0 +1,39 @@
+//! Request/response types.
+
+use crate::cnn::tensor::Tensor;
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+/// Monotonic request identifier.
+pub type RequestId = u64;
+
+/// One inference request.
+pub struct InferenceRequest {
+    /// Unique id (assigned by the coordinator front door).
+    pub id: RequestId,
+    /// Input activation tensor.
+    pub input: Tensor,
+    /// Submission timestamp (for end-to-end latency).
+    pub submitted: Instant,
+    /// Completion channel.
+    pub reply: Sender<InferenceResponse>,
+}
+
+/// One inference response.
+#[derive(Clone, Debug)]
+pub struct InferenceResponse {
+    /// Request id.
+    pub id: RequestId,
+    /// Output logits.
+    pub logits: Vec<i64>,
+    /// Argmax class.
+    pub class: usize,
+    /// End-to-end latency in microseconds.
+    pub latency_us: u64,
+    /// Size of the batch this request rode in.
+    pub batch_size: usize,
+    /// Worker that served it.
+    pub worker: usize,
+    /// Simulated accelerator cycles for the batch.
+    pub accel_cycles: u64,
+}

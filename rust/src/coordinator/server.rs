@@ -1,0 +1,297 @@
+//! The coordinator: front door, batcher thread, worker pool.
+//!
+//! ```text
+//!   submit() ──tx──► batcher thread ──work queue──► worker 0 (SoC #0)
+//!                                              ├──► worker 1 (SoC #1)
+//!                                              └──► …
+//! ```
+//!
+//! Each worker owns a **private accelerator** (its own `accel::Driver`
+//! with the network deployed), mirroring a multi-card serving node.
+//! Workers pull whole batches from a shared queue (work stealing ≈
+//! least-loaded routing), run each request through the systolic engine,
+//! and reply per request.
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::request::{InferenceRequest, InferenceResponse, RequestId};
+use super::stats::StatsCollector;
+use crate::accel::{Driver, LayerDesc, SocConfig};
+use crate::cnn::networks::NetworkInstance;
+use crate::cnn::tensor::Tensor;
+use crate::error::{Error, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Coordinator sizing/policy.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Worker (accelerator) count.
+    pub workers: usize,
+    /// Batching policy.
+    pub batch: BatchPolicy,
+    /// Per-worker SoC configuration.
+    pub soc: SocConfig,
+    /// Simulated accelerator clock (MHz) used to convert cycles into
+    /// simulated service time for reporting.
+    pub clock_mhz: f64,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            workers: 2,
+            batch: BatchPolicy::default(),
+            soc: SocConfig {
+                dram_words: 1 << 22,
+                spad_words: 1 << 14,
+                ..Default::default()
+            },
+            clock_mhz: 200.0,
+        }
+    }
+}
+
+struct Worker {
+    drv: Driver,
+    descs: Vec<LayerDesc>,
+    in_addr: u32,
+    out_addr: u32,
+    out_len: usize,
+}
+
+impl Worker {
+    fn build(cfg: &CoordinatorConfig, inst: &NetworkInstance) -> Result<Self> {
+        let mut drv = Driver::new(cfg.soc);
+        let (descs, in_addr, out_addr) = inst.deploy(&mut drv)?;
+        let shapes = inst.net.shapes()?;
+        Ok(Worker {
+            drv,
+            descs,
+            in_addr,
+            out_addr,
+            out_len: shapes.last().unwrap().volume(),
+        })
+    }
+
+    fn infer(&mut self, input: &Tensor) -> Result<(Vec<i64>, u64)> {
+        self.drv.write_region(self.in_addr, &input.data)?;
+        let m = self.drv.run_table(&self.descs)?;
+        let out = self.drv.read_region(self.out_addr, self.out_len)?;
+        Ok((out, m.total_cycles()))
+    }
+}
+
+/// The running coordinator.
+pub struct Coordinator {
+    tx: Option<Sender<InferenceRequest>>,
+    batcher_handle: Option<JoinHandle<()>>,
+    worker_handles: Vec<JoinHandle<()>>,
+    next_id: AtomicU64,
+    /// Shared statistics.
+    pub stats: Arc<Mutex<StatsCollector>>,
+}
+
+impl Coordinator {
+    /// Start the batcher and worker pool for a network instance.
+    pub fn start(cfg: CoordinatorConfig, inst: &NetworkInstance) -> Result<Self> {
+        if cfg.workers == 0 {
+            return Err(Error::Coordinator("need at least one worker".into()));
+        }
+        let (tx, rx) = channel::<InferenceRequest>();
+        let (batch_tx, batch_rx) = channel::<Vec<InferenceRequest>>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let stats = Arc::new(Mutex::new(StatsCollector::new()));
+
+        // batcher thread
+        let policy = cfg.batch;
+        let batcher_handle = std::thread::Builder::new()
+            .name("kom-batcher".into())
+            .spawn(move || {
+                let b = Batcher::new(rx, policy);
+                while let Some(batch) = b.next_batch() {
+                    if batch_tx.send(batch).is_err() {
+                        break; // workers gone
+                    }
+                }
+            })
+            .map_err(|e| Error::Coordinator(format!("spawn batcher: {e}")))?;
+
+        // worker pool
+        let mut worker_handles = Vec::new();
+        for wid in 0..cfg.workers {
+            let mut worker = Worker::build(&cfg, inst)?;
+            let rx = Arc::clone(&batch_rx);
+            let stats = Arc::clone(&stats);
+            let handle = std::thread::Builder::new()
+                .name(format!("kom-worker-{wid}"))
+                .spawn(move || loop {
+                    let batch = {
+                        let guard = rx.lock().expect("queue poisoned");
+                        guard.recv()
+                    };
+                    let Ok(batch) = batch else { break };
+                    let bsize = batch.len();
+                    for req in batch {
+                        let result = worker.infer(&req.input);
+                        let latency_us = req.submitted.elapsed().as_micros() as u64;
+                        match result {
+                            Ok((logits, cycles)) => {
+                                stats
+                                    .lock()
+                                    .expect("stats poisoned")
+                                    .record(latency_us, bsize, cycles);
+                                let class = logits
+                                    .iter()
+                                    .enumerate()
+                                    .max_by_key(|(_, &v)| v)
+                                    .map(|(i, _)| i)
+                                    .unwrap_or(0);
+                                let _ = req.reply.send(InferenceResponse {
+                                    id: req.id,
+                                    logits,
+                                    class,
+                                    latency_us,
+                                    batch_size: bsize,
+                                    worker: wid,
+                                    accel_cycles: cycles,
+                                });
+                            }
+                            Err(_) => {
+                                // drop the reply sender: client sees a
+                                // disconnected channel (failed request)
+                            }
+                        }
+                    }
+                })
+                .map_err(|e| Error::Coordinator(format!("spawn worker: {e}")))?;
+            worker_handles.push(handle);
+        }
+
+        Ok(Coordinator {
+            tx: Some(tx),
+            batcher_handle: Some(batcher_handle),
+            worker_handles,
+            next_id: AtomicU64::new(0),
+            stats,
+        })
+    }
+
+    /// Submit an inference; returns the response channel and the id.
+    pub fn submit(&self, input: Tensor) -> Result<(RequestId, Receiver<InferenceResponse>)> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = channel();
+        self.tx
+            .as_ref()
+            .ok_or_else(|| Error::Coordinator("coordinator stopped".into()))?
+            .send(InferenceRequest {
+                id,
+                input,
+                submitted: Instant::now(),
+                reply,
+            })
+            .map_err(|_| Error::Coordinator("submission channel closed".into()))?;
+        Ok((id, rx))
+    }
+
+    /// Drain and stop; returns the final statistics.
+    pub fn shutdown(mut self) -> StatsCollector {
+        drop(self.tx.take()); // closes front door; batcher drains then exits
+        if let Some(h) = self.batcher_handle.take() {
+            let _ = h.join();
+        }
+        for h in self.worker_handles.drain(..) {
+            let _ = h.join();
+        }
+        Arc::try_unwrap(std::mem::replace(
+            &mut self.stats,
+            Arc::new(Mutex::new(StatsCollector::new())),
+        ))
+        .map(|m| m.into_inner().expect("stats poisoned"))
+        .unwrap_or_default()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::networks::{Network, NetworkKind};
+
+    fn tiny_instance() -> NetworkInstance {
+        NetworkInstance::random(Network::build(NetworkKind::Tiny), 42).unwrap()
+    }
+
+    #[test]
+    fn serves_requests_correctly() {
+        let inst = tiny_instance();
+        let coord = Coordinator::start(CoordinatorConfig::default(), &inst).unwrap();
+        let inputs: Vec<Tensor> = (0..12)
+            .map(|i| Tensor::random(vec![1, 16, 16], 127, 1000 + i))
+            .collect();
+        let rxs: Vec<_> = inputs
+            .iter()
+            .map(|t| coord.submit(t.clone()).unwrap())
+            .collect();
+        for ((id, rx), input) in rxs.into_iter().zip(&inputs) {
+            let resp = rx.recv().expect("response");
+            assert_eq!(resp.id, id);
+            let want = inst.forward_ref(input).unwrap();
+            assert_eq!(resp.logits, want.data, "req {id}");
+            assert_eq!(resp.class, want.argmax());
+            assert!(resp.batch_size >= 1);
+        }
+        let stats = coord.shutdown();
+        assert_eq!(stats.count(), 12);
+    }
+
+    #[test]
+    fn no_request_lost_under_load() {
+        let inst = tiny_instance();
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 4,
+                ..Default::default()
+            },
+            &inst,
+        )
+        .unwrap();
+        let n = 64;
+        let rxs: Vec<_> = (0..n)
+            .map(|i| {
+                coord
+                    .submit(Tensor::random(vec![1, 16, 16], 127, i as u64))
+                    .unwrap()
+            })
+            .collect();
+        let mut seen = std::collections::HashSet::new();
+        for (id, rx) in rxs {
+            let resp = rx.recv().expect("response");
+            assert!(seen.insert(resp.id), "duplicate id {}", resp.id);
+            assert_eq!(resp.id, id);
+        }
+        assert_eq!(seen.len(), n);
+        let stats = coord.shutdown();
+        assert_eq!(stats.count(), n);
+    }
+
+    #[test]
+    fn zero_workers_rejected() {
+        let inst = tiny_instance();
+        assert!(Coordinator::start(
+            CoordinatorConfig {
+                workers: 0,
+                ..Default::default()
+            },
+            &inst
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,124 @@
+//! Serving statistics: latency percentiles, throughput, batch sizes.
+
+use std::time::Instant;
+
+/// Latency summary in microseconds.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencyStats {
+    /// Sample count.
+    pub count: usize,
+    /// Mean.
+    pub mean_us: f64,
+    /// Median.
+    pub p50_us: u64,
+    /// 95th percentile.
+    pub p95_us: u64,
+    /// 99th percentile.
+    pub p99_us: u64,
+    /// Maximum.
+    pub max_us: u64,
+}
+
+/// Collects per-request samples.
+#[derive(Debug)]
+pub struct StatsCollector {
+    latencies_us: Vec<u64>,
+    batch_sizes: Vec<usize>,
+    started: Instant,
+    /// Total simulated accelerator cycles across batches.
+    pub accel_cycles: u64,
+}
+
+impl Default for StatsCollector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StatsCollector {
+    /// Empty collector (clock starts now).
+    pub fn new() -> Self {
+        StatsCollector {
+            latencies_us: Vec::new(),
+            batch_sizes: Vec::new(),
+            started: Instant::now(),
+            accel_cycles: 0,
+        }
+    }
+
+    /// Record one completed request.
+    pub fn record(&mut self, latency_us: u64, batch_size: usize, accel_cycles: u64) {
+        self.latencies_us.push(latency_us);
+        self.batch_sizes.push(batch_size);
+        self.accel_cycles += accel_cycles;
+    }
+
+    /// Requests completed.
+    pub fn count(&self) -> usize {
+        self.latencies_us.len()
+    }
+
+    /// Requests per second of wall clock since construction.
+    pub fn throughput_rps(&self) -> f64 {
+        let secs = self.started.elapsed().as_secs_f64();
+        if secs == 0.0 {
+            0.0
+        } else {
+            self.count() as f64 / secs
+        }
+    }
+
+    /// Mean batch size.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            0.0
+        } else {
+            self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+        }
+    }
+
+    /// Latency percentiles.
+    pub fn latency(&self) -> LatencyStats {
+        if self.latencies_us.is_empty() {
+            return LatencyStats::default();
+        }
+        let mut v = self.latencies_us.clone();
+        v.sort_unstable();
+        let pct = |p: f64| v[((v.len() as f64 - 1.0) * p) as usize];
+        LatencyStats {
+            count: v.len(),
+            mean_us: v.iter().sum::<u64>() as f64 / v.len() as f64,
+            p50_us: pct(0.50),
+            p95_us: pct(0.95),
+            p99_us: pct(0.99),
+            max_us: *v.last().unwrap(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let mut s = StatsCollector::new();
+        for i in 1..=100 {
+            s.record(i, 4, 10);
+        }
+        let l = s.latency();
+        assert_eq!(l.count, 100);
+        assert_eq!(l.p50_us, 50);
+        assert_eq!(l.p95_us, 95);
+        assert_eq!(l.max_us, 100);
+        assert!((s.mean_batch() - 4.0).abs() < 1e-9);
+        assert_eq!(s.accel_cycles, 1000);
+    }
+
+    #[test]
+    fn empty_safe() {
+        let s = StatsCollector::new();
+        assert_eq!(s.latency().count, 0);
+        assert_eq!(s.mean_batch(), 0.0);
+    }
+}

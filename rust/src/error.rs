@@ -1,0 +1,64 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors produced by the kom-accel library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// A netlist structural invariant was violated (cycle, multiple drivers…).
+    #[error("netlist error: {0}")]
+    Netlist(String),
+
+    /// A generator was asked for an unsupported configuration.
+    #[error("unsupported configuration: {0}")]
+    Unsupported(String),
+
+    /// Simulation failed (X propagation, missing driver, …).
+    #[error("simulation error: {0}")]
+    Sim(String),
+
+    /// Technology mapping failed.
+    #[error("techmap error: {0}")]
+    Techmap(String),
+
+    /// RISC-V ISS fault (illegal instruction, misaligned access, …).
+    #[error("riscv fault: {0}")]
+    Riscv(String),
+
+    /// Systolic engine configuration / execution error.
+    #[error("systolic engine error: {0}")]
+    Systolic(String),
+
+    /// Accelerator driver error.
+    #[error("accelerator error: {0}")]
+    Accel(String),
+
+    /// CNN / tensor shape error.
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// Coordinator / serving error.
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// XLA / PJRT runtime error.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// CLI usage error.
+    #[error("usage error: {0}")]
+    Usage(String),
+
+    /// Underlying I/O error.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}

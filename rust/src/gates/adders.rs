@@ -1,0 +1,260 @@
+//! Bit-level adder generators.
+
+use crate::netlist::{Bus, NetId, Netlist};
+
+/// Half adder: returns (sum, carry).
+pub fn half_adder(nl: &mut Netlist, a: NetId, b: NetId) -> (NetId, NetId) {
+    let s = nl.xor(a, b);
+    let c = nl.and(a, b);
+    (s, c)
+}
+
+/// Full adder: returns (sum, carry).
+pub fn full_adder(nl: &mut Netlist, a: NetId, b: NetId, cin: NetId) -> (NetId, NetId) {
+    let s = nl.xor3(a, b, cin);
+    let c = nl.maj(a, b, cin);
+    (s, c)
+}
+
+/// Ripple-carry adder over equal-width buses, with the carry nets tagged as
+/// a dedicated fast-carry chain (the FPGA CARRY4 primitive the synthesiser
+/// infers for regular adder rows). Returns (sum bus, carry-out).
+pub fn ripple_carry_add(
+    nl: &mut Netlist,
+    a: &Bus,
+    b: &Bus,
+    cin: Option<NetId>,
+) -> (Bus, NetId) {
+    assert_eq!(a.len(), b.len(), "ripple adder needs equal widths");
+    let mut carry = match cin {
+        Some(c) => c,
+        None => nl.constant(false),
+    };
+    let mut sum = Vec::with_capacity(a.len());
+    for i in 0..a.len() {
+        let (s, c) = full_adder(nl, a[i], b[i], carry);
+        nl.set_chain(c); // carries ride the dedicated chain
+        sum.push(s);
+        carry = c;
+    }
+    (sum, carry)
+}
+
+/// Ripple-carry adder *without* the carry-chain tag: models an adder whose
+/// irregular surrounding structure defeats CARRY4 inference, so every carry
+/// goes through general LUT fabric + routing. This is the final-adder style
+/// that makes the paper's Dadda multiplier slow (Table 5: 47.5 ns).
+pub fn ripple_carry_add_lut(
+    nl: &mut Netlist,
+    a: &Bus,
+    b: &Bus,
+    cin: Option<NetId>,
+) -> (Bus, NetId) {
+    assert_eq!(a.len(), b.len());
+    let mut carry = match cin {
+        Some(c) => c,
+        None => nl.constant(false),
+    };
+    let mut sum = Vec::with_capacity(a.len());
+    for i in 0..a.len() {
+        let (s, c) = full_adder(nl, a[i], b[i], carry);
+        sum.push(s);
+        carry = c;
+    }
+    (sum, carry)
+}
+
+/// Kogge-Stone parallel-prefix adder: log-depth carries, used inside the
+/// pipelined KOM recombination stages where latency matters more than area.
+/// Returns (sum bus, carry-out).
+pub fn kogge_stone_add(nl: &mut Netlist, a: &Bus, b: &Bus) -> (Bus, NetId) {
+    assert_eq!(a.len(), b.len(), "kogge-stone needs equal widths");
+    let n = a.len();
+    if n == 0 {
+        let z = nl.constant(false);
+        return (vec![], z);
+    }
+    // generate/propagate
+    let mut g: Vec<NetId> = (0..n).map(|i| nl.and(a[i], b[i])).collect();
+    let mut p: Vec<NetId> = (0..n).map(|i| nl.xor(a[i], b[i])).collect();
+    let p0 = p.clone(); // save bit-propagate for the sum
+    let mut dist = 1;
+    while dist < n {
+        let mut ng = g.clone();
+        let mut np = p.clone();
+        for i in dist..n {
+            // G = g | (p & g_prev), P = p & p_prev
+            let t = nl.and(p[i], g[i - dist]);
+            ng[i] = nl.or(g[i], t);
+            np[i] = nl.and(p[i], p[i - dist]);
+        }
+        g = ng;
+        p = np;
+        dist *= 2;
+    }
+    // carries: c[i] = G[i-1..0]; sum[i] = p0[i] ^ c_in(i)
+    let zero = nl.constant(false);
+    let mut sum = Vec::with_capacity(n);
+    for i in 0..n {
+        let cin = if i == 0 { zero } else { g[i - 1] };
+        sum.push(nl.xor(p0[i], cin));
+    }
+    (sum, g[n - 1])
+}
+
+/// 3:2 carry-save compressor over three equal-width buses.
+/// Returns (sum bus, carry bus) where `a+b+c == sum + (carry << 1)`.
+pub fn carry_save_add(nl: &mut Netlist, a: &Bus, b: &Bus, c: &Bus) -> (Bus, Bus) {
+    assert!(a.len() == b.len() && b.len() == c.len());
+    let mut sum = Vec::with_capacity(a.len());
+    let mut carry = Vec::with_capacity(a.len());
+    for i in 0..a.len() {
+        let (s, co) = full_adder(nl, a[i], b[i], c[i]);
+        sum.push(s);
+        carry.push(co);
+    }
+    (sum, carry)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::BitVec;
+    use crate::netlist::Netlist;
+    use crate::sim::CycleSim;
+
+    fn eval2(
+        build: impl Fn(&mut Netlist, &crate::netlist::Bus, &crate::netlist::Bus) -> crate::netlist::Bus,
+        w: usize,
+        a: u128,
+        b: u128,
+    ) -> u128 {
+        let mut nl = Netlist::new("t");
+        let ab = nl.input_bus("a", w);
+        let bb = nl.input_bus("b", w);
+        let out = build(&mut nl, &ab, &bb);
+        nl.output_bus("y", &out);
+        let mut sim = CycleSim::new(&nl).unwrap();
+        sim.set_bus(&nl.inputs()["a"], &BitVec::from_u128(a, w));
+        sim.set_bus(&nl.inputs()["b"], &BitVec::from_u128(b, w));
+        sim.settle();
+        sim.get_bus(&nl.outputs()["y"]).to_u128()
+    }
+
+    #[test]
+    fn ripple_exhaustive_4bit() {
+        for a in 0..16u128 {
+            for b in 0..16u128 {
+                let got = eval2(
+                    |nl, x, y| {
+                        let (mut s, c) = ripple_carry_add(nl, x, y, None);
+                        s.push(c);
+                        s
+                    },
+                    4,
+                    a,
+                    b,
+                );
+                assert_eq!(got, a + b, "{a}+{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn kogge_stone_exhaustive_5bit() {
+        for a in 0..32u128 {
+            for b in 0..32u128 {
+                let got = eval2(
+                    |nl, x, y| {
+                        let (mut s, c) = kogge_stone_add(nl, x, y);
+                        s.push(c);
+                        s
+                    },
+                    5,
+                    a,
+                    b,
+                );
+                assert_eq!(got, a + b, "{a}+{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn kogge_stone_random_32bit() {
+        let mut state = 0x1234_5678_9abc_def0u64;
+        let mut rnd = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for _ in 0..50 {
+            let a = (rnd() as u32) as u128;
+            let b = (rnd() as u32) as u128;
+            let got = eval2(
+                |nl, x, y| {
+                    let (mut s, c) = kogge_stone_add(nl, x, y);
+                    s.push(c);
+                    s
+                },
+                32,
+                a,
+                b,
+            );
+            assert_eq!(got, a + b);
+        }
+    }
+
+    #[test]
+    fn csa_identity() {
+        for (a, b, c) in [(1u128, 2u128, 3u128), (7, 7, 7), (0, 0, 0), (5, 1, 6)] {
+            let got = eval2(
+                |nl, x, y| {
+                    let cc: Vec<_> = (0..3).map(|i| {
+                        // fold constant third operand c into the netlist
+                        nl.constant((c >> i) & 1 == 1)
+                    }).collect();
+                    let (s, carry) = carry_save_add(nl, x, y, &cc);
+                    // s + (carry<<1), 5 bits out
+                    let mut s5 = s.clone();
+                    let zero = nl.constant(false);
+                    s5.push(zero);
+                    s5.push(zero);
+                    let mut c5 = vec![zero];
+                    c5.extend(carry.iter().cloned());
+                    c5.push(zero);
+                    let (sum, co) = ripple_carry_add(nl, &s5, &c5, None);
+                    let mut out = sum;
+                    out.push(co);
+                    out
+                },
+                3,
+                a,
+                b,
+            );
+            assert_eq!(got, a + b + c, "{a}+{b}+{c}");
+        }
+    }
+
+    #[test]
+    fn kogge_stone_depth_is_logarithmic() {
+        let mut nl = Netlist::new("ks");
+        let a = nl.input_bus("a", 32);
+        let b = nl.input_bus("b", 32);
+        let (s, c) = kogge_stone_add(&mut nl, &a, &b);
+        let mut out = s;
+        out.push(c);
+        nl.output_bus("y", &out);
+        let d = crate::netlist::max_depth(&nl);
+        assert!(d <= 2 + 5 * 2 + 1, "depth {d} not logarithmic");
+
+        let mut nl2 = Netlist::new("rca");
+        let a = nl2.input_bus("a", 32);
+        let b = nl2.input_bus("b", 32);
+        let (s, c) = ripple_carry_add(&mut nl2, &a, &b, None);
+        let mut out = s;
+        out.push(c);
+        nl2.output_bus("y", &out);
+        assert!(crate::netlist::max_depth(&nl2) >= 32);
+    }
+}

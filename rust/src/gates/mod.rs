@@ -1,0 +1,16 @@
+//! Adder library and word-level netlist construction helpers.
+//!
+//! Everything the multiplier generators need: half/full adders, a
+//! fast-carry-chain ripple adder (models CARRY4 mapping), a Kogge-Stone
+//! parallel-prefix adder (used inside the pipelined KOM stages), carry-save
+//! reduction, subtractors and bus plumbing.
+
+mod adders;
+mod word;
+
+pub use adders::{
+    carry_save_add, full_adder, half_adder, kogge_stone_add, ripple_carry_add, ripple_carry_add_lut,
+};
+pub use word::{
+    add, add_wide, const_bus, mux_bus, negate, reduce_add, shl_const, sub, zext,
+};

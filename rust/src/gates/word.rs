@@ -1,0 +1,181 @@
+//! Word-level (bus) construction helpers.
+
+use super::adders::{carry_save_add, kogge_stone_add, ripple_carry_add};
+use crate::netlist::{Bus, NetId, Netlist};
+
+/// Constant bus of `width` bits holding `value`.
+pub fn const_bus(nl: &mut Netlist, value: u128, width: usize) -> Bus {
+    (0..width)
+        .map(|i| nl.constant(i < 128 && (value >> i) & 1 == 1))
+        .collect()
+}
+
+/// Zero-extend (or truncate) a bus to `width`.
+pub fn zext(nl: &mut Netlist, a: &Bus, width: usize) -> Bus {
+    let mut out = a.clone();
+    out.truncate(width);
+    while out.len() < width {
+        out.push(nl.constant(false));
+    }
+    out
+}
+
+/// Shift left by a constant amount (zero fill), growing the bus.
+pub fn shl_const(nl: &mut Netlist, a: &Bus, amount: usize) -> Bus {
+    let mut out: Bus = (0..amount).map(|_| nl.constant(false)).collect();
+    out.extend(a.iter().cloned());
+    out
+}
+
+/// Unsigned add of two buses of arbitrary widths; result is
+/// `max(len)+1` bits wide. Uses the fast-carry ripple adder.
+pub fn add(nl: &mut Netlist, a: &Bus, b: &Bus) -> Bus {
+    let w = a.len().max(b.len());
+    let ax = zext(nl, a, w);
+    let bx = zext(nl, b, w);
+    let (mut s, c) = ripple_carry_add(nl, &ax, &bx, None);
+    s.push(c);
+    s
+}
+
+/// Unsigned add with a Kogge-Stone (log-depth) adder — used in latency-
+/// critical recombination logic. Result is `max(len)+1` bits.
+pub fn add_wide(nl: &mut Netlist, a: &Bus, b: &Bus) -> Bus {
+    let w = a.len().max(b.len());
+    let ax = zext(nl, a, w);
+    let bx = zext(nl, b, w);
+    let (mut s, c) = kogge_stone_add(nl, &ax, &bx);
+    s.push(c);
+    s
+}
+
+/// Two's-complement negate, result one bit wider than the input.
+pub fn negate(nl: &mut Netlist, a: &Bus) -> Bus {
+    let w = a.len() + 1;
+    let ax = zext(nl, a, w);
+    let inv: Bus = ax.iter().map(|&n| nl.not(n)).collect();
+    let one = const_bus(nl, 1, w);
+    let (s, _) = ripple_carry_add(nl, &inv, &one, None);
+    s
+}
+
+/// `a - b` over equal-interpretation unsigned buses, result `max(len)` bits
+/// (caller guarantees `a >= b`, as in the Karatsuba middle term).
+pub fn sub(nl: &mut Netlist, a: &Bus, b: &Bus) -> Bus {
+    let w = a.len().max(b.len());
+    let ax = zext(nl, a, w);
+    let bx = zext(nl, b, w);
+    let binv: Bus = bx.iter().map(|&n| nl.not(n)).collect();
+    let one = nl.constant(true);
+    let (s, _) = ripple_carry_add(nl, &ax, &binv, Some(one));
+    s
+}
+
+/// Bitwise 2:1 mux over buses: `sel ? b : a`.
+pub fn mux_bus(nl: &mut Netlist, sel: NetId, a: &Bus, b: &Bus) -> Bus {
+    assert_eq!(a.len(), b.len());
+    (0..a.len()).map(|i| nl.mux(sel, a[i], b[i])).collect()
+}
+
+/// Sum many partial products with a carry-save (Wallace-style) reduction
+/// tree and one final fast adder. All operands are zero-extended to the
+/// result width before reduction. Used by adder trees in the matrix unit.
+pub fn reduce_add(nl: &mut Netlist, operands: &[Bus], width: usize) -> Bus {
+    assert!(!operands.is_empty());
+    let mut rows: Vec<Bus> = operands.iter().map(|o| zext(nl, o, width)).collect();
+    while rows.len() > 2 {
+        let mut next = Vec::with_capacity(rows.len() * 2 / 3 + 1);
+        let mut i = 0;
+        while i + 3 <= rows.len() {
+            let (s, c) = carry_save_add(nl, &rows[i], &rows[i + 1], &rows[i + 2]);
+            // carry shifts left by one, truncated to width
+            let cs = shl_const(nl, &c, 1);
+            next.push(s);
+            next.push(zext(nl, &cs, width));
+            i += 3;
+        }
+        while i < rows.len() {
+            next.push(rows[i].clone());
+            i += 1;
+        }
+        rows = next;
+    }
+    if rows.len() == 1 {
+        return rows.pop().unwrap();
+    }
+    let (s, _) = ripple_carry_add(nl, &rows[0], &rows[1], None);
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::BitVec;
+    use crate::netlist::Netlist;
+    use crate::sim::CycleSim;
+
+    #[test]
+    fn sub_basics() {
+        for (a, b) in [(10u128, 3u128), (255, 255), (100, 0), (37, 36)] {
+            let mut nl = Netlist::new("s");
+            let ab = nl.input_bus("a", 8);
+            let bb = nl.input_bus("b", 8);
+            let d = sub(&mut nl, &ab, &bb);
+            nl.output_bus("y", &d);
+            let mut sim = CycleSim::new(&nl).unwrap();
+            sim.set_bus(&nl.inputs()["a"], &BitVec::from_u128(a, 8));
+            sim.set_bus(&nl.inputs()["b"], &BitVec::from_u128(b, 8));
+            sim.settle();
+            assert_eq!(sim.get_bus(&nl.outputs()["y"]).to_u128(), a - b);
+        }
+    }
+
+    #[test]
+    fn reduce_add_many() {
+        let vals = [3u128, 9, 1, 14, 7, 2, 250, 13, 13];
+        let mut nl = Netlist::new("r");
+        let buses: Vec<_> = vals
+            .iter()
+            .enumerate()
+            .map(|(i, _)| nl.input_bus(format!("i{i}"), 8))
+            .collect();
+        let out = reduce_add(&mut nl, &buses, 12);
+        nl.output_bus("y", &out);
+        let mut sim = CycleSim::new(&nl).unwrap();
+        for (i, v) in vals.iter().enumerate() {
+            let bus = nl.inputs()[&format!("i{i}")].clone();
+            sim.set_bus(&bus, &BitVec::from_u128(*v, 8));
+        }
+        sim.settle();
+        assert_eq!(
+            sim.get_bus(&nl.outputs()["y"]).to_u128(),
+            vals.iter().sum::<u128>()
+        );
+    }
+
+    #[test]
+    fn negate_roundtrip() {
+        let mut nl = Netlist::new("n");
+        let a = nl.input_bus("a", 8);
+        let m = negate(&mut nl, &a);
+        nl.output_bus("y", &m);
+        let mut sim = CycleSim::new(&nl).unwrap();
+        sim.set_bus(&nl.inputs()["a"], &BitVec::from_u128(5, 8));
+        sim.settle();
+        let got = sim.get_bus(&nl.outputs()["y"]);
+        assert_eq!(got.to_i128(), -5);
+    }
+
+    #[test]
+    fn shl_and_zext() {
+        let mut nl = Netlist::new("z");
+        let a = nl.input_bus("a", 4);
+        let s = shl_const(&mut nl, &a, 3);
+        let z = zext(&mut nl, &s, 10);
+        nl.output_bus("y", &z);
+        let mut sim = CycleSim::new(&nl).unwrap();
+        sim.set_bus(&nl.inputs()["a"], &BitVec::from_u128(0b1011, 4));
+        sim.settle();
+        assert_eq!(sim.get_bus(&nl.outputs()["y"]).to_u128(), 0b1011 << 3);
+    }
+}

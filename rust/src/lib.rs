@@ -1,0 +1,55 @@
+//! # kom-accel
+//!
+//! A from-scratch reproduction of *"A Novel FPGA-based CNN Hardware
+//! Accelerator: Optimization for Convolutional Layers using Karatsuba Ofman
+//! Multiplier"* (cs.AR 2024) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate contains every substrate the paper depends on:
+//!
+//! * [`netlist`] — a gate-level netlist IR with builders and emitters,
+//! * [`gates`] — adder/subtractor generator library,
+//! * [`multipliers`] — Karatsuba-Ofman, Baugh-Wooley, Dadda, Wallace, array
+//!   and Booth multiplier generators (the paper's §IV),
+//! * [`techmap`] — an FPGA technology mapper (LUT6 covering, slice packing,
+//!   IOB accounting) producing the four utilisation counters of Tables 1–4,
+//! * [`sta`] — static timing analysis (Table 5 delay),
+//! * [`power`] — activity-based power estimation (Table 5 power),
+//! * [`sim`] — cycle-based and event-driven gate-level simulators with VCD
+//!   output (Fig 5),
+//! * [`matrix`] — the n×n matrix-multiplication unit the paper evaluates,
+//! * [`systolic`] — the cycle-accurate Reconfigurable Systolic Engine
+//!   (Figs 1–3),
+//! * [`riscv`] — the RV32I control processor of §III,
+//! * [`mem`] — BRAM / DRAM / DMA models,
+//! * [`accel`] — the SoC top-level and host driver,
+//! * [`cnn`] — integer tensors, quantisation and the AlexNet/VGG16/VGG19
+//!   network descriptions (§V analysis),
+//! * [`runtime`] — the PJRT bridge that loads JAX/Pallas-AOT HLO artifacts,
+//! * [`coordinator`] — the inference request router / dynamic batcher.
+//!
+//! Support substrates (offline environment — no clap/criterion/proptest):
+//! [`cli`], [`bench_harness`], [`report`], [`testing`].
+
+pub mod accel;
+pub mod bench_harness;
+pub mod bits;
+pub mod cli;
+pub mod cnn;
+pub mod coordinator;
+pub mod error;
+pub mod gates;
+pub mod matrix;
+pub mod mem;
+pub mod multipliers;
+pub mod netlist;
+pub mod power;
+pub mod report;
+pub mod riscv;
+pub mod runtime;
+pub mod sim;
+pub mod sta;
+pub mod systolic;
+pub mod techmap;
+pub mod testing;
+
+pub use error::{Error, Result};

@@ -1,0 +1,252 @@
+//! `kom-accel` — leader entrypoint / CLI.
+//!
+//! Subcommands map one-to-one onto the paper's experiments (DESIGN.md §5):
+//!
+//! ```text
+//! kom-accel tables  [--n 3|5|7|11] [--full]                 Tables 1–4
+//! kom-accel timing                                          Table 5 (delay+power)
+//! kom-accel emit    --mult kom32 [--out file.v] [--dot]     Fig 4 (RTL)
+//! kom-accel wave    [--out kom32.vcd]                       Fig 5 (waveform)
+//! kom-accel analyze [--net alexnet|vgg16|vgg19]             §V network analysis
+//! kom-accel golden  [--artifacts dir]                       3-way golden check
+//! kom-accel serve   [--requests 64] [--workers 2]           coordinator demo
+//! ```
+
+use kom_accel::accel::SocConfig;
+use kom_accel::bits::BitVec;
+use kom_accel::cli::Args;
+use kom_accel::cnn::networks::{Network, NetworkInstance, NetworkKind};
+use kom_accel::cnn::{analysis, Tensor};
+use kom_accel::coordinator::{Coordinator, CoordinatorConfig};
+use kom_accel::multipliers::{generate, MultKind, MultiplierSpec};
+use kom_accel::report::Table;
+use kom_accel::runtime::{golden, ArtifactStore};
+use kom_accel::{matrix, power, sim, sta, techmap};
+use std::path::Path;
+
+const USAGE: &str = "\
+kom-accel — FPGA CNN accelerator with Karatsuba-Ofman multipliers
+
+USAGE: kom-accel <command> [flags]
+
+COMMANDS
+  tables   [--n 3] [--full]          resource tables (paper Tables 1-4)
+  timing                             delay + power (paper Table 5)
+  emit     --mult <kom16|kom32|bw32|dadda32> [--out f.v] [--dot]
+  wave     [--out kom32.vcd]         gate-level waveform (paper Fig 5)
+  analyze  [--net alexnet]           network analysis (paper Sec V)
+  golden   [--artifacts artifacts]   XLA vs systolic vs reference
+  serve    [--requests 64] [--workers 2] [--batch 8]
+";
+
+fn mult_spec(name: &str) -> kom_accel::Result<(String, MultiplierSpec)> {
+    Ok(match name {
+        "kom16" => ("16-bit KOM".into(), MultiplierSpec::pipelined(MultKind::KaratsubaOfman, 16, 3)),
+        "kom32" => ("32-bit KOM".into(), MultiplierSpec::pipelined(MultKind::KaratsubaOfman, 32, 4)),
+        "bw32" => ("32-bit Baugh-Wooley".into(), MultiplierSpec::comb_regio(MultKind::BaughWooley, 32)),
+        "dadda32" => ("32-bit Dadda".into(), MultiplierSpec::comb(MultKind::Dadda, 32)),
+        other => {
+            let kind = MultKind::parse(other)?;
+            (other.to_string(), MultiplierSpec::comb(kind, 32))
+        }
+    })
+}
+
+fn cmd_tables(args: &Args) -> kom_accel::Result<()> {
+    let n: u32 = args.get_num("n", 3u32)?;
+    let full = args.has("full");
+    println!("Table: {n}x{n} x {n}x{n} matrix multiplication ({} multipliers)\n", n.pow(3));
+    let mut t = Table::new(&["Logic utilization", "16-bit KOM", "32-bit KOM", "32-bit Baugh-Wooley", "32-bit Dadda"]);
+    let mut cols = Vec::new();
+    for (_, spec) in MultiplierSpec::paper_set() {
+        let r = matrix::analyze(n, spec)?;
+        cols.push(if full { r.full } else { r.paper });
+    }
+    for (i, metric) in ["No of slice registers", "No of slice LUT", "No of fully used LUT FF pairs", "No of bonded IOBs"].iter().enumerate() {
+        let mut row = vec![metric.to_string()];
+        for c in &cols {
+            let v = c.paper_rows()[i].1;
+            row.push(v.to_string());
+        }
+        t.row(row);
+    }
+    println!("{}", t.to_ascii());
+    Ok(())
+}
+
+fn cmd_timing() -> kom_accel::Result<()> {
+    let mut t = Table::new(&["Parameter", "KOM (32 bit)", "KOM (16 bit)", "Baugh-Wooley (32)", "Dadda (32)"]);
+    let order = ["kom32", "kom16", "bw32", "dadda32"];
+    let mut delays = Vec::new();
+    let mut powers = Vec::new();
+    for key in order {
+        let (_, spec) = mult_spec(key)?;
+        let g = generate(spec)?;
+        let mapped = techmap::map(&g.netlist)?;
+        let timing = sta::analyze(&mapped);
+        let f = timing.fmax_mhz.map(|m| m * 1e6).unwrap_or(100e6);
+        let p = power::estimate(&mapped, f, 200)?;
+        delays.push(format!("{:.3}ns", timing.critical_path_ns));
+        powers.push(format!("{:.2} mW", p.total_mw()));
+    }
+    t.row(std::iter::once("TIME DELAY".to_string()).chain(delays).collect());
+    t.row(std::iter::once("POWER DISSIPATION".to_string()).chain(powers).collect());
+    println!("{}", t.to_ascii());
+    println!("(paper Table 5: 4.604ns / 4.052ns / 15.415ns / 47.500ns; 90.37mW / 85.14mW / - / -)");
+    Ok(())
+}
+
+fn cmd_emit(args: &Args) -> kom_accel::Result<()> {
+    let name = args.require("mult")?;
+    let (label, spec) = mult_spec(name)?;
+    let g = generate(spec)?;
+    let text = if args.has("dot") {
+        kom_accel::netlist::to_dot(&g.netlist)
+    } else {
+        kom_accel::netlist::to_verilog(&g.netlist)
+    };
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &text)?;
+            println!("wrote {label} ({} nets) to {path}", g.netlist.num_nets());
+        }
+        None => println!("{text}"),
+    }
+    Ok(())
+}
+
+fn cmd_wave(args: &Args) -> kom_accel::Result<()> {
+    let out = args.get_or("out", "kom32.vcd");
+    let g = generate(MultiplierSpec::pipelined(MultKind::KaratsubaOfman, 32, 4))?;
+    let nl = &g.netlist;
+    let mut es = sim::EventSim::new(nl)?;
+    let a_bus = nl.inputs()["a"].clone();
+    let b_bus = nl.inputs()["b"].clone();
+    let p_bus = nl.outputs()["p"].clone();
+    let stimulus: Vec<Vec<(kom_accel::netlist::Bus, BitVec)>> = (0..24u64)
+        .map(|i| {
+            let a = 0x1234_5678u64.wrapping_mul(i + 1) as u32;
+            let b = 0x9abc_def0u64.wrapping_mul(i + 3) as u32;
+            vec![
+                (a_bus.clone(), BitVec::from_u128(a as u128, 32)),
+                (b_bus.clone(), BitVec::from_u128(b as u128, 32)),
+            ]
+        })
+        .collect();
+    let file = std::fs::File::create(&out)?;
+    es.run_clocked_vcd(
+        5000, // 5ns clock (200 MHz)
+        &stimulus,
+        &[("a", a_bus), ("b", b_bus), ("p", p_bus)],
+        std::io::BufWriter::new(file),
+    )?;
+    println!("wrote {out} ({} cycles, {} gate evals)", stimulus.len(), es.evals);
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> kom_accel::Result<()> {
+    let kinds: Vec<NetworkKind> = match args.get("net") {
+        Some(n) => vec![NetworkKind::parse(n)?],
+        None => vec![NetworkKind::AlexNet, NetworkKind::Vgg16, NetworkKind::Vgg19],
+    };
+    for kind in kinds {
+        let net = Network::build(kind);
+        println!("\n=== {} ===", net.name);
+        println!("  weights: {:.1} M", net.total_weights()? as f64 / 1e6);
+        println!("  MACs/inference: {:.2} G", net.total_macs()? as f64 / 1e9);
+        let fh = analysis::filter_histogram(&net);
+        for (k, count) in &fh {
+            println!("  {k}x{k} filters: {count}");
+        }
+        let (_, spec) = mult_spec("kom16")?;
+        let r = analysis::network_resources(&net, spec)?;
+        println!("  matrix-unit model (16-bit KOM):");
+        for (k, (count, rep)) in &r.per_kernel {
+            println!("    k={k}: {count} kernel matrices, unit = {rep}");
+        }
+        println!("  time-multiplexed engine total: {}", r.total_multiplexed);
+        println!("  worst unit critical path: {:.2} ns", r.worst_cp_ns);
+    }
+    Ok(())
+}
+
+fn cmd_golden(args: &Args) -> kom_accel::Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let store = ArtifactStore::open(Path::new(&dir))?;
+    let report = golden::run_tiny_golden(&store, 42, 7)?;
+    println!("reference: {:?}", report.reference);
+    println!("systolic : {:?}", report.systolic);
+    println!("xla      : {:?}", report.xla);
+    println!("accelerator cycles: {}", report.metrics.total_cycles());
+    if report.consistent() {
+        println!("GOLDEN OK — all three layers agree bit-exactly");
+        Ok(())
+    } else {
+        Err(kom_accel::Error::Runtime("golden mismatch".into()))
+    }
+}
+
+fn cmd_serve(args: &Args) -> kom_accel::Result<()> {
+    let requests: usize = args.get_num("requests", 64usize)?;
+    let workers: usize = args.get_num("workers", 2usize)?;
+    let max_batch: usize = args.get_num("batch", 8usize)?;
+    let inst = NetworkInstance::random(Network::build(NetworkKind::Tiny), 42)?;
+    let cfg = CoordinatorConfig {
+        workers,
+        batch: kom_accel::coordinator::BatchPolicy {
+            max_batch,
+            ..Default::default()
+        },
+        soc: SocConfig {
+            dram_words: 1 << 22,
+            spad_words: 1 << 14,
+            ..Default::default()
+        },
+        clock_mhz: 200.0,
+    };
+    let coord = Coordinator::start(cfg, &inst)?;
+    let rxs: Vec<_> = (0..requests)
+        .map(|i| coord.submit(Tensor::random(vec![1, 16, 16], 127, i as u64 + 1)).unwrap())
+        .collect();
+    for (_, rx) in rxs {
+        rx.recv().map_err(|_| kom_accel::Error::Coordinator("lost response".into()))?;
+    }
+    let stats = coord.shutdown();
+    let l = stats.latency();
+    println!("served {requests} requests on {workers} workers (max batch {max_batch})");
+    println!("  host latency: p50={}us p95={}us p99={}us max={}us", l.p50_us, l.p95_us, l.p99_us, l.max_us);
+    println!("  mean batch: {:.2}", stats.mean_batch());
+    println!("  simulated accel cycles: {}", stats.accel_cycles);
+    Ok(())
+}
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_deref() {
+        Some("tables") => cmd_tables(&args),
+        Some("timing") => cmd_timing(),
+        Some("emit") => cmd_emit(&args),
+        Some("wave") => cmd_wave(&args),
+        Some("analyze") => cmd_analyze(&args),
+        Some("golden") => cmd_golden(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,110 @@
+//! Banked BRAM scratchpad.
+//!
+//! `banks` single-port banks interleaved word-wise. Concurrent accesses to
+//! distinct banks complete in one cycle; conflicts serialise — the counters
+//! let the accelerator model expose the §I memory bottleneck.
+
+use crate::error::{Error, Result};
+
+/// On-chip scratchpad memory (word addressed).
+pub struct Scratchpad {
+    data: Vec<i64>,
+    banks: usize,
+    /// Total accesses.
+    pub accesses: u64,
+    /// Cycles spent, including serialised conflicts.
+    pub cycles: u64,
+}
+
+impl Scratchpad {
+    /// `words` capacity across `banks` banks.
+    pub fn new(words: usize, banks: usize) -> Self {
+        assert!(banks >= 1);
+        Scratchpad {
+            data: vec![0; words],
+            banks,
+            accesses: 0,
+            cycles: 0,
+        }
+    }
+
+    /// Capacity in words.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if capacity is zero.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    fn check(&self, addr: usize, len: usize) -> Result<()> {
+        if addr + len > self.data.len() {
+            return Err(Error::Accel(format!(
+                "scratchpad access [{addr}, {}) beyond {} words",
+                addr + len,
+                self.data.len()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Read one word.
+    pub fn read(&mut self, addr: usize) -> Result<i64> {
+        self.check(addr, 1)?;
+        self.accesses += 1;
+        self.cycles += 1;
+        Ok(self.data[addr])
+    }
+
+    /// Write one word.
+    pub fn write(&mut self, addr: usize, v: i64) -> Result<()> {
+        self.check(addr, 1)?;
+        self.accesses += 1;
+        self.cycles += 1;
+        self.data[addr] = v;
+        Ok(())
+    }
+
+    /// Vector read of `len` words starting at `addr`; charges
+    /// `ceil(len / banks)` cycles (bank-parallel streaming).
+    pub fn read_block(&mut self, addr: usize, len: usize) -> Result<Vec<i64>> {
+        self.check(addr, len)?;
+        self.accesses += len as u64;
+        self.cycles += ((len + self.banks - 1) / self.banks) as u64;
+        Ok(self.data[addr..addr + len].to_vec())
+    }
+
+    /// Vector write.
+    pub fn write_block(&mut self, addr: usize, values: &[i64]) -> Result<()> {
+        self.check(addr, values.len())?;
+        self.accesses += values.len() as u64;
+        self.cycles += ((values.len() + self.banks - 1) / self.banks) as u64;
+        self.data[addr..addr + values.len()].copy_from_slice(values);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_bounds() {
+        let mut s = Scratchpad::new(16, 2);
+        s.write(3, -7).unwrap();
+        assert_eq!(s.read(3).unwrap(), -7);
+        assert!(s.read(16).is_err());
+        assert!(s.write_block(14, &[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn bank_parallel_cycles() {
+        let mut s = Scratchpad::new(64, 4);
+        s.write_block(0, &vec![1; 16]).unwrap();
+        // 16 words over 4 banks = 4 cycles
+        assert_eq!(s.cycles, 4);
+        let _ = s.read_block(0, 15).unwrap();
+        assert_eq!(s.cycles, 8); // + ceil(15/4)=4
+    }
+}

@@ -1,0 +1,111 @@
+//! External DRAM latency/bandwidth model.
+//!
+//! Each burst pays a fixed row-activation latency plus words/width cycles.
+//! Weights and activations for the large VGG layers live here; the DMA
+//! engine streams them into the scratchpad.
+
+use crate::error::{Error, Result};
+
+/// External memory model (word addressed, i64 payload).
+pub struct Dram {
+    data: Vec<i64>,
+    /// Fixed cycles per burst (row activate + CAS).
+    pub burst_latency: u64,
+    /// Words transferred per cycle once streaming.
+    pub words_per_cycle: u64,
+    /// Total cycles spent in DRAM traffic.
+    pub cycles: u64,
+    /// Total words moved.
+    pub words_moved: u64,
+}
+
+impl Dram {
+    /// `words` capacity with a default DDR-ish profile.
+    pub fn new(words: usize) -> Self {
+        Dram {
+            data: vec![0; words],
+            burst_latency: 30,
+            words_per_cycle: 4,
+            cycles: 0,
+            words_moved: 0,
+        }
+    }
+
+    /// Capacity in words.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    fn check(&self, addr: usize, len: usize) -> Result<()> {
+        if addr + len > self.data.len() {
+            return Err(Error::Accel(format!(
+                "dram access [{addr}, {}) beyond {} words",
+                addr + len,
+                self.data.len()
+            )));
+        }
+        Ok(())
+    }
+
+    fn charge(&mut self, len: usize) {
+        self.cycles += self.burst_latency + (len as u64).div_ceil(self.words_per_cycle);
+        self.words_moved += len as u64;
+    }
+
+    /// Burst read.
+    pub fn read_burst(&mut self, addr: usize, len: usize) -> Result<Vec<i64>> {
+        self.check(addr, len)?;
+        self.charge(len);
+        Ok(self.data[addr..addr + len].to_vec())
+    }
+
+    /// Burst write.
+    pub fn write_burst(&mut self, addr: usize, values: &[i64]) -> Result<()> {
+        self.check(addr, values.len())?;
+        self.charge(values.len());
+        self.data[addr..addr + values.len()].copy_from_slice(values);
+        Ok(())
+    }
+
+    /// Host-side (zero-cost) initialisation, e.g. loading weights at boot.
+    pub fn preload(&mut self, addr: usize, values: &[i64]) -> Result<()> {
+        self.check(addr, values.len())?;
+        self.data[addr..addr + values.len()].copy_from_slice(values);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_cycle_model() {
+        let mut d = Dram::new(1024);
+        d.write_burst(0, &vec![5; 64]).unwrap();
+        assert_eq!(d.cycles, 30 + 16);
+        let v = d.read_burst(0, 64).unwrap();
+        assert_eq!(v[0], 5);
+        assert_eq!(d.cycles, 2 * (30 + 16));
+        assert_eq!(d.words_moved, 128);
+    }
+
+    #[test]
+    fn preload_is_free() {
+        let mut d = Dram::new(8);
+        d.preload(0, &[1, 2, 3]).unwrap();
+        assert_eq!(d.cycles, 0);
+        assert_eq!(d.read_burst(0, 3).unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn bounds() {
+        let mut d = Dram::new(4);
+        assert!(d.read_burst(2, 3).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Memory subsystem models — the paper's §I "memory bottleneck" substrate.
+//!
+//! * [`bram`] — banked on-chip scratchpad (BRAM) with port-conflict
+//!   accounting,
+//! * [`dram`] — external memory with latency + bandwidth cycle model,
+//! * [`dma`] — burst transfer engine between the two.
+
+pub mod bram;
+pub mod dma;
+pub mod dram;
+
+pub use bram::Scratchpad;
+pub use dma::Dma;
+pub use dram::Dram;

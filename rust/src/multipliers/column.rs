@@ -1,0 +1,193 @@
+//! Partial-product column reduction infrastructure.
+//!
+//! A multiplier's partial products are organised as `cols[k]` = the bits of
+//! weight `2^k`. Three reduction strategies are provided:
+//!
+//! * [`reduce_dadda`] — Dadda's minimal-compressor schedule (heights follow
+//!   the 2,3,4,6,9,13,19,28,… sequence) down to two rows;
+//! * [`reduce_wallace`] — Wallace's maximal per-stage compression;
+//! * [`reduce_array`] — row-by-row accumulation with fast-carry ripple rows
+//!   (models the regular array structure synthesisers map onto CARRY4).
+//!
+//! The final two rows are summed by the caller-selected adder; Dadda uses a
+//! plain LUT ripple adder (its irregular tree defeats carry-chain
+//! inference — the root cause of the paper's 47.5 ns Table-5 entry), while
+//! Wallace uses the log-depth Kogge-Stone adder.
+
+use crate::gates::{full_adder, half_adder, kogge_stone_add, ripple_carry_add, ripple_carry_add_lut, zext};
+use crate::netlist::{Bus, NetId, Netlist};
+
+/// Columns of weighted bits.
+pub type Columns = Vec<Vec<NetId>>;
+
+/// Dadda height sequence d_1=2, d_{k+1}=floor(1.5 d_k), descending from the
+/// first element >= `h` down to 2.
+pub fn dadda_heights(h: usize) -> Vec<usize> {
+    let mut seq = vec![2usize];
+    while *seq.last().unwrap() < h {
+        let d = *seq.last().unwrap();
+        seq.push(d * 3 / 2);
+    }
+    seq.pop(); // the first value >= h is not a target
+    seq.reverse();
+    seq
+}
+
+fn max_height(cols: &Columns) -> usize {
+    cols.iter().map(|c| c.len()).max().unwrap_or(0)
+}
+
+/// Reduce columns to height <= 2 following Dadda's schedule.
+///
+/// Textbook structure: a compressor consumes *current-stage* bits of column
+/// k and produces a *next-stage* sum (column k) and carry (column k+1) —
+/// carries never chain combinationally within a stage, so each stage adds
+/// exactly one full-adder level of logic depth.
+fn dadda_to_two(nl: &mut Netlist, mut cols: Columns) -> Columns {
+    let targets = dadda_heights(max_height(&cols));
+    for &d in &targets {
+        let width = cols.len();
+        let mut next: Columns = vec![Vec::new(); width + 1];
+        for k in 0..width {
+            let mut bits = std::mem::take(&mut cols[k]);
+            // `next[k]` already holds carries planned from column k-1;
+            // compress until the column's next-stage height fits the target
+            loop {
+                let future = bits.len() + next[k].len();
+                if future <= d || bits.len() < 2 {
+                    break;
+                }
+                if future == d + 1 || bits.len() == 2 {
+                    let b0 = bits.pop().unwrap();
+                    let b1 = bits.pop().unwrap();
+                    let (s, c) = half_adder(nl, b0, b1);
+                    next[k].push(s);
+                    next[k + 1].push(c);
+                } else {
+                    let b0 = bits.pop().unwrap();
+                    let b1 = bits.pop().unwrap();
+                    let b2 = bits.pop().unwrap();
+                    let (s, c) = full_adder(nl, b0, b1, b2);
+                    next[k].push(s);
+                    next[k + 1].push(c);
+                }
+            }
+            next[k].extend(bits); // untouched bits pass through
+        }
+        while next.last().map(|c| c.is_empty()) == Some(true) {
+            next.pop();
+        }
+        cols = next;
+    }
+    cols
+}
+
+/// Wallace: compress every column maximally each stage until height <= 2.
+fn wallace_to_two(nl: &mut Netlist, mut cols: Columns) -> Columns {
+    while max_height(&cols) > 2 {
+        let width = cols.len();
+        let mut next: Columns = vec![Vec::new(); width + 1];
+        for k in 0..width {
+            let bits = std::mem::take(&mut cols[k]);
+            let mut i = 0;
+            while i + 3 <= bits.len() {
+                let (s, c) = full_adder(nl, bits[i], bits[i + 1], bits[i + 2]);
+                next[k].push(s);
+                next[k + 1].push(c);
+                i += 3;
+            }
+            if bits.len() - i == 2 {
+                let (s, c) = half_adder(nl, bits[i], bits[i + 1]);
+                next[k].push(s);
+                next[k + 1].push(c);
+            } else if bits.len() - i == 1 {
+                next[k].push(bits[i]);
+            }
+        }
+        while next.last().map(|c| c.is_empty()) == Some(true) {
+            next.pop();
+        }
+        cols = next;
+    }
+    cols
+}
+
+fn two_rows(nl: &mut Netlist, cols: &Columns, width: usize) -> (Bus, Bus) {
+    let zero = nl.constant(false);
+    let mut r0 = vec![zero; width];
+    let mut r1 = vec![zero; width];
+    for (k, col) in cols.iter().enumerate().take(width) {
+        if !col.is_empty() {
+            r0[k] = col[0];
+        }
+        if col.len() >= 2 {
+            r1[k] = col[1];
+        }
+        debug_assert!(col.len() <= 2, "column {k} not reduced");
+    }
+    (r0, r1)
+}
+
+/// Dadda reduction + LUT-ripple final adder; result truncated to `width`.
+pub fn reduce_dadda(nl: &mut Netlist, cols: Columns, width: usize) -> Bus {
+    let reduced = dadda_to_two(nl, cols);
+    let (r0, r1) = two_rows(nl, &reduced, width);
+    let (sum, _) = ripple_carry_add_lut(nl, &r0, &r1, None);
+    sum
+}
+
+/// Wallace reduction + Kogge-Stone final adder; result truncated to `width`.
+pub fn reduce_wallace(nl: &mut Netlist, cols: Columns, width: usize) -> Bus {
+    let reduced = wallace_to_two(nl, cols);
+    let (r0, r1) = two_rows(nl, &reduced, width);
+    let (sum, _) = kogge_stone_add(nl, &r0, &r1);
+    sum
+}
+
+/// Array-style reduction: peel one bit per column as a row, accumulate rows
+/// with chained ripple adders. Regular structure -> CARRY4-friendly.
+pub fn reduce_array(nl: &mut Netlist, cols: Columns, width: usize) -> Bus {
+    let zero = nl.constant(false);
+    let rows = max_height(&cols);
+    let mut acc: Bus = vec![zero; width];
+    for r in 0..rows {
+        let mut row = vec![zero; width];
+        let mut any = false;
+        for k in 0..width.min(cols.len()) {
+            if let Some(&bit) = cols[k].get(r) {
+                row[k] = bit;
+                any = true;
+            }
+        }
+        if !any {
+            continue;
+        }
+        if r == 0 {
+            acc = row;
+        } else {
+            let (s, _) = ripple_carry_add(nl, &acc, &row, None);
+            acc = zext(nl, &s, width);
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dadda_sequence() {
+        assert_eq!(dadda_heights(3), vec![2]);
+        assert_eq!(dadda_heights(4), vec![3, 2]);
+        assert_eq!(dadda_heights(9), vec![6, 4, 3, 2]);
+        assert_eq!(dadda_heights(13), vec![9, 6, 4, 3, 2]);
+        assert_eq!(dadda_heights(32), vec![28, 19, 13, 9, 6, 4, 3, 2]);
+    }
+
+    #[test]
+    fn dadda_sequence_small() {
+        assert!(dadda_heights(2).is_empty());
+        assert!(dadda_heights(1).is_empty());
+    }
+}

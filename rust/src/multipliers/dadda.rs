@@ -1,0 +1,67 @@
+//! Dadda column-reduction multiplier baseline (unsigned).
+
+use super::column::{self, Columns};
+use crate::error::Result;
+use crate::netlist::Netlist;
+
+/// Build the combinational Dadda module (`a`,`b` → `p`).
+///
+/// Minimal-compressor column reduction down to two rows, then a plain LUT
+/// ripple adder. See `crate::multipliers::column` for why the final adder
+/// is not carry-chained (paper Table 5 ordering).
+pub fn build(width: u32) -> Result<Netlist> {
+    let n = width as usize;
+    let mut nl = Netlist::new(format!("dadda_mul{width}"));
+    let a = nl.input_bus("a", n);
+    let b = nl.input_bus("b", n);
+    let mut cols: Columns = vec![Vec::new(); 2 * n];
+    for i in 0..n {
+        for j in 0..n {
+            let pp = nl.and(a[i], b[j]);
+            cols[i + j].push(pp);
+        }
+    }
+    let p = column::reduce_dadda(&mut nl, cols, 2 * n);
+    nl.output_bus("p", &p);
+    nl.validate()?;
+    Ok(nl)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::run_comb;
+
+    #[test]
+    fn exhaustive_4bit() {
+        let nl = build(4).unwrap();
+        for x in 0..16u128 {
+            for y in 0..16u128 {
+                assert_eq!(run_comb(&nl, &[("a", x), ("b", y)], "p").unwrap(), x * y);
+            }
+        }
+    }
+
+    #[test]
+    fn combinational_no_registers() {
+        let nl = build(32).unwrap();
+        assert!(!nl.is_sequential(), "Dadda is purely combinational (paper: 0 slice registers)");
+    }
+
+    #[test]
+    fn random_32() {
+        let nl = build(32).unwrap();
+        let mut state = 42u64;
+        let mut rnd = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for _ in 0..30 {
+            let x = (rnd() as u32) as u128;
+            let y = (rnd() as u32) as u128;
+            assert_eq!(run_comb(&nl, &[("a", x), ("b", y)], "p").unwrap(), x * y);
+        }
+    }
+}

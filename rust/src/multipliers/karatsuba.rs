@@ -1,0 +1,196 @@
+//! Karatsuba-Ofman multiplier generator — the paper's §IV contribution.
+//!
+//! Recursive divide-and-conquer: an n-bit product is computed from **three**
+//! (not four) ~n/2-bit products,
+//!
+//! ```text
+//!   A·B = z2·2^{2h} + z1·2^h + z0
+//!   z0 = Al·Bl,  z2 = Ah·Bh,
+//!   z1 = (Al+Ah)·(Bl+Bh) − z0 − z2
+//! ```
+//!
+//! **Area optimisations** (the paper's "area optimized" epithet):
+//!
+//! * recombination only adds the *overlapping* bit range — the low `h`
+//!   bits of `z0` pass through untouched and the three terms above them are
+//!   summed with one carry-save row plus one fast-carry ripple adder;
+//! * all adders are CARRY4-chained ripple adders (~5× leaner than
+//!   parallel-prefix on LUT fabric);
+//! * the recursion stops at [`DEFAULT_LEAF_BITS`]-bit schoolbook leaves.
+//!   The paper splits "until each segment become[s] 2-bits"; on LUT6
+//!   fabric that is counter-productive — below ~8 bits the z1 adders cost
+//!   more than the saved fourth product. `build_with_leaf` exposes the
+//!   threshold and `benches/paper_tables.rs` ablates it; 2-bit leaves are
+//!   still available for a faithful-to-the-text build.
+//!
+//! The *"pipelined high speed"* Table-5 variants come from the delay-aware
+//! levelized pipeliner (`crate::netlist::pipeline`).
+
+use super::schoolbook::mul_unsigned_bus;
+use crate::error::Result;
+use crate::gates::{carry_save_add, ripple_carry_add, shl_const, sub, zext};
+use crate::netlist::{Bus, Netlist};
+
+/// Default leaf size (area-optimal on LUT6 fabric per the leaf ablation in
+/// `benches/paper_tables.rs`; see module docs).
+pub const DEFAULT_LEAF_BITS: usize = 12;
+
+/// Recursive Karatsuba product of two equal-width buses with an explicit
+/// leaf threshold. Result is `2·n` bits.
+pub fn karatsuba_bus(nl: &mut Netlist, a: &Bus, b: &Bus, leaf: usize) -> Bus {
+    let n = a.len();
+    assert_eq!(n, b.len(), "karatsuba needs equal operand widths");
+    // a 3-bit operand's middle product is itself 3 bits (no progress), so
+    // the effective minimum leaf is 3
+    let leaf = leaf.max(3);
+    if n <= leaf {
+        return mul_unsigned_bus(nl, a, b);
+    }
+    let h = n / 2;
+    let (al, ah) = (a[..h].to_vec(), a[h..].to_vec());
+    let (bl, bh) = (b[..h].to_vec(), b[h..].to_vec());
+
+    // z0 = Al·Bl : 2h bits
+    let z0 = karatsuba_bus(nl, &al, &bl, leaf);
+    // z2 = Ah·Bh : 2(n-h) bits
+    let z2 = karatsuba_bus(nl, &ah, &bh, leaf);
+
+    // operand sums: width max(h, n-h)+1 so both recursions stay equal-width
+    let sw = h.max(n - h) + 1;
+    let al_x = zext(nl, &al, sw);
+    let ah_x = zext(nl, &ah, sw);
+    let bl_x = zext(nl, &bl, sw);
+    let bh_x = zext(nl, &bh, sw);
+    let (sa_s, sa_c) = ripple_carry_add(nl, &al_x, &ah_x, None);
+    let (sb_s, sb_c) = ripple_carry_add(nl, &bl_x, &bh_x, None);
+    let mut sa = sa_s;
+    sa.push(sa_c);
+    sa.truncate(sw);
+    let mut sb = sb_s;
+    sb.push(sb_c);
+    sb.truncate(sw);
+
+    // z1 = sa·sb − z0 − z2 (non-negative, fits in n+2 bits)
+    let z1_full = karatsuba_bus(nl, &sa, &sb, leaf); // 2*sw bits
+    let z0_x = zext(nl, &z0, 2 * sw);
+    let t = sub(nl, &z1_full, &z0_x);
+    let z2_x = zext(nl, &z2, 2 * sw);
+    let z1_wide = sub(nl, &t, &z2_x);
+    let z1 = zext(nl, &z1_wide, (n + 2).min(2 * sw)); // tight: z1 < 2^{n+2}
+
+    // recombine over the overlapping range only:
+    //   p[0..h]        = z0[0..h]
+    //   p[h..2n]       = z0[h..2h] + z1 + (z2 << h)   (width 2n-h)
+    let frame = 2 * n - h;
+    let z0_hi = zext(nl, &z0[h..].to_vec(), frame);
+    let z1_f = zext(nl, &z1, frame);
+    let z2_f = {
+        let s = shl_const(nl, &z2, h);
+        zext(nl, &s, frame)
+    };
+    let (cs_s, cs_c) = carry_save_add(nl, &z0_hi, &z1_f, &z2_f);
+    let cs_c_sh = {
+        let s = shl_const(nl, &cs_c, 1);
+        zext(nl, &s, frame)
+    };
+    let (hi, _) = ripple_carry_add(nl, &cs_s, &cs_c_sh, None);
+
+    let mut out: Bus = z0[..h].to_vec();
+    out.extend(hi);
+    zext(nl, &out, 2 * n)
+}
+
+/// Build the combinational KOM module (`a`,`b` → `p`) with the
+/// area-optimal leaf.
+pub fn build(width: u32) -> Result<Netlist> {
+    build_with_leaf(width, DEFAULT_LEAF_BITS)
+}
+
+/// Build with an explicit recursion leaf (ablation / paper-faithful mode).
+pub fn build_with_leaf(width: u32, leaf: usize) -> Result<Netlist> {
+    let w = width as usize;
+    let mut nl = Netlist::new(format!("kom_mul{width}_leaf{leaf}"));
+    let a = nl.input_bus("a", w);
+    let b = nl.input_bus("b", w);
+    let p = karatsuba_bus(&mut nl, &a, &b, leaf);
+    nl.output_bus("p", &p);
+    nl.validate()?;
+    Ok(nl)
+}
+
+/// Count the scalar leaf multiplications Karatsuba performs for `n`-bit
+/// operands (3 per level vs schoolbook's 4) — used by the analysis reports.
+pub fn leaf_mult_count(n: usize, leaf: usize) -> usize {
+    let leaf = leaf.max(3);
+    if n <= leaf {
+        1
+    } else {
+        let h = n / 2;
+        let sw = h.max(n - h) + 1;
+        leaf_mult_count(h, leaf) + leaf_mult_count(n - h, leaf) + leaf_mult_count(sw, leaf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::run_comb;
+
+    #[test]
+    fn exhaustive_small_widths() {
+        for leaf in [3usize, 4, 8] {
+            for w in [2u32, 3, 4, 5, 6] {
+                let nl = build_with_leaf(w, leaf).unwrap();
+                for x in 0..(1u128 << w) {
+                    for y in 0..(1u128 << w) {
+                        let got = run_comb(&nl, &[("a", x), ("b", y)], "p").unwrap();
+                        assert_eq!(got, x * y, "leaf={leaf} w={w} {x}*{y}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn random_16_32_all_leaves() {
+        let mut state = 0x0123_4567_89ab_cdefu64;
+        let mut rnd = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for leaf in [3usize, 8, 16] {
+            for w in [16u32, 24, 32] {
+                let nl = build_with_leaf(w, leaf).unwrap();
+                for _ in 0..25 {
+                    let x = crate::bits::truncate(rnd() as u128, w);
+                    let y = crate::bits::truncate(rnd() as u128, w);
+                    let got = run_comb(&nl, &[("a", x), ("b", y)], "p").unwrap();
+                    assert_eq!(got, x * y, "leaf={leaf} w={w} {x}*{y}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn corner_values() {
+        let nl = build(32).unwrap();
+        let m = u32::MAX as u128;
+        for (x, y) in [(0, 0), (m, m), (m, 1), (1, m), (0x8000_0000, 2), (m, 0)] {
+            let got = run_comb(&nl, &[("a", x), ("b", y)], "p").unwrap();
+            assert_eq!(got, x * y, "{x}*{y}");
+        }
+    }
+
+    #[test]
+    fn leaf_counts_beat_schoolbook() {
+        // with 2-3 bit leaves, far fewer leaf products than the 4^levels of
+        // schoolbook recursion
+        assert_eq!(leaf_mult_count(3, 3), 1);
+        assert!(leaf_mult_count(32, 3) < 16 * 16);
+        assert!(leaf_mult_count(32, 3) > 16);
+        // coarser leaves, fewer nodes
+        assert!(leaf_mult_count(32, 8) < leaf_mult_count(32, 3));
+    }
+}

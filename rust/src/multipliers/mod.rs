@@ -1,0 +1,281 @@
+//! Multiplier generators — the paper's §IV.
+//!
+//! Every generator emits a [`crate::netlist::Netlist`] with input buses
+//! `a` and `b` (`width` bits each) and output bus `p` (`2·width` bits):
+//!
+//! * [`karatsuba`] — the paper's contribution: recursive Karatsuba-Ofman
+//!   divide-and-conquer (3 half-width products per level), with the
+//!   "pipelined high speed" variant produced by levelized pipelining;
+//! * [`baugh_wooley`] — signed two's-complement array multiplier baseline;
+//! * [`dadda`] — Dadda column-reduction tree baseline (ripple final adder,
+//!   reproducing the paper's Table 5 ordering — see DESIGN.md §9);
+//! * [`wallace`] — Wallace tree with Kogge-Stone final adder (extension);
+//! * [`schoolbook`] — plain shift-and-add array multiplier (extension);
+//! * [`booth`] — radix-4 Booth recoding, signed (extension).
+
+pub mod baugh_wooley;
+pub mod booth;
+pub mod column;
+pub mod dadda;
+pub mod karatsuba;
+pub mod schoolbook;
+pub mod wallace;
+
+use crate::error::{Error, Result};
+use crate::netlist::{pipeline_stages, Netlist};
+
+/// Which multiplier architecture to generate.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum MultKind {
+    /// Karatsuba-Ofman divide and conquer (unsigned).
+    KaratsubaOfman,
+    /// Baugh-Wooley two's-complement array (signed).
+    BaughWooley,
+    /// Dadda column-reduction tree (unsigned).
+    Dadda,
+    /// Wallace tree (unsigned).
+    Wallace,
+    /// Schoolbook array (unsigned).
+    Array,
+    /// Radix-4 Booth (signed).
+    Booth,
+}
+
+impl MultKind {
+    /// All kinds, in the paper's comparison order.
+    pub const ALL: [MultKind; 6] = [
+        MultKind::KaratsubaOfman,
+        MultKind::BaughWooley,
+        MultKind::Dadda,
+        MultKind::Wallace,
+        MultKind::Array,
+        MultKind::Booth,
+    ];
+
+    /// Whether the architecture multiplies two's-complement operands.
+    pub fn is_signed(&self) -> bool {
+        matches!(self, MultKind::BaughWooley | MultKind::Booth)
+    }
+
+    /// Short CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            MultKind::KaratsubaOfman => "kom",
+            MultKind::BaughWooley => "baugh-wooley",
+            MultKind::Dadda => "dadda",
+            MultKind::Wallace => "wallace",
+            MultKind::Array => "array",
+            MultKind::Booth => "booth",
+        }
+    }
+
+    /// Parse a CLI name (e.g. `kom`, `dadda`).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "kom" | "karatsuba" | "karatsuba-ofman" => MultKind::KaratsubaOfman,
+            "bw" | "baugh-wooley" | "baughwooley" => MultKind::BaughWooley,
+            "dadda" => MultKind::Dadda,
+            "wallace" => MultKind::Wallace,
+            "array" | "schoolbook" => MultKind::Array,
+            "booth" => MultKind::Booth,
+            other => return Err(Error::Usage(format!("unknown multiplier '{other}'"))),
+        })
+    }
+}
+
+/// Full generator specification.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct MultiplierSpec {
+    /// Architecture.
+    pub kind: MultKind,
+    /// Operand width in bits.
+    pub width: u32,
+    /// `Some(n)` pipelines the multiplier into `n` stages (paper's
+    /// "pipelined high speed" KOM variants). `None` = combinational.
+    pub stages: Option<u32>,
+    /// Wrap with input/output registers (classic timing-sign-off style;
+    /// used for the paper's registered Baugh-Wooley configuration).
+    pub io_regs: bool,
+}
+
+impl MultiplierSpec {
+    /// Combinational multiplier of `kind` × `width`.
+    pub fn comb(kind: MultKind, width: u32) -> Self {
+        MultiplierSpec { kind, width, stages: None, io_regs: false }
+    }
+
+    /// Pipelined multiplier.
+    pub fn pipelined(kind: MultKind, width: u32, stages: u32) -> Self {
+        MultiplierSpec { kind, width, stages: Some(stages), io_regs: false }
+    }
+
+    /// Combinational core with registered I/O.
+    pub fn comb_regio(kind: MultKind, width: u32) -> Self {
+        MultiplierSpec { kind, width, stages: None, io_regs: true }
+    }
+
+    /// The paper's Table 1–5 configurations: pipelined 16/32-bit KOM,
+    /// registered-I/O 32-bit Baugh-Wooley, combinational 32-bit Dadda.
+    pub fn paper_set() -> Vec<(String, MultiplierSpec)> {
+        vec![
+            ("16-bit KOM".into(), MultiplierSpec::pipelined(MultKind::KaratsubaOfman, 16, 3)),
+            ("32-bit KOM".into(), MultiplierSpec::pipelined(MultKind::KaratsubaOfman, 32, 4)),
+            ("32-bit Baugh-Wooley".into(), MultiplierSpec::comb_regio(MultKind::BaughWooley, 32)),
+            ("32-bit Dadda".into(), MultiplierSpec::comb(MultKind::Dadda, 32)),
+        ]
+    }
+}
+
+/// A generated multiplier: the netlist plus interface metadata.
+pub struct GeneratedMult {
+    /// The generated netlist (inputs `a`,`b`; output `p`).
+    pub netlist: Netlist,
+    /// Pipeline latency in cycles (0 for combinational).
+    pub latency: u32,
+    /// Operand width.
+    pub width: u32,
+    /// Signed (two's complement) semantics.
+    pub signed: bool,
+    /// Spec this was generated from.
+    pub spec: MultiplierSpec,
+}
+
+impl GeneratedMult {
+    /// Reference product for operands `x`,`y` under this multiplier's
+    /// signedness, truncated to `2*width` bits.
+    pub fn reference(&self, x: u128, y: u128) -> u128 {
+        let w = self.width;
+        if self.signed {
+            let sx = crate::bits::sign_extend(x, w);
+            let sy = crate::bits::sign_extend(y, w);
+            crate::bits::truncate((sx.wrapping_mul(sy)) as u128, 2 * w)
+        } else {
+            let mx = crate::bits::truncate(x, w);
+            let my = crate::bits::truncate(y, w);
+            crate::bits::truncate(mx.wrapping_mul(my), 2 * w)
+        }
+    }
+}
+
+/// Generate a multiplier netlist from a spec.
+pub fn generate(spec: MultiplierSpec) -> Result<GeneratedMult> {
+    if spec.width < 2 || spec.width > 64 {
+        return Err(Error::Unsupported(format!(
+            "multiplier width {} out of range [2,64]",
+            spec.width
+        )));
+    }
+    let comb = match spec.kind {
+        MultKind::KaratsubaOfman => karatsuba::build(spec.width)?,
+        MultKind::BaughWooley => baugh_wooley::build(spec.width)?,
+        MultKind::Dadda => dadda::build(spec.width)?,
+        MultKind::Wallace => wallace::build(spec.width)?,
+        MultKind::Array => schoolbook::build_array(spec.width)?,
+        MultKind::Booth => booth::build(spec.width)?,
+    };
+    let (netlist, latency) = match spec.stages {
+        Some(s) if s > 1 => {
+            let p = pipeline_stages(&comb, s);
+            (p.netlist, p.latency)
+        }
+        _ if spec.io_regs => {
+            let p = crate::netlist::pipeline::register_io(&comb);
+            (p.netlist, p.latency)
+        }
+        _ => (comb, 0),
+    };
+    Ok(GeneratedMult {
+        netlist,
+        latency,
+        width: spec.width,
+        signed: spec.kind.is_signed(),
+        spec,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{run_comb, run_pipelined};
+
+    /// Exhaustive check of every architecture at small widths.
+    #[test]
+    fn all_kinds_exhaustive_small() {
+        for kind in MultKind::ALL {
+            for width in [2u32, 3, 4] {
+                if kind == MultKind::Booth && (width % 2 != 0 || width < 4) {
+                    continue; // radix-4 booth needs even width >= 4
+                }
+                let m = generate(MultiplierSpec::comb(kind, width)).unwrap();
+                for x in 0..(1u128 << width) {
+                    for y in 0..(1u128 << width) {
+                        let got = run_comb(&m.netlist, &[("a", x), ("b", y)], "p").unwrap();
+                        let want = m.reference(x, y);
+                        assert_eq!(got, want, "{kind:?} w={width} {x}*{y}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Randomised check at the paper's widths (16/32).
+    #[test]
+    fn all_kinds_random_paper_widths() {
+        let mut state = 0x9e3779b97f4a7c15u64;
+        let mut rnd = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for kind in MultKind::ALL {
+            for width in [16u32, 32] {
+                let m = generate(MultiplierSpec::comb(kind, width)).unwrap();
+                for _ in 0..25 {
+                    let x = crate::bits::truncate(rnd() as u128, width);
+                    let y = crate::bits::truncate(rnd() as u128, width);
+                    let got = run_comb(&m.netlist, &[("a", x), ("b", y)], "p").unwrap();
+                    assert_eq!(got, m.reference(x, y), "{kind:?} w={width} {x}*{y}");
+                }
+            }
+        }
+    }
+
+    /// The paper's pipelined KOM variants stream correctly.
+    #[test]
+    fn pipelined_kom_streams() {
+        for (width, stages) in [(16u32, 4u32), (32, 6)] {
+            let m = generate(MultiplierSpec::pipelined(MultKind::KaratsubaOfman, width, stages)).unwrap();
+            assert!(m.latency >= 1);
+            let mut state = 0xdeadbeefcafef00du64;
+            let mut rnd = move || {
+                state ^= state << 13;
+                state ^= state >> 7;
+                state ^= state << 17;
+                state
+            };
+            let pairs: Vec<(u128, u128)> = (0..12)
+                .map(|_| {
+                    (
+                        crate::bits::truncate(rnd() as u128, width),
+                        crate::bits::truncate(rnd() as u128, width),
+                    )
+                })
+                .collect();
+            let stream: Vec<Vec<(&str, u128)>> =
+                pairs.iter().map(|&(x, y)| vec![("a", x), ("b", y)]).collect();
+            let outs = run_pipelined(&m.netlist, &stream, "p", m.latency).unwrap();
+            for (i, &(x, y)) in pairs.iter().enumerate() {
+                assert_eq!(outs[i], m.reference(x, y), "lane {i}: {x}*{y}");
+            }
+        }
+    }
+
+    #[test]
+    fn spec_parse_roundtrip() {
+        for kind in MultKind::ALL {
+            assert_eq!(MultKind::parse(kind.name()).unwrap(), kind);
+        }
+        assert!(MultKind::parse("bogus").is_err());
+    }
+}

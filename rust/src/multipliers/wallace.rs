@@ -1,0 +1,54 @@
+//! Wallace-tree multiplier (unsigned) — extension baseline.
+//!
+//! Maximal per-stage 3:2 compression with a Kogge-Stone final adder; the
+//! "fast tree" counterpart to the Dadda baseline, used in the ablation
+//! benches to show how much of Dadda's Table-5 delay is the final adder.
+
+use super::column::{self, Columns};
+use crate::error::Result;
+use crate::netlist::Netlist;
+
+/// Build the combinational Wallace module (`a`,`b` → `p`).
+pub fn build(width: u32) -> Result<Netlist> {
+    let n = width as usize;
+    let mut nl = Netlist::new(format!("wallace_mul{width}"));
+    let a = nl.input_bus("a", n);
+    let b = nl.input_bus("b", n);
+    let mut cols: Columns = vec![Vec::new(); 2 * n];
+    for i in 0..n {
+        for j in 0..n {
+            let pp = nl.and(a[i], b[j]);
+            cols[i + j].push(pp);
+        }
+    }
+    let p = column::reduce_wallace(&mut nl, cols, 2 * n);
+    nl.output_bus("p", &p);
+    nl.validate()?;
+    Ok(nl)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::max_depth;
+    use crate::sim::run_comb;
+
+    #[test]
+    fn exhaustive_3bit() {
+        let nl = build(3).unwrap();
+        for x in 0..8u128 {
+            for y in 0..8u128 {
+                assert_eq!(run_comb(&nl, &[("a", x), ("b", y)], "p").unwrap(), x * y);
+            }
+        }
+    }
+
+    #[test]
+    fn shallower_than_dadda_with_ripple() {
+        // the whole point: log-depth tree + log-depth adder
+        let w = build(16).unwrap();
+        let d = super::super::dadda::build(16).unwrap();
+        assert!(max_depth(&w) < max_depth(&d),
+            "wallace {} !< dadda {}", max_depth(&w), max_depth(&d));
+    }
+}

@@ -1,0 +1,62 @@
+//! Graphviz DOT emitter — the "RTL schematic" view (paper Fig 4).
+
+use super::{Driver, Gate, Netlist};
+use std::fmt::Write as _;
+
+/// Render the netlist as a DOT digraph (one node per gate, rank-ordered by
+/// logic depth). Intended for small modules; the CLI caps it at 5k nets.
+pub fn to_dot(nl: &Netlist) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "digraph \"{}\" {{", nl.name);
+    let _ = writeln!(s, "  rankdir=LR; node [fontsize=9, shape=box];");
+    for (id, d) in nl.iter() {
+        let label = match d {
+            Driver::Input => "IN".to_string(),
+            Driver::Gate(g) => match g {
+                Gate::Const(b) => format!("{}", *b as u8),
+                Gate::Buf(_) => "BUF".into(),
+                Gate::Not(_) => "NOT".into(),
+                Gate::And(..) => "AND".into(),
+                Gate::Or(..) => "OR".into(),
+                Gate::Xor(..) => "XOR".into(),
+                Gate::Nand(..) => "NAND".into(),
+                Gate::Nor(..) => "NOR".into(),
+                Gate::Xnor(..) => "XNOR".into(),
+                Gate::Mux(..) => "MUX".into(),
+                Gate::Maj(..) => "MAJ".into(),
+                Gate::Xor3(..) => "XOR3".into(),
+                Gate::Dff(..) => "DFF".into(),
+            },
+        };
+        let shape = match d {
+            Driver::Input => ", shape=ellipse, style=filled, fillcolor=lightblue",
+            Driver::Gate(Gate::Dff(..)) => ", style=filled, fillcolor=lightyellow",
+            _ => "",
+        };
+        let _ = writeln!(s, "  n{} [label=\"{}\"{}];", id.0, label, shape);
+        if let Driver::Gate(g) = d {
+            for i in g.inputs() {
+                let _ = writeln!(s, "  n{} -> n{};", i.0, id.0);
+            }
+        }
+    }
+    let _ = writeln!(s, "}}");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::netlist::Netlist;
+
+    #[test]
+    fn emits_digraph() {
+        let mut nl = Netlist::new("g");
+        let a = nl.input_bus("a", 1);
+        let x = nl.not(a[0]);
+        nl.output_bus("o", &vec![x]);
+        let d = super::to_dot(&nl);
+        assert!(d.starts_with("digraph"));
+        assert!(d.contains("NOT"));
+        assert!(d.contains("->"));
+    }
+}

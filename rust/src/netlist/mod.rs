@@ -1,0 +1,408 @@
+//! Gate-level netlist intermediate representation.
+//!
+//! A [`Netlist`] is a flat single-clock synchronous circuit: every net
+//! ([`NetId`]) carries one bit and has exactly one driver — either a module
+//! input or a [`Gate`]. D flip-flops share one implicit global clock, which
+//! matches the paper's synchronous systolic fabric (§II) and keeps the
+//! technology mapper and STA simple.
+//!
+//! The multiplier generators (`crate::multipliers`) and adder library
+//! (`crate::gates`) build netlists through the word-level helpers; the
+//! technology mapper (`crate::techmap`), timing analyser (`crate::sta`),
+//! power model (`crate::power`) and simulators (`crate::sim`) consume them.
+
+pub mod equiv;
+mod dot;
+pub mod pipeline;
+mod stats;
+mod verilog;
+pub mod visit;
+
+pub use dot::to_dot;
+pub use equiv::{check_comb, check_pipelined, Equivalence};
+pub use pipeline::{pipeline_at, pipeline_stages, register_io, Pipelined};
+pub use stats::NetlistStats;
+pub use verilog::to_verilog;
+pub use visit::{logic_depth, max_depth, topo_order};
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Identifier of a single-bit net (index into [`Netlist::nodes`]).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
+pub struct NetId(pub u32);
+
+impl NetId {
+    /// Raw index.
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// A bus is an ordered list of nets, LSB first.
+pub type Bus = Vec<NetId>;
+
+/// Primitive gate kinds. Two-input kinds keep the mapper's cut enumeration
+/// simple; `Maj` (majority-of-3) exists because it is the carry function of
+/// a full adder and is tagged onto fast-carry chains.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Gate {
+    /// Constant 0/1.
+    Const(bool),
+    /// Buffer.
+    Buf(NetId),
+    /// Inverter.
+    Not(NetId),
+    /// 2-input AND.
+    And(NetId, NetId),
+    /// 2-input OR.
+    Or(NetId, NetId),
+    /// 2-input XOR.
+    Xor(NetId, NetId),
+    /// 2-input NAND.
+    Nand(NetId, NetId),
+    /// 2-input NOR.
+    Nor(NetId, NetId),
+    /// 2-input XNOR.
+    Xnor(NetId, NetId),
+    /// 2:1 multiplexer: `sel ? b : a`.
+    Mux(NetId, NetId, NetId),
+    /// Majority of three (full-adder carry).
+    Maj(NetId, NetId, NetId),
+    /// Three-input XOR (full-adder sum).
+    Xor3(NetId, NetId, NetId),
+    /// D flip-flop on the implicit global clock; `bool` is the reset value.
+    Dff(NetId, bool),
+}
+
+impl Gate {
+    /// Input nets of this gate.
+    pub fn inputs(&self) -> Vec<NetId> {
+        match *self {
+            Gate::Const(_) => vec![],
+            Gate::Buf(a) | Gate::Not(a) | Gate::Dff(a, _) => vec![a],
+            Gate::And(a, b)
+            | Gate::Or(a, b)
+            | Gate::Xor(a, b)
+            | Gate::Nand(a, b)
+            | Gate::Nor(a, b)
+            | Gate::Xnor(a, b) => vec![a, b],
+            Gate::Mux(s, a, b) => vec![s, a, b],
+            Gate::Maj(a, b, c) | Gate::Xor3(a, b, c) => vec![a, b, c],
+        }
+    }
+
+    /// True for sequential elements.
+    pub fn is_dff(&self) -> bool {
+        matches!(self, Gate::Dff(..))
+    }
+
+    /// True for combinational logic (not DFF, not const, not input).
+    pub fn is_comb(&self) -> bool {
+        !matches!(self, Gate::Dff(..) | Gate::Const(_))
+    }
+}
+
+/// What drives a net.
+#[derive(Clone, Debug)]
+pub enum Driver {
+    /// Module primary input.
+    Input,
+    /// Gate output.
+    Gate(Gate),
+}
+
+/// A flat, single-clock gate-level netlist.
+#[derive(Clone, Debug, Default)]
+pub struct Netlist {
+    /// Module name (used by the Verilog/DOT emitters).
+    pub name: String,
+    drivers: Vec<Driver>,
+    /// Nets tagged as part of a dedicated fast-carry chain (CARRY4-like).
+    chain: Vec<bool>,
+    inputs: BTreeMap<String, Bus>,
+    outputs: BTreeMap<String, Bus>,
+}
+
+impl Netlist {
+    /// Empty netlist with a module name.
+    pub fn new(name: impl Into<String>) -> Self {
+        Netlist {
+            name: name.into(),
+            ..Default::default()
+        }
+    }
+
+    /// Number of nets (inputs + gates).
+    pub fn num_nets(&self) -> usize {
+        self.drivers.len()
+    }
+
+    /// Driver of `net`.
+    pub fn driver(&self, net: NetId) -> &Driver {
+        &self.drivers[net.index()]
+    }
+
+    /// Iterate `(NetId, &Driver)` in creation order (a valid topological
+    /// order for combinational logic by construction, since gates may only
+    /// reference already-created nets).
+    pub fn iter(&self) -> impl Iterator<Item = (NetId, &Driver)> {
+        self.drivers
+            .iter()
+            .enumerate()
+            .map(|(i, d)| (NetId(i as u32), d))
+    }
+
+    /// Named input buses.
+    pub fn inputs(&self) -> &BTreeMap<String, Bus> {
+        &self.inputs
+    }
+
+    /// Named output buses.
+    pub fn outputs(&self) -> &BTreeMap<String, Bus> {
+        &self.outputs
+    }
+
+    /// True if the netlist contains any flip-flop.
+    pub fn is_sequential(&self) -> bool {
+        self.drivers
+            .iter()
+            .any(|d| matches!(d, Driver::Gate(g) if g.is_dff()))
+    }
+
+    /// Whether `net` is tagged as belonging to a fast-carry chain.
+    pub fn is_chain(&self, net: NetId) -> bool {
+        self.chain[net.index()]
+    }
+
+    /// Tag `net` as a fast-carry-chain element (affects STA delay).
+    pub fn set_chain(&mut self, net: NetId) {
+        let i = net.index();
+        self.chain[i] = true;
+    }
+
+    // ---- construction ------------------------------------------------
+
+    fn push(&mut self, d: Driver) -> NetId {
+        let id = NetId(self.drivers.len() as u32);
+        self.drivers.push(d);
+        self.chain.push(false);
+        id
+    }
+
+    /// Declare a primary input bus of `width` bits.
+    pub fn input_bus(&mut self, name: impl Into<String>, width: usize) -> Bus {
+        let name = name.into();
+        assert!(
+            !self.inputs.contains_key(&name),
+            "duplicate input bus {name}"
+        );
+        let bus: Bus = (0..width).map(|_| self.push(Driver::Input)).collect();
+        self.inputs.insert(name, bus.clone());
+        bus
+    }
+
+    /// Declare a primary output bus.
+    pub fn output_bus(&mut self, name: impl Into<String>, bus: &Bus) {
+        let name = name.into();
+        assert!(
+            !self.outputs.contains_key(&name),
+            "duplicate output bus {name}"
+        );
+        for &n in bus {
+            assert!(n.index() < self.drivers.len(), "output references unknown net");
+        }
+        self.outputs.insert(name, bus.clone());
+    }
+
+    /// Add a gate; inputs must already exist (enforces acyclicity for
+    /// combinational logic — DFFs are the only legal back-edges and are
+    /// added via [`Netlist::dff_backedge`] when a loop is required).
+    pub fn gate(&mut self, g: Gate) -> NetId {
+        for i in g.inputs() {
+            assert!(
+                i.index() < self.drivers.len(),
+                "gate references future net {i:?}"
+            );
+        }
+        self.push(Driver::Gate(g))
+    }
+
+    /// Constant net.
+    pub fn constant(&mut self, v: bool) -> NetId {
+        self.gate(Gate::Const(v))
+    }
+
+    /// AND gate.
+    pub fn and(&mut self, a: NetId, b: NetId) -> NetId {
+        self.gate(Gate::And(a, b))
+    }
+    /// OR gate.
+    pub fn or(&mut self, a: NetId, b: NetId) -> NetId {
+        self.gate(Gate::Or(a, b))
+    }
+    /// XOR gate.
+    pub fn xor(&mut self, a: NetId, b: NetId) -> NetId {
+        self.gate(Gate::Xor(a, b))
+    }
+    /// Inverter.
+    pub fn not(&mut self, a: NetId) -> NetId {
+        self.gate(Gate::Not(a))
+    }
+    /// NAND gate.
+    pub fn nand(&mut self, a: NetId, b: NetId) -> NetId {
+        self.gate(Gate::Nand(a, b))
+    }
+    /// NOR gate.
+    pub fn nor(&mut self, a: NetId, b: NetId) -> NetId {
+        self.gate(Gate::Nor(a, b))
+    }
+    /// XNOR gate.
+    pub fn xnor(&mut self, a: NetId, b: NetId) -> NetId {
+        self.gate(Gate::Xnor(a, b))
+    }
+    /// 2:1 mux (`sel ? b : a`).
+    pub fn mux(&mut self, sel: NetId, a: NetId, b: NetId) -> NetId {
+        self.gate(Gate::Mux(sel, a, b))
+    }
+    /// Majority-of-3 (FA carry).
+    pub fn maj(&mut self, a: NetId, b: NetId, c: NetId) -> NetId {
+        self.gate(Gate::Maj(a, b, c))
+    }
+    /// 3-input XOR (FA sum).
+    pub fn xor3(&mut self, a: NetId, b: NetId, c: NetId) -> NetId {
+        self.gate(Gate::Xor3(a, b, c))
+    }
+    /// D flip-flop with reset value 0.
+    pub fn dff(&mut self, d: NetId) -> NetId {
+        self.gate(Gate::Dff(d, false))
+    }
+
+    /// Register a whole bus.
+    pub fn dff_bus(&mut self, bus: &Bus) -> Bus {
+        bus.iter().map(|&n| self.dff(n)).collect()
+    }
+
+    /// Create a DFF whose D input is wired later via
+    /// [`Netlist::connect_backedge`] — needed for accumulator loops.
+    pub fn dff_placeholder(&mut self) -> NetId {
+        // temporary self-loop; must be patched before use
+        let id = NetId(self.drivers.len() as u32);
+        self.drivers.push(Driver::Gate(Gate::Dff(id, false)));
+        self.chain.push(false);
+        id
+    }
+
+    /// Patch the D input of a placeholder DFF (the only legal back-edge).
+    pub fn connect_backedge(&mut self, q: NetId, d: NetId) -> Result<()> {
+        match &mut self.drivers[q.index()] {
+            Driver::Gate(Gate::Dff(slot, _)) => {
+                *slot = d;
+                Ok(())
+            }
+            _ => Err(Error::Netlist(format!(
+                "connect_backedge target {q:?} is not a DFF"
+            ))),
+        }
+    }
+
+    /// Structural validation: every gate input driven, combinational logic
+    /// acyclic (DFF back-edges excluded), outputs wired.
+    pub fn validate(&self) -> Result<()> {
+        for (id, d) in self.iter() {
+            if let Driver::Gate(g) = d {
+                for i in g.inputs() {
+                    if i.index() >= self.drivers.len() {
+                        return Err(Error::Netlist(format!(
+                            "net {id:?} has dangling input {i:?}"
+                        )));
+                    }
+                    // combinational gates may only reference earlier nets
+                    if !g.is_dff() && i.index() >= id.index() {
+                        return Err(Error::Netlist(format!(
+                            "combinational cycle through {id:?}"
+                        )));
+                    }
+                }
+            }
+        }
+        if self.outputs.is_empty() {
+            return Err(Error::Netlist(format!(
+                "module {} has no outputs",
+                self.name
+            )));
+        }
+        Ok(())
+    }
+
+    /// Fanout count per net.
+    pub fn fanout(&self) -> Vec<u32> {
+        let mut fo = vec![0u32; self.num_nets()];
+        for (_, d) in self.iter() {
+            if let Driver::Gate(g) = d {
+                for i in g.inputs() {
+                    fo[i.index()] += 1;
+                }
+            }
+        }
+        for bus in self.outputs.values() {
+            for &n in bus {
+                fo[n.index()] += 1;
+            }
+        }
+        fo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_validate() {
+        let mut nl = Netlist::new("t");
+        let a = nl.input_bus("a", 2);
+        let b = nl.input_bus("b", 2);
+        let x = nl.and(a[0], b[0]);
+        let y = nl.xor(a[1], b[1]);
+        let o = nl.or(x, y);
+        nl.output_bus("o", &vec![o]);
+        assert!(nl.validate().is_ok());
+        assert_eq!(nl.num_nets(), 7);
+        assert!(!nl.is_sequential());
+    }
+
+    #[test]
+    fn backedge_accumulator() {
+        let mut nl = Netlist::new("acc");
+        let a = nl.input_bus("a", 1);
+        let q = nl.dff_placeholder();
+        let sum = nl.xor(a[0], q);
+        nl.connect_backedge(q, sum).unwrap();
+        nl.output_bus("q", &vec![q]);
+        assert!(nl.validate().is_ok());
+        assert!(nl.is_sequential());
+    }
+
+    #[test]
+    fn fanout_counts() {
+        let mut nl = Netlist::new("f");
+        let a = nl.input_bus("a", 1);
+        let x = nl.not(a[0]);
+        let y = nl.and(x, a[0]);
+        let z = nl.or(x, y);
+        nl.output_bus("z", &vec![z]);
+        let fo = nl.fanout();
+        assert_eq!(fo[a[0].index()], 2);
+        assert_eq!(fo[x.index()], 2);
+        assert_eq!(fo[z.index()], 1); // the output
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate input bus")]
+    fn duplicate_input_panics() {
+        let mut nl = Netlist::new("d");
+        nl.input_bus("a", 1);
+        nl.input_bus("a", 1);
+    }
+}

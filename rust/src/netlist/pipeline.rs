@@ -1,0 +1,299 @@
+//! Automatic levelized pipelining.
+//!
+//! The paper's §IV multiplier is a *"32-bit pipelined high speed, area
+//! optimized Karatsuba-Ofman multiplier"*. Rather than hand-placing
+//! registers inside each generator, we pipeline any combinational netlist
+//! mechanically: pick cut levels in the logic-depth profile and insert a
+//! DFF on every edge that crosses a cut. Every input→output path crosses
+//! each cut exactly once, so all paths accumulate the same latency and the
+//! circuit computes the same function with `cuts.len()` cycles of delay.
+
+use super::{visit, Driver, Gate, NetId, Netlist};
+use std::collections::HashMap;
+
+/// Result of pipelining: the new netlist plus its latency in cycles.
+pub struct Pipelined {
+    /// The pipelined netlist.
+    pub netlist: Netlist,
+    /// Pipeline latency (cycles from input to output).
+    pub latency: u32,
+}
+
+/// Approximate per-net arrival times used for delay-aware cut placement:
+/// fast-carry cells cost far less than a LUT level, so cutting on gate
+/// *depth* would pack whole ripple chains into one stage and starve others.
+/// Constants mirror `crate::sta::DelayModel` magnitudes.
+pub fn arrival_estimate(nl: &Netlist) -> Vec<f64> {
+    let mut arr = vec![0f64; nl.num_nets()];
+    for (id, d) in nl.iter() {
+        if let Driver::Gate(g) = d {
+            if !g.is_comb() {
+                continue;
+            }
+            let worst = g
+                .inputs()
+                .iter()
+                .map(|i| arr[i.index()])
+                .fold(0f64, f64::max);
+            let own = if nl.is_chain(id) { 0.045 } else { 0.46 };
+            arr[id.index()] = worst + own;
+        }
+    }
+    arr
+}
+
+/// Insert pipeline registers at the given arrival-time cut levels.
+///
+/// `cuts` must be strictly increasing. The input netlist must be purely
+/// combinational. Registers land on every edge whose driver settles before
+/// a cut and whose consumer settles at/after it, so each input→output path
+/// crosses every cut exactly once.
+pub fn pipeline_at(nl: &Netlist, cuts: &[f64]) -> Pipelined {
+    assert!(!nl.is_sequential(), "pipeline_at needs combinational input");
+    assert!(
+        cuts.windows(2).all(|w| w[0] < w[1]),
+        "cuts must be increasing"
+    );
+    let depth = arrival_estimate(nl);
+
+    let crossings =
+        |du: f64, dv: f64| cuts.iter().filter(|&&c| du < c && c <= dv).count() as u32;
+
+    let mut out = Netlist::new(format!("{}_pipe{}", nl.name, cuts.len()));
+    // map original net -> new net (undelayed version)
+    let mut base: Vec<Option<NetId>> = vec![None; nl.num_nets()];
+    // (orig net, #registers) -> delayed new net
+    let mut delayed: HashMap<(NetId, u32), NetId> = HashMap::new();
+
+    // re-declare inputs in original order
+    for (name, bus) in nl.inputs() {
+        let new_bus = out.input_bus(name.clone(), bus.len());
+        for (o, n) in bus.iter().zip(new_bus) {
+            base[o.index()] = Some(n);
+        }
+    }
+
+    // delay-on-demand helper
+    fn get_delayed(
+        out: &mut Netlist,
+        delayed: &mut HashMap<(NetId, u32), NetId>,
+        base: &[Option<NetId>],
+        net: NetId,
+        regs: u32,
+    ) -> NetId {
+        if regs == 0 {
+            return base[net.index()].expect("net not yet mapped");
+        }
+        if let Some(&n) = delayed.get(&(net, regs)) {
+            return n;
+        }
+        let prev = get_delayed(out, delayed, base, net, regs - 1);
+        let q = out.dff(prev);
+        delayed.insert((net, regs), q);
+        q
+    }
+
+    for (id, d) in nl.iter() {
+        if let Driver::Gate(g) = d {
+            let dv = depth[id.index()];
+            let map_in = |out: &mut Netlist, delayed: &mut HashMap<(NetId, u32), NetId>, u: NetId| {
+                let r = crossings(depth[u.index()], dv);
+                get_delayed(out, delayed, &base, u, r)
+            };
+            let ng = match *g {
+                Gate::Const(b) => Gate::Const(b),
+                Gate::Buf(a) => Gate::Buf(map_in(&mut out, &mut delayed, a)),
+                Gate::Not(a) => Gate::Not(map_in(&mut out, &mut delayed, a)),
+                Gate::And(a, b) => {
+                    let (a, b) = (map_in(&mut out, &mut delayed, a), map_in(&mut out, &mut delayed, b));
+                    Gate::And(a, b)
+                }
+                Gate::Or(a, b) => {
+                    let (a, b) = (map_in(&mut out, &mut delayed, a), map_in(&mut out, &mut delayed, b));
+                    Gate::Or(a, b)
+                }
+                Gate::Xor(a, b) => {
+                    let (a, b) = (map_in(&mut out, &mut delayed, a), map_in(&mut out, &mut delayed, b));
+                    Gate::Xor(a, b)
+                }
+                Gate::Nand(a, b) => {
+                    let (a, b) = (map_in(&mut out, &mut delayed, a), map_in(&mut out, &mut delayed, b));
+                    Gate::Nand(a, b)
+                }
+                Gate::Nor(a, b) => {
+                    let (a, b) = (map_in(&mut out, &mut delayed, a), map_in(&mut out, &mut delayed, b));
+                    Gate::Nor(a, b)
+                }
+                Gate::Xnor(a, b) => {
+                    let (a, b) = (map_in(&mut out, &mut delayed, a), map_in(&mut out, &mut delayed, b));
+                    Gate::Xnor(a, b)
+                }
+                Gate::Mux(s, a, b) => {
+                    let s = map_in(&mut out, &mut delayed, s);
+                    let a = map_in(&mut out, &mut delayed, a);
+                    let b = map_in(&mut out, &mut delayed, b);
+                    Gate::Mux(s, a, b)
+                }
+                Gate::Maj(a, b, c) => {
+                    let a = map_in(&mut out, &mut delayed, a);
+                    let b = map_in(&mut out, &mut delayed, b);
+                    let c = map_in(&mut out, &mut delayed, c);
+                    Gate::Maj(a, b, c)
+                }
+                Gate::Xor3(a, b, c) => {
+                    let a = map_in(&mut out, &mut delayed, a);
+                    let b = map_in(&mut out, &mut delayed, b);
+                    let c = map_in(&mut out, &mut delayed, c);
+                    Gate::Xor3(a, b, c)
+                }
+                Gate::Dff(..) => unreachable!("combinational input"),
+            };
+            let nid = out.gate(ng);
+            if nl.is_chain(id) {
+                out.set_chain(nid);
+            }
+            base[id.index()] = Some(nid);
+        }
+    }
+
+    // outputs: equalize latency — every output must see all cuts
+    let total = cuts.len() as u32;
+    for (name, bus) in nl.outputs() {
+        let new_bus: Vec<NetId> = bus
+            .iter()
+            .map(|&o| {
+                let have = crossings(-1.0, depth[o.index()]);
+                get_delayed(&mut out, &mut delayed, &base, o, total - have)
+            })
+            .collect();
+        out.output_bus(name.clone(), &new_bus);
+    }
+
+    Pipelined {
+        netlist: out,
+        latency: total,
+    }
+}
+
+/// Wrap a combinational netlist with input and output registers (the
+/// classic "registered I/O" synthesis style used for timing sign-off).
+/// Latency is 2 cycles; the combinational core is unchanged.
+pub fn register_io(nl: &Netlist) -> Pipelined {
+    assert!(!nl.is_sequential(), "register_io needs combinational input");
+    let mut out = Netlist::new(format!("{}_regio", nl.name));
+    let mut base: Vec<Option<NetId>> = vec![None; nl.num_nets()];
+    for (name, bus) in nl.inputs() {
+        let new_bus = out.input_bus(name.clone(), bus.len());
+        let regged = out.dff_bus(&new_bus);
+        for (o, n) in bus.iter().zip(regged) {
+            base[o.index()] = Some(n);
+        }
+    }
+    for (id, d) in nl.iter() {
+        if let Driver::Gate(g) = d {
+            let m = |u: NetId| base[u.index()].expect("topo order");
+            let ng = match *g {
+                Gate::Const(b) => Gate::Const(b),
+                Gate::Buf(a) => Gate::Buf(m(a)),
+                Gate::Not(a) => Gate::Not(m(a)),
+                Gate::And(a, b) => Gate::And(m(a), m(b)),
+                Gate::Or(a, b) => Gate::Or(m(a), m(b)),
+                Gate::Xor(a, b) => Gate::Xor(m(a), m(b)),
+                Gate::Nand(a, b) => Gate::Nand(m(a), m(b)),
+                Gate::Nor(a, b) => Gate::Nor(m(a), m(b)),
+                Gate::Xnor(a, b) => Gate::Xnor(m(a), m(b)),
+                Gate::Mux(s, a, b) => Gate::Mux(m(s), m(a), m(b)),
+                Gate::Maj(a, b, c) => Gate::Maj(m(a), m(b), m(c)),
+                Gate::Xor3(a, b, c) => Gate::Xor3(m(a), m(b), m(c)),
+                Gate::Dff(..) => unreachable!(),
+            };
+            let nid = out.gate(ng);
+            if nl.is_chain(id) {
+                out.set_chain(nid);
+            }
+            base[id.index()] = Some(nid);
+        }
+    }
+    for (name, bus) in nl.outputs() {
+        let mapped: Vec<NetId> = bus.iter().map(|&o| base[o.index()].unwrap()).collect();
+        let regged = out.dff_bus(&mapped);
+        out.output_bus(name.clone(), &regged);
+    }
+    Pipelined {
+        netlist: out,
+        latency: 2,
+    }
+}
+
+/// Pipeline into `stages` roughly equal-*delay* stages (stages-1 cuts).
+pub fn pipeline_stages(nl: &Netlist, stages: u32) -> Pipelined {
+    assert!(stages >= 1);
+    if stages == 1 {
+        return Pipelined {
+            netlist: nl.clone(),
+            latency: 0,
+        };
+    }
+    let arr = arrival_estimate(nl);
+    let md = arr.iter().copied().fold(0f64, f64::max).max(1e-9);
+    let cuts: Vec<f64> = (1..stages)
+        .map(|i| i as f64 * md / stages as f64)
+        .collect();
+    pipeline_at(nl, &cuts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::Netlist;
+    use crate::sim::CycleSim;
+    use crate::bits::BitVec;
+
+    /// 4-bit ripple incrementer as a pipelining guinea pig.
+    fn incr4() -> Netlist {
+        let mut nl = Netlist::new("incr4");
+        let a = nl.input_bus("a", 4);
+        let one = nl.constant(true);
+        let mut carry = one;
+        let mut out = vec![];
+        for i in 0..4 {
+            let s = nl.xor(a[i], carry);
+            let c = nl.and(a[i], carry);
+            out.push(s);
+            carry = c;
+        }
+        nl.output_bus("y", &out);
+        nl
+    }
+
+    #[test]
+    fn pipelined_matches_comb() {
+        let nl = incr4();
+        let p = pipeline_stages(&nl, 3);
+        assert!(p.latency >= 1);
+        assert!(p.netlist.is_sequential());
+        let mut sim = CycleSim::new(&p.netlist).unwrap();
+        // stream all 16 values; after `latency` cycles outputs follow inputs
+        let mut got = vec![];
+        for t in 0..(16 + p.latency as usize) {
+            let v = (t % 16) as u128;
+            sim.set_bus(&p.netlist.inputs()["a"], &BitVec::from_u128(v, 4));
+            sim.settle();
+            if t >= p.latency as usize {
+                got.push(sim.get_bus(&p.netlist.outputs()["y"]).to_u128());
+            }
+            sim.step_clock();
+        }
+        for (i, g) in got.iter().enumerate() {
+            assert_eq!(*g, ((i as u128) + 1) & 0xF, "t={i}");
+        }
+    }
+
+    #[test]
+    fn single_stage_is_identity() {
+        let nl = incr4();
+        let p = pipeline_stages(&nl, 1);
+        assert_eq!(p.latency, 0);
+        assert!(!p.netlist.is_sequential());
+    }
+}

@@ -1,0 +1,101 @@
+//! Gate-count statistics for a netlist.
+
+use super::{Driver, Gate, Netlist};
+use std::fmt;
+
+/// Aggregate gate statistics, used by reports and by the analytic
+/// hierarchical resource accounting in `crate::matrix`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NetlistStats {
+    /// Primary input bits.
+    pub inputs: usize,
+    /// Primary output bits.
+    pub outputs: usize,
+    /// 2-input logic gates (and/or/xor/nand/nor/xnor).
+    pub gates2: usize,
+    /// 3-input logic (mux/maj/xor3).
+    pub gates3: usize,
+    /// Inverters/buffers.
+    pub gates1: usize,
+    /// Constants.
+    pub consts: usize,
+    /// Flip-flops.
+    pub dffs: usize,
+    /// Maximum combinational depth (gate levels).
+    pub max_depth: u32,
+}
+
+impl NetlistStats {
+    /// Compute stats for `nl`.
+    pub fn of(nl: &Netlist) -> Self {
+        let mut s = NetlistStats {
+            inputs: nl.inputs().values().map(|b| b.len()).sum(),
+            outputs: nl.outputs().values().map(|b| b.len()).sum(),
+            max_depth: super::visit::max_depth(nl),
+            ..Default::default()
+        };
+        for (_, d) in nl.iter() {
+            if let Driver::Gate(g) = d {
+                match g {
+                    Gate::Const(_) => s.consts += 1,
+                    Gate::Buf(_) | Gate::Not(_) => s.gates1 += 1,
+                    Gate::And(..)
+                    | Gate::Or(..)
+                    | Gate::Xor(..)
+                    | Gate::Nand(..)
+                    | Gate::Nor(..)
+                    | Gate::Xnor(..) => s.gates2 += 1,
+                    Gate::Mux(..) | Gate::Maj(..) | Gate::Xor3(..) => s.gates3 += 1,
+                    Gate::Dff(..) => s.dffs += 1,
+                }
+            }
+        }
+        s
+    }
+
+    /// Total combinational gates.
+    pub fn total_comb(&self) -> usize {
+        self.gates1 + self.gates2 + self.gates3
+    }
+}
+
+impl fmt::Display for NetlistStats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "in={} out={} comb={} (1in={} 2in={} 3in={}) dff={} depth={}",
+            self.inputs,
+            self.outputs,
+            self.total_comb(),
+            self.gates1,
+            self.gates2,
+            self.gates3,
+            self.dffs,
+            self.max_depth
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::Netlist;
+
+    #[test]
+    fn counts() {
+        let mut nl = Netlist::new("s");
+        let a = nl.input_bus("a", 3);
+        let x = nl.and(a[0], a[1]);
+        let y = nl.xor3(a[0], a[1], a[2]);
+        let q = nl.dff(y);
+        let z = nl.not(x);
+        nl.output_bus("o", &vec![q, z]);
+        let s = NetlistStats::of(&nl);
+        assert_eq!(s.inputs, 3);
+        assert_eq!(s.outputs, 2);
+        assert_eq!(s.gates2, 1);
+        assert_eq!(s.gates3, 1);
+        assert_eq!(s.gates1, 1);
+        assert_eq!(s.dffs, 1);
+    }
+}

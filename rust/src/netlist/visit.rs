@@ -1,0 +1,74 @@
+//! Netlist traversal helpers.
+
+use super::{Driver, NetId, Netlist};
+
+/// A topological order of all nets for combinational evaluation.
+///
+/// By construction (gates may only reference already-created nets, DFFs are
+/// the only back-edges and are evaluated from their *latched* state), plain
+/// creation order is a valid topological order; this helper exists so that
+/// consumers do not silently depend on that invariant, and to give a single
+/// point to change if the IR ever allows out-of-order construction.
+pub fn topo_order(nl: &Netlist) -> Vec<NetId> {
+    (0..nl.num_nets() as u32).map(NetId).collect()
+}
+
+/// Combinational logic depth of every net, in gate levels.
+///
+/// Inputs, constants and DFF outputs are depth 0; each combinational gate is
+/// 1 + max(depth of inputs). Used by [`crate::netlist::NetlistStats`] and as
+/// a sanity cross-check against the STA's critical path.
+pub fn logic_depth(nl: &Netlist) -> Vec<u32> {
+    let mut depth = vec![0u32; nl.num_nets()];
+    for (id, d) in nl.iter() {
+        if let Driver::Gate(g) = d {
+            if g.is_comb() {
+                let m = g
+                    .inputs()
+                    .iter()
+                    .map(|i| depth[i.index()])
+                    .max()
+                    .unwrap_or(0);
+                depth[id.index()] = m + 1;
+            }
+        }
+    }
+    depth
+}
+
+/// Maximum combinational depth of the whole netlist.
+pub fn max_depth(nl: &Netlist) -> u32 {
+    logic_depth(nl).into_iter().max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::netlist::Netlist;
+
+    #[test]
+    fn depth_chain() {
+        let mut nl = Netlist::new("chain");
+        let a = nl.input_bus("a", 1);
+        let mut x = a[0];
+        for _ in 0..10 {
+            x = nl.not(x);
+        }
+        nl.output_bus("o", &vec![x]);
+        assert_eq!(super::max_depth(&nl), 10);
+    }
+
+    #[test]
+    fn dff_resets_depth() {
+        let mut nl = Netlist::new("pipe");
+        let a = nl.input_bus("a", 1);
+        let x = nl.not(a[0]);
+        let y = nl.not(x);
+        let q = nl.dff(y); // register after depth-2 logic
+        let z = nl.not(q);
+        nl.output_bus("o", &vec![z]);
+        let d = super::logic_depth(&nl);
+        assert_eq!(d[q.index()], 0);
+        assert_eq!(d[z.index()], 1);
+        assert_eq!(super::max_depth(&nl), 2);
+    }
+}

@@ -1,0 +1,153 @@
+//! Report rendering: ASCII/markdown tables, CSV, and a tiny JSON emitter
+//! (no serde facade available offline — DESIGN.md §2).
+
+use std::fmt::Write as _;
+
+/// A simple table builder for CLI/bench output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with headers.
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Add a row (must match header count).
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row width");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render as aligned ASCII.
+    pub fn to_ascii(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut s = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(s, "{}", fmt_row(&self.headers, &widths));
+        let _ = writeln!(s, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for r in &self.rows {
+            let _ = writeln!(s, "{}", fmt_row(r, &widths));
+        }
+        s
+    }
+
+    /// Render as CSV.
+    pub fn to_csv(&self) -> String {
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let mut s = self
+            .headers
+            .iter()
+            .map(|h| esc(h))
+            .collect::<Vec<_>>()
+            .join(",");
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Minimal JSON value emitter for metrics dumps.
+pub enum Json {
+    /// Number.
+    Num(f64),
+    /// Integer.
+    Int(i64),
+    /// String.
+    Str(String),
+    /// Boolean.
+    Bool(bool),
+    /// Array.
+    Arr(Vec<Json>),
+    /// Object (ordered).
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Serialise.
+    pub fn to_string(&self) -> String {
+        match self {
+            Json::Num(v) => {
+                if v.is_finite() {
+                    format!("{v}")
+                } else {
+                    "null".into()
+                }
+            }
+            Json::Int(v) => format!("{v}"),
+            Json::Bool(b) => format!("{b}"),
+            Json::Str(s) => format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\"")),
+            Json::Arr(items) => format!(
+                "[{}]",
+                items.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(",")
+            ),
+            Json::Obj(fields) => format!(
+                "{{{}}}",
+                fields
+                    .iter()
+                    .map(|(k, v)| format!("\"{k}\":{}", v.to_string()))
+                    .collect::<Vec<_>>()
+                    .join(",")
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_table_aligns() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(vec!["x".into(), "1".into()]);
+        t.row(vec!["longer".into(), "22".into()]);
+        let s = t.to_ascii();
+        assert!(s.contains("longer"));
+        assert!(s.lines().count() >= 4);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new(&["a"]);
+        t.row(vec!["has,comma".into()]);
+        assert!(t.to_csv().contains("\"has,comma\""));
+    }
+
+    #[test]
+    fn json_emits() {
+        let j = Json::Obj(vec![
+            ("n".into(), Json::Int(3)),
+            ("s".into(), Json::Str("a\"b".into())),
+            ("a".into(), Json::Arr(vec![Json::Bool(true), Json::Num(1.5)])),
+        ]);
+        assert_eq!(j.to_string(), r#"{"n":3,"s":"a\"b","a":[true,1.5]}"#);
+    }
+}

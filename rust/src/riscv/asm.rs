@@ -1,0 +1,246 @@
+//! Programmatic RV32I assembler with labels.
+//!
+//! Control programs for the accelerator (§III: "the instructions will be
+//! stored in the instruction/program memory and used to configure the
+//! hardware") are authored in Rust through this builder and loaded into
+//! the SoC's instruction memory.
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Encode a J-type JAL.
+pub fn enc_jal(rd: u8, imm: i32) -> u32 {
+    let i = imm as u32;
+    (((i >> 20) & 1) << 31)
+        | (((i >> 1) & 0x3FF) << 21)
+        | (((i >> 11) & 1) << 20)
+        | (((i >> 12) & 0xFF) << 12)
+        | ((rd as u32) << 7)
+        | 0b1101111
+}
+
+fn enc_b(funct3: u8, rs1: u8, rs2: u8, imm: i32) -> u32 {
+    let i = imm as u32;
+    (((i >> 12) & 1) << 31)
+        | (((i >> 5) & 0x3F) << 25)
+        | ((rs2 as u32) << 20)
+        | ((rs1 as u32) << 15)
+        | ((funct3 as u32) << 12)
+        | (((i >> 1) & 0xF) << 8)
+        | (((i >> 11) & 1) << 7)
+        | 0b1100011
+}
+
+/// Unresolved reference kind.
+enum Fixup {
+    Jal { rd: u8 },
+    Branch { funct3: u8, rs1: u8, rs2: u8 },
+}
+
+/// A tiny two-pass assembler: emit instructions, reference labels before
+/// or after definition, then [`Assembler::assemble`].
+#[derive(Default)]
+pub struct Assembler {
+    words: Vec<u32>,
+    labels: HashMap<String, usize>,
+    fixups: Vec<(usize, String, Fixup)>,
+}
+
+/// Register aliases for readability in control programs.
+pub mod reg {
+    /// Hard zero.
+    pub const ZERO: u8 = 0;
+    /// Return address.
+    pub const RA: u8 = 1;
+    /// Stack pointer.
+    pub const SP: u8 = 2;
+    /// Temporaries.
+    pub const T0: u8 = 5;
+    /// Temporary 1.
+    pub const T1: u8 = 6;
+    /// Temporary 2.
+    pub const T2: u8 = 7;
+    /// Saved/argument registers.
+    pub const S0: u8 = 8;
+    /// Saved 1.
+    pub const S1: u8 = 9;
+    /// Argument 0.
+    pub const A0: u8 = 10;
+    /// Argument 1.
+    pub const A1: u8 = 11;
+    /// Argument 2.
+    pub const A2: u8 = 12;
+    /// Argument 3.
+    pub const A3: u8 = 13;
+    /// Argument 4.
+    pub const A4: u8 = 14;
+    /// Argument 5.
+    pub const A5: u8 = 15;
+}
+
+impl Assembler {
+    /// New empty program.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current position (word index).
+    pub fn here(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Define a label at the current position.
+    pub fn label(&mut self, name: &str) -> &mut Self {
+        assert!(
+            self.labels.insert(name.to_string(), self.words.len()).is_none(),
+            "duplicate label {name}"
+        );
+        self
+    }
+
+    fn raw(&mut self, w: u32) -> &mut Self {
+        self.words.push(w);
+        self
+    }
+
+    /// `addi rd, rs1, imm`
+    pub fn addi(&mut self, rd: u8, rs1: u8, imm: i32) -> &mut Self {
+        assert!((-2048..2048).contains(&imm), "addi imm {imm}");
+        self.raw(((imm as u32 & 0xFFF) << 20) | ((rs1 as u32) << 15) | ((rd as u32) << 7) | 0b0010011)
+    }
+
+    /// `li rd, value` (lui+addi as needed).
+    pub fn li(&mut self, rd: u8, value: i32) -> &mut Self {
+        if (-2048..2048).contains(&value) {
+            return self.addi(rd, reg::ZERO, value);
+        }
+        let hi = (value as u32).wrapping_add(0x800) & 0xFFFF_F000;
+        let lo = value.wrapping_sub(hi as i32);
+        self.lui(rd, hi);
+        if lo != 0 {
+            self.addi(rd, rd, lo);
+        }
+        self
+    }
+
+    /// `lui rd, imm` (imm is the already-shifted upper 20 bits value).
+    pub fn lui(&mut self, rd: u8, imm_shifted: u32) -> &mut Self {
+        self.raw((imm_shifted & 0xFFFF_F000) | ((rd as u32) << 7) | 0b0110111)
+    }
+
+    /// `add rd, rs1, rs2`
+    pub fn add(&mut self, rd: u8, rs1: u8, rs2: u8) -> &mut Self {
+        self.raw(((rs2 as u32) << 20) | ((rs1 as u32) << 15) | ((rd as u32) << 7) | 0b0110011)
+    }
+
+    /// `sub rd, rs1, rs2`
+    pub fn sub(&mut self, rd: u8, rs1: u8, rs2: u8) -> &mut Self {
+        self.raw((0b0100000 << 25) | ((rs2 as u32) << 20) | ((rs1 as u32) << 15) | ((rd as u32) << 7) | 0b0110011)
+    }
+
+    /// `mul rd, rs1, rs2` (M extension)
+    pub fn mul(&mut self, rd: u8, rs1: u8, rs2: u8) -> &mut Self {
+        self.raw((1 << 25) | ((rs2 as u32) << 20) | ((rs1 as u32) << 15) | ((rd as u32) << 7) | 0b0110011)
+    }
+
+    /// `slli rd, rs1, sh`
+    pub fn slli(&mut self, rd: u8, rs1: u8, sh: u8) -> &mut Self {
+        self.raw((((sh & 31) as u32) << 20) | ((rs1 as u32) << 15) | (0b001 << 12) | ((rd as u32) << 7) | 0b0010011)
+    }
+
+    /// `lw rd, imm(rs1)`
+    pub fn lw(&mut self, rd: u8, rs1: u8, imm: i32) -> &mut Self {
+        self.raw(((imm as u32 & 0xFFF) << 20) | ((rs1 as u32) << 15) | (0b010 << 12) | ((rd as u32) << 7) | 0b0000011)
+    }
+
+    /// `sw rs2, imm(rs1)`
+    pub fn sw(&mut self, rs2: u8, rs1: u8, imm: i32) -> &mut Self {
+        let i = imm as u32;
+        self.raw((((i >> 5) & 0x7F) << 25) | ((rs2 as u32) << 20) | ((rs1 as u32) << 15) | (0b010 << 12) | ((i & 0x1F) << 7) | 0b0100011)
+    }
+
+    /// `beq rs1, rs2, label`
+    pub fn beq(&mut self, rs1: u8, rs2: u8, label: &str) -> &mut Self {
+        self.fixups.push((self.words.len(), label.into(), Fixup::Branch { funct3: 0, rs1, rs2 }));
+        self.raw(0)
+    }
+
+    /// `bne rs1, rs2, label`
+    pub fn bne(&mut self, rs1: u8, rs2: u8, label: &str) -> &mut Self {
+        self.fixups.push((self.words.len(), label.into(), Fixup::Branch { funct3: 1, rs1, rs2 }));
+        self.raw(0)
+    }
+
+    /// `blt rs1, rs2, label` (signed)
+    pub fn blt(&mut self, rs1: u8, rs2: u8, label: &str) -> &mut Self {
+        self.fixups.push((self.words.len(), label.into(), Fixup::Branch { funct3: 4, rs1, rs2 }));
+        self.raw(0)
+    }
+
+    /// `j label` (jal x0)
+    pub fn j(&mut self, label: &str) -> &mut Self {
+        self.fixups.push((self.words.len(), label.into(), Fixup::Jal { rd: 0 }));
+        self.raw(0)
+    }
+
+    /// `ecall` — halts the control CPU.
+    pub fn ecall(&mut self) -> &mut Self {
+        self.raw(0x0000_0073)
+    }
+
+    /// Resolve fixups and return the program image.
+    pub fn assemble(&self) -> Result<Vec<u32>> {
+        let mut out = self.words.clone();
+        for (pos, label, fix) in &self.fixups {
+            let target = *self
+                .labels
+                .get(label)
+                .ok_or_else(|| Error::Riscv(format!("undefined label {label}")))?;
+            let off = (target as i64 - *pos as i64) * 4;
+            let off = i32::try_from(off).map_err(|_| Error::Riscv("jump too far".into()))?;
+            out[*pos] = match fix {
+                Fixup::Jal { rd } => enc_jal(*rd, off),
+                Fixup::Branch { funct3, rs1, rs2 } => enc_b(*funct3, *rs1, *rs2, off),
+            };
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::reg::*;
+    use super::*;
+
+    #[test]
+    fn forward_and_backward_labels() {
+        let mut a = Assembler::new();
+        a.li(T0, 0);
+        a.label("loop");
+        a.addi(T0, T0, 1);
+        a.li(T1, 5);
+        a.blt(T0, T1, "loop");
+        a.j("end");
+        a.addi(T0, T0, 100); // skipped
+        a.label("end");
+        a.ecall();
+        let img = a.assemble().unwrap();
+        assert!(img.len() >= 6);
+    }
+
+    #[test]
+    fn undefined_label_errors() {
+        let mut a = Assembler::new();
+        a.j("nowhere");
+        assert!(a.assemble().is_err());
+    }
+
+    #[test]
+    fn li_wide_values() {
+        let mut a = Assembler::new();
+        a.li(A0, 0x1234_5678u32 as i32);
+        a.li(A1, -1);
+        a.li(A2, 0x7FFF_F800u32 as i32);
+        assert!(a.assemble().is_ok());
+    }
+}

@@ -1,0 +1,278 @@
+//! RV32I instruction-set simulator.
+
+use super::isa::{decode, Instr};
+use crate::error::{Error, Result};
+
+/// Memory/MMIO bus the CPU issues word accesses to.
+pub trait Bus {
+    /// Read a 32-bit word at byte address `addr` (must be aligned).
+    fn load(&mut self, addr: u32) -> Result<u32>;
+    /// Write a 32-bit word.
+    fn store(&mut self, addr: u32, value: u32) -> Result<()>;
+}
+
+/// Why execution stopped.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum StopReason {
+    /// `ecall` executed.
+    Ecall,
+    /// Cycle budget exhausted.
+    Budget,
+}
+
+/// The control CPU.
+pub struct Cpu {
+    /// General-purpose registers (x0 hardwired to 0).
+    pub x: [u32; 32],
+    /// Program counter (byte address).
+    pub pc: u32,
+    /// Retired instruction count.
+    pub instret: u64,
+    /// Cycle count (1 per instruction + bus wait states charged by the SoC).
+    pub cycles: u64,
+    program: Vec<u32>,
+    /// Byte address the program is loaded at.
+    pub base: u32,
+}
+
+impl Cpu {
+    /// New CPU with `program` loaded at `base`.
+    pub fn new(program: Vec<u32>, base: u32) -> Self {
+        Cpu {
+            x: [0; 32],
+            pc: base,
+            instret: 0,
+            cycles: 0,
+            program,
+            base,
+        }
+    }
+
+    fn fetch(&self, pc: u32) -> Result<u32> {
+        let idx = pc
+            .checked_sub(self.base)
+            .ok_or_else(|| Error::Riscv(format!("pc {pc:#x} below program base")))?
+            / 4;
+        self.program
+            .get(idx as usize)
+            .copied()
+            .ok_or_else(|| Error::Riscv(format!("pc {pc:#x} past program end")))
+    }
+
+    fn set(&mut self, rd: u8, v: u32) {
+        if rd != 0 {
+            self.x[rd as usize] = v;
+        }
+    }
+
+    /// Execute one instruction. Returns `Some(reason)` when halted.
+    pub fn step(&mut self, bus: &mut dyn Bus) -> Result<Option<StopReason>> {
+        let word = self.fetch(self.pc)?;
+        let instr = decode(word)?;
+        let mut next_pc = self.pc.wrapping_add(4);
+        match instr {
+            Instr::Lui { rd, imm } => self.set(rd, imm as u32),
+            Instr::Auipc { rd, imm } => self.set(rd, self.pc.wrapping_add(imm as u32)),
+            Instr::Jal { rd, imm } => {
+                self.set(rd, next_pc);
+                next_pc = self.pc.wrapping_add(imm as u32);
+            }
+            Instr::Jalr { rd, rs1, imm } => {
+                let t = next_pc;
+                next_pc = (self.x[rs1 as usize].wrapping_add(imm as u32)) & !1;
+                self.set(rd, t);
+            }
+            Instr::Branch { funct3, rs1, rs2, imm } => {
+                let (a, b) = (self.x[rs1 as usize], self.x[rs2 as usize]);
+                let taken = match funct3 {
+                    0 => a == b,
+                    1 => a != b,
+                    4 => (a as i32) < (b as i32),
+                    5 => (a as i32) >= (b as i32),
+                    6 => a < b,
+                    7 => a >= b,
+                    _ => return Err(Error::Riscv(format!("branch funct3 {funct3}"))),
+                };
+                if taken {
+                    next_pc = self.pc.wrapping_add(imm as u32);
+                }
+            }
+            Instr::Lw { rd, rs1, imm } => {
+                let addr = self.x[rs1 as usize].wrapping_add(imm as u32);
+                if addr % 4 != 0 {
+                    return Err(Error::Riscv(format!("misaligned load {addr:#x}")));
+                }
+                let v = bus.load(addr)?;
+                self.set(rd, v);
+                self.cycles += 1; // memory wait state
+            }
+            Instr::Sw { rs1, rs2, imm } => {
+                let addr = self.x[rs1 as usize].wrapping_add(imm as u32);
+                if addr % 4 != 0 {
+                    return Err(Error::Riscv(format!("misaligned store {addr:#x}")));
+                }
+                bus.store(addr, self.x[rs2 as usize])?;
+                self.cycles += 1;
+            }
+            Instr::OpImm { funct3, rd, rs1, imm, funct7 } => {
+                let a = self.x[rs1 as usize];
+                let v = match funct3 {
+                    0 => a.wrapping_add(imm as u32),
+                    1 => a << (imm & 31),
+                    2 => ((a as i32) < imm) as u32,
+                    3 => (a < imm as u32) as u32,
+                    4 => a ^ imm as u32,
+                    5 => {
+                        if funct7 & 0b0100000 != 0 {
+                            ((a as i32) >> (imm & 31)) as u32
+                        } else {
+                            a >> (imm & 31)
+                        }
+                    }
+                    6 => a | imm as u32,
+                    7 => a & imm as u32,
+                    _ => unreachable!(),
+                };
+                self.set(rd, v);
+            }
+            Instr::Op { funct3, funct7, rd, rs1, rs2 } => {
+                let (a, b) = (self.x[rs1 as usize], self.x[rs2 as usize]);
+                let v = match (funct3, funct7) {
+                    (0, 0) => a.wrapping_add(b),
+                    (0, 0b0100000) => a.wrapping_sub(b),
+                    (1, 0) => a << (b & 31),
+                    (2, 0) => ((a as i32) < (b as i32)) as u32,
+                    (3, 0) => (a < b) as u32,
+                    (4, 0) => a ^ b,
+                    (5, 0) => a >> (b & 31),
+                    (5, 0b0100000) => ((a as i32) >> (b & 31)) as u32,
+                    (6, 0) => a | b,
+                    (7, 0) => a & b,
+                    _ => {
+                        return Err(Error::Riscv(format!(
+                            "op funct3={funct3} funct7={funct7}"
+                        )))
+                    }
+                };
+                self.set(rd, v);
+            }
+            Instr::Mul { rd, rs1, rs2 } => {
+                let v = self.x[rs1 as usize].wrapping_mul(self.x[rs2 as usize]);
+                self.set(rd, v);
+                self.cycles += 2; // multi-cycle multiplier
+            }
+            Instr::Ecall => {
+                self.instret += 1;
+                self.cycles += 1;
+                return Ok(Some(StopReason::Ecall));
+            }
+        }
+        self.pc = next_pc;
+        self.instret += 1;
+        self.cycles += 1;
+        Ok(None)
+    }
+
+    /// Run until `ecall` or the cycle budget is exhausted.
+    pub fn run(&mut self, bus: &mut dyn Bus, max_instrs: u64) -> Result<StopReason> {
+        for _ in 0..max_instrs {
+            if let Some(r) = self.step(bus)? {
+                return Ok(r);
+            }
+        }
+        Ok(StopReason::Budget)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::riscv::asm::{reg::*, Assembler};
+    use std::collections::HashMap;
+
+    /// Simple word RAM for tests.
+    #[derive(Default)]
+    struct Ram(HashMap<u32, u32>);
+    impl Bus for Ram {
+        fn load(&mut self, addr: u32) -> Result<u32> {
+            Ok(*self.0.get(&addr).unwrap_or(&0))
+        }
+        fn store(&mut self, addr: u32, value: u32) -> Result<()> {
+            self.0.insert(addr, value);
+            Ok(())
+        }
+    }
+
+    fn run_prog(build: impl FnOnce(&mut Assembler)) -> (Cpu, Ram) {
+        let mut a = Assembler::new();
+        build(&mut a);
+        let img = a.assemble().unwrap();
+        let mut cpu = Cpu::new(img, 0);
+        let mut ram = Ram::default();
+        let r = cpu.run(&mut ram, 100_000).unwrap();
+        assert_eq!(r, StopReason::Ecall, "program must halt via ecall");
+        (cpu, ram)
+    }
+
+    #[test]
+    fn arithmetic_loop_sums_1_to_10() {
+        let (cpu, _) = run_prog(|a| {
+            a.li(T0, 0); // sum
+            a.li(T1, 1); // i
+            a.li(T2, 11);
+            a.label("loop");
+            a.add(T0, T0, T1);
+            a.addi(T1, T1, 1);
+            a.blt(T1, T2, "loop");
+            a.ecall();
+        });
+        assert_eq!(cpu.x[T0 as usize], 55);
+    }
+
+    #[test]
+    fn memory_roundtrip() {
+        let (cpu, ram) = run_prog(|a| {
+            a.li(A0, 0x1000);
+            a.li(A1, 0xABCD);
+            a.sw(A1, A0, 0);
+            a.lw(A2, A0, 0);
+            a.ecall();
+        });
+        assert_eq!(cpu.x[A2 as usize], 0xABCD);
+        let mut ram = ram;
+        assert_eq!(ram.load(0x1000).unwrap(), 0xABCD);
+    }
+
+    #[test]
+    fn mul_and_shift() {
+        let (cpu, _) = run_prog(|a| {
+            a.li(A0, 12);
+            a.li(A1, 13);
+            a.mul(A2, A0, A1);
+            a.slli(A3, A0, 4);
+            a.ecall();
+        });
+        assert_eq!(cpu.x[A2 as usize], 156);
+        assert_eq!(cpu.x[A3 as usize], 192);
+    }
+
+    #[test]
+    fn x0_is_hardwired() {
+        let (cpu, _) = run_prog(|a| {
+            a.addi(ZERO, ZERO, 5);
+            a.ecall();
+        });
+        assert_eq!(cpu.x[0], 0);
+    }
+
+    #[test]
+    fn budget_stops_infinite_loop() {
+        let mut a = Assembler::new();
+        a.label("spin");
+        a.j("spin");
+        let img = a.assemble().unwrap();
+        let mut cpu = Cpu::new(img, 0);
+        let mut ram = Ram::default();
+        assert_eq!(cpu.run(&mut ram, 1000).unwrap(), StopReason::Budget);
+    }
+}

@@ -1,0 +1,18 @@
+//! RV32I-subset control processor — §III's "RISC V processor [that] can
+//! configure the connection between systolic cells to realize various
+//! modules for CNN".
+//!
+//! * [`isa`] — instruction decoding (RV32I base integer subset),
+//! * [`cpu`] — the instruction-set simulator with a pluggable [`cpu::Bus`]
+//!   (the SoC maps the systolic engine's control registers into the
+//!   address space — see `crate::accel::soc`),
+//! * [`asm`] — a programmatic assembler with labels, used to author the
+//!   control programs stored in instruction memory.
+
+pub mod asm;
+pub mod cpu;
+pub mod isa;
+
+pub use asm::Assembler;
+pub use cpu::{Bus, Cpu, StopReason};
+pub use isa::Instr;

@@ -1,0 +1,145 @@
+//! Artifact discovery and manifest parsing.
+//!
+//! `make artifacts` writes `artifacts/*.hlo.txt` plus `manifest.tsv`
+//! (`name \t dtype[shape];dtype[shape];…` — the argument order the rust
+//! side must feed).
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// A parsed argument spec from the manifest.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArgSpec {
+    /// Element type string (e.g. `int32`).
+    pub dtype: String,
+    /// Dimensions.
+    pub shape: Vec<usize>,
+}
+
+impl ArgSpec {
+    /// Element count.
+    pub fn volume(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// The artifact directory + manifest.
+pub struct ArtifactStore {
+    /// Directory containing `*.hlo.txt`.
+    pub dir: PathBuf,
+    /// name -> argument specs.
+    pub manifest: BTreeMap<String, Vec<ArgSpec>>,
+}
+
+impl ArtifactStore {
+    /// Open `dir`, parsing `manifest.tsv` if present.
+    pub fn open(dir: &Path) -> Result<Self> {
+        if !dir.is_dir() {
+            return Err(Error::Runtime(format!(
+                "artifact dir {} missing — run `make artifacts`",
+                dir.display()
+            )));
+        }
+        let mut manifest = BTreeMap::new();
+        let mpath = dir.join("manifest.tsv");
+        if mpath.exists() {
+            let text = std::fs::read_to_string(&mpath)?;
+            for line in text.lines() {
+                let Some((name, specs)) = line.split_once('\t') else {
+                    continue;
+                };
+                let args: Result<Vec<ArgSpec>> = specs
+                    .split(';')
+                    .filter(|s| !s.is_empty())
+                    .map(parse_spec)
+                    .collect();
+                manifest.insert(name.to_string(), args?);
+            }
+        }
+        Ok(ArtifactStore {
+            dir: dir.to_path_buf(),
+            manifest,
+        })
+    }
+
+    /// Default location: `$KOM_ARTIFACTS` or `./artifacts`.
+    pub fn default_location() -> Result<Self> {
+        let dir = std::env::var("KOM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"));
+        Self::open(&dir)
+    }
+
+    /// Path of a named artifact.
+    pub fn path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Argument specs for `name` (manifest required).
+    pub fn args(&self, name: &str) -> Result<&[ArgSpec]> {
+        self.manifest
+            .get(name)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| Error::Runtime(format!("artifact {name} not in manifest")))
+    }
+}
+
+fn parse_spec(s: &str) -> Result<ArgSpec> {
+    // "int32[1,16,16]" or "int32[]" (scalar)
+    let (dtype, rest) = s
+        .split_once('[')
+        .ok_or_else(|| Error::Runtime(format!("bad arg spec '{s}'")))?;
+    let dims = rest
+        .strip_suffix(']')
+        .ok_or_else(|| Error::Runtime(format!("bad arg spec '{s}'")))?;
+    let shape: Result<Vec<usize>> = dims
+        .split(',')
+        .filter(|d| !d.is_empty())
+        .map(|d| {
+            d.trim()
+                .parse::<usize>()
+                .map_err(|e| Error::Runtime(format!("bad dim '{d}': {e}")))
+        })
+        .collect();
+    Ok(ArgSpec {
+        dtype: dtype.to_string(),
+        shape: shape?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_specs() {
+        let a = parse_spec("int32[1,16,16]").unwrap();
+        assert_eq!(a.dtype, "int32");
+        assert_eq!(a.shape, vec![1, 16, 16]);
+        assert_eq!(a.volume(), 256);
+        let s = parse_spec("int32[]").unwrap();
+        assert_eq!(s.shape, Vec::<usize>::new());
+        assert!(parse_spec("garbage").is_err());
+    }
+
+    #[test]
+    fn missing_dir_reports_hint() {
+        let err = match ArtifactStore::open(Path::new("/no/such/dir")) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn open_real_artifacts_if_built() {
+        // soft test: only assert structure when artifacts exist
+        if let Ok(store) = ArtifactStore::open(Path::new("artifacts")) {
+            if let Ok(args) = store.args("tiny_cnn") {
+                assert_eq!(args.len(), 7);
+                assert_eq!(args[0].shape, vec![1, 16, 16]);
+            }
+        }
+    }
+}

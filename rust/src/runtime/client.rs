@@ -1,0 +1,138 @@
+//! `xla` crate wrapper: PJRT CPU client + HLO-text module loading.
+//!
+//! Pattern follows /opt/xla-example/load_hlo.rs: the artifacts are HLO
+//! *text* (xla_extension 0.5.1 rejects jax≥0.5 protos; the text parser
+//! reassigns instruction ids), lowered with `return_tuple=True`, so every
+//! result is unwrapped with `to_tuple1`.
+
+use crate::error::{Error, Result};
+use std::path::Path;
+
+/// An i32 tensor argument/result for XLA execution.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct I32Tensor {
+    /// Row-major data.
+    pub data: Vec<i32>,
+    /// Dimensions.
+    pub shape: Vec<usize>,
+}
+
+impl I32Tensor {
+    /// Build, checking volume.
+    pub fn new(data: Vec<i32>, shape: Vec<usize>) -> Result<Self> {
+        if shape.iter().product::<usize>() != data.len() {
+            return Err(Error::Shape(format!(
+                "I32Tensor: {} elements vs shape {shape:?}",
+                data.len()
+            )));
+        }
+        Ok(I32Tensor { data, shape })
+    }
+
+    /// Convert from the accelerator's i64 tensors (checked narrowing).
+    pub fn from_i64(data: &[i64], shape: Vec<usize>) -> Result<Self> {
+        let narrow: Result<Vec<i32>> = data
+            .iter()
+            .map(|&v| {
+                i32::try_from(v).map_err(|_| Error::Runtime(format!("{v} exceeds i32 range")))
+            })
+            .collect();
+        Self::new(narrow?, shape)
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+}
+
+/// The PJRT CPU runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Bring up the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()?,
+        })
+    }
+
+    /// Platform string (for logs).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedModule> {
+        if !path.exists() {
+            return Err(Error::Runtime(format!(
+                "artifact {} not found — run `make artifacts`",
+                path.display()
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(LoadedModule {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// A compiled executable.
+pub struct LoadedModule {
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact name (for logs/metrics).
+    pub name: String,
+}
+
+impl LoadedModule {
+    /// Execute with i32 tensor arguments; returns the single (tuple-
+    /// unwrapped) i32 result flattened, plus nothing else — shapes are
+    /// known to the caller from the manifest.
+    pub fn run_i32(&self, args: &[I32Tensor]) -> Result<Vec<i32>> {
+        let literals: Result<Vec<xla::Literal>> = args.iter().map(|a| a.to_literal()).collect();
+        let result = self.exe.execute::<xla::Literal>(&literals?)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<i32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn i32_tensor_shape_checked() {
+        assert!(I32Tensor::new(vec![1, 2, 3], vec![2, 2]).is_err());
+        assert!(I32Tensor::new(vec![1, 2, 3, 4], vec![2, 2]).is_ok());
+    }
+
+    #[test]
+    fn narrowing_checked() {
+        assert!(I32Tensor::from_i64(&[1, i64::MAX], vec![2]).is_err());
+        assert!(I32Tensor::from_i64(&[-5, 5], vec![2]).is_ok());
+    }
+
+    #[test]
+    fn missing_artifact_reports_make_hint() {
+        let rt = match Runtime::cpu() {
+            Ok(rt) => rt,
+            Err(_) => return, // PJRT unavailable in this environment
+        };
+        let err = match rt.load_hlo_text(Path::new("/nonexistent/foo.hlo.txt")) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

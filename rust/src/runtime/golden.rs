@@ -1,0 +1,90 @@
+//! Cross-layer golden checks: the same integer CNN evaluated three ways
+//! must agree **bit-exactly**:
+//!
+//! 1. host reference (`cnn::networks::NetworkInstance::forward_ref`),
+//! 2. cycle-accurate systolic accelerator under RISC-V control,
+//! 3. the JAX/Pallas AOT artifact executed through PJRT.
+//!
+//! (1)≡(2) is asserted in `cnn::networks`; this module closes the loop
+//! with (3), which is the proof that the three-layer stack composes.
+
+use crate::accel::{Driver, SocConfig};
+use crate::cnn::networks::{Network, NetworkInstance, NetworkKind};
+use crate::cnn::tensor::Tensor;
+use crate::error::{Error, Result};
+use crate::runtime::{ArtifactStore, I32Tensor, Runtime};
+
+/// Result of a three-way golden run.
+pub struct GoldenReport {
+    /// Host-reference logits.
+    pub reference: Vec<i64>,
+    /// Systolic-accelerator logits.
+    pub systolic: Vec<i64>,
+    /// XLA-artifact logits.
+    pub xla: Vec<i64>,
+    /// Accelerator cycle metrics.
+    pub metrics: crate::accel::RunMetrics,
+}
+
+impl GoldenReport {
+    /// All three paths agree.
+    pub fn consistent(&self) -> bool {
+        self.reference == self.systolic && self.reference == self.xla
+    }
+}
+
+/// Convert a network instance's parameters into the artifact's argument
+/// order (input first, then tiny_cnn's six parameter tensors).
+pub fn tiny_args(inst: &NetworkInstance, input: &Tensor) -> Result<Vec<I32Tensor>> {
+    let mut args = vec![I32Tensor::from_i64(&input.data, input.shape.clone())?];
+    // params: conv1, conv2 (weights only), fc1 (w,b), fc2 (w,b)
+    for p in inst.params.iter().flatten() {
+        let (w, b) = p;
+        args.push(I32Tensor::from_i64(&w.data, w.shape.clone())?);
+        // conv biases are zero and not artifact inputs; fc biases are
+        if b.shape != vec![0] && w.shape.len() == 2 {
+            args.push(I32Tensor::from_i64(&b.data, b.shape.clone())?);
+        }
+    }
+    if args.len() != 7 {
+        return Err(Error::Runtime(format!(
+            "tiny_cnn expects 7 args, built {}",
+            args.len()
+        )));
+    }
+    Ok(args)
+}
+
+/// Run the three-way golden check on the Tiny network.
+pub fn run_tiny_golden(store: &ArtifactStore, seed: u64, input_seed: u64) -> Result<GoldenReport> {
+    let net = Network::build(NetworkKind::Tiny);
+    let inst = NetworkInstance::random(net, seed)?;
+    let input = Tensor::random(vec![1, 16, 16], 127, input_seed);
+
+    // 1. host reference
+    let reference = inst.forward_ref(&input)?.data;
+
+    // 2. systolic accelerator
+    let mut drv = Driver::new(SocConfig {
+        dram_words: 1 << 20,
+        spad_words: 1 << 14,
+        ..Default::default()
+    });
+    let (descs, in_addr, out_addr) = inst.deploy(&mut drv)?;
+    drv.write_region(in_addr, &input.data)?;
+    let metrics = drv.run_table(&descs)?;
+    let systolic = drv.read_region(out_addr, reference.len())?;
+
+    // 3. XLA artifact
+    let rt = Runtime::cpu()?;
+    let module = rt.load_hlo_text(&store.path("tiny_cnn"))?;
+    let args = tiny_args(&inst, &input)?;
+    let xla: Vec<i64> = module.run_i32(&args)?.into_iter().map(i64::from).collect();
+
+    Ok(GoldenReport {
+        reference,
+        systolic,
+        xla,
+        metrics,
+    })
+}

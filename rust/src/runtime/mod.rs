@@ -1,0 +1,14 @@
+//! PJRT runtime: load the JAX/Pallas AOT artifacts and execute them from
+//! rust — Python is never on this path.
+//!
+//! * [`client`] — `xla` crate wrapper: HLO text → compile → execute,
+//! * [`artifacts`] — artifact discovery + manifest parsing,
+//! * [`golden`] — cross-layer golden check: XLA output ≡ rust systolic
+//!   engine output ≡ host reference, bit-exact in integers.
+
+pub mod artifacts;
+pub mod client;
+pub mod golden;
+
+pub use artifacts::ArtifactStore;
+pub use client::{I32Tensor, LoadedModule, Runtime};

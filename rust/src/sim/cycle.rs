@@ -1,0 +1,219 @@
+//! Levelized two-state cycle simulator.
+
+use crate::bits::BitVec;
+use crate::error::{Error, Result};
+use crate::netlist::{Bus, Driver, Gate, NetId, Netlist};
+
+/// Fast cycle-based simulator.
+///
+/// Usage: [`CycleSim::set_bus`] the inputs, [`CycleSim::settle`] to
+/// propagate combinational logic, read outputs with [`CycleSim::get_bus`],
+/// then [`CycleSim::step_clock`] to advance sequential state.
+pub struct CycleSim<'a> {
+    nl: &'a Netlist,
+    /// Current value of every net.
+    value: Vec<bool>,
+    /// Next-state buffer for DFFs (net index -> pending value).
+    dff_nets: Vec<(u32, u32)>, // (q net, d net)
+    /// Cumulative toggle counts per net (for the power model).
+    toggles: Vec<u64>,
+    /// Number of settle() calls (activity denominator).
+    settles: u64,
+    track_activity: bool,
+}
+
+impl<'a> CycleSim<'a> {
+    /// Build a simulator; validates the netlist first.
+    pub fn new(nl: &'a Netlist) -> Result<Self> {
+        nl.validate()?;
+        let mut dff_nets = Vec::new();
+        for (id, d) in nl.iter() {
+            if let Driver::Gate(Gate::Dff(dn, _)) = d {
+                dff_nets.push((id.0, dn.0));
+            }
+        }
+        Ok(CycleSim {
+            nl,
+            value: vec![false; nl.num_nets()],
+            dff_nets,
+            toggles: Vec::new(),
+            settles: 0,
+            track_activity: false,
+        })
+    }
+
+    /// Enable per-net toggle counting (used by `crate::power`).
+    pub fn enable_activity(&mut self) {
+        self.track_activity = true;
+        self.toggles = vec![0u64; self.nl.num_nets()];
+    }
+
+    /// Drive one input net.
+    pub fn set_net(&mut self, net: NetId, v: bool) {
+        debug_assert!(matches!(self.nl.driver(net), Driver::Input));
+        self.value[net.index()] = v;
+    }
+
+    /// Drive an input bus with a word value (LSB first).
+    pub fn set_bus(&mut self, bus: &Bus, v: &BitVec) {
+        assert_eq!(bus.len(), v.len(), "bus/value width mismatch");
+        for (i, &net) in bus.iter().enumerate() {
+            self.set_net(net, v.get(i));
+        }
+    }
+
+    /// Read any net.
+    pub fn get_net(&self, net: NetId) -> bool {
+        self.value[net.index()]
+    }
+
+    /// Read a bus as a BitVec.
+    pub fn get_bus(&self, bus: &Bus) -> BitVec {
+        BitVec::from_bits(bus.iter().map(|&n| self.value[n.index()]))
+    }
+
+    /// Propagate combinational logic to a fixed point (single pass in
+    /// topological/creation order — sufficient because combinational gates
+    /// only reference earlier nets).
+    pub fn settle(&mut self) {
+        self.settles += 1;
+        for (id, d) in self.nl.iter() {
+            if let Driver::Gate(g) = d {
+                if g.is_dff() {
+                    continue; // holds latched state
+                }
+                let v = self.eval(g);
+                let idx = id.index();
+                if self.track_activity && self.value[idx] != v {
+                    self.toggles[idx] += 1;
+                }
+                self.value[idx] = v;
+            }
+        }
+    }
+
+    /// Rising clock edge: latch every DFF from its D input.
+    pub fn step_clock(&mut self) {
+        // two-phase: read all Ds first, then commit (models simultaneity)
+        let next: Vec<bool> = self
+            .dff_nets
+            .iter()
+            .map(|&(_, d)| self.value[d as usize])
+            .collect();
+        for (&(q, _), v) in self.dff_nets.iter().zip(next) {
+            let idx = q as usize;
+            if self.track_activity && self.value[idx] != v {
+                self.toggles[idx] += 1;
+            }
+            self.value[idx] = v;
+        }
+    }
+
+    /// Reset all DFFs to their reset values and clear nets.
+    pub fn reset(&mut self) {
+        for v in self.value.iter_mut() {
+            *v = false;
+        }
+        for (id, d) in self.nl.iter() {
+            if let Driver::Gate(Gate::Dff(_, rst)) = d {
+                self.value[id.index()] = *rst;
+            }
+        }
+    }
+
+    /// Per-net switching activity (toggles per settle), for `crate::power`.
+    pub fn activity(&self) -> Result<Vec<f64>> {
+        if !self.track_activity {
+            return Err(Error::Sim("activity tracking not enabled".into()));
+        }
+        let n = self.settles.max(1) as f64;
+        Ok(self.toggles.iter().map(|&t| t as f64 / n).collect())
+    }
+
+    fn eval(&self, g: &Gate) -> bool {
+        let v = |n: NetId| self.value[n.index()];
+        match *g {
+            Gate::Const(b) => b,
+            Gate::Buf(a) => v(a),
+            Gate::Not(a) => !v(a),
+            Gate::And(a, b) => v(a) & v(b),
+            Gate::Or(a, b) => v(a) | v(b),
+            Gate::Xor(a, b) => v(a) ^ v(b),
+            Gate::Nand(a, b) => !(v(a) & v(b)),
+            Gate::Nor(a, b) => !(v(a) | v(b)),
+            Gate::Xnor(a, b) => !(v(a) ^ v(b)),
+            Gate::Mux(s, a, b) => {
+                if v(s) {
+                    v(b)
+                } else {
+                    v(a)
+                }
+            }
+            Gate::Maj(a, b, c) => (v(a) & v(b)) | (v(b) & v(c)) | (v(a) & v(c)),
+            Gate::Xor3(a, b, c) => v(a) ^ v(b) ^ v(c),
+            Gate::Dff(..) => unreachable!(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::Netlist;
+
+    #[test]
+    fn comb_eval() {
+        let mut nl = Netlist::new("c");
+        let a = nl.input_bus("a", 1);
+        let b = nl.input_bus("b", 1);
+        let x = nl.xor(a[0], b[0]);
+        let y = nl.and(a[0], b[0]);
+        nl.output_bus("s", &vec![x]);
+        nl.output_bus("c", &vec![y]);
+        let mut sim = CycleSim::new(&nl).unwrap();
+        for (av, bv, s, c) in [(false, false, false, false), (true, false, true, false), (true, true, false, true)] {
+            sim.set_net(a[0], av);
+            sim.set_net(b[0], bv);
+            sim.settle();
+            assert_eq!(sim.get_net(x), s);
+            assert_eq!(sim.get_net(y), c);
+        }
+    }
+
+    #[test]
+    fn counter_sequential() {
+        // 1-bit toggle flip-flop
+        let mut nl = Netlist::new("t");
+        let en = nl.input_bus("en", 1);
+        let q = nl.dff_placeholder();
+        let nq = nl.xor(q, en[0]);
+        nl.connect_backedge(q, nq).unwrap();
+        nl.output_bus("q", &vec![q]);
+        let mut sim = CycleSim::new(&nl).unwrap();
+        sim.set_net(en[0], true);
+        let mut seen = vec![];
+        for _ in 0..4 {
+            sim.settle();
+            seen.push(sim.get_net(q));
+            sim.step_clock();
+        }
+        assert_eq!(seen, vec![false, true, false, true]);
+    }
+
+    #[test]
+    fn activity_counts() {
+        let mut nl = Netlist::new("a");
+        let a = nl.input_bus("a", 1);
+        let x = nl.not(a[0]);
+        nl.output_bus("y", &vec![x]);
+        let mut sim = CycleSim::new(&nl).unwrap();
+        sim.enable_activity();
+        for i in 0..10 {
+            sim.set_net(a[0], i % 2 == 0);
+            sim.settle();
+        }
+        let act = sim.activity().unwrap();
+        // x toggles every settle (alternating input)
+        assert!(act[x.index()] > 0.8);
+    }
+}

@@ -1,0 +1,329 @@
+//! Event-driven gate-level simulator with per-gate delays.
+//!
+//! Slower than [`super::CycleSim`] but produces *timed* waveforms: each gate
+//! evaluation is scheduled `delay(gate)` picoseconds after its input change,
+//! so glitches and settling behaviour are visible — this is the engine
+//! behind the Fig 5 waveform reproduction and the switching-activity
+//! cross-check of the power model.
+
+use crate::bits::BitVec;
+use crate::error::Result;
+use crate::netlist::{Bus, Driver, Gate, NetId, Netlist};
+use std::collections::{BinaryHeap, HashMap};
+use std::cmp::Reverse;
+
+/// Per-gate-kind propagation delays in picoseconds (unit-delay-style model;
+/// the *timing sign-off* numbers come from `crate::sta`, not from here).
+fn gate_delay_ps(g: &Gate) -> u64 {
+    match g {
+        Gate::Const(_) => 0,
+        Gate::Buf(_) => 50,
+        Gate::Not(_) => 50,
+        Gate::And(..) | Gate::Or(..) | Gate::Nand(..) | Gate::Nor(..) => 100,
+        Gate::Xor(..) | Gate::Xnor(..) => 120,
+        Gate::Mux(..) => 140,
+        Gate::Maj(..) => 150,
+        Gate::Xor3(..) => 160,
+        Gate::Dff(..) => 80, // clk->Q
+    }
+}
+
+#[derive(PartialEq, Eq, PartialOrd, Ord)]
+struct Ev {
+    time: u64,
+    seq: u64,
+    net: u32,
+    value: bool,
+}
+
+/// Event-driven simulator.
+pub struct EventSim<'a> {
+    nl: &'a Netlist,
+    value: Vec<bool>,
+    /// Value each net will hold once all scheduled events commit — the
+    /// reference point for event-cancellation decisions.
+    pending: Vec<bool>,
+    /// CSR fanout: `fanout_tgt[fanout_off[i]..fanout_off[i+1]]` are the
+    /// gate nets fed by net i (flat layout — EXPERIMENTS.md §Perf).
+    fanout_off: Vec<u32>,
+    fanout_tgt: Vec<u32>,
+    queue: BinaryHeap<Reverse<Ev>>,
+    seq: u64,
+    now: u64,
+    /// Total number of gate evaluations performed (perf counter).
+    pub evals: u64,
+    /// Total toggle count per net.
+    toggles: Vec<u64>,
+    watches: HashMap<String, (usize, Bus)>, // name -> (vcd var, bus)
+}
+
+impl<'a> EventSim<'a> {
+    /// Build the simulator (computes the fanout table).
+    pub fn new(nl: &'a Netlist) -> Result<Self> {
+        nl.validate()?;
+        // build CSR fanout (two passes: counts, then fill)
+        let n = nl.num_nets();
+        let mut counts = vec![0u32; n];
+        for (_, d) in nl.iter() {
+            if let Driver::Gate(g) = d {
+                if !g.is_dff() {
+                    for i in g.inputs() {
+                        counts[i.index()] += 1;
+                    }
+                }
+            }
+        }
+        let mut fanout_off = vec![0u32; n + 1];
+        for i in 0..n {
+            fanout_off[i + 1] = fanout_off[i] + counts[i];
+        }
+        let mut fanout_tgt = vec![0u32; fanout_off[n] as usize];
+        let mut cursor = fanout_off.clone();
+        for (id, d) in nl.iter() {
+            if let Driver::Gate(g) = d {
+                if !g.is_dff() {
+                    for i in g.inputs() {
+                        let c = &mut cursor[i.index()];
+                        fanout_tgt[*c as usize] = id.0;
+                        *c += 1;
+                    }
+                }
+            }
+        }
+        let mut sim = EventSim {
+            nl,
+            value: vec![false; n],
+            pending: vec![false; n],
+            fanout_off,
+            fanout_tgt,
+            queue: BinaryHeap::new(),
+            seq: 0,
+            now: 0,
+            evals: 0,
+            toggles: vec![0; nl.num_nets()],
+            watches: HashMap::new(),
+        };
+        // initial settle: evaluate everything once in topological order so
+        // constants and quiescent gates hold consistent values at t=0
+        for (id, d) in nl.iter() {
+            match d {
+                Driver::Gate(Gate::Dff(_, rst)) => sim.value[id.index()] = *rst,
+                Driver::Gate(g) => sim.value[id.index()] = sim.eval_gate(g),
+                Driver::Input => {}
+            }
+        }
+        sim.pending = sim.value.clone();
+        Ok(sim)
+    }
+
+    /// Current simulation time in ps.
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// Schedule an input change at absolute time `t` ps.
+    pub fn drive(&mut self, net: NetId, value: bool, t: u64) {
+        debug_assert!(matches!(self.nl.driver(net), Driver::Input));
+        if self.pending[net.index()] == value {
+            return;
+        }
+        self.pending[net.index()] = value;
+        self.seq += 1;
+        self.queue.push(Reverse(Ev {
+            time: t,
+            seq: self.seq,
+            net: net.0,
+            value,
+        }));
+    }
+
+    /// Schedule a bus change at time `t`.
+    pub fn drive_bus(&mut self, bus: &Bus, v: &BitVec, t: u64) {
+        for (i, &n) in bus.iter().enumerate() {
+            self.drive(n, v.get(i), t);
+        }
+    }
+
+    /// Read a net's current value.
+    pub fn get_net(&self, net: NetId) -> bool {
+        self.value[net.index()]
+    }
+
+    /// Read a bus.
+    pub fn get_bus(&self, bus: &Bus) -> BitVec {
+        BitVec::from_bits(bus.iter().map(|&n| self.value[n.index()]))
+    }
+
+    /// Toggle counts per net index.
+    pub fn toggles(&self) -> &[u64] {
+        &self.toggles
+    }
+
+    fn eval_gate(&self, g: &Gate) -> bool {
+        let v = |n: NetId| self.value[n.index()];
+        match *g {
+            Gate::Const(b) => b,
+            Gate::Buf(a) => v(a),
+            Gate::Not(a) => !v(a),
+            Gate::And(a, b) => v(a) & v(b),
+            Gate::Or(a, b) => v(a) | v(b),
+            Gate::Xor(a, b) => v(a) ^ v(b),
+            Gate::Nand(a, b) => !(v(a) & v(b)),
+            Gate::Nor(a, b) => !(v(a) | v(b)),
+            Gate::Xnor(a, b) => !(v(a) ^ v(b)),
+            Gate::Mux(s, a, b) => if v(s) { v(b) } else { v(a) },
+            Gate::Maj(a, b, c) => (v(a) & v(b)) | (v(b) & v(c)) | (v(a) & v(c)),
+            Gate::Xor3(a, b, c) => v(a) ^ v(b) ^ v(c),
+            Gate::Dff(..) => unreachable!(),
+        }
+    }
+
+    /// Run until the event queue drains or `t_end` is reached.
+    /// Returns the number of events processed.
+    pub fn run_until(&mut self, t_end: u64) -> u64 {
+        let mut processed = 0;
+        while let Some(Reverse(ev)) = self.queue.peek() {
+            if ev.time > t_end {
+                break;
+            }
+            let Reverse(ev) = self.queue.pop().unwrap();
+            self.now = ev.time;
+            let idx = ev.net as usize;
+            if self.value[idx] == ev.value {
+                continue; // no change — event cancelled
+            }
+            self.value[idx] = ev.value;
+            self.toggles[idx] += 1;
+            processed += 1;
+            // propagate to combinational fanout (CSR walk)
+            let (lo, hi) = (self.fanout_off[idx] as usize, self.fanout_off[idx + 1] as usize);
+            for g_i in lo..hi {
+                let gnet = self.fanout_tgt[g_i];
+                if let Driver::Gate(g) = self.nl.driver(NetId(gnet)) {
+                    let nv = self.eval_gate(g);
+                    self.evals += 1;
+                    if nv != self.pending[gnet as usize] {
+                        self.pending[gnet as usize] = nv;
+                        self.seq += 1;
+                        self.queue.push(Reverse(Ev {
+                            time: self.now + gate_delay_ps(g),
+                            seq: self.seq,
+                            net: gnet,
+                            value: nv,
+                        }));
+                    }
+                }
+            }
+        }
+        self.now = self.now.max(t_end);
+        processed
+    }
+
+    /// Rising clock edge at time `t`: sample every DFF's D and schedule its
+    /// Q change clk→Q later. Call after `run_until(t)` has settled logic.
+    pub fn clock_edge(&mut self, t: u64) {
+        let mut changes = Vec::new();
+        for (id, d) in self.nl.iter() {
+            if let Driver::Gate(Gate::Dff(dn, _)) = d {
+                let sampled = self.value[dn.index()];
+                if sampled != self.pending[id.index()] {
+                    changes.push((id.0, sampled));
+                }
+            }
+        }
+        for (net, v) in changes {
+            self.pending[net as usize] = v;
+            self.seq += 1;
+            self.queue.push(Reverse(Ev {
+                time: t + gate_delay_ps(&Gate::Dff(NetId(0), false)),
+                seq: self.seq,
+                net,
+                value: v,
+            }));
+        }
+    }
+
+    /// Run a full clocked simulation with VCD output.
+    ///
+    /// `stimulus[t]` is applied at the start of cycle `t` (period in ps);
+    /// watched buses are dumped on every change boundary.
+    pub fn run_clocked_vcd<W: std::io::Write>(
+        &mut self,
+        period_ps: u64,
+        stimulus: &[Vec<(Bus, BitVec)>],
+        watch: &[(&str, Bus)],
+        sink: W,
+    ) -> Result<super::vcd::VcdWriter<W>> {
+        let mut vcd = super::vcd::VcdWriter::new(sink, self.nl)?;
+        for (name, bus) in watch {
+            let idx = vcd.add_var(name, bus)?;
+            self.watches.insert(name.to_string(), (idx, bus.clone()));
+        }
+        let mut last: HashMap<String, BitVec> = HashMap::new();
+        for (cycle, stims) in stimulus.iter().enumerate() {
+            let t0 = cycle as u64 * period_ps;
+            for (bus, v) in stims {
+                self.drive_bus(bus, v, t0);
+            }
+            // settle combinational logic, then clock at the end of the cycle
+            self.run_until(t0 + period_ps - 1);
+            // dump watches
+            let names: Vec<String> = self.watches.keys().cloned().collect();
+            for name in names {
+                let (idx, bus) = self.watches[&name].clone();
+                let v = self.get_bus(&bus);
+                if last.get(&name) != Some(&v) {
+                    vcd.change(t0 / 1000, idx, &v)?; // ps -> ns
+                    last.insert(name, v);
+                }
+            }
+            self.clock_edge(t0 + period_ps - 1);
+        }
+        vcd.flush()?;
+        Ok(vcd)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::Netlist;
+
+    #[test]
+    fn matches_cycle_sim_on_comb() {
+        // random 8-bit adder netlist checked against CycleSim
+        let mut nl = Netlist::new("e");
+        let a = nl.input_bus("a", 8);
+        let b = nl.input_bus("b", 8);
+        let (s, c) = crate::gates::ripple_carry_add(&mut nl, &a, &b, None);
+        let mut out = s;
+        out.push(c);
+        nl.output_bus("y", &out);
+
+        let mut es = EventSim::new(&nl).unwrap();
+        for (x, y) in [(3u128, 5u128), (255, 1), (127, 128), (0, 0)] {
+            es.drive_bus(&nl.inputs()["a"], &BitVec::from_u128(x, 8), es.now());
+            es.drive_bus(&nl.inputs()["b"], &BitVec::from_u128(y, 8), es.now());
+            let t = es.now() + 100_000;
+            es.run_until(t);
+            assert_eq!(es.get_bus(&nl.outputs()["y"]).to_u128(), x + y, "{x}+{y}");
+        }
+    }
+
+    #[test]
+    fn glitches_counted() {
+        // XOR of a signal with a delayed copy glitches on every input edge
+        let mut nl = Netlist::new("g");
+        let a = nl.input_bus("a", 1);
+        let d1 = nl.not(a[0]);
+        let d2 = nl.not(d1);
+        let x = nl.xor(a[0], d2); // settles to 0, glitches high briefly
+        nl.output_bus("y", &vec![x]);
+        let mut es = EventSim::new(&nl).unwrap();
+        es.drive(a[0], true, 1000);
+        es.run_until(1_000_000);
+        // x toggled at least twice (glitch up then down)
+        assert!(es.toggles()[x.index()] >= 2, "toggles={}", es.toggles()[x.index()]);
+        assert!(!es.get_net(x));
+    }
+}

@@ -1,0 +1,20 @@
+//! Gate-level simulation.
+//!
+//! Two engines over the same [`crate::netlist::Netlist`] IR:
+//!
+//! * [`CycleSim`] — levelized two-state cycle simulation: evaluate all
+//!   combinational logic in topological order, then latch every DFF on
+//!   [`CycleSim::step_clock`]. This is the fast path used by the multiplier
+//!   correctness suites and the power model's activity extraction.
+//! * [`EventSim`] — event-driven simulation with per-gate unit delays and a
+//!   [`vcd::VcdWriter`] hook; reproduces the paper's Fig 5 simulation
+//!   waveform of the 32-bit KOM multiplier.
+
+mod cycle;
+mod event;
+pub mod testbench;
+pub mod vcd;
+
+pub use cycle::CycleSim;
+pub use event::EventSim;
+pub use testbench::{run_comb, run_pipelined};

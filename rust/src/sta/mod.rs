@@ -1,0 +1,227 @@
+//! Static timing analysis — the engine behind Table 5's delay column.
+//!
+//! Runs on a technology-mapped netlist ([`crate::techmap::MappedNetlist`]).
+//! Delay model (7-series-magnitude constants, see [`DelayModel`]):
+//!
+//! * LUT6 logic delay + fanout-dependent routing on LUT-root outputs,
+//! * CARRY4 chain cells: small incremental delay, no general routing
+//!   (this asymmetry is what makes the regular Baugh-Wooley array fast and
+//!   the irregular Dadda tree slow, reproducing the paper's ordering),
+//! * FF clk→Q at path starts, setup at path ends.
+//!
+//! For sequential circuits the reported *critical path* is the worst
+//! register-to-register (or port-to-register) stage — the paper's "TIME
+//! DELAY" row for its pipelined KOM multipliers; for combinational
+//! circuits it is the full input-to-output path.
+
+use crate::netlist::{Driver, Gate, NetId, Netlist};
+use crate::techmap::MappedNetlist;
+
+/// Primitive delay constants in nanoseconds.
+#[derive(Clone, Copy, Debug)]
+pub struct DelayModel {
+    /// LUT6 logic delay.
+    pub lut: f64,
+    /// Base routing delay from a LUT/FF output to the next input.
+    pub net_base: f64,
+    /// Additional routing delay per extra fanout.
+    pub net_per_fanout: f64,
+    /// Routing delay cap.
+    pub net_cap: f64,
+    /// Per-cell incremental delay along a CARRY4 chain.
+    pub carry: f64,
+    /// FF clock-to-Q.
+    pub clk_q: f64,
+    /// FF setup time.
+    pub setup: f64,
+    /// Input/output pad delay (excluded from the paper-style numbers).
+    pub pad: f64,
+}
+
+impl Default for DelayModel {
+    fn default() -> Self {
+        DelayModel {
+            lut: 0.124,
+            net_base: 0.295,
+            net_per_fanout: 0.042,
+            net_cap: 1.2,
+            carry: 0.045,
+            clk_q: 0.10,
+            setup: 0.05,
+            pad: 0.0,
+        }
+    }
+}
+
+/// Timing analysis result.
+#[derive(Clone, Debug)]
+pub struct TimingReport {
+    /// Critical path in ns (stage path for sequential designs).
+    pub critical_path_ns: f64,
+    /// Maximum clock frequency implied by the critical path (sequential
+    /// designs only; `None` for pure combinational).
+    pub fmax_mhz: Option<f64>,
+    /// Arrival time of the latest output (full pipeline latency ignored).
+    pub worst_output_ns: f64,
+    /// Net of the critical endpoint.
+    pub critical_endpoint: Option<NetId>,
+}
+
+/// Run STA over a mapped netlist.
+pub fn analyze(mapped: &MappedNetlist) -> TimingReport {
+    analyze_with(mapped, &DelayModel::default())
+}
+
+/// Run STA with an explicit delay model (used by the calibration tests).
+pub fn analyze_with(mapped: &MappedNetlist, dm: &DelayModel) -> TimingReport {
+    let nl = &mapped.netlist;
+    let fanout = nl.fanout();
+    let n = nl.num_nets();
+    // arrival time at each net's *output*
+    let mut arr = vec![0f64; n];
+    // worst reg-to-reg / to-output stage path
+    let mut worst_stage = 0f64;
+    let mut endpoint = None;
+
+    let net_delay = |from: NetId, fo: &[u32]| -> f64 {
+        let f = fo[from.index()].max(1) as f64;
+        (dm.net_base + dm.net_per_fanout * (f - 1.0)).min(dm.net_cap)
+    };
+
+    // pass 1: arrival times. DFF outputs are path starts (clk→Q); their D
+    // inputs may reference later nets (back-edges), so endpoints are
+    // evaluated in a second pass once all arrivals are known.
+    for (id, d) in nl.iter() {
+        let i = id.index();
+        match d {
+            Driver::Input => {
+                arr[i] = dm.pad;
+            }
+            Driver::Gate(Gate::Const(_)) => {
+                arr[i] = 0.0;
+            }
+            Driver::Gate(g) if g.is_dff() => {
+                arr[i] = dm.clk_q;
+            }
+            Driver::Gate(g) => {
+                let worst_in = g
+                    .inputs()
+                    .iter()
+                    .map(|&u| {
+                        let wire = if nl.is_chain(id) && nl.is_chain(u) {
+                            // carry ripples inside the CARRY4 block
+                            0.0
+                        } else {
+                            net_delay(u, &fanout)
+                        };
+                        arr[u.index()] + wire
+                    })
+                    .fold(0f64, f64::max);
+                let own = if nl.is_chain(id) {
+                    dm.carry
+                } else if mapped.mapping.is_lut_root(id) {
+                    dm.lut
+                } else {
+                    0.0 // absorbed into a downstream LUT
+                };
+                arr[i] = worst_in + own;
+            }
+        }
+    }
+
+    // pass 2: register endpoints (D arrival + setup closes a stage)
+    for (id, d) in nl.iter() {
+        if let Driver::Gate(g) = d {
+            if g.is_dff() {
+                let dnet = g.inputs()[0];
+                let stage = arr[dnet.index()] + net_delay(dnet, &fanout) + dm.setup;
+                if stage > worst_stage {
+                    worst_stage = stage;
+                    endpoint = Some(id);
+                }
+            }
+        }
+    }
+
+    // output endpoints
+    let mut worst_out = 0f64;
+    for bus in nl.outputs().values() {
+        for &o in bus {
+            let t = arr[o.index()] + dm.pad;
+            if t > worst_out {
+                worst_out = t;
+                if t > worst_stage {
+                    endpoint = Some(o);
+                }
+            }
+        }
+    }
+
+    let seq = nl.is_sequential();
+    let cp = if seq {
+        worst_stage.max(
+            // outputs fed by the last pipeline stage also bound the clock
+            worst_out,
+        )
+    } else {
+        worst_out
+    };
+    TimingReport {
+        critical_path_ns: cp,
+        fmax_mhz: if seq { Some(1000.0 / cp) } else { None },
+        worst_output_ns: worst_out,
+        critical_endpoint: endpoint,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::{generate, MultKind, MultiplierSpec};
+    use crate::techmap;
+
+    fn cp(spec: MultiplierSpec) -> f64 {
+        let m = generate(spec).unwrap();
+        let mapped = techmap::map(&m.netlist).unwrap();
+        analyze(&mapped).critical_path_ns
+    }
+
+    #[test]
+    fn paper_delay_ordering() {
+        // Table 5: KOM16 < KOM32 << BW32 < Dadda32
+        let kom16 = cp(MultiplierSpec::pipelined(MultKind::KaratsubaOfman, 16, 4));
+        let kom32 = cp(MultiplierSpec::pipelined(MultKind::KaratsubaOfman, 32, 6));
+        let bw32 = cp(MultiplierSpec::comb_regio(MultKind::BaughWooley, 32));
+        let dadda32 = cp(MultiplierSpec::comb(MultKind::Dadda, 32));
+        assert!(kom16 < kom32, "kom16={kom16:.2} kom32={kom32:.2}");
+        assert!(kom32 < bw32, "kom32={kom32:.2} bw32={bw32:.2}");
+        assert!(bw32 < dadda32, "bw32={bw32:.2} dadda32={dadda32:.2}");
+    }
+
+    #[test]
+    fn pipelining_shortens_stage() {
+        let comb = cp(MultiplierSpec::comb(MultKind::KaratsubaOfman, 32));
+        let piped = cp(MultiplierSpec::pipelined(MultKind::KaratsubaOfman, 32, 6));
+        assert!(
+            piped < comb / 2.0,
+            "6-stage pipeline should cut CP>2x: comb={comb:.2} piped={piped:.2}"
+        );
+    }
+
+    #[test]
+    fn fmax_reported_for_sequential_only() {
+        let m = generate(MultiplierSpec::pipelined(MultKind::KaratsubaOfman, 16, 4)).unwrap();
+        let mapped = techmap::map(&m.netlist).unwrap();
+        assert!(analyze(&mapped).fmax_mhz.is_some());
+        let c = generate(MultiplierSpec::comb(MultKind::Dadda, 16)).unwrap();
+        let mapped = techmap::map(&c.netlist).unwrap();
+        assert!(analyze(&mapped).fmax_mhz.is_none());
+    }
+
+    #[test]
+    fn deeper_logic_longer_path() {
+        let d8 = cp(MultiplierSpec::comb(MultKind::Dadda, 8));
+        let d32 = cp(MultiplierSpec::comb(MultKind::Dadda, 32));
+        assert!(d32 > d8 * 2.0, "d8={d8:.2} d32={d32:.2}");
+    }
+}

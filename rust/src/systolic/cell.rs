@@ -1,0 +1,75 @@
+//! The systolic processing element of §II.
+//!
+//! "The systolic cell is composed of a left-hand input (Yn-1), a vertical
+//! input (X(n)), and a right-hand output (Yn). Additionally, this block is
+//! fitted with an adder and a multiplier. With every clock pulse, the
+//! systolic cell executes and the output is given by Yₙ = Yₙ₋₁ + h·X(n)."
+
+/// One MAC cell. Arithmetic is `i64` (wide enough for Q8.8×Q8.8 products
+/// accumulated over the longest VGG dot products without overflow).
+#[derive(Clone, Debug, Default)]
+pub struct SystolicCell {
+    /// The stored coefficient h (weight), loaded at configuration time.
+    pub coeff: i64,
+    /// Pipeline register on the X path (X propagates cell-to-cell).
+    pub x_reg: i64,
+    /// Pipeline register on the Y path (the running sum).
+    pub y_reg: i64,
+    /// MAC operations performed (utilisation counter).
+    pub macs: u64,
+}
+
+impl SystolicCell {
+    /// New cell holding coefficient `h`.
+    pub fn new(coeff: i64) -> Self {
+        SystolicCell {
+            coeff,
+            ..Default::default()
+        }
+    }
+
+    /// One clock pulse: consume the left-hand `y_in` and vertical `x_in`,
+    /// produce this cell's registered outputs (previous state), and latch
+    /// `Yₙ = Yₙ₋₁ + h·X(n)`.
+    ///
+    /// Returns `(x_out, y_out)` — the values presented to the next cell
+    /// *this* cycle (i.e. the registers before the edge).
+    pub fn clock(&mut self, x_in: i64, y_in: i64) -> (i64, i64) {
+        let x_out = self.x_reg;
+        let y_out = self.y_reg;
+        self.y_reg = y_in + self.coeff * x_in;
+        self.x_reg = x_in;
+        self.macs += 1;
+        (x_out, y_out)
+    }
+
+    /// Reset pipeline state (keeps the coefficient).
+    pub fn reset(&mut self) {
+        self.x_reg = 0;
+        self.y_reg = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mac_semantics() {
+        let mut c = SystolicCell::new(3);
+        let (x0, y0) = c.clock(2, 10); // latches y = 10 + 3*2 = 16
+        assert_eq!((x0, y0), (0, 0), "registered outputs lag one cycle");
+        let (x1, y1) = c.clock(0, 0);
+        assert_eq!((x1, y1), (2, 16));
+        assert_eq!(c.macs, 2);
+    }
+
+    #[test]
+    fn reset_keeps_coeff() {
+        let mut c = SystolicCell::new(7);
+        c.clock(1, 1);
+        c.reset();
+        assert_eq!(c.coeff, 7);
+        assert_eq!(c.y_reg, 0);
+    }
+}

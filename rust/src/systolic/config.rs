@@ -1,0 +1,181 @@
+//! Engine configuration — what the RISC-V control processor writes.
+//!
+//! §III: "Depending on the type of CNN module (Ex: Convolution, pooling,
+//! fully connected) being used, the hardware will be configured
+//! accordingly." A configuration selects the interconnect mode and loads
+//! the coefficients; [`EngineConfig::config_words`] is the number of
+//! 32-bit writes the control processor issues, which the engine charges
+//! as reconfiguration cycles (the Fig 3 cost measured by
+//! `benches/fig3_reconfig.rs`).
+
+/// Pooling operator.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum PoolKind {
+    /// Maximum.
+    Max,
+    /// Average (sum divided by window size, rounding toward zero).
+    Avg,
+}
+
+/// Interconnect mode + parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EngineMode {
+    /// Fig 2: 1-D FIR chain with the given taps.
+    Fir {
+        /// Filter coefficients h(0)… .
+        taps: Vec<i64>,
+    },
+    /// 2-D convolution: weights `[cout][cin][kh][kw]` flattened, plus
+    /// geometry.
+    Conv2d {
+        /// Output channels.
+        cout: usize,
+        /// Input channels.
+        cin: usize,
+        /// Kernel height/width.
+        kh: usize,
+        /// Kernel width.
+        kw: usize,
+        /// Stride.
+        stride: usize,
+        /// Zero padding.
+        pad: usize,
+        /// Flattened weights, `cout·cin·kh·kw` entries.
+        weights: Vec<i64>,
+    },
+    /// Pooling over `k×k` windows with stride `stride`.
+    Pool {
+        /// Window size.
+        k: usize,
+        /// Stride.
+        stride: usize,
+        /// Operator.
+        kind: PoolKind,
+    },
+    /// Fully connected: `n_out × n_in` weights (row-major) + bias.
+    Fc {
+        /// Input features.
+        n_in: usize,
+        /// Output features.
+        n_out: usize,
+        /// Row-major weights.
+        weights: Vec<i64>,
+        /// Per-output bias.
+        bias: Vec<i64>,
+    },
+}
+
+/// A full engine configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EngineConfig {
+    /// Mode and coefficients.
+    pub mode: EngineMode,
+    /// Apply ReLU (max(0, ·)) on results — CNN activation fused at the
+    /// output port, as the paper's Fig 1 accelerator does.
+    pub relu: bool,
+    /// Right-shift applied to products before accumulation handoff
+    /// (fixed-point requantisation, e.g. 8 for Q8.8).
+    pub out_shift: u32,
+}
+
+impl EngineConfig {
+    /// Number of 32-bit configuration words the control processor writes.
+    pub fn config_words(&self) -> u64 {
+        let coeffs = match &self.mode {
+            EngineMode::Fir { taps } => taps.len(),
+            EngineMode::Conv2d { weights, .. } => weights.len() + 6,
+            EngineMode::Pool { .. } => 3,
+            EngineMode::Fc { weights, bias, .. } => weights.len() + bias.len() + 2,
+        };
+        (coeffs + 2) as u64 // +mode +flags
+    }
+
+    /// Validate internal consistency (weight counts match geometry).
+    pub fn validate(&self) -> crate::Result<()> {
+        match &self.mode {
+            EngineMode::Conv2d {
+                cout,
+                cin,
+                kh,
+                kw,
+                stride,
+                weights,
+                ..
+            } => {
+                if weights.len() != cout * cin * kh * kw {
+                    return Err(crate::Error::Systolic(format!(
+                        "conv2d weights {} != {}·{}·{}·{}",
+                        weights.len(),
+                        cout,
+                        cin,
+                        kh,
+                        kw
+                    )));
+                }
+                if *stride == 0 {
+                    return Err(crate::Error::Systolic("stride 0".into()));
+                }
+            }
+            EngineMode::Fc {
+                n_in,
+                n_out,
+                weights,
+                bias,
+            } => {
+                if weights.len() != n_in * n_out || bias.len() != *n_out {
+                    return Err(crate::Error::Systolic(format!(
+                        "fc weights {}x{} got {} (bias {})",
+                        n_out,
+                        n_in,
+                        weights.len(),
+                        bias.len()
+                    )));
+                }
+            }
+            EngineMode::Pool { k, stride, .. } => {
+                if *k == 0 || *stride == 0 {
+                    return Err(crate::Error::Systolic("pool k/stride 0".into()));
+                }
+            }
+            EngineMode::Fir { taps } => {
+                if taps.is_empty() {
+                    return Err(crate::Error::Systolic("empty FIR taps".into()));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_words_counts_coefficients() {
+        let c = EngineConfig {
+            mode: EngineMode::Fir { taps: vec![1, 2, 3] },
+            relu: false,
+            out_shift: 0,
+        };
+        assert_eq!(c.config_words(), 5);
+    }
+
+    #[test]
+    fn validation_catches_mismatch() {
+        let bad = EngineConfig {
+            mode: EngineMode::Conv2d {
+                cout: 2,
+                cin: 3,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+                weights: vec![0; 10],
+            },
+            relu: false,
+            out_shift: 0,
+        };
+        assert!(bad.validate().is_err());
+    }
+}

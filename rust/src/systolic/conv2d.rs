@@ -1,0 +1,226 @@
+//! 2-D convolution on the systolic fabric.
+//!
+//! §II: "In the case of the 2D convolution utilised by CNN, multiplication
+//! refers to matrix multiplication followed by shifting and adding." The
+//! engine decomposes a 2-D convolution into **row FIR passes**: for every
+//! (output channel, input channel, kernel row) triple, the kernel row runs
+//! as a 1-D systolic FIR over each padded input row and accumulates into
+//! the output plane — exactly the 1-D chain of Fig 2 reused `cout·cin·kh`
+//! times, which is how the reconfigurable fabric of Fig 3 realises
+//! convolution without dedicated 2-D hardware.
+//!
+//! Cycle accounting: each row pass occupies one `kw`-cell chain for
+//! `(padded row length)` cycles; `lanes` chains run in parallel (bounded by
+//! the cell pool), so `cycles = ceil(total_row_passes / lanes) × row_len`.
+
+use super::fir::FirChain;
+
+/// Convolution geometry + result + exact cycle count.
+pub struct ConvResult {
+    /// Output data, `[cout][ho][wo]` flattened.
+    pub data: Vec<i64>,
+    /// Output height.
+    pub ho: usize,
+    /// Output width.
+    pub wo: usize,
+    /// Engine cycles consumed.
+    pub cycles: u64,
+    /// Total MAC operations.
+    pub macs: u64,
+}
+
+/// Run a conv2d layer. `input` is `[cin][h][w]` flattened; `weights` is
+/// `[cout][cin][kh][kw]` flattened. `cells` is the engine's cell pool size
+/// (bounds lane parallelism).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d(
+    input: &[i64],
+    cin: usize,
+    h: usize,
+    w: usize,
+    weights: &[i64],
+    cout: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    cells: usize,
+) -> crate::Result<ConvResult> {
+    if input.len() != cin * h * w {
+        return Err(crate::Error::Systolic(format!(
+            "conv2d input len {} != {cin}·{h}·{w}",
+            input.len()
+        )));
+    }
+    if weights.len() != cout * cin * kh * kw {
+        return Err(crate::Error::Systolic("conv2d weight shape".into()));
+    }
+    if h + 2 * pad < kh || w + 2 * pad < kw {
+        return Err(crate::Error::Systolic("kernel larger than padded input".into()));
+    }
+    let hp = h + 2 * pad;
+    let wp = w + 2 * pad;
+    let ho = (hp - kh) / stride + 1;
+    let wo = (wp - kw) / stride + 1;
+
+    // hoist padded rows: built once per (channel, padded row) and reused
+    // across all cout × kh passes (perf: see EXPERIMENTS.md §Perf)
+    let mut padded = vec![0i64; cin * hp * wp];
+    for c in 0..cin {
+        for r in 0..h {
+            let src = &input[c * h * w + r * w..c * h * w + (r + 1) * w];
+            let dst = c * hp * wp + (r + pad) * wp + pad;
+            padded[dst..dst + w].copy_from_slice(src);
+        }
+    }
+
+    let mut out = vec![0i64; cout * ho * wo];
+    let mut macs = 0u64;
+    let mut row_passes = 0u64;
+    let mut yrow = Vec::with_capacity(wp);
+
+    for oc in 0..cout {
+        for ic in 0..cin {
+            for kr in 0..kh {
+                // kernel row as FIR taps; FIR computes y[n] = Σ h(k)x[n-k],
+                // convolution needs Σ w(k)·x[n+k] → feed reversed taps
+                let base = ((oc * cin + ic) * kh + kr) * kw;
+                let taps: Vec<i64> = (0..kw).map(|k| weights[base + kw - 1 - k]).collect();
+                let mut chain = FirChain::new(&taps);
+                for or in 0..ho {
+                    let ir = or * stride + kr;
+                    let row = &padded[ic * hp * wp + ir * wp..ic * hp * wp + (ir + 1) * wp];
+                    chain.filter_into(row, &mut yrow);
+                    row_passes += 1;
+                    macs += (row.len() * kw) as u64;
+                    // y[n] = Σ_k taps[k]·row[n-k] = Σ_j w[j]·row[n-(kw-1-j)]
+                    // output col `ox` reads the window starting at ox·stride:
+                    // Σ_j w[j]·row[ox·stride + j] = y[ox·stride + kw-1]
+                    let out_row = &mut out[oc * ho * wo + or * wo..oc * ho * wo + (or + 1) * wo];
+                    for (ox, o) in out_row.iter_mut().enumerate() {
+                        *o += yrow[ox * stride + kw - 1];
+                    }
+                }
+            }
+        }
+    }
+
+    // lane parallelism: each pass needs a kw-cell chain
+    let lanes = (cells / kw.max(1)).max(1) as u64;
+    let total_passes = row_passes;
+    let cycles = (total_passes + lanes - 1) / lanes * wp as u64;
+
+    Ok(ConvResult {
+        data: out,
+        ho,
+        wo,
+        cycles,
+        macs,
+    })
+}
+
+/// Direct (golden) convolution reference.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_reference(
+    input: &[i64],
+    cin: usize,
+    h: usize,
+    w: usize,
+    weights: &[i64],
+    cout: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) -> (Vec<i64>, usize, usize) {
+    let hp = h + 2 * pad;
+    let wp = w + 2 * pad;
+    let ho = (hp - kh) / stride + 1;
+    let wo = (wp - kw) / stride + 1;
+    let at = |c: usize, y: isize, x: isize| -> i64 {
+        if y < 0 || x < 0 || y >= h as isize || x >= w as isize {
+            0
+        } else {
+            input[c * h * w + y as usize * w + x as usize]
+        }
+    };
+    let mut out = vec![0i64; cout * ho * wo];
+    for oc in 0..cout {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let mut acc = 0i64;
+                for ic in 0..cin {
+                    for ky in 0..kh {
+                        for kx in 0..kw {
+                            let iy = (oy * stride + ky) as isize - pad as isize;
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            acc += weights[((oc * cin + ic) * kh + ky) * kw + kx]
+                                * at(ic, iy, ix);
+                        }
+                    }
+                }
+                out[oc * ho * wo + oy * wo + ox] = acc;
+            }
+        }
+    }
+    (out, ho, wo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rnd_vec(n: usize, seed: u64) -> Vec<i64> {
+        let mut s = seed.max(1);
+        (0..n)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                (s % 17) as i64 - 8
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_reference_3x3() {
+        let (cin, h, w, cout, kh, kw) = (3usize, 5usize, 5usize, 2usize, 3usize, 3usize);
+        let input = rnd_vec(cin * h * w, 1);
+        let weights = rnd_vec(cout * cin * kh * kw, 2);
+        for (stride, pad) in [(1usize, 0usize), (1, 1), (2, 1), (2, 0)] {
+            let got = conv2d(&input, cin, h, w, &weights, cout, kh, kw, stride, pad, 64).unwrap();
+            let (want, ho, wo) =
+                conv2d_reference(&input, cin, h, w, &weights, cout, kh, kw, stride, pad);
+            assert_eq!((got.ho, got.wo), (ho, wo), "shape s={stride} p={pad}");
+            assert_eq!(got.data, want, "s={stride} p={pad}");
+        }
+    }
+
+    #[test]
+    fn paper_kernel_sizes_5x5_11x11() {
+        // AlexNet's 5×5 and 11×11 kernels
+        for (k, h) in [(5usize, 12usize), (11, 16)] {
+            let input = rnd_vec(h * h, 3);
+            let weights = rnd_vec(k * k, 4);
+            let got = conv2d(&input, 1, h, h, &weights, 1, k, k, 1, 0, 256).unwrap();
+            let (want, ..) = conv2d_reference(&input, 1, h, h, &weights, 1, k, k, 1, 0);
+            assert_eq!(got.data, want, "k={k}");
+        }
+    }
+
+    #[test]
+    fn more_cells_fewer_cycles() {
+        let input = rnd_vec(3 * 8 * 8, 5);
+        let weights = rnd_vec(4 * 3 * 3 * 3, 6);
+        let few = conv2d(&input, 3, 8, 8, &weights, 4, 3, 3, 1, 1, 3).unwrap();
+        let many = conv2d(&input, 3, 8, 8, &weights, 4, 3, 3, 1, 1, 300).unwrap();
+        assert_eq!(few.data, many.data);
+        assert!(many.cycles < few.cycles, "{} !< {}", many.cycles, few.cycles);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        assert!(conv2d(&[0; 10], 1, 2, 5, &[0; 9], 1, 3, 3, 1, 0, 8).is_err());
+        assert!(conv2d(&[0; 25], 1, 5, 5, &[0; 8], 1, 3, 3, 1, 0, 8).is_err());
+    }
+}

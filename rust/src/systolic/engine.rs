@@ -1,0 +1,302 @@
+//! The Reconfigurable Systolic Engine top level (Fig 3).
+//!
+//! Owns a pool of systolic cells, the current [`EngineConfig`], and the
+//! cycle counters. Reconfiguration is charged at one cycle per
+//! configuration word (§III: instructions fetched from program memory
+//! configure the cell interconnect).
+
+use super::config::{EngineConfig, EngineMode};
+use super::{conv2d, fc, fir, pool};
+use crate::error::{Error, Result};
+
+/// Cumulative engine statistics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EngineStats {
+    /// Compute cycles.
+    pub compute_cycles: u64,
+    /// Reconfiguration cycles.
+    pub config_cycles: u64,
+    /// Reconfigurations performed.
+    pub reconfigs: u64,
+    /// MAC / reduce operations.
+    pub ops: u64,
+}
+
+impl EngineStats {
+    /// Total cycles including reconfiguration overhead.
+    pub fn total_cycles(&self) -> u64 {
+        self.compute_cycles + self.config_cycles
+    }
+
+    /// MAC utilisation against `cells` fully busy every compute cycle.
+    pub fn utilization(&self, cells: usize) -> f64 {
+        if self.compute_cycles == 0 {
+            0.0
+        } else {
+            self.ops as f64 / (self.compute_cycles as f64 * cells as f64)
+        }
+    }
+}
+
+/// The engine: a fixed cell pool plus a loadable configuration.
+pub struct Engine {
+    /// Number of physical systolic cells in the fabric.
+    pub cells: usize,
+    config: Option<EngineConfig>,
+    /// Statistics since construction (or [`Engine::clear_stats`]).
+    pub stats: EngineStats,
+}
+
+/// Output of a layer execution: data + the shape it should be viewed as.
+pub struct LayerOutput {
+    /// Flattened output data.
+    pub data: Vec<i64>,
+    /// Logical shape (`[c, h, w]` for spatial layers, `[n]` for FC/FIR).
+    pub shape: Vec<usize>,
+    /// Cycles this execution took.
+    pub cycles: u64,
+}
+
+impl Engine {
+    /// Engine with `cells` systolic cells (the paper's fabric size is
+    /// configuration-dependent; `crate::accel::SocConfig` picks it).
+    pub fn new(cells: usize) -> Self {
+        Engine {
+            cells,
+            config: None,
+            stats: EngineStats::default(),
+        }
+    }
+
+    /// Load a configuration (validates, charges reconfiguration cycles).
+    pub fn reconfigure(&mut self, config: EngineConfig) -> Result<()> {
+        config.validate()?;
+        self.stats.config_cycles += config.config_words();
+        self.stats.reconfigs += 1;
+        self.config = Some(config);
+        Ok(())
+    }
+
+    /// Current configuration, if loaded.
+    pub fn config(&self) -> Option<&EngineConfig> {
+        self.config.as_ref()
+    }
+
+    /// Reset statistics.
+    pub fn clear_stats(&mut self) {
+        self.stats = EngineStats::default();
+    }
+
+    fn postprocess(&self, mut data: Vec<i64>, cfg: &EngineConfig) -> Vec<i64> {
+        if cfg.out_shift > 0 {
+            for v in data.iter_mut() {
+                *v >>= cfg.out_shift;
+            }
+        }
+        if cfg.relu {
+            for v in data.iter_mut() {
+                *v = (*v).max(0);
+            }
+        }
+        data
+    }
+
+    /// Execute the loaded configuration on `input` with the given spatial
+    /// shape (`[c,h,w]` for conv/pool, `[n]` for FIR/FC).
+    pub fn run(&mut self, input: &[i64], shape: &[usize]) -> Result<LayerOutput> {
+        let cfg = self
+            .config
+            .clone()
+            .ok_or_else(|| Error::Systolic("engine not configured".into()))?;
+        let out = match &cfg.mode {
+            EngineMode::Fir { taps } => {
+                let mut chain = fir::FirChain::new(taps);
+                let data = chain.filter(input);
+                let cycles = chain.cycles;
+                self.stats.ops += chain.total_macs();
+                LayerOutput {
+                    shape: vec![data.len()],
+                    data,
+                    cycles,
+                }
+            }
+            EngineMode::Conv2d {
+                cout,
+                cin,
+                kh,
+                kw,
+                stride,
+                pad,
+                weights,
+            } => {
+                let [c, h, w] = shape else {
+                    return Err(Error::Systolic(format!(
+                        "conv2d needs [c,h,w] shape, got {shape:?}"
+                    )));
+                };
+                if c != cin {
+                    return Err(Error::Systolic(format!(
+                        "conv2d input channels {c} != configured {cin}"
+                    )));
+                }
+                let r = conv2d::conv2d(
+                    input, *cin, *h, *w, weights, *cout, *kh, *kw, *stride, *pad, self.cells,
+                )?;
+                self.stats.ops += r.macs;
+                LayerOutput {
+                    shape: vec![*cout, r.ho, r.wo],
+                    data: r.data,
+                    cycles: r.cycles,
+                }
+            }
+            EngineMode::Pool { k, stride, kind } => {
+                let [c, h, w] = shape else {
+                    return Err(Error::Systolic(format!(
+                        "pool needs [c,h,w] shape, got {shape:?}"
+                    )));
+                };
+                let r = pool::pool2d(input, *c, *h, *w, *k, *stride, *kind, self.cells)?;
+                self.stats.ops += r.ops;
+                LayerOutput {
+                    shape: vec![*c, r.ho, r.wo],
+                    data: r.data,
+                    cycles: r.cycles,
+                }
+            }
+            EngineMode::Fc {
+                n_in,
+                n_out,
+                weights,
+                bias,
+            } => {
+                let r = fc::fc(input, weights, bias, *n_in, *n_out, self.cells)?;
+                self.stats.ops += r.macs;
+                LayerOutput {
+                    shape: vec![*n_out],
+                    data: r.data,
+                    cycles: r.cycles,
+                }
+            }
+        };
+        self.stats.compute_cycles += out.cycles;
+        Ok(LayerOutput {
+            data: self.postprocess(out.data, &cfg),
+            ..out
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::systolic::config::PoolKind;
+
+    #[test]
+    fn reconfigure_then_run_fir() {
+        let mut e = Engine::new(64);
+        e.reconfigure(EngineConfig {
+            mode: EngineMode::Fir { taps: vec![1, -1] },
+            relu: false,
+            out_shift: 0,
+        })
+        .unwrap();
+        let out = e.run(&[5, 7, 2, 2], &[4]).unwrap();
+        assert_eq!(out.data, vec![5, 2, -5, 0]); // first difference
+        assert!(e.stats.config_cycles > 0);
+        assert!(e.stats.compute_cycles > 0);
+    }
+
+    #[test]
+    fn unconfigured_engine_errors() {
+        let mut e = Engine::new(8);
+        assert!(e.run(&[1], &[1]).is_err());
+    }
+
+    #[test]
+    fn conv_pool_fc_pipeline_on_one_fabric() {
+        // Fig 3's whole point: the same fabric runs all three module types
+        let mut e = Engine::new(128);
+        // conv 1x4x4 -> 1x2x2 (3x3 kernel, stride 1, no pad, all-ones)
+        e.reconfigure(EngineConfig {
+            mode: EngineMode::Conv2d {
+                cout: 1,
+                cin: 1,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 0,
+                weights: vec![1; 9],
+            },
+            relu: true,
+            out_shift: 0,
+        })
+        .unwrap();
+        let img: Vec<i64> = (0..16).collect();
+        let conv_out = e.run(&img, &[1, 4, 4]).unwrap();
+        assert_eq!(conv_out.shape, vec![1, 2, 2]);
+        // pool 2x2 -> 1x1x1
+        e.reconfigure(EngineConfig {
+            mode: EngineMode::Pool {
+                k: 2,
+                stride: 1,
+                kind: PoolKind::Max,
+            },
+            relu: false,
+            out_shift: 0,
+        })
+        .unwrap();
+        let pool_out = e.run(&conv_out.data, &conv_out.shape).unwrap();
+        assert_eq!(pool_out.shape, vec![1, 1, 1]);
+        // fc 1 -> 2
+        e.reconfigure(EngineConfig {
+            mode: EngineMode::Fc {
+                n_in: 1,
+                n_out: 2,
+                weights: vec![2, -1],
+                bias: vec![0, 100],
+            },
+            relu: false,
+            out_shift: 0,
+        })
+        .unwrap();
+        let fc_out = e.run(&pool_out.data, &[1]).unwrap();
+        assert_eq!(fc_out.data.len(), 2);
+        assert_eq!(e.stats.reconfigs, 3);
+        // functional check end-to-end
+        let window_max = pool_out.data[0];
+        assert_eq!(fc_out.data, vec![2 * window_max, 100 - window_max]);
+    }
+
+    #[test]
+    fn relu_and_shift_applied() {
+        let mut e = Engine::new(8);
+        e.reconfigure(EngineConfig {
+            mode: EngineMode::Fir { taps: vec![4] },
+            relu: true,
+            out_shift: 2,
+        })
+        .unwrap();
+        let out = e.run(&[-8, 8], &[2]).unwrap();
+        // -8*4 >> 2 = -8 -> relu 0 ; 8*4 >> 2 = 8
+        assert_eq!(out.data, vec![0, 8]);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let mut e = Engine::new(16);
+        e.reconfigure(EngineConfig {
+            mode: EngineMode::Fc {
+                n_in: 32,
+                n_out: 16,
+                weights: vec![1; 512],
+                bias: vec![0; 16],
+            },
+            relu: false,
+            out_shift: 0,
+        })
+        .unwrap();
+        e.run(&vec![1; 32], &[32]).unwrap();
+        let u = e.stats.utilization(16);
+        assert!(u > 0.0 && u <= 1.0, "util={u}");
+    }
+}

@@ -1,0 +1,94 @@
+//! Fully-connected (matrix-vector) layers on the systolic fabric.
+//!
+//! §II: "the primary operation of a neural network is the summation of
+//! WᵢXᵢ … Systolic cell architecture could easily achieve this by, for
+//! example, storing the weight in place of h(n)." Each output neuron is a
+//! dot product computed by one accumulating cell with streamed weights;
+//! `cells` neurons are evaluated in parallel.
+
+/// FC result with exact cycle accounting.
+pub struct FcResult {
+    /// Output vector, `n_out` entries.
+    pub data: Vec<i64>,
+    /// Engine cycles.
+    pub cycles: u64,
+    /// MACs performed.
+    pub macs: u64,
+}
+
+/// Compute `y = W·x + b` (`weights` row-major `n_out × n_in`).
+pub fn fc(
+    x: &[i64],
+    weights: &[i64],
+    bias: &[i64],
+    n_in: usize,
+    n_out: usize,
+    cells: usize,
+) -> crate::Result<FcResult> {
+    if x.len() != n_in || weights.len() != n_in * n_out || bias.len() != n_out {
+        return Err(crate::Error::Systolic(format!(
+            "fc shapes: x={} W={} b={} for {n_out}x{n_in}",
+            x.len(),
+            weights.len(),
+            bias.len()
+        )));
+    }
+    let mut out = vec![0i64; n_out];
+    for (o, out_v) in out.iter_mut().enumerate() {
+        let row = &weights[o * n_in..(o + 1) * n_in];
+        *out_v = bias[o]
+            + row
+                .iter()
+                .zip(x.iter())
+                .map(|(&w, &xv)| w * xv)
+                .sum::<i64>();
+    }
+    let lanes = cells.max(1) as u64;
+    let waves = (n_out as u64 + lanes - 1) / lanes;
+    Ok(FcResult {
+        data: out,
+        cycles: waves * n_in as u64,
+        macs: (n_in * n_out) as u64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_matrix() {
+        let w = vec![1, 0, 0, 0, 1, 0, 0, 0, 1];
+        let r = fc(&[7, -3, 5], &w, &[0, 0, 0], 3, 3, 4).unwrap();
+        assert_eq!(r.data, vec![7, -3, 5]);
+    }
+
+    #[test]
+    fn bias_and_products() {
+        // y0 = 1*2 + 2*3 + 10 = 18; y1 = -1*2 + 4*3 + (-5) = 5
+        let w = vec![1, 2, -1, 4];
+        let r = fc(&[2, 3], &w, &[10, -5], 2, 2, 1).unwrap();
+        assert_eq!(r.data, vec![18, 5]);
+        assert_eq!(r.cycles, 2 * 2); // 2 waves of 2 cycles on 1 cell
+        assert_eq!(r.macs, 4);
+    }
+
+    #[test]
+    fn parallel_lanes_cut_cycles() {
+        let n = 64;
+        let w = vec![1i64; n * n];
+        let x = vec![1i64; n];
+        let b = vec![0i64; n];
+        let few = fc(&x, &w, &b, n, n, 1).unwrap();
+        let many = fc(&x, &w, &b, n, n, 64).unwrap();
+        assert_eq!(few.data, many.data);
+        assert_eq!(many.cycles, n as u64);
+        assert_eq!(few.cycles, (n * n) as u64);
+    }
+
+    #[test]
+    fn shape_errors() {
+        assert!(fc(&[1, 2], &[1, 2, 3], &[0], 2, 1, 1).is_err());
+        assert!(fc(&[1], &[1, 2], &[0, 0], 1, 2, 1).is_ok());
+    }
+}

@@ -1,0 +1,153 @@
+//! The 1-D FIR systolic chain of Fig 2.
+//!
+//! "Each cell conducts a MAC operation on the input signal by multiplying
+//! it with filter coefficients stored in the cell and adding it to the
+//! output of the previous systolic cell." The sample X(n) enters every cell
+//! on its *vertical* input (broadcast), while the partial sum Y ripples
+//! left-to-right through one register per cell:
+//!
+//! ```text
+//!   y_i(n) = y_{i-1}(n-1) + c_i · x(n),      y_{-1} = 0
+//! ```
+//!
+//! with coefficients stored reversed (`c_i = h(K-1-i)`) this yields exactly
+//! `y[n] = Σ_k h(k)·x[n−k]` at the last cell — the paper's equation.
+
+use super::cell::SystolicCell;
+
+/// A systolic FIR filter of `taps.len()` cells.
+pub struct FirChain {
+    cells: Vec<SystolicCell>,
+    /// Cycles executed.
+    pub cycles: u64,
+}
+
+impl FirChain {
+    /// Build a chain holding the coefficients `taps` (h(0) in the *last*
+    /// cell, so the rippling Y picks up older samples at earlier cells).
+    pub fn new(taps: &[i64]) -> Self {
+        FirChain {
+            cells: taps.iter().rev().map(|&t| SystolicCell::new(t)).collect(),
+            cycles: 0,
+        }
+    }
+
+    /// Number of cells.
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// True if the chain is empty.
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// One clock: broadcast sample `x` to every cell's vertical input and
+    /// ripple the Y registers. Returns `y[n] = Σ h(k)·x[n−k]` for the
+    /// sample just applied (the freshly latched last-cell register).
+    pub fn clock(&mut self, x: i64) -> i64 {
+        self.cycles += 1;
+        let mut y_prev_old = 0i64; // Y register of the previous cell, pre-edge
+        let mut last = 0i64;
+        for c in self.cells.iter_mut() {
+            let old = c.y_reg;
+            c.y_reg = y_prev_old + c.coeff * x;
+            c.x_reg = x;
+            c.macs += 1;
+            y_prev_old = old;
+            last = c.y_reg;
+        }
+        last
+    }
+
+    /// Filter a whole signal, returning exactly `signal.len()` outputs
+    /// (`y[n] = Σ_k h(k)·x[n−k]`, zero history).
+    pub fn filter(&mut self, signal: &[i64]) -> Vec<i64> {
+        let mut out = Vec::new();
+        self.filter_into(signal, &mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`FirChain::filter`]: writes into `out`
+    /// (cleared first). The conv2d hot loop reuses one buffer across all
+    /// row passes (EXPERIMENTS.md §Perf).
+    pub fn filter_into(&mut self, signal: &[i64], out: &mut Vec<i64>) {
+        for c in self.cells.iter_mut() {
+            c.reset();
+        }
+        out.clear();
+        out.reserve(signal.len());
+        out.extend(signal.iter().map(|&x| self.clock(x)));
+    }
+
+    /// Total MACs across cells (utilisation accounting).
+    pub fn total_macs(&self) -> u64 {
+        self.cells.iter().map(|c| c.macs).sum()
+    }
+}
+
+/// Golden reference: direct-form FIR.
+pub fn fir_reference(taps: &[i64], signal: &[i64]) -> Vec<i64> {
+    (0..signal.len())
+        .map(|n| {
+            taps.iter()
+                .enumerate()
+                .map(|(k, &h)| if n >= k { h * signal[n - k] } else { 0 })
+                .sum()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_reference_impulse() {
+        let taps = [3i64, -1, 4, 1, -5];
+        let mut chain = FirChain::new(&taps);
+        let impulse = [1i64, 0, 0, 0, 0, 0, 0];
+        let got = chain.filter(&impulse);
+        let want = fir_reference(&taps, &impulse);
+        assert_eq!(got, want, "impulse response = taps then zeros");
+        assert_eq!(&got[..5], &taps[..]);
+    }
+
+    #[test]
+    fn matches_reference_random() {
+        let taps = [2i64, 7, -3, 5, 11, -8, 1, 9];
+        let mut chain = FirChain::new(&taps);
+        let mut state = 99u64;
+        let signal: Vec<i64> = (0..50)
+            .map(|_| {
+                state ^= state << 13;
+                state ^= state >> 7;
+                state ^= state << 17;
+                (state % 201) as i64 - 100
+            })
+            .collect();
+        assert_eq!(chain.filter(&signal), fir_reference(&taps, &signal));
+    }
+
+    #[test]
+    fn steady_state_throughput_one_per_cycle() {
+        // Fig 2's point: one output per clock, cycles == samples
+        let taps = [1i64, 1, 1, 1];
+        let mut chain = FirChain::new(&taps);
+        let n = 100;
+        let signal = vec![1i64; n];
+        let out = chain.filter(&signal);
+        assert_eq!(out.len(), n);
+        assert_eq!(chain.cycles as usize, n);
+        assert_eq!(out[n - 1], 4, "steady state sum of taps");
+    }
+
+    #[test]
+    fn filter_resets_state() {
+        let taps = [1i64, 2];
+        let mut chain = FirChain::new(&taps);
+        let a = chain.filter(&[5, 5]);
+        let b = chain.filter(&[5, 5]);
+        assert_eq!(a, b, "filter() must not leak state across calls");
+    }
+}

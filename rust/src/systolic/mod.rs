@@ -1,0 +1,30 @@
+//! The Reconfigurable Systolic Engine — the paper's §II–III architecture
+//! (Figs 1–3), as a cycle-accurate behavioural model.
+//!
+//! The fabric is a pool of [`cell::SystolicCell`]s (`Yₙ = Yₙ₋₁ + h·X(n)`,
+//! §II) joined by a configurable interconnect. A [`config::EngineConfig`]
+//! — normally written by the RISC-V control processor through MMIO
+//! (`crate::riscv`) — wires the cells into one of the paper's CNN modules:
+//!
+//! * [`fir`] — the 1-D FIR / 1-D convolution chain of Fig 2,
+//! * [`conv2d`] — 2-D convolution (kernel unrolled over the cell chain,
+//!   one output pixel wave per cycle),
+//! * [`pool`] — max/average pooling,
+//! * [`fc`] — fully-connected (matrix-vector) layers.
+//!
+//! Every mode is cycle-accurate: the engine reports exact cycle counts,
+//! MAC utilisation and per-cell activity, which the accelerator model
+//! (`crate::accel`) converts into latency/throughput at the STA-derived
+//! clock.
+
+pub mod cell;
+pub mod config;
+pub mod conv2d;
+pub mod engine;
+pub mod fc;
+pub mod fir;
+pub mod pool;
+
+pub use cell::SystolicCell;
+pub use config::{EngineConfig, EngineMode, PoolKind};
+pub use engine::{Engine, EngineStats};

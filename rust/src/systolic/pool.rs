@@ -1,0 +1,141 @@
+//! Pooling on the systolic fabric.
+//!
+//! §I: "Specialized hardware architectures like average-pooling or
+//! max-pooling can be used to implement pooling layers on FPGAs." The
+//! engine reconfigures its cells as comparator/accumulator elements; each
+//! window is reduced in `k²` cell-cycles, with `cells` windows in flight.
+
+use super::config::PoolKind;
+
+/// Pooling result with exact cycle accounting.
+pub struct PoolResult {
+    /// `[c][ho][wo]` flattened.
+    pub data: Vec<i64>,
+    /// Output height.
+    pub ho: usize,
+    /// Output width.
+    pub wo: usize,
+    /// Engine cycles.
+    pub cycles: u64,
+    /// Reduce operations performed.
+    pub ops: u64,
+}
+
+/// Run `k×k`/`stride` pooling over `[c][h][w]` input using a pool of
+/// `cells` comparator cells.
+pub fn pool2d(
+    input: &[i64],
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+    kind: PoolKind,
+    cells: usize,
+) -> crate::Result<PoolResult> {
+    if input.len() != c * h * w {
+        return Err(crate::Error::Systolic("pool2d input shape".into()));
+    }
+    if k == 0 || stride == 0 || h < k || w < k {
+        return Err(crate::Error::Systolic(format!(
+            "pool2d geometry k={k} stride={stride} h={h} w={w}"
+        )));
+    }
+    let ho = (h - k) / stride + 1;
+    let wo = (w - k) / stride + 1;
+    let mut out = vec![0i64; c * ho * wo];
+    let mut ops = 0u64;
+    for ch in 0..c {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let mut acc: Option<i64> = None;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        let v = input[ch * h * w + (oy * stride + ky) * w + (ox * stride + kx)];
+                        ops += 1;
+                        acc = Some(match (acc, kind) {
+                            (None, _) => v,
+                            (Some(a), PoolKind::Max) => a.max(v),
+                            (Some(a), PoolKind::Avg) => a + v,
+                        });
+                    }
+                }
+                let mut v = acc.unwrap();
+                if kind == PoolKind::Avg {
+                    v /= (k * k) as i64;
+                }
+                out[ch * ho * wo + oy * wo + ox] = v;
+            }
+        }
+    }
+    let windows = (c * ho * wo) as u64;
+    let lanes = cells.max(1) as u64;
+    let cycles = (windows + lanes - 1) / lanes * (k * k) as u64;
+    Ok(PoolResult {
+        data: out,
+        ho,
+        wo,
+        cycles,
+        ops,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_pool_2x2() {
+        #[rustfmt::skip]
+        let input = vec![
+            1, 2, 3, 4,
+            5, 6, 7, 8,
+            9, 10, 11, 12,
+            13, 14, 15, 16,
+        ];
+        let r = pool2d(&input, 1, 4, 4, 2, 2, PoolKind::Max, 8).unwrap();
+        assert_eq!(r.data, vec![6, 8, 14, 16]);
+        assert_eq!((r.ho, r.wo), (2, 2));
+    }
+
+    #[test]
+    fn avg_pool_3x3_stride2() {
+        let input: Vec<i64> = (0..25).collect();
+        let r = pool2d(&input, 1, 5, 5, 3, 2, PoolKind::Avg, 8).unwrap();
+        // windows at (0,0),(0,2),(2,0),(2,2): means of 9 elements
+        assert_eq!(r.data, vec![6, 8, 16, 18]);
+    }
+
+    #[test]
+    fn overlapping_windows_alexnet_style() {
+        // AlexNet uses 3x3 stride-2 overlapped max pooling
+        let input: Vec<i64> = (0..36).map(|i| (i * 7) % 23).collect();
+        let r = pool2d(&input, 1, 6, 6, 3, 2, PoolKind::Max, 4).unwrap();
+        assert_eq!((r.ho, r.wo), (2, 2));
+        for (i, &v) in r.data.iter().enumerate() {
+            let (oy, ox) = (i / 2, i % 2);
+            let mut want = i64::MIN;
+            for ky in 0..3 {
+                for kx in 0..3 {
+                    want = want.max(input[(oy * 2 + ky) * 6 + (ox * 2 + kx)]);
+                }
+            }
+            assert_eq!(v, want);
+        }
+    }
+
+    #[test]
+    fn cycle_model_scales_with_cells() {
+        let input: Vec<i64> = (0..64).collect();
+        let few = pool2d(&input, 1, 8, 8, 2, 2, PoolKind::Max, 1).unwrap();
+        let many = pool2d(&input, 1, 8, 8, 2, 2, PoolKind::Max, 16).unwrap();
+        assert_eq!(few.data, many.data);
+        assert!(many.cycles < few.cycles);
+    }
+
+    #[test]
+    fn rejects_bad_geometry() {
+        assert!(pool2d(&[0; 4], 1, 2, 2, 3, 1, PoolKind::Max, 4).is_err());
+        assert!(pool2d(&[0; 4], 1, 2, 2, 2, 0, PoolKind::Max, 4).is_err());
+    }
+}

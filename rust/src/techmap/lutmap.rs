@@ -1,0 +1,170 @@
+//! LUT6 covering by greedy cone absorption.
+//!
+//! Every combinational gate starts as its own LUT whose *cut* is its input
+//! set. In topological order each gate repeatedly absorbs single-fanout
+//! combinational fanins while the merged cut stays within 6 leaves — the
+//! classic fanout-free-cone heuristic. Chain-tagged gates (fast-carry
+//! elements) are never absorbed or merged across: they occupy the CARRY4
+//! mux with a dedicated generate/propagate LUT.
+
+use crate::netlist::{Driver, Gate, NetId, Netlist};
+use std::collections::BTreeSet;
+
+/// Result of LUT covering.
+pub struct LutMapping {
+    /// For each net: `Some(cut)` if this net is a LUT root, `None` if the
+    /// gate was absorbed into a downstream LUT (or is not combinational).
+    pub lut_of: Vec<Option<BTreeSet<NetId>>>,
+    /// Total LUT6 count.
+    pub luts: usize,
+    /// Number of carry-chain cells (chain-tagged gates).
+    pub carry_cells: usize,
+}
+
+impl LutMapping {
+    /// True if `net` is the output of a mapped LUT.
+    pub fn is_lut_root(&self, net: NetId) -> bool {
+        self.lut_of[net.index()].is_some()
+    }
+}
+
+/// Greedy LUT6 covering. `nl` should already be simplified.
+pub fn map_luts(nl: &Netlist) -> LutMapping {
+    let n = nl.num_nets();
+    let fanout = nl.fanout();
+    let mut cut: Vec<Option<BTreeSet<NetId>>> = vec![None; n];
+    let mut absorbed = vec![false; n];
+
+    let is_comb_gate = |id: NetId| -> bool {
+        matches!(nl.driver(id), Driver::Gate(g) if g.is_comb() && !matches!(g, Gate::Const(_)))
+    };
+
+    for (id, d) in nl.iter() {
+        let Driver::Gate(g) = d else { continue };
+        if !g.is_comb() || matches!(g, Gate::Const(_)) {
+            continue;
+        }
+        let chained = nl.is_chain(id);
+        // initial cut = direct inputs (constants excluded — they fold into
+        // the LUT truth table for free)
+        let mut c: BTreeSet<NetId> = g
+            .inputs()
+            .into_iter()
+            .filter(|&i| !matches!(nl.driver(i), Driver::Gate(Gate::Const(_))))
+            .collect();
+        if !chained {
+            // try to absorb single-fanout comb fanins
+            let mut changed = true;
+            while changed {
+                changed = false;
+                let candidates: Vec<NetId> = c
+                    .iter()
+                    .copied()
+                    .filter(|&f| {
+                        is_comb_gate(f)
+                            && fanout[f.index()] == 1
+                            && !nl.is_chain(f)
+                            && cut[f.index()].is_some()
+                    })
+                    .collect();
+                for f in candidates {
+                    let fcut = cut[f.index()].as_ref().unwrap();
+                    let mut merged = c.clone();
+                    merged.remove(&f);
+                    merged.extend(fcut.iter().copied());
+                    if merged.len() <= 6 {
+                        c = merged;
+                        absorbed[f.index()] = true;
+                        changed = true;
+                    }
+                }
+            }
+        }
+        cut[id.index()] = Some(c);
+    }
+
+    // clear cuts of absorbed gates; count
+    let mut luts = 0;
+    let mut carry_cells = 0;
+    for i in 0..n {
+        let id = NetId(i as u32);
+        if absorbed[i] {
+            cut[i] = None;
+        }
+        if cut[i].is_some() {
+            if nl.is_chain(id) {
+                carry_cells += 1;
+            }
+            luts += 1; // carry cells keep their G/P LUT (Vivado convention)
+        }
+    }
+    LutMapping {
+        lut_of: cut,
+        luts,
+        carry_cells,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::Netlist;
+
+    #[test]
+    fn chain_of_gates_becomes_one_lut() {
+        // 5-input AND tree: 4 gates, 5 leaves -> single LUT6
+        let mut nl = Netlist::new("tree");
+        let a = nl.input_bus("a", 5);
+        let t0 = nl.and(a[0], a[1]);
+        let t1 = nl.and(t0, a[2]);
+        let t2 = nl.and(t1, a[3]);
+        let t3 = nl.and(t2, a[4]);
+        nl.output_bus("o", &vec![t3]);
+        let m = map_luts(&nl);
+        assert_eq!(m.luts, 1, "should cover as one LUT6");
+        assert!(m.is_lut_root(t3));
+        assert!(!m.is_lut_root(t0));
+    }
+
+    #[test]
+    fn wide_function_needs_multiple_luts() {
+        // 12-input AND: needs >= 3 LUT6 (ceil(12/6)=2 leaves... tree of 2)
+        let mut nl = Netlist::new("wide");
+        let a = nl.input_bus("a", 12);
+        let mut acc = a[0];
+        for i in 1..12 {
+            acc = nl.and(acc, a[i]);
+        }
+        nl.output_bus("o", &vec![acc]);
+        let m = map_luts(&nl);
+        assert!(m.luts >= 2 && m.luts <= 4, "luts={}", m.luts);
+    }
+
+    #[test]
+    fn fanout_blocks_absorption() {
+        // t0 feeds two consumers -> must stay its own LUT
+        let mut nl = Netlist::new("fo");
+        let a = nl.input_bus("a", 3);
+        let t0 = nl.xor(a[0], a[1]);
+        let u = nl.and(t0, a[2]);
+        let v = nl.or(t0, a[2]);
+        nl.output_bus("u", &vec![u]);
+        nl.output_bus("v", &vec![v]);
+        let m = map_luts(&nl);
+        assert_eq!(m.luts, 3);
+    }
+
+    #[test]
+    fn carry_cells_counted() {
+        let mut nl = Netlist::new("rca");
+        let a = nl.input_bus("a", 8);
+        let b = nl.input_bus("b", 8);
+        let (s, c) = crate::gates::ripple_carry_add(&mut nl, &a, &b, None);
+        let mut out = s;
+        out.push(c);
+        nl.output_bus("y", &out);
+        let simplified = crate::techmap::simplify(&nl);
+        let m = map_luts(&simplified);
+        assert!(m.carry_cells >= 7, "carry cells {}", m.carry_cells);
+    }
+}

@@ -1,0 +1,101 @@
+//! FPGA technology mapping — the substrate behind Tables 1–4.
+//!
+//! Models a generic Xilinx-7-series-like fabric:
+//!
+//! * **LUT6** function generators (six inputs, one output),
+//! * **slices** of 4 LUT6 + 8 flip-flops,
+//! * **CARRY4** fast-carry chains (chain-tagged nets map onto the dedicated
+//!   carry mux; their generate/propagate LUT still counts as a LUT, as
+//!   Vivado reports it),
+//! * **bonded IOBs** — one per port bit, plus a clock pad for sequential
+//!   modules (this is the accounting convention the paper's Tables 1–4
+//!   use; see DESIGN.md §9 for why it is per-instance).
+//!
+//! Pipeline: [`simplify`] (constant folding + DCE) → [`lutmap`] (greedy
+//! cone covering into LUT6s) → [`pack`] (slice packing + LUT-FF pairing)
+//! → [`ResourceReport`].
+
+pub mod lutmap;
+pub mod pack;
+pub mod report;
+pub mod simplify;
+
+pub use lutmap::{map_luts, LutMapping};
+pub use report::ResourceReport;
+pub use simplify::simplify;
+
+use crate::error::Result;
+use crate::netlist::Netlist;
+
+/// Map a netlist all the way to a resource report.
+pub fn map(nl: &Netlist) -> Result<MappedNetlist> {
+    let simplified = simplify(nl);
+    let mapping = map_luts(&simplified);
+    let report = pack::pack(&simplified, &mapping);
+    Ok(MappedNetlist {
+        netlist: simplified,
+        mapping,
+        report,
+    })
+}
+
+/// Result of technology mapping.
+pub struct MappedNetlist {
+    /// The simplified (const-folded, DCE'd) netlist that was mapped.
+    pub netlist: Netlist,
+    /// LUT covering.
+    pub mapping: LutMapping,
+    /// Utilisation counters.
+    pub report: ResourceReport,
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::multipliers::{generate, MultKind, MultiplierSpec};
+
+    #[test]
+    fn paper_lut_ordering_holds() {
+        // the paper's headline: KOM16 < KOM32 < Dadda32 < BW32 in slice LUTs
+        let luts = |spec| {
+            let m = generate(spec).unwrap();
+            super::map(&m.netlist).unwrap().report.slice_luts
+        };
+        let kom16 = luts(MultiplierSpec::pipelined(MultKind::KaratsubaOfman, 16, 4));
+        let kom32 = luts(MultiplierSpec::pipelined(MultKind::KaratsubaOfman, 32, 6));
+        let bw32 = luts(MultiplierSpec::comb_regio(MultKind::BaughWooley, 32));
+        let dadda32 = luts(MultiplierSpec::comb(MultKind::Dadda, 32));
+        assert!(kom16 < kom32, "kom16={kom16} kom32={kom32}");
+        assert!(kom32 < dadda32, "kom32={kom32} dadda32={dadda32}");
+        assert!(dadda32 < bw32, "dadda32={dadda32} bw32={bw32}");
+    }
+
+    #[test]
+    fn dadda_has_no_registers() {
+        let m = generate(MultiplierSpec::comb(MultKind::Dadda, 32)).unwrap();
+        let r = super::map(&m.netlist).unwrap().report;
+        assert_eq!(r.slice_registers, 0);
+        assert_eq!(r.lut_ff_pairs, 0);
+    }
+
+    #[test]
+    fn iob_counts_match_port_convention() {
+        // comb 32-bit: 32+32+64 = 128; sequential adds the clock pad
+        let dadda = generate(MultiplierSpec::comb(MultKind::Dadda, 32)).unwrap();
+        assert_eq!(super::map(&dadda.netlist).unwrap().report.bonded_iobs, 128);
+        let kom = generate(MultiplierSpec::pipelined(MultKind::KaratsubaOfman, 32, 6)).unwrap();
+        assert_eq!(super::map(&kom.netlist).unwrap().report.bonded_iobs, 129);
+        let kom16 = generate(MultiplierSpec::pipelined(MultKind::KaratsubaOfman, 16, 4)).unwrap();
+        assert_eq!(super::map(&kom16.netlist).unwrap().report.bonded_iobs, 65);
+    }
+
+    #[test]
+    fn mapped_netlist_still_computes() {
+        // simplification must preserve function
+        let m = generate(MultiplierSpec::comb(MultKind::KaratsubaOfman, 8)).unwrap();
+        let mapped = super::map(&m.netlist).unwrap();
+        for (x, y) in [(0u128, 0u128), (255, 255), (13, 19), (128, 2)] {
+            let got = crate::sim::run_comb(&mapped.netlist, &[("a", x), ("b", y)], "p").unwrap();
+            assert_eq!(got, x * y, "{x}*{y}");
+        }
+    }
+}

@@ -1,0 +1,101 @@
+//! Slice packing and LUT-FF pairing.
+//!
+//! A slice holds 4 LUT6 and 8 flip-flops. A *fully used LUT-FF pair* is a
+//! LUT whose output drives exactly one load and that load is a flip-flop's
+//! D input — the packer can then place both in the same slice cell. This is
+//! the quantity the paper's third table row reports.
+
+use super::lutmap::LutMapping;
+use super::report::ResourceReport;
+use crate::netlist::{Driver, Gate, Netlist};
+
+/// Pack a mapped netlist into slices and produce the utilisation report.
+pub fn pack(nl: &Netlist, mapping: &LutMapping) -> ResourceReport {
+    let mut ffs: u64 = 0;
+    // who consumes each net, for pair detection
+    let mut loads: Vec<Vec<u32>> = vec![Vec::new(); nl.num_nets()];
+    for (id, d) in nl.iter() {
+        if let Driver::Gate(g) = d {
+            if g.is_dff() {
+                ffs += 1;
+            }
+            for i in g.inputs() {
+                loads[i.index()].push(id.0);
+            }
+        }
+    }
+    for bus in nl.outputs().values() {
+        for &n in bus {
+            loads[n.index()].push(u32::MAX); // port load
+        }
+    }
+
+    // LUT-FF pairs: LUT root with a single load that is a DFF
+    let mut pairs: u64 = 0;
+    for (id, _) in nl.iter() {
+        if !mapping.is_lut_root(id) {
+            continue;
+        }
+        let l = &loads[id.index()];
+        if l.len() == 1 && l[0] != u32::MAX {
+            if let Driver::Gate(Gate::Dff(..)) = nl.driver(crate::netlist::NetId(l[0])) {
+                pairs += 1;
+            }
+        }
+    }
+
+    let luts = mapping.luts as u64;
+    let slices = ((luts + 3) / 4).max((ffs + 7) / 8);
+
+    // bonded IOBs: every port bit, plus the clock pad for sequential logic
+    let port_bits: u64 = nl.inputs().values().map(|b| b.len() as u64).sum::<u64>()
+        + nl.outputs().values().map(|b| b.len() as u64).sum::<u64>();
+    let iobs = port_bits + if nl.is_sequential() { 1 } else { 0 };
+
+    ResourceReport {
+        slice_registers: ffs,
+        slice_luts: luts,
+        lut_ff_pairs: pairs,
+        bonded_iobs: iobs,
+        carry_cells: mapping.carry_cells as u64,
+        slices,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::netlist::Netlist;
+    use crate::techmap;
+
+    #[test]
+    fn pairs_detected() {
+        // xor -> dff (single load): 1 pair; and -> two loads: no pair
+        let mut nl = Netlist::new("p");
+        let a = nl.input_bus("a", 2);
+        let x = nl.xor(a[0], a[1]);
+        let q = nl.dff(x);
+        let y = nl.and(a[0], a[1]);
+        let q2 = nl.dff(y);
+        let z = nl.or(y, q2); // y has 2 loads
+        nl.output_bus("q", &vec![q]);
+        nl.output_bus("z", &vec![z]);
+        let m = techmap::map(&nl).unwrap();
+        assert_eq!(m.report.slice_registers, 2);
+        assert_eq!(m.report.lut_ff_pairs, 1);
+        assert_eq!(m.report.bonded_iobs, 2 + 2 + 1);
+    }
+
+    #[test]
+    fn slices_cover_both_resources() {
+        // 9 FFs forces 2 slices even with 1 LUT
+        let mut nl = Netlist::new("s");
+        let a = nl.input_bus("a", 9);
+        let mut qs = vec![];
+        for i in 0..9 {
+            qs.push(nl.dff(a[i]));
+        }
+        nl.output_bus("q", &qs);
+        let m = techmap::map(&nl).unwrap();
+        assert_eq!(m.report.slices, 2);
+    }
+}

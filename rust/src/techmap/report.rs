@@ -1,0 +1,100 @@
+//! The four utilisation counters of the paper's Tables 1–4, plus fabric
+//! details, with arithmetic for hierarchical (per-instance × count)
+//! accounting.
+
+use std::fmt;
+use std::ops::{Add, Mul};
+
+/// Post-synthesis utilisation, mirroring the paper's table rows.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResourceReport {
+    /// "No of slice registers" — flip-flops.
+    pub slice_registers: u64,
+    /// "No of slice LUT" — LUT6 function generators (incl. carry G/P LUTs).
+    pub slice_luts: u64,
+    /// "No of fully used LUT FF pairs" — LUTs packed with their dedicated FF.
+    pub lut_ff_pairs: u64,
+    /// "No of bonded IOBs" — port bits (+clock pad when sequential).
+    pub bonded_iobs: u64,
+    /// CARRY4 carry cells (not in the paper's tables; reported for honesty).
+    pub carry_cells: u64,
+    /// Occupied slices (4 LUT6 + 8 FF each).
+    pub slices: u64,
+}
+
+impl ResourceReport {
+    /// Paper table row order: registers, LUTs, LUT-FF pairs, IOBs.
+    pub fn paper_rows(&self) -> [(&'static str, u64); 4] {
+        [
+            ("No of slice registers", self.slice_registers),
+            ("No of slice LUT", self.slice_luts),
+            ("No of fully used LUT FF pairs", self.lut_ff_pairs),
+            ("No of bonded IOBs", self.bonded_iobs),
+        ]
+    }
+}
+
+impl Add for ResourceReport {
+    type Output = ResourceReport;
+    fn add(self, o: ResourceReport) -> ResourceReport {
+        ResourceReport {
+            slice_registers: self.slice_registers + o.slice_registers,
+            slice_luts: self.slice_luts + o.slice_luts,
+            lut_ff_pairs: self.lut_ff_pairs + o.lut_ff_pairs,
+            bonded_iobs: self.bonded_iobs + o.bonded_iobs,
+            carry_cells: self.carry_cells + o.carry_cells,
+            slices: self.slices + o.slices,
+        }
+    }
+}
+
+impl Mul<u64> for ResourceReport {
+    type Output = ResourceReport;
+    /// Hierarchical accounting: `report * k` = k instances of the module
+    /// (the convention behind the paper's exact `n³ ×` linearity).
+    fn mul(self, k: u64) -> ResourceReport {
+        ResourceReport {
+            slice_registers: self.slice_registers * k,
+            slice_luts: self.slice_luts * k,
+            lut_ff_pairs: self.lut_ff_pairs * k,
+            bonded_iobs: self.bonded_iobs * k,
+            carry_cells: self.carry_cells * k,
+            slices: self.slices * k,
+        }
+    }
+}
+
+impl fmt::Display for ResourceReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "regs={} luts={} lutff_pairs={} iobs={} carry={} slices={}",
+            self.slice_registers,
+            self.slice_luts,
+            self.lut_ff_pairs,
+            self.bonded_iobs,
+            self.carry_cells,
+            self.slices
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let r = ResourceReport {
+            slice_registers: 10,
+            slice_luts: 20,
+            lut_ff_pairs: 5,
+            bonded_iobs: 65,
+            carry_cells: 8,
+            slices: 6,
+        };
+        let x = r * 27 + r;
+        assert_eq!(x.slice_luts, 20 * 28);
+        assert_eq!(x.bonded_iobs, 65 * 28);
+    }
+}

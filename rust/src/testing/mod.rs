@@ -1,0 +1,135 @@
+//! Property-testing micro-framework (proptest is unavailable offline —
+//! DESIGN.md §2).
+//!
+//! A deterministic xorshift PRNG, value generators, and a `forall` runner
+//! that reports the failing seed so any counterexample is reproducible
+//! with `TestRng::new(seed)`.
+
+/// Deterministic xorshift64* PRNG.
+#[derive(Clone, Debug)]
+pub struct TestRng {
+    state: u64,
+}
+
+impl TestRng {
+    /// Seeded RNG (seed 0 is remapped).
+    pub fn new(seed: u64) -> Self {
+        TestRng {
+            state: seed.max(1).wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1,
+        }
+    }
+
+    /// Next raw u64.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state ^= self.state << 13;
+        self.state ^= self.state >> 7;
+        self.state ^= self.state << 17;
+        self.state.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform in `[0, bound)`.
+    pub fn below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0);
+        self.next_u64() % bound
+    }
+
+    /// Uniform usize in `[lo, hi]`.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Signed value in `[-mag, mag]`.
+    pub fn signed(&mut self, mag: i64) -> i64 {
+        self.below((2 * mag + 1) as u64) as i64 - mag
+    }
+
+    /// Random bool.
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// Vector of signed values.
+    pub fn signed_vec(&mut self, len: usize, mag: i64) -> Vec<i64> {
+        (0..len).map(|_| self.signed(mag)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.below(items.len() as u64) as usize]
+    }
+}
+
+/// Run `prop` for `cases` seeds; panic with the failing seed on the first
+/// counterexample (re-run that seed to reproduce).
+pub fn forall(name: &str, cases: u64, mut prop: impl FnMut(&mut TestRng) -> std::result::Result<(), String>) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = TestRng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert-eq helper that produces `Result` for use inside [`forall`].
+#[macro_export]
+macro_rules! prop_eq {
+    ($a:expr, $b:expr, $($ctx:tt)*) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!("{} != {} ({:?} vs {:?})", stringify!($a), stringify!($b),
+                a, b) + " | " + &format!($($ctx)*));
+        }
+    }};
+}
+
+/// Assert helper producing `Result` for [`forall`].
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($ctx:tt)*) => {
+        if !$cond {
+            return Err(format!("assertion {} failed | {}", stringify!($cond), format!($($ctx)*)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_deterministic() {
+        let mut a = TestRng::new(5);
+        let mut b = TestRng::new(5);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = TestRng::new(9);
+        for _ in 0..1000 {
+            let v = r.range(3, 7);
+            assert!((3..=7).contains(&v));
+            let s = r.signed(10);
+            assert!((-10..=10).contains(&s));
+        }
+    }
+
+    #[test]
+    fn forall_passes() {
+        forall("addition commutes", 50, |rng| {
+            let (a, b) = (rng.signed(1000), rng.signed(1000));
+            prop_eq!(a + b, b + a, "a={a} b={b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn forall_reports_seed() {
+        forall("always fails", 5, |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,153 @@
+//! Coordinator invariants: completeness (no request lost or duplicated),
+//! batch bounds, correctness under concurrency, graceful shutdown.
+
+use kom_accel::cnn::networks::{Network, NetworkInstance, NetworkKind};
+use kom_accel::cnn::Tensor;
+use kom_accel::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use std::collections::HashSet;
+use std::time::Duration;
+
+fn tiny() -> NetworkInstance {
+    NetworkInstance::random(Network::build(NetworkKind::Tiny), 42).unwrap()
+}
+
+fn cfg(workers: usize, max_batch: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        workers,
+        batch: BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_micros(300),
+        },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn batch_sizes_never_exceed_policy() {
+    let inst = tiny();
+    for max_batch in [1usize, 3, 8] {
+        let coord = Coordinator::start(cfg(2, max_batch), &inst).unwrap();
+        let rxs: Vec<_> = (0..40)
+            .map(|i| coord.submit(Tensor::random(vec![1, 16, 16], 127, i)).unwrap())
+            .collect();
+        for (_, rx) in rxs {
+            let resp = rx.recv().unwrap();
+            assert!(
+                resp.batch_size <= max_batch,
+                "batch {} > policy {max_batch}",
+                resp.batch_size
+            );
+        }
+        coord.shutdown();
+    }
+}
+
+#[test]
+fn completeness_under_concurrent_submitters() {
+    let inst = tiny();
+    let coord = std::sync::Arc::new(Coordinator::start(cfg(4, 8), &inst).unwrap());
+    let mut joins = Vec::new();
+    let per_thread = 16usize;
+    let threads = 4usize;
+    for t in 0..threads {
+        let coord = std::sync::Arc::clone(&coord);
+        joins.push(std::thread::spawn(move || {
+            let mut ids = Vec::new();
+            for i in 0..per_thread {
+                let (id, rx) = coord
+                    .submit(Tensor::random(vec![1, 16, 16], 127, (t * 1000 + i) as u64))
+                    .unwrap();
+                let resp = rx.recv().expect("response");
+                assert_eq!(resp.id, id);
+                ids.push(resp.id);
+            }
+            ids
+        }));
+    }
+    let mut all = HashSet::new();
+    for j in joins {
+        for id in j.join().unwrap() {
+            assert!(all.insert(id), "duplicate id {id}");
+        }
+    }
+    assert_eq!(all.len(), threads * per_thread);
+    let coord = std::sync::Arc::try_unwrap(coord).ok().expect("sole owner");
+    let stats = coord.shutdown();
+    assert_eq!(stats.count(), threads * per_thread);
+}
+
+#[test]
+fn responses_match_reference_regardless_of_routing() {
+    let inst = tiny();
+    let coord = Coordinator::start(cfg(4, 4), &inst).unwrap();
+    let inputs: Vec<Tensor> = (0..24)
+        .map(|i| Tensor::random(vec![1, 16, 16], 127, 500 + i))
+        .collect();
+    let rxs: Vec<_> = inputs
+        .iter()
+        .map(|t| coord.submit(t.clone()).unwrap())
+        .collect();
+    for ((_, rx), input) in rxs.into_iter().zip(&inputs) {
+        let resp = rx.recv().unwrap();
+        let want = inst.forward_ref(input).unwrap();
+        assert_eq!(resp.logits, want.data);
+        assert!(resp.worker < 4);
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn shutdown_drains_inflight_work() {
+    let inst = tiny();
+    let coord = Coordinator::start(cfg(1, 8), &inst).unwrap();
+    let rxs: Vec<_> = (0..20)
+        .map(|i| coord.submit(Tensor::random(vec![1, 16, 16], 127, i)).unwrap())
+        .collect();
+    // shut down immediately: all previously submitted requests must still
+    // be answered (drain semantics)
+    let stats = coord.shutdown();
+    let mut answered = 0;
+    for (_, rx) in rxs {
+        if rx.recv().is_ok() {
+            answered += 1;
+        }
+    }
+    assert_eq!(answered, 20, "drain must answer everything submitted");
+    assert_eq!(stats.count(), 20);
+}
+
+#[test]
+fn single_worker_preserves_submission_order() {
+    // with one worker and batch=1, responses arrive in submission order
+    let inst = tiny();
+    let coord = Coordinator::start(cfg(1, 1), &inst).unwrap();
+    let rxs: Vec<_> = (0..10)
+        .map(|i| coord.submit(Tensor::random(vec![1, 16, 16], 127, i)).unwrap())
+        .collect();
+    let mut last_id = None;
+    for (id, rx) in rxs {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.id, id);
+        if let Some(prev) = last_id {
+            assert!(resp.id > prev, "order violated: {} after {prev}", resp.id);
+        }
+        last_id = Some(resp.id);
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn stats_percentiles_nondecreasing() {
+    let inst = tiny();
+    let coord = Coordinator::start(cfg(2, 8), &inst).unwrap();
+    let rxs: Vec<_> = (0..32)
+        .map(|i| coord.submit(Tensor::random(vec![1, 16, 16], 127, i)).unwrap())
+        .collect();
+    for (_, rx) in rxs {
+        rx.recv().unwrap();
+    }
+    let stats = coord.shutdown();
+    let l = stats.latency();
+    assert!(l.p50_us <= l.p95_us && l.p95_us <= l.p99_us && l.p99_us <= l.max_us);
+    assert!(stats.mean_batch() >= 1.0);
+}

@@ -1,0 +1,109 @@
+//! Cross-layer golden tests: the JAX/Pallas AOT artifacts executed through
+//! PJRT must agree bit-exactly with the rust substrates. These tests are
+//! artifact-gated: they skip (pass with a notice) when `make artifacts`
+//! has not been run, so `cargo test` works from a clean tree.
+
+use kom_accel::cnn::networks::{Network, NetworkInstance, NetworkKind};
+use kom_accel::cnn::tensor::{self, Tensor};
+use kom_accel::runtime::{golden, ArtifactStore, I32Tensor, Runtime};
+use kom_accel::systolic::fir::FirChain;
+use std::path::Path;
+
+fn store() -> Option<ArtifactStore> {
+    match ArtifactStore::open(Path::new("artifacts")) {
+        Ok(s) if s.path("tiny_cnn").exists() => Some(s),
+        _ => {
+            eprintln!("skipping golden test: artifacts not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn three_way_tiny_cnn_golden() {
+    let Some(store) = store() else { return };
+    for (seed, input_seed) in [(42u64, 7u64), (1, 2), (999, 31337)] {
+        let report = golden::run_tiny_golden(&store, seed, input_seed).unwrap();
+        assert_eq!(report.reference, report.systolic, "seed {seed}");
+        assert_eq!(report.reference, report.xla, "seed {seed}");
+        assert!(report.metrics.total_cycles() > 0);
+    }
+}
+
+#[test]
+fn kom_matmul_artifact_matches_host() {
+    let Some(store) = store() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let module = rt.load_hlo_text(&store.path("kom_matmul_64")).unwrap();
+    let a = Tensor::random(vec![64, 64], 1 << 14, 5);
+    let b = Tensor::random(vec![64, 64], 1 << 14, 6);
+    let args = [
+        I32Tensor::from_i64(&a.data, a.shape.clone()).unwrap(),
+        I32Tensor::from_i64(&b.data, b.shape.clone()).unwrap(),
+    ];
+    let got = module.run_i32(&args).unwrap();
+    // host reference matmul with the artifact's wrapping-int32 accumulator
+    // semantics (XLA s32 arithmetic is mod 2^32)
+    for i in 0..64 {
+        for j in 0..64 {
+            let mut acc = 0i32;
+            for k in 0..64 {
+                acc = acc
+                    .wrapping_add((a.data[i * 64 + k] as i32).wrapping_mul(b.data[k * 64 + j] as i32));
+            }
+            assert_eq!(got[i * 64 + j], acc, "({i},{j})");
+        }
+    }
+}
+
+#[test]
+fn conv3x3_artifact_matches_engine() {
+    let Some(store) = store() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let module = rt.load_hlo_text(&store.path("conv3x3")).unwrap();
+    let x = Tensor::random(vec![1, 16, 16], 127, 11);
+    let w = Tensor::random(vec![8, 1, 3, 3], 24, 12);
+    let args = [
+        I32Tensor::from_i64(&x.data, x.shape.clone()).unwrap(),
+        I32Tensor::from_i64(&w.data, w.shape.clone()).unwrap(),
+    ];
+    let got: Vec<i64> = module.run_i32(&args).unwrap().into_iter().map(i64::from).collect();
+    // the artifact applies requant(>>8) + relu, mirroring the engine
+    let want = tensor::conv2d_ref(&x, &w, 1, 1, true, 8).unwrap();
+    assert_eq!(got, want.data);
+}
+
+#[test]
+fn fir_artifact_matches_systolic_chain() {
+    let Some(store) = store() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let module = rt.load_hlo_text(&store.path("fir8")).unwrap();
+    let taps: Vec<i64> = vec![3, -1, 4, 1, -5, 9, 2, -6];
+    let signal: Vec<i64> = (0..64).map(|i| ((i * 37) % 101) as i64 - 50).collect();
+    let args = [
+        I32Tensor::from_i64(&taps, vec![8]).unwrap(),
+        I32Tensor::from_i64(&signal, vec![64]).unwrap(),
+    ];
+    let got: Vec<i64> = module.run_i32(&args).unwrap().into_iter().map(i64::from).collect();
+    let want = FirChain::new(&taps).filter(&signal);
+    assert_eq!(got, want, "XLA FIR == systolic FIR chain");
+}
+
+#[test]
+fn artifact_accepts_every_weight_set() {
+    // one artifact serves all weights (weights are runtime args)
+    let Some(store) = store() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let module = rt.load_hlo_text(&store.path("tiny_cnn")).unwrap();
+    let input = Tensor::random(vec![1, 16, 16], 127, 3);
+    let mut outs = Vec::new();
+    for seed in [10u64, 20] {
+        let inst = NetworkInstance::random(Network::build(NetworkKind::Tiny), seed).unwrap();
+        let args = golden::tiny_args(&inst, &input).unwrap();
+        let xla: Vec<i64> = module.run_i32(&args).unwrap().into_iter().map(i64::from).collect();
+        let want = inst.forward_ref(&input).unwrap();
+        assert_eq!(xla, want.data, "seed {seed}");
+        outs.push(xla);
+    }
+    assert_ne!(outs[0], outs[1], "different weights, different logits");
+}

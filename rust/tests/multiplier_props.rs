@@ -1,0 +1,128 @@
+//! Property tests over the multiplier generators: every architecture must
+//! compute its reference product for random widths and operands, survive
+//! simplification, pipelining and registered-I/O unchanged, and stream
+//! correctly when pipelined.
+
+use kom_accel::bits::truncate;
+use kom_accel::multipliers::{generate, MultKind, MultiplierSpec};
+use kom_accel::netlist::{pipeline_stages, register_io};
+use kom_accel::sim::{run_comb, run_pipelined};
+use kom_accel::techmap::simplify;
+use kom_accel::testing::{forall, TestRng};
+
+fn rand_operand(rng: &mut TestRng, width: u32) -> u128 {
+    truncate(rng.next_u64() as u128, width)
+}
+
+#[test]
+fn every_architecture_multiplies_random_widths() {
+    forall("mult == reference for random width/operands", 60, |rng| {
+        let kind = *rng.choose(&MultKind::ALL);
+        let width = match kind {
+            MultKind::Booth => *rng.choose(&[4u32, 6, 8, 12, 16, 20, 32]),
+            _ => rng.range(2, 34) as u32,
+        };
+        let m = generate(MultiplierSpec::comb(kind, width))
+            .map_err(|e| format!("generate {kind:?} w{width}: {e}"))?;
+        for _ in 0..4 {
+            let x = rand_operand(rng, width);
+            let y = rand_operand(rng, width);
+            let got = run_comb(&m.netlist, &[("a", x), ("b", y)], "p")
+                .map_err(|e| e.to_string())?;
+            let want = m.reference(x, y);
+            if got != want {
+                return Err(format!("{kind:?} w={width}: {x}*{y} = {got} want {want}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn simplify_preserves_multiplication() {
+    forall("simplify(mult) == mult", 25, |rng| {
+        let kind = *rng.choose(&[MultKind::KaratsubaOfman, MultKind::Dadda, MultKind::BaughWooley]);
+        let width = *rng.choose(&[4u32, 8, 12, 16]);
+        let m = generate(MultiplierSpec::comb(kind, width)).map_err(|e| e.to_string())?;
+        let s = simplify(&m.netlist);
+        for _ in 0..4 {
+            let x = rand_operand(rng, width);
+            let y = rand_operand(rng, width);
+            let a = run_comb(&m.netlist, &[("a", x), ("b", y)], "p").map_err(|e| e.to_string())?;
+            let b = run_comb(&s, &[("a", x), ("b", y)], "p").map_err(|e| e.to_string())?;
+            if a != b {
+                return Err(format!("{kind:?} w{width} {x}*{y}: {a} != simplified {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pipelining_preserves_streams() {
+    forall("pipelined mult streams correctly", 15, |rng| {
+        let width = *rng.choose(&[8u32, 16, 24]);
+        let stages = rng.range(2, 6) as u32;
+        let comb = generate(MultiplierSpec::comb(MultKind::KaratsubaOfman, width))
+            .map_err(|e| e.to_string())?;
+        let p = pipeline_stages(&comb.netlist, stages);
+        let pairs: Vec<(u128, u128)> = (0..8)
+            .map(|_| (rand_operand(rng, width), rand_operand(rng, width)))
+            .collect();
+        let stream: Vec<Vec<(&str, u128)>> = pairs
+            .iter()
+            .map(|&(x, y)| vec![("a", x), ("b", y)])
+            .collect();
+        let outs = run_pipelined(&p.netlist, &stream, "p", p.latency).map_err(|e| e.to_string())?;
+        for (i, &(x, y)) in pairs.iter().enumerate() {
+            if outs[i] != x * y {
+                return Err(format!(
+                    "w{width} s{stages} lane {i}: {x}*{y} = {} want {}",
+                    outs[i],
+                    x * y
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn register_io_adds_two_cycles_only() {
+    forall("register_io semantics", 10, |rng| {
+        let width = *rng.choose(&[4u32, 8]);
+        let comb = generate(MultiplierSpec::comb(MultKind::Dadda, width)).map_err(|e| e.to_string())?;
+        let r = register_io(&comb.netlist);
+        if r.latency != 2 {
+            return Err(format!("latency {}", r.latency));
+        }
+        let x = rand_operand(rng, width);
+        let y = rand_operand(rng, width);
+        let stream = vec![vec![("a", x), ("b", y)]];
+        let outs = run_pipelined(&r.netlist, &stream, "p", r.latency).map_err(|e| e.to_string())?;
+        if outs[0] != x * y {
+            return Err(format!("{x}*{y} = {} want {}", outs[0], x * y));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn signed_unsigned_reference_split() {
+    // architecture signedness must match the reference model used
+    for kind in MultKind::ALL {
+        let m = generate(MultiplierSpec::comb(kind, 8)).unwrap();
+        assert_eq!(m.signed, kind.is_signed(), "{kind:?}");
+        // -1 * -1: unsigned sees 255*255
+        let got = run_comb(&m.netlist, &[("a", 0xFF), ("b", 0xFF)], "p").unwrap();
+        let want = if m.signed { 1 } else { 255 * 255 };
+        assert_eq!(got, want, "{kind:?} 0xFF*0xFF");
+    }
+}
+
+#[test]
+fn width_bounds_rejected() {
+    assert!(generate(MultiplierSpec::comb(MultKind::Dadda, 1)).is_err());
+    assert!(generate(MultiplierSpec::comb(MultKind::Dadda, 65)).is_err());
+    assert!(generate(MultiplierSpec::comb(MultKind::Dadda, 64)).is_ok());
+}

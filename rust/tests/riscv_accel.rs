@@ -1,0 +1,202 @@
+//! RISC-V ISS + accelerator SoC integration, including failure injection.
+
+use kom_accel::accel::soc::{map, Soc, SocConfig};
+use kom_accel::accel::{Driver, LayerDesc};
+use kom_accel::cnn::networks::{Network, NetworkInstance, NetworkKind};
+use kom_accel::cnn::Tensor;
+use kom_accel::riscv::asm::{reg::*, Assembler};
+use kom_accel::riscv::cpu::{Bus, Cpu, StopReason};
+use kom_accel::systolic::PoolKind;
+use kom_accel::testing::{forall, TestRng};
+
+fn small_soc() -> SocConfig {
+    SocConfig {
+        dram_words: 1 << 18,
+        spad_words: 1 << 12,
+        ctrl_ram_words: 4096,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn fibonacci_on_the_control_cpu() {
+    // compute fib(20) iteratively, store into control RAM, read back
+    let mut a = Assembler::new();
+    a.li(T0, 0); // fib(i)
+    a.li(T1, 1); // fib(i+1)
+    a.li(T2, 20); // counter
+    a.label("loop");
+    a.beq(T2, ZERO, "done");
+    a.add(A0, T0, T1);
+    a.add(T0, ZERO, T1);
+    a.add(T1, ZERO, A0);
+    a.addi(T2, T2, -1);
+    a.j("loop");
+    a.label("done");
+    a.li(A1, map::RAM_BASE as i32);
+    a.sw(T0, A1, 0);
+    a.ecall();
+    let mut soc = Soc::new(small_soc());
+    let mut cpu = Cpu::new(a.assemble().unwrap(), 0);
+    assert_eq!(cpu.run(&mut soc, 100_000).unwrap(), StopReason::Ecall);
+    assert_eq!(soc.load(map::RAM_BASE).unwrap(), 6765, "fib(20)");
+}
+
+#[test]
+fn cpu_sequences_multi_layer_network() {
+    // the whole §III story driven end-to-end from RISC-V
+    let inst = NetworkInstance::random(Network::build(NetworkKind::VggMini), 7).unwrap();
+    let mut drv = Driver::new(SocConfig {
+        dram_words: 1 << 21,
+        spad_words: 1 << 14,
+        ..Default::default()
+    });
+    let (descs, in_addr, out_addr) = inst.deploy(&mut drv).unwrap();
+    let input = Tensor::random(vec![3, 32, 32], 127, 9);
+    drv.write_region(in_addr, &input.data).unwrap();
+    let m = drv.run_table(&descs).unwrap();
+    assert_eq!(m.layers as usize, descs.len());
+    let want = inst.forward_ref(&input).unwrap();
+    let got = drv.read_region(out_addr, want.len()).unwrap();
+    assert_eq!(got, want.data, "VGG-mini through RISC-V-sequenced SoC");
+    assert!(m.cpu_cycles > 0 && m.compute_cycles > 0 && m.mem_cycles > 0);
+}
+
+#[test]
+fn bad_descriptor_opcode_faults_cleanly() {
+    let mut soc = Soc::new(small_soc());
+    // corrupt descriptor: opcode 77
+    soc.ctrl_ram[0] = 77;
+    let err = soc.store(map::R_DESC, map::RAM_BASE).unwrap_err();
+    assert!(err.to_string().contains("opcode"));
+}
+
+#[test]
+fn dram_oob_descriptor_faults() {
+    let mut soc = Soc::new(small_soc());
+    let desc = LayerDesc::Fir {
+        taps_addr: u32::MAX - 10, // way past DRAM
+        n_taps: 4,
+        in_addr: 0,
+        n: 8,
+        out_addr: 0,
+    };
+    soc.write_descriptors(0, &[desc]).unwrap();
+    assert!(soc.store(map::R_DESC, map::RAM_BASE).is_err());
+}
+
+#[test]
+fn misaligned_access_faults() {
+    let mut a = Assembler::new();
+    a.li(A0, (map::RAM_BASE + 2) as i32); // misaligned
+    a.lw(A1, A0, 0);
+    a.ecall();
+    let mut soc = Soc::new(small_soc());
+    let mut cpu = Cpu::new(a.assemble().unwrap(), 0);
+    let err = cpu.run(&mut soc, 1000).unwrap_err();
+    assert!(err.to_string().contains("misaligned"));
+}
+
+#[test]
+fn runaway_control_program_hits_budget() {
+    let mut a = Assembler::new();
+    a.label("spin");
+    a.j("spin");
+    let mut soc = Soc::new(small_soc());
+    let mut cpu = Cpu::new(a.assemble().unwrap(), 0);
+    assert_eq!(cpu.run(&mut soc, 5_000).unwrap(), StopReason::Budget);
+    assert!(cpu.cycles >= 5_000);
+}
+
+#[test]
+fn unmapped_mmio_faults() {
+    let mut a = Assembler::new();
+    a.li(A0, 0x2000_0000u32 as i32); // hole in the memory map
+    a.lw(A1, A0, 0);
+    a.ecall();
+    let mut soc = Soc::new(small_soc());
+    let mut cpu = Cpu::new(a.assemble().unwrap(), 0);
+    assert!(cpu.run(&mut soc, 100).is_err());
+}
+
+#[test]
+fn alu_reference_properties() {
+    forall("ADD/SUB/XOR/SLT vs rust semantics", 40, |rng| {
+        let x = rng.next_u64() as u32;
+        let y = rng.next_u64() as u32;
+        let mut a = Assembler::new();
+        a.li(A0, x as i32);
+        a.li(A1, y as i32);
+        a.add(A2, A0, A1);
+        a.sub(A3, A0, A1);
+        a.mul(A4, A0, A1);
+        a.ecall();
+        let mut soc = Soc::new(small_soc());
+        let mut cpu = Cpu::new(a.assemble().map_err(|e| e.to_string())?, 0);
+        cpu.run(&mut soc, 1000).map_err(|e| e.to_string())?;
+        if cpu.x[A2 as usize] != x.wrapping_add(y) {
+            return Err(format!("add {x} {y}"));
+        }
+        if cpu.x[A3 as usize] != x.wrapping_sub(y) {
+            return Err(format!("sub {x} {y}"));
+        }
+        if cpu.x[A4 as usize] != x.wrapping_mul(y) {
+            return Err(format!("mul {x} {y}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn layer_counter_mmio_visible_to_cpu() {
+    // control program reads LAYERS register after running one layer
+    let mut soc = Soc::new(small_soc());
+    soc.dram.preload(0, &[1, 2]).unwrap();
+    soc.dram.preload(10, &[5, 5, 5, 5]).unwrap();
+    soc.write_descriptors(
+        0,
+        &[LayerDesc::Fir {
+            taps_addr: 0,
+            n_taps: 2,
+            in_addr: 10,
+            n: 4,
+            out_addr: 100,
+        }],
+    )
+    .unwrap();
+    let mut a = Assembler::new();
+    a.li(A0, map::R_DESC as i32);
+    a.li(A1, map::RAM_BASE as i32);
+    a.sw(A1, A0, 0); // execute layer
+    a.li(A2, map::R_LAYERS as i32);
+    a.lw(A3, A2, 0); // read layer counter
+    a.li(A4, map::RAM_BASE as i32);
+    a.sw(A3, A4, 64); // store it for the host
+    a.ecall();
+    let mut cpu = Cpu::new(a.assemble().unwrap(), 0);
+    cpu.run(&mut soc, 10_000).unwrap();
+    assert_eq!(soc.load(map::RAM_BASE + 64).unwrap(), 1);
+}
+
+#[test]
+fn pooling_descriptor_through_soc() {
+    let mut soc = Soc::new(small_soc());
+    let img: Vec<i64> = (0..16).collect();
+    soc.dram.preload(0, &img).unwrap();
+    soc.write_descriptors(
+        0,
+        &[LayerDesc::Pool {
+            k: 2,
+            stride: 2,
+            kind: PoolKind::Max,
+            in_addr: 0,
+            c: 1,
+            h: 4,
+            w: 4,
+            out_addr: 64,
+        }],
+    )
+    .unwrap();
+    soc.store(map::R_DESC, map::RAM_BASE).unwrap();
+    assert_eq!(soc.dram.read_burst(64, 4).unwrap(), vec![5, 7, 13, 15]);
+}

@@ -1,0 +1,195 @@
+//! Systolic engine properties: every mode ≡ its golden reference on random
+//! geometries; cycle model sanity; reconfiguration state machine.
+
+use kom_accel::systolic::conv2d::{conv2d, conv2d_reference};
+use kom_accel::systolic::fir::{fir_reference, FirChain};
+use kom_accel::systolic::pool::pool2d;
+use kom_accel::systolic::{Engine, EngineConfig, EngineMode, PoolKind};
+use kom_accel::testing::{forall, TestRng};
+
+#[test]
+fn conv2d_equals_reference_random_geometry() {
+    forall("systolic conv2d == reference", 30, |rng| {
+        let cin = rng.range(1, 4);
+        let cout = rng.range(1, 4);
+        let k = *rng.choose(&[1usize, 3, 5]);
+        let stride = rng.range(1, 2);
+        let pad = rng.range(0, k / 2);
+        let h = rng.range(k.max(3), 10);
+        let w = rng.range(k.max(3), 10);
+        let input = rng.signed_vec(cin * h * w, 100);
+        let weights = rng.signed_vec(cout * cin * k * k, 20);
+        let cells = rng.range(4, 128);
+        let got = conv2d(&input, cin, h, w, &weights, cout, k, k, stride, pad, cells)
+            .map_err(|e| e.to_string())?;
+        let (want, ho, wo) =
+            conv2d_reference(&input, cin, h, w, &weights, cout, k, k, stride, pad);
+        if (got.ho, got.wo) != (ho, wo) {
+            return Err(format!("shape ({},{}) want ({ho},{wo})", got.ho, got.wo));
+        }
+        if got.data != want {
+            return Err(format!(
+                "conv mismatch cin={cin} cout={cout} k={k} s={stride} p={pad} {h}x{w}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pool_windows_cover_all_elements() {
+    forall("pool == brute force", 30, |rng| {
+        let c = rng.range(1, 3);
+        let k = rng.range(1, 4);
+        let stride = rng.range(1, 3);
+        let h = rng.range(k, 12);
+        let w = rng.range(k, 12);
+        let kind = if rng.bool() { PoolKind::Max } else { PoolKind::Avg };
+        let input = rng.signed_vec(c * h * w, 1000);
+        let r = pool2d(&input, c, h, w, k, stride, kind, 16).map_err(|e| e.to_string())?;
+        for ch in 0..c {
+            for oy in 0..r.ho {
+                for ox in 0..r.wo {
+                    let mut max = i64::MIN;
+                    let mut sum = 0i64;
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let v = input[ch * h * w + (oy * stride + ky) * w + (ox * stride + kx)];
+                            max = max.max(v);
+                            sum += v;
+                        }
+                    }
+                    let want = match kind {
+                        PoolKind::Max => max,
+                        PoolKind::Avg => sum / (k * k) as i64,
+                    };
+                    let got = r.data[ch * r.ho * r.wo + oy * r.wo + ox];
+                    if got != want {
+                        return Err(format!("pool {kind:?} at ({ch},{oy},{ox}): {got} != {want}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fir_linearity_and_shift_invariance() {
+    forall("FIR is linear and shift-invariant", 20, |rng| {
+        let ntaps = rng.range(2, 8);
+        let taps = rng.signed_vec(ntaps, 10);
+        let n = rng.range(10, 30);
+        let x1 = rng.signed_vec(n, 50);
+        let x2 = rng.signed_vec(n, 50);
+        // linearity
+        let sum: Vec<i64> = x1.iter().zip(&x2).map(|(a, b)| a + b).collect();
+        let y1 = FirChain::new(&taps).filter(&x1);
+        let y2 = FirChain::new(&taps).filter(&x2);
+        let ysum = FirChain::new(&taps).filter(&sum);
+        for i in 0..n {
+            if ysum[i] != y1[i] + y2[i] {
+                return Err(format!("linearity at {i}"));
+            }
+        }
+        // impulse response equals taps
+        let mut imp = vec![0i64; taps.len() + 2];
+        imp[0] = 1;
+        let h = FirChain::new(&taps).filter(&imp);
+        if h[..taps.len()] != taps[..] {
+            return Err("impulse response != taps".into());
+        }
+        // matches the direct reference
+        if FirChain::new(&taps).filter(&x1) != fir_reference(&taps, &x1) {
+            return Err("reference mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn engine_state_machine() {
+    let mut e = Engine::new(32);
+    // run before configure fails
+    assert!(e.run(&[1, 2], &[2]).is_err());
+    // invalid config rejected, engine stays unconfigured
+    assert!(e
+        .reconfigure(EngineConfig {
+            mode: EngineMode::Fir { taps: vec![] },
+            relu: false,
+            out_shift: 0,
+        })
+        .is_err());
+    assert!(e.config().is_none());
+    // valid config works
+    e.reconfigure(EngineConfig {
+        mode: EngineMode::Fir { taps: vec![2] },
+        relu: false,
+        out_shift: 0,
+    })
+    .unwrap();
+    let out = e.run(&[1, 2, 3], &[3]).unwrap();
+    assert_eq!(out.data, vec![2, 4, 6]);
+    // wrong shape rejected after valid config
+    e.reconfigure(EngineConfig {
+        mode: EngineMode::Conv2d {
+            cout: 1,
+            cin: 2,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+            weights: vec![0; 18],
+        },
+        relu: false,
+        out_shift: 0,
+    })
+    .unwrap();
+    assert!(e.run(&[0; 9], &[1, 3, 3]).is_err(), "channel mismatch");
+}
+
+#[test]
+fn cycle_model_monotone_in_work() {
+    forall("more output pixels, more cycles", 10, |rng| {
+        let k = 3;
+        let small_h = rng.range(6, 8);
+        let big_h = small_h * 2;
+        let w = 8;
+        let mk = |h: usize, rng: &mut TestRng| {
+            let input = rng.signed_vec(h * w, 10);
+            let weights = rng.signed_vec(k * k, 5);
+            conv2d(&input, 1, h, w, &weights, 1, k, k, 1, 0, 16)
+                .map(|r| r.cycles)
+                .map_err(|e| e.to_string())
+        };
+        let c_small = mk(small_h, rng)?;
+        let c_big = mk(big_h, rng)?;
+        if c_big <= c_small {
+            return Err(format!("cycles {c_big} <= {c_small}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn utilization_in_unit_range() {
+    let mut e = Engine::new(64);
+    e.reconfigure(EngineConfig {
+        mode: EngineMode::Conv2d {
+            cout: 4,
+            cin: 2,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+            weights: vec![1; 72],
+        },
+        relu: false,
+        out_shift: 0,
+    })
+    .unwrap();
+    let input: Vec<i64> = (0..2 * 12 * 12).map(|i| i as i64 % 7).collect();
+    e.run(&input, &[2, 12, 12]).unwrap();
+    let u = e.stats.utilization(64);
+    assert!(u > 0.0 && u <= 1.0, "utilization {u}");
+}

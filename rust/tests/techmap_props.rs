@@ -1,0 +1,137 @@
+//! Technology-mapper / STA / power invariants.
+
+use kom_accel::multipliers::{generate, MultKind, MultiplierSpec};
+use kom_accel::netlist::{Driver, NetId};
+use kom_accel::testing::{forall, TestRng};
+use kom_accel::{power, sta, techmap};
+
+fn random_spec(rng: &mut TestRng) -> MultiplierSpec {
+    let kind = *rng.choose(&[
+        MultKind::KaratsubaOfman,
+        MultKind::Dadda,
+        MultKind::Wallace,
+        MultKind::Array,
+    ]);
+    let width = *rng.choose(&[4u32, 8, 12, 16]);
+    MultiplierSpec::comb(kind, width)
+}
+
+#[test]
+fn lut_cuts_never_exceed_six_inputs() {
+    forall("every LUT cut has <= 6 leaves", 20, |rng| {
+        let m = generate(random_spec(rng)).map_err(|e| e.to_string())?;
+        let mapped = techmap::map(&m.netlist).map_err(|e| e.to_string())?;
+        for (i, cut) in mapped.mapping.lut_of.iter().enumerate() {
+            if let Some(c) = cut {
+                if c.len() > 6 {
+                    return Err(format!("net {i}: cut of {} leaves", c.len()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn every_live_gate_covered_exactly_once() {
+    forall("LUT covering partitions live comb gates", 15, |rng| {
+        let m = generate(random_spec(rng)).map_err(|e| e.to_string())?;
+        let mapped = techmap::map(&m.netlist).map_err(|e| e.to_string())?;
+        let nl = &mapped.netlist;
+        // every net is either input, const, dff, a LUT root, or absorbed
+        // inside exactly one LUT (reachable from some root's cone)
+        let mut lut_roots = 0;
+        for (id, d) in nl.iter() {
+            if let Driver::Gate(g) = d {
+                if g.is_comb() && !matches!(g, kom_accel::netlist::Gate::Const(_)) {
+                    if mapped.mapping.is_lut_root(id) {
+                        lut_roots += 1;
+                    }
+                }
+            }
+        }
+        if lut_roots != mapped.mapping.luts {
+            return Err(format!("{lut_roots} roots vs {} counted", mapped.mapping.luts));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn report_counters_consistent() {
+    forall("report internal consistency", 15, |rng| {
+        let m = generate(random_spec(rng)).map_err(|e| e.to_string())?;
+        let mapped = techmap::map(&m.netlist).map_err(|e| e.to_string())?;
+        let r = mapped.report;
+        if r.lut_ff_pairs > r.slice_luts {
+            return Err(format!("pairs {} > luts {}", r.lut_ff_pairs, r.slice_luts));
+        }
+        if r.lut_ff_pairs > r.slice_registers {
+            return Err(format!("pairs {} > regs {}", r.lut_ff_pairs, r.slice_registers));
+        }
+        if r.slices * 4 < r.slice_luts {
+            return Err(format!("slices {} can't hold {} luts", r.slices, r.slice_luts));
+        }
+        if r.carry_cells > r.slice_luts {
+            return Err("carry cells exceed LUTs".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn deeper_pipeline_never_slower_per_stage() {
+    // monotonicity: more stages => stage CP no larger (within model noise)
+    let comb = generate(MultiplierSpec::comb(MultKind::KaratsubaOfman, 16)).unwrap();
+    let base = sta::analyze(&techmap::map(&comb.netlist).unwrap()).critical_path_ns;
+    let mut prev = base;
+    for stages in [2u32, 4, 8] {
+        let p = generate(MultiplierSpec::pipelined(MultKind::KaratsubaOfman, 16, stages)).unwrap();
+        let cp = sta::analyze(&techmap::map(&p.netlist).unwrap()).critical_path_ns;
+        assert!(
+            cp <= prev * 1.10,
+            "stages {stages}: {cp:.2} > prev {prev:.2} (+10% slack)"
+        );
+        prev = cp;
+    }
+    assert!(prev < base / 2.0, "8 stages should at least halve the CP");
+}
+
+#[test]
+fn power_scales_with_frequency() {
+    let m = generate(MultiplierSpec::comb(MultKind::Dadda, 16)).unwrap();
+    let mapped = techmap::map(&m.netlist).unwrap();
+    let p100 = power::estimate(&mapped, 100e6, 100).unwrap();
+    let p200 = power::estimate(&mapped, 200e6, 100).unwrap();
+    let ratio = p200.dynamic_w / p100.dynamic_w;
+    assert!((ratio - 2.0).abs() < 1e-6, "dynamic power linear in f: {ratio}");
+    assert_eq!(p100.static_w, p200.static_w, "leakage frequency-independent");
+}
+
+#[test]
+fn iob_convention_port_bits_plus_clock() {
+    forall("IOB = port bits (+1 clk if sequential)", 15, |rng| {
+        let spec = random_spec(rng);
+        let m = generate(spec).map_err(|e| e.to_string())?;
+        let mapped = techmap::map(&m.netlist).map_err(|e| e.to_string())?;
+        let want = 4 * spec.width as u64; // a + b + 2w product
+        if mapped.report.bonded_iobs != want {
+            return Err(format!(
+                "comb {spec:?}: iobs {} want {want}",
+                mapped.report.bonded_iobs
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sta_endpoint_is_a_real_net() {
+    let m = generate(MultiplierSpec::pipelined(MultKind::KaratsubaOfman, 16, 3)).unwrap();
+    let mapped = techmap::map(&m.netlist).unwrap();
+    let t = sta::analyze(&mapped);
+    let ep: Option<NetId> = t.critical_endpoint;
+    assert!(ep.is_some());
+    assert!(ep.unwrap().index() < mapped.netlist.num_nets());
+    assert!(t.critical_path_ns > 0.0);
+}
