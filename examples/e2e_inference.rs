@@ -93,11 +93,7 @@ fn main() -> kom_accel::Result<()> {
             max_batch: 8,
             ..Default::default()
         },
-        soc: SocConfig {
-            dram_words: 1 << 22,
-            spad_words: 1 << 14,
-            ..Default::default()
-        },
+        soc: SocConfig::serving(),
         clock_mhz,
     };
     let coord = Coordinator::start(cfg, &inst)?;
@@ -126,11 +122,16 @@ fn main() -> kom_accel::Result<()> {
         lat.p99_us,
         stats.mean_batch()
     );
-    let cycles_per_inf = stats.accel_cycles as f64 / dataset.len() as f64;
+    let cycles_per_inf = stats.amortized_cycles_per_request();
     println!(
-        "simulated accelerator: {:.0} cycles/inference = {:.3} ms at {clock_mhz:.0} MHz",
+        "simulated accelerator: {:.0} amortized cycles/inference = {:.3} ms at {clock_mhz:.0} MHz",
         cycles_per_inf,
         cycles_per_inf / (clock_mhz * 1e3)
+    );
+    println!(
+        "simulated accelerator: {} batched runs, {:.0} cycles/batch (weight-stationary reuse)",
+        stats.batches,
+        stats.mean_batch_cycles()
     );
     println!(
         "simulated accelerator throughput: {:.0} inferences/s/accelerator",
@@ -148,9 +149,10 @@ fn main() -> kom_accel::Result<()> {
     println!("\nsystolic == host reference on {agreement}/{} requests (bit-exact)", dataset.len());
 
     // 2. sampled responses match the XLA artifact (the L1/L2 layers)
-    match ArtifactStore::open(Path::new("artifacts")) {
-        Ok(store) => {
-            let rt = Runtime::cpu()?;
+    let xla_ready = ArtifactStore::open(Path::new("artifacts"))
+        .and_then(|store| Runtime::cpu().map(|rt| (store, rt)));
+    match xla_ready {
+        Ok((store, rt)) => {
             let module = rt.load_hlo_text(&store.path("tiny_cnn"))?;
             let mut checked = 0;
             for (img, _) in dataset.iter().step_by(37) {

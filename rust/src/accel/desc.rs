@@ -4,6 +4,14 @@
 //! u32 words in control RAM; the RISC-V control program walks the table
 //! and hands each block to the engine through MMIO. All data-plane
 //! addresses are DRAM word addresses.
+//!
+//! **Batched DMA regions:** descriptors are batch-agnostic — the batch size
+//! travels separately through the SoC's `BATCH` MMIO register (see
+//! `super::soc::map::R_BATCH`). When the batch is `n`, the `in_addr` /
+//! `out_addr` regions hold `n` images packed back to back
+//! (`n ×` [`LayerDesc::in_len`] / `n ×` [`LayerDesc::out_len`] words,
+//! image-major), and the whole batch is streamed DRAM→scratchpad as one
+//! burst sequence per layer.
 
 use crate::error::{Error, Result};
 use crate::systolic::PoolKind;
@@ -242,7 +250,20 @@ impl LayerDesc {
         })
     }
 
-    /// Output element count given the descriptor geometry.
+    /// Input element count per image given the descriptor geometry (a
+    /// batch of `n` occupies `n × in_len()` words at `in_addr`).
+    pub fn in_len(&self) -> usize {
+        match *self {
+            LayerDesc::Conv { cin, h, w, .. } => (cin * h * w) as usize,
+            LayerDesc::Pool { c, h, w, .. } => (c * h * w) as usize,
+            LayerDesc::Fc { n_in, .. } => n_in as usize,
+            LayerDesc::Fir { n, .. } => n as usize,
+            LayerDesc::End => 0,
+        }
+    }
+
+    /// Output element count per image given the descriptor geometry (a
+    /// batch of `n` occupies `n × out_len()` words at `out_addr`).
     pub fn out_len(&self) -> usize {
         match *self {
             LayerDesc::Conv {
@@ -352,5 +373,35 @@ mod tests {
         };
         // (8+2-3)/2+1 = 4
         assert_eq!(c.out_len(), 4 * 4 * 4);
+        assert_eq!(c.in_len(), 8 * 8);
+    }
+
+    #[test]
+    fn in_len_geometry() {
+        let p = LayerDesc::Pool {
+            k: 2,
+            stride: 2,
+            kind: PoolKind::Max,
+            in_addr: 0,
+            c: 3,
+            h: 8,
+            w: 8,
+            out_addr: 0,
+        };
+        assert_eq!(p.in_len(), 3 * 8 * 8);
+        assert_eq!(p.out_len(), 3 * 4 * 4);
+        let f = LayerDesc::Fc {
+            n_in: 128,
+            n_out: 10,
+            w_addr: 0,
+            b_addr: 0,
+            in_addr: 0,
+            out_addr: 0,
+            relu: false,
+            out_shift: 0,
+        };
+        assert_eq!(f.in_len(), 128);
+        assert_eq!(f.out_len(), 10);
+        assert_eq!(LayerDesc::End.in_len(), 0);
     }
 }

@@ -28,6 +28,8 @@ pub struct RunMetrics {
     pub layers: u64,
     /// MAC/reduce operations.
     pub ops: u64,
+    /// Inference requests served by this run (the batch size).
+    pub requests: u64,
 }
 
 impl RunMetrics {
@@ -56,9 +58,10 @@ pub struct Driver {
     /// The SoC (exposed for tests and metrics).
     pub soc: Soc,
     next_dram: usize,
-    /// Control-program cache keyed by descriptor-table length (the program
-    /// only depends on the layer count — EXPERIMENTS.md §Perf).
-    program_cache: std::collections::HashMap<usize, Vec<u32>>,
+    /// Control-program cache keyed by (descriptor-table length, batch) —
+    /// the program only depends on the layer count and the batch value it
+    /// pokes into the `BATCH` register (EXPERIMENTS.md §Perf).
+    program_cache: std::collections::HashMap<(usize, u32), Vec<u32>>,
 }
 
 impl Driver {
@@ -106,9 +109,14 @@ impl Driver {
     }
 
     /// Build the §III control program for an `n_layers` descriptor table
-    /// based at control-RAM word index 0.
-    fn control_program(n_layers: usize) -> Result<Vec<u32>> {
+    /// based at control-RAM word index 0, serving `batch` packed images
+    /// per layer (written to the `BATCH` MMIO register before the walk).
+    fn control_program(n_layers: usize, batch: u32) -> Result<Vec<u32>> {
         let mut a = Assembler::new();
+        // a1 = BATCH register, a2 = batch value
+        a.li(reg::A1, map::R_BATCH as i32);
+        a.li(reg::A2, batch.max(1) as i32);
+        a.sw(reg::A2, reg::A1, 0);
         // t0 = descriptor byte address, t1 = end, t2 = stride
         a.li(reg::T0, map::RAM_BASE as i32);
         a.li(reg::T2, (DESC_WORDS * 4) as i32);
@@ -127,14 +135,27 @@ impl Driver {
         a.assemble()
     }
 
-    /// Execute a descriptor table end-to-end under RISC-V control.
+    /// Execute a descriptor table end-to-end under RISC-V control for a
+    /// single request (batch 1).
     pub fn run_table(&mut self, descs: &[LayerDesc]) -> Result<RunMetrics> {
+        self.run_table_batch(descs, 1)
+    }
+
+    /// Execute a descriptor table end-to-end under RISC-V control with
+    /// `batch` images packed back to back in every layer's in/out region.
+    /// The whole batch travels to the SoC as one unit: one control-program
+    /// run, one engine reconfiguration per layer, batch-sized DMA bursts.
+    pub fn run_table_batch(&mut self, descs: &[LayerDesc], batch: u32) -> Result<RunMetrics> {
+        if batch == 0 {
+            return Err(Error::Accel("batch of 0".into()));
+        }
         self.soc.write_descriptors(0, descs)?;
-        let program = match self.program_cache.get(&descs.len()) {
+        let key = (descs.len(), batch);
+        let program = match self.program_cache.get(&key) {
             Some(p) => p.clone(),
             None => {
-                let p = Self::control_program(descs.len())?;
-                self.program_cache.insert(descs.len(), p.clone());
+                let p = Self::control_program(descs.len(), batch)?;
+                self.program_cache.insert(key, p.clone());
                 p
             }
         };
@@ -155,6 +176,7 @@ impl Driver {
             reconfigs: self.soc.engine.stats.reconfigs - rc0,
             layers: self.soc.layers_run - lr0,
             ops: self.soc.engine.stats.ops - ops0,
+            requests: batch as u64,
         })
     }
 }
@@ -210,6 +232,67 @@ mod tests {
         assert!(m.cpu_cycles > 0 && m.compute_cycles > 0 && m.mem_cycles > 0);
         // conv max window = 10+11+14+15 = 50
         assert_eq!(drv.read_region(pool_out, 1).unwrap(), vec![50]);
+    }
+
+    #[test]
+    fn batched_run_table_amortizes_control_and_reconfig() {
+        let img: Vec<i64> = (0..16).collect();
+        let batch = 4u32;
+
+        let build = |max_batch: usize| -> (Driver, Vec<LayerDesc>, u32, u32) {
+            let mut drv = Driver::new(SocConfig {
+                dram_words: 8192,
+                spad_words: 1024,
+                ..Default::default()
+            });
+            let in_addr = drv.alloc(16 * max_batch).unwrap();
+            let w_addr = drv.upload(&[1, 1, 1, 1]).unwrap();
+            let out_addr = drv.alloc(9 * max_batch).unwrap();
+            let descs = vec![LayerDesc::Conv {
+                cout: 1,
+                cin: 1,
+                k: 2,
+                stride: 1,
+                pad: 0,
+                w_addr,
+                in_addr,
+                h: 4,
+                w: 4,
+                out_addr,
+                relu: false,
+                out_shift: 0,
+            }];
+            (drv, descs, in_addr, out_addr)
+        };
+
+        // sequential: one run per image
+        let (mut drv, descs, in_addr, out_addr) = build(1);
+        let mut seq_cycles = 0u64;
+        for _ in 0..batch {
+            drv.write_region(in_addr, &img).unwrap();
+            seq_cycles += drv.run_table(&descs).unwrap().total_cycles();
+        }
+        let seq_out = drv.read_region(out_addr, 9).unwrap();
+
+        // batched: all images in one run
+        let (mut drv2, descs2, in_addr2, out_addr2) = build(batch as usize);
+        let mut packed = Vec::new();
+        for _ in 0..batch {
+            packed.extend_from_slice(&img);
+        }
+        drv2.write_region(in_addr2, &packed).unwrap();
+        let m = drv2.run_table_batch(&descs2, batch).unwrap();
+        assert_eq!(m.requests, batch as u64);
+        assert_eq!(m.reconfigs, 1, "one reconfiguration for the whole batch");
+        let out = drv2.read_region(out_addr2, 9 * batch as usize).unwrap();
+        for n in 0..batch as usize {
+            assert_eq!(&out[n * 9..(n + 1) * 9], &seq_out[..], "image {n}");
+        }
+        assert!(
+            m.total_cycles() < seq_cycles,
+            "batched {} !< sequential {seq_cycles}",
+            m.total_cycles()
+        );
     }
 
     #[test]

@@ -11,6 +11,9 @@
 //!        +0x0C   CYCLES_HI
 //!        +0x10   RECONFIGS  (R)
 //!        +0x14   LAYERS     (R: layers executed)
+//!        +0x18   BATCH      (R/W: images per descriptor execution; the
+//!                            in/out DMA regions hold that many images
+//!                            packed back to back. Defaults to 1.)
 //! ```
 //!
 //! The data plane (weights/activations, i64) lives in [`Dram`] and streams
@@ -43,6 +46,8 @@ pub mod map {
     pub const R_RECONF: u32 = MMIO_BASE + 16;
     /// LAYERS register.
     pub const R_LAYERS: u32 = MMIO_BASE + 20;
+    /// BATCH register (images per descriptor execution).
+    pub const R_BATCH: u32 = MMIO_BASE + 24;
 }
 
 /// SoC sizing.
@@ -72,6 +77,19 @@ impl Default for SocConfig {
     }
 }
 
+impl SocConfig {
+    /// The serving-node sizing shared by the coordinator default, the
+    /// serving benches and the tier-1 batched tests (4M-word DRAM,
+    /// 16K-word scratchpad) — one definition so they cannot drift apart.
+    pub fn serving() -> Self {
+        SocConfig {
+            dram_words: 1 << 22,
+            spad_words: 1 << 14,
+            ..Default::default()
+        }
+    }
+}
+
 /// The SoC device tree.
 pub struct Soc {
     /// Control RAM (u32 words).
@@ -86,6 +104,10 @@ pub struct Soc {
     pub engine: Engine,
     /// Layers executed.
     pub layers_run: u64,
+    /// Images per descriptor execution (the `BATCH` MMIO register). The
+    /// batched engine path streams all of them through each layer's
+    /// configuration before reconfiguring — weight-stationary reuse.
+    pub batch_n: u32,
     /// Weight-stationary cache: weights staged once stay resident in the
     /// scratchpad across inferences (addr, len) → data. Repeat layers skip
     /// the DRAM burst entirely — the standard CNN-accelerator optimisation
@@ -104,6 +126,7 @@ impl Soc {
             dma: Dma::new(),
             engine: Engine::new(cfg.cells),
             layers_run: 0,
+            batch_n: 1,
             weight_cache: std::collections::HashMap::new(),
             cfg,
         }
@@ -162,8 +185,12 @@ impl Soc {
     /// Execute one layer descriptor (invoked via the MMIO DESC register).
     ///
     /// Streams inputs/weights DRAM→scratchpad (DMA), runs the engine, and
-    /// streams the result back — charging every stage's cycles.
+    /// streams the result back — charging every stage's cycles. When the
+    /// `BATCH` register holds `n > 1`, the layer's in/out regions carry `n`
+    /// images back to back and the whole batch runs through one engine
+    /// configuration (conv/pool/FC; FIR is inherently single-stream).
     pub fn exec_descriptor(&mut self, desc: &LayerDesc) -> Result<()> {
+        let batch = self.batch_n.max(1) as usize;
         match *desc {
             LayerDesc::End => Ok(()),
             LayerDesc::Conv {
@@ -180,7 +207,7 @@ impl Soc {
                 relu,
                 out_shift,
             } => {
-                let in_len = (cin * h * w) as usize;
+                let in_len = batch * desc.in_len();
                 let w_len = (cout * cin * k * k) as usize;
                 let input = self.stage_in(in_addr as usize, in_len)?;
                 let weights = self.stage_weights(w_addr, w_len as u32)?;
@@ -199,7 +226,7 @@ impl Soc {
                 })?;
                 let out = self
                     .engine
-                    .run(&input, &[cin as usize, h as usize, w as usize])?;
+                    .run_batch(&input, batch, &[cin as usize, h as usize, w as usize])?;
                 self.stage_out(out_addr as usize, &out.data)?;
                 self.layers_run += 1;
                 Ok(())
@@ -214,7 +241,7 @@ impl Soc {
                 w,
                 out_addr,
             } => {
-                let input = self.stage_in(in_addr as usize, (c * h * w) as usize)?;
+                let input = self.stage_in(in_addr as usize, batch * desc.in_len())?;
                 self.engine.reconfigure(EngineConfig {
                     mode: EngineMode::Pool {
                         k: k as usize,
@@ -226,7 +253,7 @@ impl Soc {
                 })?;
                 let out = self
                     .engine
-                    .run(&input, &[c as usize, h as usize, w as usize])?;
+                    .run_batch(&input, batch, &[c as usize, h as usize, w as usize])?;
                 self.stage_out(out_addr as usize, &out.data)?;
                 self.layers_run += 1;
                 Ok(())
@@ -241,7 +268,7 @@ impl Soc {
                 relu,
                 out_shift,
             } => {
-                let input = self.stage_in(in_addr as usize, n_in as usize)?;
+                let input = self.stage_in(in_addr as usize, batch * n_in as usize)?;
                 let weights = self.stage_weights(w_addr, n_in * n_out)?;
                 let bias = self.stage_weights(b_addr, n_out)?;
                 self.engine.reconfigure(EngineConfig {
@@ -254,7 +281,7 @@ impl Soc {
                     relu,
                     out_shift,
                 })?;
-                let out = self.engine.run(&input, &[n_in as usize])?;
+                let out = self.engine.run_batch(&input, batch, &[n_in as usize])?;
                 self.stage_out(out_addr as usize, &out.data)?;
                 self.layers_run += 1;
                 Ok(())
@@ -266,6 +293,11 @@ impl Soc {
                 n,
                 out_addr,
             } => {
+                if batch != 1 {
+                    return Err(Error::Accel(format!(
+                        "FIR descriptor streams one signal; BATCH={batch} is not supported"
+                    )));
+                }
                 let taps = self.stage_weights(taps_addr, n_taps)?;
                 let input = self.stage_in(in_addr as usize, n as usize)?;
                 self.engine.reconfigure(EngineConfig {
@@ -326,6 +358,7 @@ impl Bus for Soc {
             map::R_CYC_HI => Ok(((self.compute_cycles() + self.mem_cycles()) >> 32) as u32),
             map::R_RECONF => Ok(self.engine.stats.reconfigs as u32),
             map::R_LAYERS => Ok(self.layers_run as u32),
+            map::R_BATCH => Ok(self.batch_n),
             _ => Err(Error::Accel(format!("bus read {addr:#x}"))),
         }
     }
@@ -349,6 +382,10 @@ impl Bus for Soc {
                 let words: Vec<u32> = self.ctrl_ram[idx..idx + DESC_WORDS].to_vec();
                 let desc = LayerDesc::decode(&words)?;
                 self.exec_descriptor(&desc)
+            }
+            map::R_BATCH => {
+                self.batch_n = value.max(1);
+                Ok(())
             }
             _ => Err(Error::Accel(format!("bus write {addr:#x} = {value:#x}"))),
         }
@@ -382,6 +419,68 @@ mod tests {
         assert_eq!(soc.dram.read_burst(100, 4).unwrap(), vec![1, 3, 5, 7]);
         assert_eq!(soc.load(map::R_LAYERS).unwrap(), 1);
         assert!(soc.load(map::R_CYC_LO).unwrap() > 0);
+    }
+
+    #[test]
+    fn batch_register_runs_whole_batch_through_one_descriptor() {
+        let mut soc = Soc::new(SocConfig {
+            dram_words: 4096,
+            spad_words: 512,
+            ..Default::default()
+        });
+        // two 1×4×4 images back to back; 2×2 max pool each
+        let img_a: Vec<i64> = (0..16).collect();
+        let img_b: Vec<i64> = (0..16).map(|i| 100 - i).collect();
+        soc.dram.preload(0, &img_a).unwrap();
+        soc.dram.preload(16, &img_b).unwrap();
+        let desc = LayerDesc::Pool {
+            k: 2,
+            stride: 2,
+            kind: crate::systolic::PoolKind::Max,
+            in_addr: 0,
+            c: 1,
+            h: 4,
+            w: 4,
+            out_addr: 100,
+        };
+        soc.write_descriptors(0, &[desc]).unwrap();
+        soc.store(map::R_BATCH, 2).unwrap();
+        assert_eq!(soc.load(map::R_BATCH).unwrap(), 2);
+        soc.store(map::R_DESC, map::RAM_BASE).unwrap();
+        assert_eq!(soc.dram.read_burst(100, 4).unwrap(), vec![5, 7, 13, 15]);
+        assert_eq!(soc.dram.read_burst(104, 4).unwrap(), vec![100, 98, 92, 90]);
+        // one descriptor, one layer, one reconfiguration for both images
+        assert_eq!(soc.load(map::R_LAYERS).unwrap(), 1);
+        assert_eq!(soc.engine.stats.reconfigs, 1);
+    }
+
+    #[test]
+    fn fir_descriptor_rejects_batches() {
+        let mut soc = Soc::new(SocConfig {
+            dram_words: 4096,
+            spad_words: 512,
+            ..Default::default()
+        });
+        soc.dram.preload(0, &[1, 1]).unwrap();
+        soc.dram.preload(10, &[1, 2, 3, 4]).unwrap();
+        soc.write_descriptors(
+            0,
+            &[LayerDesc::Fir {
+                taps_addr: 0,
+                n_taps: 2,
+                in_addr: 10,
+                n: 4,
+                out_addr: 100,
+            }],
+        )
+        .unwrap();
+        soc.store(map::R_BATCH, 3).unwrap();
+        let err = soc.store(map::R_DESC, map::RAM_BASE).unwrap_err();
+        assert!(err.to_string().contains("BATCH"), "{err}");
+        // back to batch 1 it executes fine
+        soc.store(map::R_BATCH, 1).unwrap();
+        soc.store(map::R_DESC, map::RAM_BASE).unwrap();
+        assert_eq!(soc.dram.read_burst(100, 4).unwrap(), vec![1, 3, 5, 7]);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 
 use super::layers::{Layer, LayerShape};
 use super::tensor::{self, Tensor};
-use crate::accel::{Driver, LayerDesc};
+use crate::accel::{Driver, LayerDesc, RunMetrics};
 use crate::error::{Error, Result};
 use crate::systolic::PoolKind;
 
@@ -292,8 +292,20 @@ impl NetworkInstance {
     /// Deploy onto an accelerator: upload weights, allocate activation
     /// buffers, return `(descriptor table, input address, output address)`.
     pub fn deploy(&self, drv: &mut Driver) -> Result<(Vec<LayerDesc>, u32, u32)> {
+        let d = self.deploy_batched(drv, 1)?;
+        Ok((d.descs, d.in_addr, d.out_addr))
+    }
+
+    /// Deploy with activation buffers sized for up to `max_batch` images
+    /// packed back to back, so a whole batch travels through
+    /// [`Driver::run_table_batch`] as one unit. Weights are uploaded once
+    /// regardless of the batch capacity.
+    pub fn deploy_batched(&self, drv: &mut Driver, max_batch: usize) -> Result<Deployment> {
+        if max_batch == 0 {
+            return Err(Error::Accel("deploy_batched: max_batch of 0".into()));
+        }
         let shapes = self.net.shapes()?;
-        let in_addr = drv.alloc(shapes[0].volume())?;
+        let in_addr = drv.alloc(shapes[0].volume() * max_batch)?;
         let mut cur_addr = in_addr;
         let mut descs = Vec::new();
         for (i, (l, p)) in self.net.layers.iter().zip(&self.params).enumerate() {
@@ -303,7 +315,7 @@ impl NetworkInstance {
                 Layer::Conv { cout, k, stride, pad } => {
                     let (w, _b) = p.as_ref().unwrap();
                     let w_addr = drv.upload(&w.data)?;
-                    let out_addr = drv.alloc(out_shape.volume())?;
+                    let out_addr = drv.alloc(out_shape.volume() * max_batch)?;
                     let LayerShape::Chw(c, h, wd) = *in_shape else {
                         return Err(Error::Shape("conv on flat".into()));
                     };
@@ -324,7 +336,7 @@ impl NetworkInstance {
                     cur_addr = out_addr;
                 }
                 Layer::Pool { k, stride, kind } => {
-                    let out_addr = drv.alloc(out_shape.volume())?;
+                    let out_addr = drv.alloc(out_shape.volume() * max_batch)?;
                     let LayerShape::Chw(c, h, wd) = *in_shape else {
                         return Err(Error::Shape("pool on flat".into()));
                     };
@@ -345,7 +357,7 @@ impl NetworkInstance {
                     let (w, b) = p.as_ref().unwrap();
                     let w_addr = drv.upload(&w.data)?;
                     let b_addr = drv.upload(&b.data)?;
-                    let out_addr = drv.alloc(out_shape.volume())?;
+                    let out_addr = drv.alloc(out_shape.volume() * max_batch)?;
                     let LayerShape::Flat(n_in) = *in_shape else {
                         return Err(Error::Shape("fc on chw".into()));
                     };
@@ -363,7 +375,50 @@ impl NetworkInstance {
                 }
             }
         }
-        Ok((descs, in_addr, cur_addr))
+        Ok(Deployment {
+            descs,
+            in_addr,
+            out_addr: cur_addr,
+            in_len: shapes[0].volume(),
+            out_len: shapes.last().unwrap().volume(),
+            max_batch,
+        })
+    }
+}
+
+/// A network deployed onto an accelerator: the descriptor table plus the
+/// DRAM geometry the host uses to move activations in and out. All
+/// activation buffers hold up to `max_batch` images packed back to back
+/// (image-major), so one [`Driver::run_table_batch`] call serves a whole
+/// batch.
+pub struct Deployment {
+    /// Descriptor table, one entry per executed layer.
+    pub descs: Vec<LayerDesc>,
+    /// DRAM word address of the input region (`max_batch × in_len` words).
+    pub in_addr: u32,
+    /// DRAM word address of the output region (`max_batch × out_len` words).
+    pub out_addr: u32,
+    /// Words per single input image.
+    pub in_len: usize,
+    /// Words per single output vector.
+    pub out_len: usize,
+    /// Batch capacity the activation buffers were sized for.
+    pub max_batch: usize,
+}
+
+impl Deployment {
+    /// Execute the descriptor table for `batch` packed images, first
+    /// checking the activation buffers were deployed with capacity for
+    /// them — an oversized batch would otherwise silently overrun each
+    /// layer's region into the next allocation (weights live there).
+    pub fn run(&self, drv: &mut Driver, batch: u32) -> Result<RunMetrics> {
+        if batch as usize > self.max_batch {
+            return Err(Error::Accel(format!(
+                "batch {batch} exceeds deployed capacity {}",
+                self.max_batch
+            )));
+        }
+        drv.run_table_batch(&self.descs, batch)
     }
 }
 
@@ -419,6 +474,40 @@ mod tests {
         let v = Network::build(NetworkKind::Vgg16).total_macs().unwrap();
         assert!(a > 500_000_000 && a < 1_200_000_000, "alexnet {a}");
         assert!(v > 14_000_000_000 && v < 17_000_000_000, "vgg16 {v}");
+    }
+
+    #[test]
+    fn batched_deploy_is_bit_exact_per_image() {
+        let inst = NetworkInstance::random(Network::build(NetworkKind::Tiny), 42).unwrap();
+        let batch = 4usize;
+        let mut drv = Driver::new(SocConfig {
+            dram_words: 1 << 21,
+            spad_words: 1 << 14,
+            ..Default::default()
+        });
+        let dep = inst.deploy_batched(&mut drv, batch).unwrap();
+        assert_eq!(dep.in_len, 256);
+        assert_eq!(dep.out_len, 10);
+        let inputs: Vec<Tensor> = (0..batch)
+            .map(|i| Tensor::random(vec![1, 16, 16], 127, 70 + i as u64))
+            .collect();
+        let mut packed = Vec::new();
+        for t in &inputs {
+            packed.extend_from_slice(&t.data);
+        }
+        drv.write_region(dep.in_addr, &packed).unwrap();
+        let m = dep.run(&mut drv, batch as u32).unwrap();
+        assert_eq!(m.layers as usize, dep.descs.len());
+        assert_eq!(m.requests, batch as u64);
+        let flat = drv.read_region(dep.out_addr, batch * dep.out_len).unwrap();
+        for (i, t) in inputs.iter().enumerate() {
+            let want = inst.forward_ref(t).unwrap();
+            assert_eq!(
+                &flat[i * dep.out_len..(i + 1) * dep.out_len],
+                &want.data[..],
+                "request {i} in batch ≡ forward_ref"
+            );
+        }
     }
 
     #[test]

@@ -19,21 +19,48 @@ pub struct InferenceRequest {
     pub reply: Sender<InferenceResponse>,
 }
 
-/// One inference response.
+/// One inference response. A failed request gets an *explicit* response
+/// with [`InferenceResponse::error`] set (and empty logits) — clients can
+/// always distinguish "my request failed" from "the coordinator shut
+/// down" (which closes the channel instead).
 #[derive(Clone, Debug)]
 pub struct InferenceResponse {
     /// Request id.
     pub id: RequestId,
-    /// Output logits.
+    /// Output logits (empty on error).
     pub logits: Vec<i64>,
-    /// Argmax class.
+    /// Argmax class (0 on error).
     pub class: usize,
     /// End-to-end latency in microseconds.
     pub latency_us: u64,
-    /// Size of the batch this request rode in.
+    /// Size of the batch this request rode in (0 if it never reached the
+    /// accelerator).
     pub batch_size: usize,
     /// Worker that served it.
     pub worker: usize,
-    /// Simulated accelerator cycles for the batch.
+    /// Simulated accelerator cycles for the batch this request rode in.
     pub accel_cycles: u64,
+    /// Why the request failed, if it did.
+    pub error: Option<String>,
+}
+
+impl InferenceResponse {
+    /// True when the request was served successfully.
+    pub fn is_ok(&self) -> bool {
+        self.error.is_none()
+    }
+
+    /// Build an explicit failure response.
+    pub fn failure(id: RequestId, worker: usize, latency_us: u64, error: String) -> Self {
+        InferenceResponse {
+            id,
+            logits: Vec::new(),
+            class: 0,
+            latency_us,
+            batch_size: 0,
+            worker,
+            accel_cycles: 0,
+            error: Some(error),
+        }
+    }
 }

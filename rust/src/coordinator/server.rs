@@ -7,16 +7,20 @@
 //! ```
 //!
 //! Each worker owns a **private accelerator** (its own `accel::Driver`
-//! with the network deployed), mirroring a multi-card serving node.
-//! Workers pull whole batches from a shared queue (work stealing ≈
-//! least-loaded routing), run each request through the systolic engine,
-//! and reply per request.
+//! with the network deployed at batch capacity), mirroring a multi-card
+//! serving node. Workers pull whole batches from a shared queue (work
+//! stealing ≈ least-loaded routing), pack every request's input into one
+//! contiguous DRAM region, execute **one** batched descriptor-table run —
+//! so the accelerator sees the batch as a unit and the weight-stationary
+//! engine amortises tap loads and reconfiguration across it — then fan
+//! the per-request outputs back out. Malformed requests are rejected with
+//! an explicit error response before the batch forms.
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::request::{InferenceRequest, InferenceResponse, RequestId};
 use super::stats::StatsCollector;
-use crate::accel::{Driver, LayerDesc, SocConfig};
-use crate::cnn::networks::NetworkInstance;
+use crate::accel::{Driver, SocConfig};
+use crate::cnn::networks::{Deployment, NetworkInstance};
 use crate::cnn::tensor::Tensor;
 use crate::error::{Error, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -44,11 +48,7 @@ impl Default for CoordinatorConfig {
         CoordinatorConfig {
             workers: 2,
             batch: BatchPolicy::default(),
-            soc: SocConfig {
-                dram_words: 1 << 22,
-                spad_words: 1 << 14,
-                ..Default::default()
-            },
+            soc: SocConfig::serving(),
             clock_mhz: 200.0,
         }
     }
@@ -56,31 +56,57 @@ impl Default for CoordinatorConfig {
 
 struct Worker {
     drv: Driver,
-    descs: Vec<LayerDesc>,
-    in_addr: u32,
-    out_addr: u32,
-    out_len: usize,
+    dep: Deployment,
+    /// Expected per-request input shape, for upfront validation.
+    input_dims: Vec<usize>,
 }
 
 impl Worker {
     fn build(cfg: &CoordinatorConfig, inst: &NetworkInstance) -> Result<Self> {
         let mut drv = Driver::new(cfg.soc);
-        let (descs, in_addr, out_addr) = inst.deploy(&mut drv)?;
-        let shapes = inst.net.shapes()?;
+        let dep = inst.deploy_batched(&mut drv, cfg.batch.max_batch.max(1))?;
+        let input_dims = inst.net.input.dims();
         Ok(Worker {
             drv,
-            descs,
-            in_addr,
-            out_addr,
-            out_len: shapes.last().unwrap().volume(),
+            dep,
+            input_dims,
         })
     }
 
-    fn infer(&mut self, input: &Tensor) -> Result<(Vec<i64>, u64)> {
-        self.drv.write_region(self.in_addr, &input.data)?;
-        let m = self.drv.run_table(&self.descs)?;
-        let out = self.drv.read_region(self.out_addr, self.out_len)?;
-        Ok((out, m.total_cycles()))
+    /// Reject inputs whose shape does not match the deployed network
+    /// *before* they join a batch (a wrong-sized write would otherwise
+    /// silently corrupt neighbouring DRAM regions).
+    fn validate(&self, input: &Tensor) -> Result<()> {
+        if input.shape != self.input_dims || input.len() != self.dep.in_len {
+            return Err(Error::Shape(format!(
+                "input shape {:?} does not match network input {:?}",
+                input.shape, self.input_dims
+            )));
+        }
+        Ok(())
+    }
+
+    /// Run a whole batch through the accelerator as one unit: pack the
+    /// inputs back to back, execute the descriptor table once, split the
+    /// packed outputs per request. Returns per-request logits plus the
+    /// batch's total accelerator cycles.
+    fn infer_batch(&mut self, inputs: &[&Tensor]) -> Result<(Vec<Vec<i64>>, u64)> {
+        let n = inputs.len();
+        if n == 0 || n > self.dep.max_batch {
+            return Err(Error::Coordinator(format!(
+                "batch of {n} exceeds deployed capacity {}",
+                self.dep.max_batch
+            )));
+        }
+        let mut packed = Vec::with_capacity(n * self.dep.in_len);
+        for t in inputs {
+            packed.extend_from_slice(&t.data);
+        }
+        self.drv.write_region(self.dep.in_addr, &packed)?;
+        let m = self.dep.run(&mut self.drv, n as u32)?;
+        let flat = self.drv.read_region(self.dep.out_addr, n * self.dep.out_len)?;
+        let outs = flat.chunks(self.dep.out_len).map(|c| c.to_vec()).collect();
+        Ok((outs, m.total_cycles()))
     }
 }
 
@@ -133,16 +159,51 @@ impl Coordinator {
                         guard.recv()
                     };
                     let Ok(batch) = batch else { break };
-                    let bsize = batch.len();
+                    // reject malformed requests with an explicit error
+                    // response before the accelerator batch forms
+                    let mut valid = Vec::with_capacity(batch.len());
                     for req in batch {
-                        let result = worker.infer(&req.input);
-                        let latency_us = req.submitted.elapsed().as_micros() as u64;
-                        match result {
-                            Ok((logits, cycles)) => {
-                                stats
-                                    .lock()
-                                    .expect("stats poisoned")
-                                    .record(latency_us, bsize, cycles);
+                        match worker.validate(&req.input) {
+                            Ok(()) => valid.push(req),
+                            Err(e) => {
+                                stats.lock().expect("stats poisoned").record_error();
+                                let latency_us = req.submitted.elapsed().as_micros() as u64;
+                                let _ = req.reply.send(InferenceResponse::failure(
+                                    req.id,
+                                    wid,
+                                    latency_us,
+                                    e.to_string(),
+                                ));
+                            }
+                        }
+                    }
+                    if valid.is_empty() {
+                        continue;
+                    }
+                    let result = {
+                        let inputs: Vec<&Tensor> = valid.iter().map(|r| &r.input).collect();
+                        worker.infer_batch(&inputs)
+                    };
+                    match result {
+                        Ok((outs, cycles)) => {
+                            let n = valid.len();
+                            let latencies: Vec<u64> = valid
+                                .iter()
+                                .map(|r| r.submitted.elapsed().as_micros() as u64)
+                                .collect();
+                            {
+                                // one lock for the whole batch: cycles are
+                                // recorded once per batch, requests carry
+                                // latency only
+                                let mut s = stats.lock().expect("stats poisoned");
+                                s.record_batch(cycles);
+                                for &latency_us in &latencies {
+                                    s.record(latency_us, n, 0);
+                                }
+                            }
+                            for ((req, logits), latency_us) in
+                                valid.into_iter().zip(outs).zip(latencies)
+                            {
                                 let class = logits
                                     .iter()
                                     .enumerate()
@@ -154,14 +215,31 @@ impl Coordinator {
                                     logits,
                                     class,
                                     latency_us,
-                                    batch_size: bsize,
+                                    batch_size: n,
                                     worker: wid,
                                     accel_cycles: cycles,
+                                    error: None,
                                 });
                             }
-                            Err(_) => {
-                                // drop the reply sender: client sees a
-                                // disconnected channel (failed request)
+                        }
+                        Err(e) => {
+                            // batch-level failure: every rider gets an
+                            // explicit error, never a dropped channel
+                            let msg = e.to_string();
+                            {
+                                let mut s = stats.lock().expect("stats poisoned");
+                                for _ in 0..valid.len() {
+                                    s.record_error();
+                                }
+                            }
+                            for req in valid {
+                                let latency_us = req.submitted.elapsed().as_micros() as u64;
+                                let _ = req.reply.send(InferenceResponse::failure(
+                                    req.id,
+                                    wid,
+                                    latency_us,
+                                    msg.clone(),
+                                ));
                             }
                         }
                     }
@@ -280,6 +358,65 @@ mod tests {
         assert_eq!(seen.len(), n);
         let stats = coord.shutdown();
         assert_eq!(stats.count(), n);
+    }
+
+    #[test]
+    fn malformed_shape_gets_explicit_error_response() {
+        let inst = tiny_instance();
+        let coord = Coordinator::start(CoordinatorConfig::default(), &inst).unwrap();
+        let good_input = Tensor::random(vec![1, 16, 16], 127, 5);
+        let (good_id, good_rx) = coord.submit(good_input.clone()).unwrap();
+        // wrong rank *and* wrong volume
+        let (bad_id, bad_rx) = coord.submit(Tensor::random(vec![5, 5], 127, 6)).unwrap();
+        let bad = bad_rx
+            .recv()
+            .expect("failed request must get an explicit response, not a dropped channel");
+        assert_eq!(bad.id, bad_id);
+        assert!(!bad.is_ok());
+        assert!(bad.error.as_deref().unwrap_or("").contains("shape"), "{:?}", bad.error);
+        assert!(bad.logits.is_empty());
+        // the malformed request must not poison the rest of its batch
+        let good = good_rx.recv().expect("valid request still served");
+        assert_eq!(good.id, good_id);
+        assert!(good.is_ok());
+        let want = inst.forward_ref(&good_input).unwrap();
+        assert_eq!(good.logits, want.data);
+        let stats = coord.shutdown();
+        assert_eq!(stats.errors, 1);
+        assert_eq!(stats.count(), 1, "only the valid request counts as served");
+    }
+
+    #[test]
+    fn batched_responses_report_amortized_stats() {
+        let inst = tiny_instance();
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                ..Default::default()
+            },
+            &inst,
+        )
+        .unwrap();
+        let rxs: Vec<_> = (0..16)
+            .map(|i| coord.submit(Tensor::random(vec![1, 16, 16], 127, 300 + i)).unwrap())
+            .collect();
+        for (_, rx) in rxs {
+            let resp = rx.recv().unwrap();
+            assert!(resp.is_ok());
+            assert!(resp.accel_cycles > 0, "batch cycles reported per response");
+        }
+        let stats = coord.shutdown();
+        assert_eq!(stats.count(), 16);
+        assert!(stats.batches >= 1, "at least one accelerator batch ran");
+        assert!(stats.batches as usize <= 16);
+        assert!(stats.mean_batch_cycles() > 0.0);
+        assert!(stats.amortized_cycles_per_request() > 0.0);
+        // total cycles are accounted per batch, not per request: the sum
+        // over batch runs equals the collector total
+        assert!(
+            (stats.mean_batch_cycles() * stats.batches as f64 - stats.accel_cycles as f64).abs()
+                < 1e-6
+        );
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Serving statistics: latency percentiles, throughput, batch sizes.
+//! Serving statistics: latency percentiles, throughput, batch sizes, and
+//! per-batch amortized accelerator cycles.
 
 use std::time::Instant;
 
@@ -19,14 +20,21 @@ pub struct LatencyStats {
     pub max_us: u64,
 }
 
-/// Collects per-request samples.
+/// Collects per-request samples plus per-batch accelerator runs.
 #[derive(Debug)]
 pub struct StatsCollector {
     latencies_us: Vec<u64>,
     batch_sizes: Vec<usize>,
+    /// Total cycles across accelerator batch runs (accumulated once per
+    /// `run_table_batch`, *not* per request).
+    batch_cycles_sum: u64,
     started: Instant,
     /// Total simulated accelerator cycles across batches.
     pub accel_cycles: u64,
+    /// Accelerator batch runs executed.
+    pub batches: u64,
+    /// Requests that failed with an explicit error response.
+    pub errors: u64,
 }
 
 impl Default for StatsCollector {
@@ -41,19 +49,37 @@ impl StatsCollector {
         StatsCollector {
             latencies_us: Vec::new(),
             batch_sizes: Vec::new(),
+            batch_cycles_sum: 0,
             started: Instant::now(),
             accel_cycles: 0,
+            batches: 0,
+            errors: 0,
         }
     }
 
-    /// Record one completed request.
+    /// Record one completed request. `accel_cycles` is this request's share
+    /// of accelerator time; batched servers record the batch's cycles once
+    /// via [`StatsCollector::record_batch`] and pass 0 here.
     pub fn record(&mut self, latency_us: u64, batch_size: usize, accel_cycles: u64) {
         self.latencies_us.push(latency_us);
         self.batch_sizes.push(batch_size);
         self.accel_cycles += accel_cycles;
     }
 
-    /// Requests completed.
+    /// Record one accelerator batch run costing `cycles` total — the unit
+    /// of amortization.
+    pub fn record_batch(&mut self, cycles: u64) {
+        self.batches += 1;
+        self.batch_cycles_sum += cycles;
+        self.accel_cycles += cycles;
+    }
+
+    /// Record one failed request (explicit error response sent).
+    pub fn record_error(&mut self) {
+        self.errors += 1;
+    }
+
+    /// Requests completed successfully.
     pub fn count(&self) -> usize {
         self.latencies_us.len()
     }
@@ -74,6 +100,27 @@ impl StatsCollector {
             0.0
         } else {
             self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+        }
+    }
+
+    /// Mean accelerator cycles per batch run.
+    pub fn mean_batch_cycles(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_cycles_sum as f64 / self.batches as f64
+        }
+    }
+
+    /// Amortized accelerator cycles per completed request — total batch
+    /// cycles spread over every request that rode in those batches. This
+    /// is the number the weight-stationary batching is supposed to push
+    /// down versus the sequential per-request path.
+    pub fn amortized_cycles_per_request(&self) -> f64 {
+        if self.latencies_us.is_empty() {
+            0.0
+        } else {
+            self.accel_cycles as f64 / self.latencies_us.len() as f64
         }
     }
 
@@ -120,5 +167,26 @@ mod tests {
         let s = StatsCollector::new();
         assert_eq!(s.latency().count, 0);
         assert_eq!(s.mean_batch(), 0.0);
+        assert_eq!(s.mean_batch_cycles(), 0.0);
+        assert_eq!(s.amortized_cycles_per_request(), 0.0);
+    }
+
+    #[test]
+    fn batch_amortization_accounting() {
+        let mut s = StatsCollector::new();
+        // two batches of 4 requests, 1000 cycles each
+        for _ in 0..2 {
+            s.record_batch(1000);
+            for _ in 0..4 {
+                s.record(50, 4, 0);
+            }
+        }
+        s.record_error();
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.accel_cycles, 2000);
+        assert_eq!(s.count(), 8);
+        assert_eq!(s.errors, 1);
+        assert!((s.mean_batch_cycles() - 1000.0).abs() < 1e-9);
+        assert!((s.amortized_cycles_per_request() - 250.0).abs() < 1e-9);
     }
 }

@@ -1,64 +1,110 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls — `thiserror` is unavailable in this
+//! offline environment (DESIGN.md §2).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors produced by the kom-accel library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// A netlist structural invariant was violated (cycle, multiple drivers…).
-    #[error("netlist error: {0}")]
     Netlist(String),
 
     /// A generator was asked for an unsupported configuration.
-    #[error("unsupported configuration: {0}")]
     Unsupported(String),
 
     /// Simulation failed (X propagation, missing driver, …).
-    #[error("simulation error: {0}")]
     Sim(String),
 
     /// Technology mapping failed.
-    #[error("techmap error: {0}")]
     Techmap(String),
 
     /// RISC-V ISS fault (illegal instruction, misaligned access, …).
-    #[error("riscv fault: {0}")]
     Riscv(String),
 
     /// Systolic engine configuration / execution error.
-    #[error("systolic engine error: {0}")]
     Systolic(String),
 
     /// Accelerator driver error.
-    #[error("accelerator error: {0}")]
     Accel(String),
 
     /// CNN / tensor shape error.
-    #[error("shape error: {0}")]
     Shape(String),
 
     /// Coordinator / serving error.
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
     /// XLA / PJRT runtime error.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// CLI usage error.
-    #[error("usage error: {0}")]
     Usage(String),
 
     /// Underlying I/O error.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Netlist(m) => write!(f, "netlist error: {m}"),
+            Error::Unsupported(m) => write!(f, "unsupported configuration: {m}"),
+            Error::Sim(m) => write!(f, "simulation error: {m}"),
+            Error::Techmap(m) => write!(f, "techmap error: {m}"),
+            Error::Riscv(m) => write!(f, "riscv fault: {m}"),
+            Error::Systolic(m) => write!(f, "systolic engine error: {m}"),
+            Error::Accel(m) => write!(f, "accelerator error: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Usage(m) => write!(f, "usage error: {m}"),
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
 }
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
-        Error::Runtime(e.to_string())
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_preserves_category_prefix() {
+        assert_eq!(
+            Error::Systolic("bad taps".into()).to_string(),
+            "systolic engine error: bad taps"
+        );
+        assert_eq!(Error::Riscv("misaligned".into()).to_string(), "riscv fault: misaligned");
+    }
+
+    #[test]
+    fn io_errors_convert() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(e.to_string().contains("gone"));
     }
 }

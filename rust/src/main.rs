@@ -197,11 +197,7 @@ fn cmd_serve(args: &Args) -> kom_accel::Result<()> {
             max_batch,
             ..Default::default()
         },
-        soc: SocConfig {
-            dram_words: 1 << 22,
-            spad_words: 1 << 14,
-            ..Default::default()
-        },
+        soc: SocConfig::serving(),
         clock_mhz: 200.0,
     };
     let coord = Coordinator::start(cfg, &inst)?;

@@ -9,13 +9,20 @@
 //! times, which is how the reconfigurable fabric of Fig 3 realises
 //! convolution without dedicated 2-D hardware.
 //!
+//! Batching is **weight-stationary**: each kernel row is loaded as FIR taps
+//! once and *all* images of the batch stream through the chain before the
+//! taps are evicted, so the tap-load cost is paid per kernel row, not per
+//! image (the streaming-toolflow optimisation of fpgaConvNet / Shen et al.).
+//!
 //! Cycle accounting: each row pass occupies one `kw`-cell chain for
 //! `(padded row length)` cycles; `lanes` chains run in parallel (bounded by
-//! the cell pool), so `cycles = ceil(total_row_passes / lanes) × row_len`.
+//! the cell pool), so streaming costs `ceil(total_row_passes / lanes) ×
+//! row_len` cycles, plus `ceil(tap_sets / lanes) × kw` cycles to load the
+//! taps (charged once per batch — that is the amortization).
 
 use super::fir::FirChain;
 
-/// Convolution geometry + result + exact cycle count.
+/// Convolution geometry + result + exact cycle count (single image).
 pub struct ConvResult {
     /// Output data, `[cout][ho][wo]` flattened.
     pub data: Vec<i64>,
@@ -29,9 +36,135 @@ pub struct ConvResult {
     pub macs: u64,
 }
 
-/// Run a conv2d layer. `input` is `[cin][h][w]` flattened; `weights` is
-/// `[cout][cin][kh][kw]` flattened. `cells` is the engine's cell pool size
-/// (bounds lane parallelism).
+/// Batched convolution result.
+pub struct ConvBatchResult {
+    /// Output data, `[n][cout][ho][wo]` flattened (image-major).
+    pub data: Vec<i64>,
+    /// Output height.
+    pub ho: usize,
+    /// Output width.
+    pub wo: usize,
+    /// Engine cycles consumed for the whole batch.
+    pub cycles: u64,
+    /// Total MAC operations across the batch.
+    pub macs: u64,
+    /// Cycles spent loading FIR taps — paid once per kernel row for the
+    /// whole batch (weight-stationary amortization).
+    pub tap_load_cycles: u64,
+}
+
+/// Run a conv2d layer over a batch of images. `inputs` is `[n][cin][h][w]`
+/// flattened (image-major); `weights` is `[cout][cin][kh][kw]` flattened.
+/// `cells` is the engine's cell pool size (bounds lane parallelism).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_batch(
+    inputs: &[i64],
+    batch: usize,
+    cin: usize,
+    h: usize,
+    w: usize,
+    weights: &[i64],
+    cout: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    cells: usize,
+) -> crate::Result<ConvBatchResult> {
+    if batch == 0 {
+        return Err(crate::Error::Systolic("conv2d batch of 0".into()));
+    }
+    if inputs.len() != batch * cin * h * w {
+        return Err(crate::Error::Systolic(format!(
+            "conv2d input len {} != {batch}·{cin}·{h}·{w}",
+            inputs.len()
+        )));
+    }
+    if weights.len() != cout * cin * kh * kw {
+        return Err(crate::Error::Systolic("conv2d weight shape".into()));
+    }
+    if h + 2 * pad < kh || w + 2 * pad < kw {
+        return Err(crate::Error::Systolic("kernel larger than padded input".into()));
+    }
+    let hp = h + 2 * pad;
+    let wp = w + 2 * pad;
+    let ho = (hp - kh) / stride + 1;
+    let wo = (wp - kw) / stride + 1;
+
+    // hoist padded rows: built once per (image, channel, padded row) and
+    // reused across all cout × kh passes (perf: see EXPERIMENTS.md §Perf)
+    let img = cin * hp * wp;
+    let mut padded = vec![0i64; batch * img];
+    for n in 0..batch {
+        for c in 0..cin {
+            for r in 0..h {
+                let src = (n * cin + c) * h * w + r * w;
+                let dst = n * img + c * hp * wp + (r + pad) * wp + pad;
+                padded[dst..dst + w].copy_from_slice(&inputs[src..src + w]);
+            }
+        }
+    }
+
+    let out_img = cout * ho * wo;
+    let mut out = vec![0i64; batch * out_img];
+    let mut macs = 0u64;
+    let mut row_passes = 0u64;
+    let mut yrow = Vec::with_capacity(wp);
+
+    for oc in 0..cout {
+        for ic in 0..cin {
+            for kr in 0..kh {
+                // kernel row as FIR taps; FIR computes y[n] = Σ h(k)x[n-k],
+                // convolution needs Σ w(k)·x[n+k] → feed reversed taps
+                let base = ((oc * cin + ic) * kh + kr) * kw;
+                let taps: Vec<i64> = (0..kw).map(|k| weights[base + kw - 1 - k]).collect();
+                let mut chain = FirChain::new(&taps);
+                // weight-stationary: every image of the batch streams
+                // through this tap set before it is evicted
+                for n in 0..batch {
+                    for or in 0..ho {
+                        let ir = or * stride + kr;
+                        let row_at = n * img + ic * hp * wp + ir * wp;
+                        let row = &padded[row_at..row_at + wp];
+                        chain.filter_into(row, &mut yrow);
+                        row_passes += 1;
+                        // only windows that land on an output column are
+                        // useful work: wo·kw MACs per pass, matching the
+                        // analytical ho·wo·kw·cin·cout·kh layer count
+                        macs += (wo * kw) as u64;
+                        // y[n] = Σ_k taps[k]·row[n-k] = Σ_j w[j]·row[n-(kw-1-j)]
+                        // output col `ox` reads the window starting at ox·stride:
+                        // Σ_j w[j]·row[ox·stride + j] = y[ox·stride + kw-1]
+                        let o0 = n * out_img + oc * ho * wo + or * wo;
+                        let out_row = &mut out[o0..o0 + wo];
+                        for (ox, o) in out_row.iter_mut().enumerate() {
+                            *o += yrow[ox * stride + kw - 1];
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // lane parallelism: each pass needs a kw-cell chain
+    let lanes = (cells / kw.max(1)).max(1) as u64;
+    let tap_sets = (cout * cin * kh) as u64;
+    let tap_load_cycles = tap_sets.div_ceil(lanes) * kw as u64;
+    let cycles = row_passes.div_ceil(lanes) * wp as u64 + tap_load_cycles;
+
+    Ok(ConvBatchResult {
+        data: out,
+        ho,
+        wo,
+        cycles,
+        macs,
+        tap_load_cycles,
+    })
+}
+
+/// Run a conv2d layer on a single image. `input` is `[cin][h][w]`
+/// flattened; `weights` is `[cout][cin][kh][kw]` flattened. `cells` is the
+/// engine's cell pool size (bounds lane parallelism).
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d(
     input: &[i64],
@@ -46,76 +179,13 @@ pub fn conv2d(
     pad: usize,
     cells: usize,
 ) -> crate::Result<ConvResult> {
-    if input.len() != cin * h * w {
-        return Err(crate::Error::Systolic(format!(
-            "conv2d input len {} != {cin}·{h}·{w}",
-            input.len()
-        )));
-    }
-    if weights.len() != cout * cin * kh * kw {
-        return Err(crate::Error::Systolic("conv2d weight shape".into()));
-    }
-    if h + 2 * pad < kh || w + 2 * pad < kw {
-        return Err(crate::Error::Systolic("kernel larger than padded input".into()));
-    }
-    let hp = h + 2 * pad;
-    let wp = w + 2 * pad;
-    let ho = (hp - kh) / stride + 1;
-    let wo = (wp - kw) / stride + 1;
-
-    // hoist padded rows: built once per (channel, padded row) and reused
-    // across all cout × kh passes (perf: see EXPERIMENTS.md §Perf)
-    let mut padded = vec![0i64; cin * hp * wp];
-    for c in 0..cin {
-        for r in 0..h {
-            let src = &input[c * h * w + r * w..c * h * w + (r + 1) * w];
-            let dst = c * hp * wp + (r + pad) * wp + pad;
-            padded[dst..dst + w].copy_from_slice(src);
-        }
-    }
-
-    let mut out = vec![0i64; cout * ho * wo];
-    let mut macs = 0u64;
-    let mut row_passes = 0u64;
-    let mut yrow = Vec::with_capacity(wp);
-
-    for oc in 0..cout {
-        for ic in 0..cin {
-            for kr in 0..kh {
-                // kernel row as FIR taps; FIR computes y[n] = Σ h(k)x[n-k],
-                // convolution needs Σ w(k)·x[n+k] → feed reversed taps
-                let base = ((oc * cin + ic) * kh + kr) * kw;
-                let taps: Vec<i64> = (0..kw).map(|k| weights[base + kw - 1 - k]).collect();
-                let mut chain = FirChain::new(&taps);
-                for or in 0..ho {
-                    let ir = or * stride + kr;
-                    let row = &padded[ic * hp * wp + ir * wp..ic * hp * wp + (ir + 1) * wp];
-                    chain.filter_into(row, &mut yrow);
-                    row_passes += 1;
-                    macs += (row.len() * kw) as u64;
-                    // y[n] = Σ_k taps[k]·row[n-k] = Σ_j w[j]·row[n-(kw-1-j)]
-                    // output col `ox` reads the window starting at ox·stride:
-                    // Σ_j w[j]·row[ox·stride + j] = y[ox·stride + kw-1]
-                    let out_row = &mut out[oc * ho * wo + or * wo..oc * ho * wo + (or + 1) * wo];
-                    for (ox, o) in out_row.iter_mut().enumerate() {
-                        *o += yrow[ox * stride + kw - 1];
-                    }
-                }
-            }
-        }
-    }
-
-    // lane parallelism: each pass needs a kw-cell chain
-    let lanes = (cells / kw.max(1)).max(1) as u64;
-    let total_passes = row_passes;
-    let cycles = (total_passes + lanes - 1) / lanes * wp as u64;
-
+    let r = conv2d_batch(input, 1, cin, h, w, weights, cout, kh, kw, stride, pad, cells)?;
     Ok(ConvResult {
-        data: out,
-        ho,
-        wo,
-        cycles,
-        macs,
+        data: r.data,
+        ho: r.ho,
+        wo: r.wo,
+        cycles: r.cycles,
+        macs: r.macs,
     })
 }
 
@@ -169,6 +239,7 @@ pub fn conv2d_reference(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cnn::layers::{Layer, LayerShape};
 
     fn rnd_vec(n: usize, seed: u64) -> Vec<i64> {
         let mut s = seed.max(1);
@@ -222,5 +293,68 @@ mod tests {
     fn rejects_bad_shapes() {
         assert!(conv2d(&[0; 10], 1, 2, 5, &[0; 9], 1, 3, 3, 1, 0, 8).is_err());
         assert!(conv2d(&[0; 25], 1, 5, 5, &[0; 8], 1, 3, 3, 1, 0, 8).is_err());
+        assert!(conv2d_batch(&[0; 25], 0, 1, 5, 5, &[0; 9], 1, 3, 3, 1, 0, 8).is_err());
+        assert!(conv2d_batch(&[0; 30], 2, 1, 5, 5, &[0; 9], 1, 3, 3, 1, 0, 8).is_err());
+    }
+
+    #[test]
+    fn batch_bit_exact_with_per_image_runs() {
+        let (cin, h, w, cout, k) = (2usize, 7usize, 6usize, 3usize, 3usize);
+        let batch = 4usize;
+        let weights = rnd_vec(cout * cin * k * k, 11);
+        let images: Vec<Vec<i64>> = (0..batch).map(|i| rnd_vec(cin * h * w, 20 + i as u64)).collect();
+        let mut packed = Vec::new();
+        for img in &images {
+            packed.extend_from_slice(img);
+        }
+        let got = conv2d_batch(&packed, batch, cin, h, w, &weights, cout, k, k, 1, 1, 64).unwrap();
+        let per_img = cout * got.ho * got.wo;
+        for (i, img) in images.iter().enumerate() {
+            let single = conv2d(img, cin, h, w, &weights, cout, k, k, 1, 1, 64).unwrap();
+            assert_eq!(
+                &got.data[i * per_img..(i + 1) * per_img],
+                &single.data[..],
+                "image {i} in batch"
+            );
+        }
+    }
+
+    #[test]
+    fn batch_amortizes_tap_loads() {
+        let (cin, h, w, cout, k) = (2usize, 8usize, 8usize, 4usize, 3usize);
+        let batch = 8usize;
+        let weights = rnd_vec(cout * cin * k * k, 7);
+        let img = rnd_vec(cin * h * w, 8);
+        let mut packed = Vec::new();
+        for _ in 0..batch {
+            packed.extend_from_slice(&img);
+        }
+        let single = conv2d(&img, cin, h, w, &weights, cout, k, k, 1, 1, 16).unwrap();
+        let batched =
+            conv2d_batch(&packed, batch, cin, h, w, &weights, cout, k, k, 1, 1, 16).unwrap();
+        // taps are loaded once for the whole batch, so the batched run is
+        // strictly cheaper than N sequential runs
+        assert!(
+            batched.cycles < batch as u64 * single.cycles,
+            "batched {} !< {} = {batch}×{}",
+            batched.cycles,
+            batch as u64 * single.cycles,
+            single.cycles
+        );
+        assert!(batched.tap_load_cycles > 0);
+        assert_eq!(batched.macs, batch as u64 * single.macs);
+    }
+
+    #[test]
+    fn macs_match_analytical_layer_count() {
+        // satellite: engine MACs must equal the cnn::analysis layer model
+        // (ho·wo·kw·kh·cin·cout), not the padded-row inflation
+        let (cin, h, w, cout, k, stride, pad) = (3usize, 9usize, 11usize, 5usize, 3usize, 2usize, 1usize);
+        let input = rnd_vec(cin * h * w, 13);
+        let weights = rnd_vec(cout * cin * k * k, 14);
+        let got = conv2d(&input, cin, h, w, &weights, cout, k, k, stride, pad, 64).unwrap();
+        let layer = Layer::Conv { cout, k, stride, pad };
+        let want = layer.macs(&LayerShape::Chw(cin, h, w)).unwrap();
+        assert_eq!(got.macs, want, "engine MACs != analytical count");
     }
 }

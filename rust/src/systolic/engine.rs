@@ -104,18 +104,39 @@ impl Engine {
     /// Execute the loaded configuration on `input` with the given spatial
     /// shape (`[c,h,w]` for conv/pool, `[n]` for FIR/FC).
     pub fn run(&mut self, input: &[i64], shape: &[usize]) -> Result<LayerOutput> {
+        let mut out = self.run_batch(input, 1, shape)?;
+        out.shape.remove(0); // drop the leading batch-1 dimension
+        Ok(out)
+    }
+
+    /// Execute the loaded configuration on a batch of `batch` inputs packed
+    /// image-major into `input`; `shape` is the *per-image* shape (`[c,h,w]`
+    /// for conv/pool, `[n]` for FC). The output shape is `[batch, ...]`.
+    ///
+    /// This is the weight-stationary path: conv kernel rows are loaded as
+    /// FIR taps once per batch, and the (potentially large) reconfiguration
+    /// cost of this engine is paid once for all `batch` inputs.
+    pub fn run_batch(&mut self, input: &[i64], batch: usize, shape: &[usize]) -> Result<LayerOutput> {
         let cfg = self
             .config
             .clone()
             .ok_or_else(|| Error::Systolic("engine not configured".into()))?;
+        if batch == 0 {
+            return Err(Error::Systolic("batch of 0".into()));
+        }
         let out = match &cfg.mode {
             EngineMode::Fir { taps } => {
+                if batch != 1 {
+                    return Err(Error::Systolic(
+                        "FIR mode streams one signal; batching is not defined".into(),
+                    ));
+                }
                 let mut chain = fir::FirChain::new(taps);
                 let data = chain.filter(input);
                 let cycles = chain.cycles;
                 self.stats.ops += chain.total_macs();
                 LayerOutput {
-                    shape: vec![data.len()],
+                    shape: vec![1, data.len()],
                     data,
                     cycles,
                 }
@@ -139,12 +160,13 @@ impl Engine {
                         "conv2d input channels {c} != configured {cin}"
                     )));
                 }
-                let r = conv2d::conv2d(
-                    input, *cin, *h, *w, weights, *cout, *kh, *kw, *stride, *pad, self.cells,
+                let r = conv2d::conv2d_batch(
+                    input, batch, *cin, *h, *w, weights, *cout, *kh, *kw, *stride, *pad,
+                    self.cells,
                 )?;
                 self.stats.ops += r.macs;
                 LayerOutput {
-                    shape: vec![*cout, r.ho, r.wo],
+                    shape: vec![batch, *cout, r.ho, r.wo],
                     data: r.data,
                     cycles: r.cycles,
                 }
@@ -155,10 +177,11 @@ impl Engine {
                         "pool needs [c,h,w] shape, got {shape:?}"
                     )));
                 };
-                let r = pool::pool2d(input, *c, *h, *w, *k, *stride, *kind, self.cells)?;
+                let r =
+                    pool::pool2d_batch(input, batch, *c, *h, *w, *k, *stride, *kind, self.cells)?;
                 self.stats.ops += r.ops;
                 LayerOutput {
-                    shape: vec![*c, r.ho, r.wo],
+                    shape: vec![batch, *c, r.ho, r.wo],
                     data: r.data,
                     cycles: r.cycles,
                 }
@@ -169,10 +192,10 @@ impl Engine {
                 weights,
                 bias,
             } => {
-                let r = fc::fc(input, weights, bias, *n_in, *n_out, self.cells)?;
+                let r = fc::fc_batch(input, batch, weights, bias, *n_in, *n_out, self.cells)?;
                 self.stats.ops += r.macs;
                 LayerOutput {
-                    shape: vec![*n_out],
+                    shape: vec![batch, *n_out],
                     data: r.data,
                     cycles: r.cycles,
                 }
@@ -279,6 +302,62 @@ mod tests {
         let out = e.run(&[-8, 8], &[2]).unwrap();
         // -8*4 >> 2 = -8 -> relu 0 ; 8*4 >> 2 = 8
         assert_eq!(out.data, vec![0, 8]);
+    }
+
+    #[test]
+    fn run_batch_bit_exact_and_shaped() {
+        let weights: Vec<i64> = (0..18).map(|i| (i as i64 % 5) - 2).collect();
+        let cfg = EngineConfig {
+            mode: EngineMode::Conv2d {
+                cout: 2,
+                cin: 1,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+                weights,
+            },
+            relu: true,
+            out_shift: 2,
+        };
+        let images: Vec<Vec<i64>> = (0..3)
+            .map(|n| (0..36).map(|i| ((i * 7 + n * 11) % 19) as i64 - 9).collect())
+            .collect();
+        let mut packed = Vec::new();
+        for img in &images {
+            packed.extend_from_slice(img);
+        }
+        let mut eb = Engine::new(64);
+        eb.reconfigure(cfg.clone()).unwrap();
+        let batched = eb.run_batch(&packed, 3, &[1, 6, 6]).unwrap();
+        assert_eq!(batched.shape, vec![3, 2, 6, 6]);
+        let per_img = 2 * 6 * 6;
+        for (n, img) in images.iter().enumerate() {
+            let mut e1 = Engine::new(64);
+            e1.reconfigure(cfg.clone()).unwrap();
+            let single = e1.run(img, &[1, 6, 6]).unwrap();
+            assert_eq!(single.shape, vec![2, 6, 6]);
+            assert_eq!(
+                &batched.data[n * per_img..(n + 1) * per_img],
+                &single.data[..],
+                "image {n}: postprocess must match per-image runs"
+            );
+        }
+        // one reconfiguration served the whole batch
+        assert_eq!(eb.stats.reconfigs, 1);
+    }
+
+    #[test]
+    fn run_batch_rejects_bad_batches() {
+        let mut e = Engine::new(16);
+        e.reconfigure(EngineConfig {
+            mode: EngineMode::Fir { taps: vec![1, 2] },
+            relu: false,
+            out_shift: 0,
+        })
+        .unwrap();
+        assert!(e.run_batch(&[1, 2, 3, 4], 2, &[2]).is_err(), "FIR is unbatched");
+        assert!(e.run_batch(&[1, 2], 0, &[2]).is_err(), "batch 0");
     }
 
     #[test]

@@ -4,9 +4,12 @@
 //! WᵢXᵢ … Systolic cell architecture could easily achieve this by, for
 //! example, storing the weight in place of h(n)." Each output neuron is a
 //! dot product computed by one accumulating cell with streamed weights;
-//! `cells` neurons are evaluated in parallel.
+//! `cells` neurons are evaluated in parallel. Batched execution keeps the
+//! per-sample streaming cost (the weights stream at the same rate), but
+//! lets the engine-level reconfiguration — which scales with the weight
+//! count — amortise across the batch.
 
-/// FC result with exact cycle accounting.
+/// FC result with exact cycle accounting (single sample).
 pub struct FcResult {
     /// Output vector, `n_out` entries.
     pub data: Vec<i64>,
@@ -14,6 +17,60 @@ pub struct FcResult {
     pub cycles: u64,
     /// MACs performed.
     pub macs: u64,
+}
+
+/// Batched FC result.
+pub struct FcBatchResult {
+    /// Output, `[n][n_out]` flattened (sample-major).
+    pub data: Vec<i64>,
+    /// Engine cycles for the whole batch.
+    pub cycles: u64,
+    /// MACs performed across the batch.
+    pub macs: u64,
+}
+
+/// Compute `y = W·x + b` for a batch of inputs (`xs` is `[n][n_in]`
+/// flattened; `weights` row-major `n_out × n_in`).
+pub fn fc_batch(
+    xs: &[i64],
+    batch: usize,
+    weights: &[i64],
+    bias: &[i64],
+    n_in: usize,
+    n_out: usize,
+    cells: usize,
+) -> crate::Result<FcBatchResult> {
+    if batch == 0 {
+        return Err(crate::Error::Systolic("fc batch of 0".into()));
+    }
+    if xs.len() != batch * n_in || weights.len() != n_in * n_out || bias.len() != n_out {
+        return Err(crate::Error::Systolic(format!(
+            "fc shapes: x={} W={} b={} for {batch}×{n_out}x{n_in}",
+            xs.len(),
+            weights.len(),
+            bias.len()
+        )));
+    }
+    let mut out = vec![0i64; batch * n_out];
+    for n in 0..batch {
+        let x = &xs[n * n_in..(n + 1) * n_in];
+        for o in 0..n_out {
+            let row = &weights[o * n_in..(o + 1) * n_in];
+            out[n * n_out + o] = bias[o]
+                + row
+                    .iter()
+                    .zip(x.iter())
+                    .map(|(&w, &xv)| w * xv)
+                    .sum::<i64>();
+        }
+    }
+    let lanes = cells.max(1) as u64;
+    let waves = (n_out as u64).div_ceil(lanes);
+    Ok(FcBatchResult {
+        data: out,
+        cycles: waves * n_in as u64 * batch as u64,
+        macs: (batch * n_in * n_out) as u64,
+    })
 }
 
 /// Compute `y = W·x + b` (`weights` row-major `n_out × n_in`).
@@ -25,30 +82,11 @@ pub fn fc(
     n_out: usize,
     cells: usize,
 ) -> crate::Result<FcResult> {
-    if x.len() != n_in || weights.len() != n_in * n_out || bias.len() != n_out {
-        return Err(crate::Error::Systolic(format!(
-            "fc shapes: x={} W={} b={} for {n_out}x{n_in}",
-            x.len(),
-            weights.len(),
-            bias.len()
-        )));
-    }
-    let mut out = vec![0i64; n_out];
-    for (o, out_v) in out.iter_mut().enumerate() {
-        let row = &weights[o * n_in..(o + 1) * n_in];
-        *out_v = bias[o]
-            + row
-                .iter()
-                .zip(x.iter())
-                .map(|(&w, &xv)| w * xv)
-                .sum::<i64>();
-    }
-    let lanes = cells.max(1) as u64;
-    let waves = (n_out as u64 + lanes - 1) / lanes;
+    let r = fc_batch(x, 1, weights, bias, n_in, n_out, cells)?;
     Ok(FcResult {
-        data: out,
-        cycles: waves * n_in as u64,
-        macs: (n_in * n_out) as u64,
+        data: r.data,
+        cycles: r.cycles,
+        macs: r.macs,
     })
 }
 
@@ -90,5 +128,26 @@ mod tests {
     fn shape_errors() {
         assert!(fc(&[1, 2], &[1, 2, 3], &[0], 2, 1, 1).is_err());
         assert!(fc(&[1], &[1, 2], &[0, 0], 1, 2, 1).is_ok());
+        assert!(fc_batch(&[1, 2], 0, &[1, 2], &[0], 2, 1, 1).is_err());
+        assert!(fc_batch(&[1, 2, 3], 2, &[1, 2], &[0], 2, 1, 1).is_err());
+    }
+
+    #[test]
+    fn batch_bit_exact_with_per_sample_runs() {
+        let (n_in, n_out, batch) = (5usize, 3usize, 4usize);
+        let w: Vec<i64> = (0..n_in * n_out).map(|i| (i as i64 % 7) - 3).collect();
+        let b: Vec<i64> = (0..n_out).map(|i| i as i64 * 10).collect();
+        let xs: Vec<i64> = (0..batch * n_in).map(|i| (i as i64 % 11) - 5).collect();
+        let batched = fc_batch(&xs, batch, &w, &b, n_in, n_out, 2).unwrap();
+        for s in 0..batch {
+            let single = fc(&xs[s * n_in..(s + 1) * n_in], &w, &b, n_in, n_out, 2).unwrap();
+            assert_eq!(
+                &batched.data[s * n_out..(s + 1) * n_out],
+                &single.data[..],
+                "sample {s}"
+            );
+            assert_eq!(batched.cycles, batch as u64 * single.cycles);
+        }
+        assert_eq!(batched.macs, (batch * n_in * n_out) as u64);
     }
 }

@@ -16,6 +16,11 @@
 //! MAC utilisation and per-cell activity, which the accelerator model
 //! (`crate::accel`) converts into latency/throughput at the STA-derived
 //! clock.
+//!
+//! Conv/pool/FC modes also execute **batched** ([`engine::Engine::run_batch`]):
+//! a batch of images streams through each configured FIR chain before the
+//! taps are reloaded (weight-stationary reuse), so both the tap-load and
+//! the engine-reconfiguration costs amortise across the batch.
 
 pub mod cell;
 pub mod config;

@@ -4,10 +4,12 @@
 //! max-pooling can be used to implement pooling layers on FPGAs." The
 //! engine reconfigures its cells as comparator/accumulator elements; each
 //! window is reduced in `k²` cell-cycles, with `cells` windows in flight.
+//! Batched execution simply enlarges the window pool — the whole batch is
+//! scheduled onto the comparator lanes in one wave sequence.
 
 use super::config::PoolKind;
 
-/// Pooling result with exact cycle accounting.
+/// Pooling result with exact cycle accounting (single image).
 pub struct PoolResult {
     /// `[c][ho][wo]` flattened.
     pub data: Vec<i64>,
@@ -21,8 +23,92 @@ pub struct PoolResult {
     pub ops: u64,
 }
 
+/// Batched pooling result.
+pub struct PoolBatchResult {
+    /// `[n][c][ho][wo]` flattened (image-major).
+    pub data: Vec<i64>,
+    /// Output height.
+    pub ho: usize,
+    /// Output width.
+    pub wo: usize,
+    /// Engine cycles for the whole batch.
+    pub cycles: u64,
+    /// Reduce operations performed across the batch.
+    pub ops: u64,
+}
+
+/// Run `k×k`/`stride` pooling over a batch of `[c][h][w]` images packed
+/// image-major into `inputs`, using a pool of `cells` comparator cells.
+#[allow(clippy::too_many_arguments)]
+pub fn pool2d_batch(
+    inputs: &[i64],
+    batch: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+    kind: PoolKind,
+    cells: usize,
+) -> crate::Result<PoolBatchResult> {
+    if batch == 0 {
+        return Err(crate::Error::Systolic("pool2d batch of 0".into()));
+    }
+    if inputs.len() != batch * c * h * w {
+        return Err(crate::Error::Systolic("pool2d input shape".into()));
+    }
+    if k == 0 || stride == 0 || h < k || w < k {
+        return Err(crate::Error::Systolic(format!(
+            "pool2d geometry k={k} stride={stride} h={h} w={w}"
+        )));
+    }
+    let ho = (h - k) / stride + 1;
+    let wo = (w - k) / stride + 1;
+    let img = c * h * w;
+    let out_img = c * ho * wo;
+    let mut out = vec![0i64; batch * out_img];
+    let mut ops = 0u64;
+    for n in 0..batch {
+        for ch in 0..c {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let mut acc: Option<i64> = None;
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let v = inputs
+                                [n * img + ch * h * w + (oy * stride + ky) * w + (ox * stride + kx)];
+                            ops += 1;
+                            acc = Some(match (acc, kind) {
+                                (None, _) => v,
+                                (Some(a), PoolKind::Max) => a.max(v),
+                                (Some(a), PoolKind::Avg) => a + v,
+                            });
+                        }
+                    }
+                    let mut v = acc.unwrap();
+                    if kind == PoolKind::Avg {
+                        v /= (k * k) as i64;
+                    }
+                    out[n * out_img + ch * ho * wo + oy * wo + ox] = v;
+                }
+            }
+        }
+    }
+    let windows = (batch * c * ho * wo) as u64;
+    let lanes = cells.max(1) as u64;
+    let cycles = windows.div_ceil(lanes) * (k * k) as u64;
+    Ok(PoolBatchResult {
+        data: out,
+        ho,
+        wo,
+        cycles,
+        ops,
+    })
+}
+
 /// Run `k×k`/`stride` pooling over `[c][h][w]` input using a pool of
 /// `cells` comparator cells.
+#[allow(clippy::too_many_arguments)]
 pub fn pool2d(
     input: &[i64],
     c: usize,
@@ -33,50 +119,13 @@ pub fn pool2d(
     kind: PoolKind,
     cells: usize,
 ) -> crate::Result<PoolResult> {
-    if input.len() != c * h * w {
-        return Err(crate::Error::Systolic("pool2d input shape".into()));
-    }
-    if k == 0 || stride == 0 || h < k || w < k {
-        return Err(crate::Error::Systolic(format!(
-            "pool2d geometry k={k} stride={stride} h={h} w={w}"
-        )));
-    }
-    let ho = (h - k) / stride + 1;
-    let wo = (w - k) / stride + 1;
-    let mut out = vec![0i64; c * ho * wo];
-    let mut ops = 0u64;
-    for ch in 0..c {
-        for oy in 0..ho {
-            for ox in 0..wo {
-                let mut acc: Option<i64> = None;
-                for ky in 0..k {
-                    for kx in 0..k {
-                        let v = input[ch * h * w + (oy * stride + ky) * w + (ox * stride + kx)];
-                        ops += 1;
-                        acc = Some(match (acc, kind) {
-                            (None, _) => v,
-                            (Some(a), PoolKind::Max) => a.max(v),
-                            (Some(a), PoolKind::Avg) => a + v,
-                        });
-                    }
-                }
-                let mut v = acc.unwrap();
-                if kind == PoolKind::Avg {
-                    v /= (k * k) as i64;
-                }
-                out[ch * ho * wo + oy * wo + ox] = v;
-            }
-        }
-    }
-    let windows = (c * ho * wo) as u64;
-    let lanes = cells.max(1) as u64;
-    let cycles = (windows + lanes - 1) / lanes * (k * k) as u64;
+    let r = pool2d_batch(input, 1, c, h, w, k, stride, kind, cells)?;
     Ok(PoolResult {
-        data: out,
-        ho,
-        wo,
-        cycles,
-        ops,
+        data: r.data,
+        ho: r.ho,
+        wo: r.wo,
+        cycles: r.cycles,
+        ops: r.ops,
     })
 }
 
@@ -137,5 +186,31 @@ mod tests {
     fn rejects_bad_geometry() {
         assert!(pool2d(&[0; 4], 1, 2, 2, 3, 1, PoolKind::Max, 4).is_err());
         assert!(pool2d(&[0; 4], 1, 2, 2, 2, 0, PoolKind::Max, 4).is_err());
+        assert!(pool2d_batch(&[0; 4], 0, 1, 2, 2, 2, 2, PoolKind::Max, 4).is_err());
+        assert!(pool2d_batch(&[0; 6], 2, 1, 2, 2, 2, 2, PoolKind::Max, 4).is_err());
+    }
+
+    #[test]
+    fn batch_bit_exact_with_per_image_runs() {
+        let (c, h, w, batch) = (2usize, 6usize, 6usize, 3usize);
+        let images: Vec<Vec<i64>> = (0..batch)
+            .map(|n| (0..c * h * w).map(|i| ((i * 13 + n * 7) % 29) as i64 - 14).collect())
+            .collect();
+        let mut packed = Vec::new();
+        for img in &images {
+            packed.extend_from_slice(img);
+        }
+        for kind in [PoolKind::Max, PoolKind::Avg] {
+            let batched = pool2d_batch(&packed, batch, c, h, w, 2, 2, kind, 8).unwrap();
+            let per_img = c * batched.ho * batched.wo;
+            for (n, img) in images.iter().enumerate() {
+                let single = pool2d(img, c, h, w, 2, 2, kind, 8).unwrap();
+                assert_eq!(
+                    &batched.data[n * per_img..(n + 1) * per_img],
+                    &single.data[..],
+                    "image {n} {kind:?}"
+                );
+            }
+        }
     }
 }
