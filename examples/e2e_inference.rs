@@ -95,6 +95,7 @@ fn main() -> kom_accel::Result<()> {
         },
         soc: SocConfig::serving(),
         clock_mhz,
+        ..Default::default()
     };
     let coord = Coordinator::start(cfg, &inst)?;
     let t0 = Instant::now();

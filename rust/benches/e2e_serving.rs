@@ -4,6 +4,7 @@
 //! (when built).
 
 use kom_accel::accel::{Driver, SocConfig};
+use kom_accel::cluster::{Cluster, ClusterConfig, SchedulePolicy, Scheduler};
 use kom_accel::cnn::networks::{Network, NetworkInstance, NetworkKind};
 use kom_accel::cnn::Tensor;
 use kom_accel::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
@@ -114,6 +115,50 @@ fn main() {
             format!("{per_req:.0}"),
             format!("{:.2}x", seq_per_req / per_req),
         ]);
+    }
+    println!("{}", t.to_ascii());
+
+    // ---- sharded scale-out: shards × batch (simulated cluster cycles) --
+    // One batch split data-parallel across replicated SoCs; the cluster
+    // cost is the max over shards (replicas run concurrently), so the
+    // speedup column is the scale-out claim of the cluster subsystem.
+    println!("===== sharded scale-out: shards x batch (simulated cluster cycles/req) =====");
+    let batches = [4usize, 8, 16];
+    let mut t = Table::new(&["shards", "batch 4", "batch 8", "batch 16", "speedup @16"]);
+    let mut one_shard_at_16 = 0u64;
+    for shards in [1usize, 2, 4] {
+        let mut cells = Vec::new();
+        let mut at_16 = 0u64;
+        for &batch in &batches {
+            let mut cluster = Cluster::new(ClusterConfig {
+                replicas: shards,
+                soc: bench_soc(),
+            })
+            .unwrap();
+            let cdep = inst
+                .deploy_cluster(&mut cluster, batch.div_ceil(shards))
+                .unwrap();
+            let mut sched =
+                Scheduler::new(SchedulePolicy::LeastOutstandingCycles, shards).unwrap();
+            let slices: Vec<&[i64]> = inputs[..batch].iter().map(|t| t.data.as_slice()).collect();
+            cdep.run_sharded(&mut cluster, &mut sched, &slices).unwrap(); // warm
+            let (_, m) = cdep.run_sharded(&mut cluster, &mut sched, &slices).unwrap();
+            let cycles = m.total_cycles();
+            if batch == 16 {
+                at_16 = cycles;
+            }
+            cells.push(format!("{:.0}", cycles as f64 / batch as f64));
+        }
+        if shards == 1 {
+            one_shard_at_16 = at_16;
+        }
+        let speedup = format!("{:.2}x", one_shard_at_16 as f64 / at_16 as f64);
+        t.row(
+            std::iter::once(shards.to_string())
+                .chain(cells)
+                .chain(std::iter::once(speedup))
+                .collect(),
+        );
     }
     println!("{}", t.to_ascii());
 

@@ -9,6 +9,7 @@
 
 use super::desc::{LayerDesc, DESC_WORDS};
 use super::soc::{map, Soc, SocConfig};
+use crate::cluster::ShardPlan;
 use crate::error::{Error, Result};
 use crate::riscv::asm::{reg, Assembler};
 use crate::riscv::cpu::{Cpu, StopReason};
@@ -49,6 +50,67 @@ impl RunMetrics {
             0.0
         } else {
             self.ops as f64 / self.total_cycles() as f64
+        }
+    }
+}
+
+/// One shard's run within a sharded dispatch.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardRun {
+    /// Shard index within the plan.
+    pub shard: usize,
+    /// Replica that executed it.
+    pub replica: usize,
+    /// The shard's own run metrics (its BATCH-register value is
+    /// `metrics.requests`).
+    pub metrics: RunMetrics,
+}
+
+/// Aggregate metrics from one sharded dispatch across replicated
+/// accelerators. The headline number is [`ShardedMetrics::total_cycles`]:
+/// **max over shards, not sum** — replicas run concurrently, so the batch
+/// completes when the slowest shard does. The sum is still available as
+/// [`ShardedMetrics::serial_cycles`] for speedup reporting.
+#[derive(Clone, Debug, Default)]
+pub struct ShardedMetrics {
+    /// Per-shard runs, in shard (batch) order.
+    pub shards: Vec<ShardRun>,
+}
+
+impl ShardedMetrics {
+    /// Cluster cycles for the dispatch: the slowest shard's total.
+    pub fn total_cycles(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.metrics.total_cycles())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Sum of per-shard cycles — what one replica running the shards back
+    /// to back would cost.
+    pub fn serial_cycles(&self) -> u64 {
+        self.shards.iter().map(|s| s.metrics.total_cycles()).sum()
+    }
+
+    /// Requests served across all shards.
+    pub fn requests(&self) -> u64 {
+        self.shards.iter().map(|s| s.metrics.requests).sum()
+    }
+
+    /// MAC/reduce operations across all shards.
+    pub fn ops(&self) -> u64 {
+        self.shards.iter().map(|s| s.metrics.ops).sum()
+    }
+
+    /// Parallel speedup of this dispatch: serial sum over the critical
+    /// path (1.0 for a single shard).
+    pub fn parallel_speedup(&self) -> f64 {
+        let max = self.total_cycles();
+        if max == 0 {
+            0.0
+        } else {
+            self.serial_cycles() as f64 / max as f64
         }
     }
 }
@@ -179,6 +241,89 @@ impl Driver {
             requests: batch as u64,
         })
     }
+
+    /// Cluster-aware dispatch: run `plan`'s shards concurrently across
+    /// `replicas`, shard `i` on replica `assignments[i]` against that
+    /// replica's own descriptor table `tables[assignments[i]]` (every
+    /// replica carries its own DRAM geometry, so tables are per-replica).
+    /// Each shard's control program writes its sub-batch into the
+    /// replica's `BATCH` register; the per-shard [`RunMetrics`] merge into
+    /// a [`ShardedMetrics`] whose total is the **max over shards** — the
+    /// parallel-completion model. Assignments must be distinct: two shards
+    /// on one replica would overwrite each other's input regions.
+    pub fn run_table_sharded(
+        replicas: &mut [Driver],
+        tables: &[&[LayerDesc]],
+        plan: &ShardPlan,
+        assignments: &[usize],
+    ) -> Result<ShardedMetrics> {
+        if assignments.len() != plan.len() {
+            return Err(Error::Cluster(format!(
+                "{} assignments for {} shards",
+                assignments.len(),
+                plan.len()
+            )));
+        }
+        if tables.len() != replicas.len() {
+            return Err(Error::Cluster(format!(
+                "{} descriptor tables for {} replicas",
+                tables.len(),
+                replicas.len()
+            )));
+        }
+        // shard index + sub-batch per replica, rejecting double bookings
+        let mut job_of: Vec<Option<(usize, u32)>> = vec![None; replicas.len()];
+        for (shard, &r) in plan.shards.iter().zip(assignments) {
+            if r >= replicas.len() {
+                return Err(Error::Cluster(format!(
+                    "shard {} assigned to replica {r} of {}",
+                    shard.index,
+                    replicas.len()
+                )));
+            }
+            if job_of[r].replace((shard.index, shard.len as u32)).is_some() {
+                return Err(Error::Cluster(format!(
+                    "replica {r} assigned more than one shard"
+                )));
+            }
+        }
+        let mut results: Vec<(usize, usize, Result<RunMetrics>)> = std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(plan.len());
+            for ((r, drv), job) in replicas.iter_mut().enumerate().zip(&job_of) {
+                if let Some((shard, batch)) = *job {
+                    let table = tables[r];
+                    handles.push((shard, r, s.spawn(move || drv.run_table_batch(table, batch))));
+                }
+            }
+            handles
+                .into_iter()
+                .map(|(shard, r, h)| {
+                    let res = h.join().unwrap_or_else(|payload| {
+                        let msg = payload
+                            .downcast_ref::<&str>()
+                            .map(|s| s.to_string())
+                            .or_else(|| payload.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "non-string panic payload".into());
+                        Err(Error::Cluster(format!("shard {shard} thread panicked: {msg}")))
+                    });
+                    (shard, r, res)
+                })
+                .collect()
+        });
+        results.sort_by_key(|&(shard, ..)| shard);
+        let mut shards = Vec::with_capacity(results.len());
+        for (shard, replica, res) in results {
+            let metrics = res.map_err(|e| {
+                Error::Cluster(format!("shard {shard} on replica {replica}: {e}"))
+            })?;
+            shards.push(ShardRun {
+                shard,
+                replica,
+                metrics,
+            });
+        }
+        Ok(ShardedMetrics { shards })
+    }
 }
 
 #[cfg(test)]
@@ -293,6 +438,117 @@ mod tests {
             "batched {} !< sequential {seq_cycles}",
             m.total_cycles()
         );
+    }
+
+    #[test]
+    fn sharded_dispatch_runs_each_shard_on_its_replica() {
+        let img: Vec<i64> = (0..16).collect();
+        // three images over two replicas: shards of 2 and 1
+        let plan = ShardPlan::split(3, 2).unwrap();
+        assert_eq!(plan.shards[0].len, 2);
+        assert_eq!(plan.shards[1].len, 1);
+
+        let mut replicas = Vec::new();
+        let mut tables = Vec::new();
+        let mut outs = Vec::new();
+        for shard_len in [2usize, 1] {
+            let mut drv = Driver::new(SocConfig {
+                dram_words: 8192,
+                spad_words: 1024,
+                ..Default::default()
+            });
+            let in_addr = drv.alloc(16 * shard_len).unwrap();
+            let w_addr = drv.upload(&[1, 1, 1, 1]).unwrap();
+            let out_addr = drv.alloc(9 * shard_len).unwrap();
+            let mut packed = Vec::new();
+            for _ in 0..shard_len {
+                packed.extend_from_slice(&img);
+            }
+            drv.write_region(in_addr, &packed).unwrap();
+            tables.push(vec![LayerDesc::Conv {
+                cout: 1,
+                cin: 1,
+                k: 2,
+                stride: 1,
+                pad: 0,
+                w_addr,
+                in_addr,
+                h: 4,
+                w: 4,
+                out_addr,
+                relu: false,
+                out_shift: 0,
+            }]);
+            outs.push((out_addr, shard_len));
+            replicas.push(drv);
+        }
+        let refs: Vec<&[LayerDesc]> = tables.iter().map(|t| t.as_slice()).collect();
+        let m = Driver::run_table_sharded(&mut replicas, &refs, &plan, &[0, 1]).unwrap();
+        assert_eq!(m.shards.len(), 2);
+        assert_eq!(m.requests(), 3);
+        assert_eq!(m.shards[0].metrics.requests, 2, "shard 0 ran BATCH=2");
+        assert_eq!(m.shards[1].metrics.requests, 1, "shard 1 ran BATCH=1");
+        // max-over-shards, not sum: the parallel-completion model
+        let per: Vec<u64> = m.shards.iter().map(|s| s.metrics.total_cycles()).collect();
+        assert_eq!(m.total_cycles(), per.iter().copied().max().unwrap());
+        assert_eq!(m.serial_cycles(), per.iter().sum::<u64>());
+        assert!(m.parallel_speedup() > 1.0);
+        // every image produced the same conv output on its replica
+        let want = {
+            let mut drv = Driver::new(SocConfig {
+                dram_words: 8192,
+                spad_words: 1024,
+                ..Default::default()
+            });
+            let in_addr = drv.upload(&img).unwrap();
+            let w_addr = drv.upload(&[1, 1, 1, 1]).unwrap();
+            let out_addr = drv.alloc(9).unwrap();
+            drv.run_table(&[LayerDesc::Conv {
+                cout: 1,
+                cin: 1,
+                k: 2,
+                stride: 1,
+                pad: 0,
+                w_addr,
+                in_addr,
+                h: 4,
+                w: 4,
+                out_addr,
+                relu: false,
+                out_shift: 0,
+            }])
+            .unwrap();
+            drv.read_region(out_addr, 9).unwrap()
+        };
+        for (r, &(out_addr, shard_len)) in outs.iter().enumerate() {
+            let flat = replicas[r].read_region(out_addr, 9 * shard_len).unwrap();
+            for (i, chunk) in flat.chunks(9).enumerate() {
+                assert_eq!(chunk, &want[..], "replica {r} image {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_dispatch_rejects_bad_placements() {
+        let mk = || {
+            Driver::new(SocConfig {
+                dram_words: 1024,
+                spad_words: 256,
+                ..Default::default()
+            })
+        };
+        let mut replicas = vec![mk(), mk()];
+        let tables: Vec<Vec<LayerDesc>> = vec![Vec::new(), Vec::new()];
+        let refs: Vec<&[LayerDesc]> = tables.iter().map(|t| t.as_slice()).collect();
+        let plan = ShardPlan::split(4, 2).unwrap();
+        // wrong assignment arity
+        assert!(Driver::run_table_sharded(&mut replicas, &refs, &plan, &[0]).is_err());
+        // replica out of range
+        assert!(Driver::run_table_sharded(&mut replicas, &refs, &plan, &[0, 7]).is_err());
+        // double-booked replica
+        assert!(Driver::run_table_sharded(&mut replicas, &refs, &plan, &[1, 1]).is_err());
+        // table count must match replica count
+        assert!(Driver::run_table_sharded(&mut replicas, &refs[..1], &plan, &[0, 1]).is_err());
     }
 
     #[test]

@@ -6,12 +6,14 @@
 //! * [`soc`] — the SoC: memory map, MMIO bridge between the control CPU
 //!   and the engine, cycle accounting,
 //! * [`driver`] — host API: load weights, submit a descriptor table, run
-//!   the control program, read back outputs and metrics.
+//!   the control program, read back outputs and metrics — including the
+//!   cluster-aware [`Driver::run_table_sharded`] dispatch across
+//!   replicated accelerators (see [`crate::cluster`]).
 
 pub mod desc;
 pub mod driver;
 pub mod soc;
 
 pub use desc::LayerDesc;
-pub use driver::{Driver, RunMetrics};
+pub use driver::{Driver, RunMetrics, ShardRun, ShardedMetrics};
 pub use soc::{Soc, SocConfig};

@@ -1,0 +1,168 @@
+//! The cluster: N replicated accelerator SoCs behind one dispatch point.
+//!
+//! Each replica is a full [`Driver`] — its own SoC, DRAM, descriptor
+//! tables, DMA engine and cycle counters — mirroring a serving node with
+//! several identical accelerator cards. The cluster itself holds no data
+//! plane: callers deploy a network onto every replica (see
+//! `cnn::NetworkInstance::deploy_cluster`), plan a batch split with
+//! [`ShardPlan`](super::ShardPlan), place it with a
+//! [`Scheduler`](super::Scheduler), and dispatch through
+//! [`Cluster::run_assigned`].
+
+use super::plan::ShardPlan;
+use super::scheduler::Scheduler;
+use crate::accel::driver::ShardedMetrics;
+use crate::accel::{Driver, LayerDesc, SocConfig};
+use crate::error::{Error, Result};
+
+/// Cluster sizing.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterConfig {
+    /// Replicated accelerator count.
+    pub replicas: usize,
+    /// Per-replica SoC configuration (replicas are identical).
+    pub soc: SocConfig,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            replicas: 2,
+            soc: SocConfig::serving(),
+        }
+    }
+}
+
+/// N independent accelerator replicas.
+pub struct Cluster {
+    drivers: Vec<Driver>,
+}
+
+impl Cluster {
+    /// Bring up `cfg.replicas` identical accelerators.
+    pub fn new(cfg: ClusterConfig) -> Result<Self> {
+        if cfg.replicas == 0 {
+            return Err(Error::Cluster("cluster of 0 replicas".into()));
+        }
+        Ok(Cluster {
+            drivers: (0..cfg.replicas).map(|_| Driver::new(cfg.soc)).collect(),
+        })
+    }
+
+    /// Replica count.
+    pub fn len(&self) -> usize {
+        self.drivers.len()
+    }
+
+    /// True when the cluster holds no replicas (never constructed so).
+    pub fn is_empty(&self) -> bool {
+        self.drivers.is_empty()
+    }
+
+    /// Borrow one replica's driver (host-side weight upload, readback).
+    pub fn driver_mut(&mut self, replica: usize) -> &mut Driver {
+        &mut self.drivers[replica]
+    }
+
+    /// Borrow all replicas.
+    pub fn drivers_mut(&mut self) -> &mut [Driver] {
+        &mut self.drivers
+    }
+
+    /// Borrow all replicas immutably.
+    pub fn drivers(&self) -> &[Driver] {
+        &self.drivers
+    }
+
+    /// Dispatch an already-placed plan: shard `i` runs on replica
+    /// `assignments[i]` against that replica's own descriptor table
+    /// `tables[assignments[i]]`, all replicas concurrently. Completed
+    /// shards are retired back into `sched` so its outstanding-cycles
+    /// view stays truthful across batches. Inputs must already sit in
+    /// each replica's DRAM; outputs are read back by the caller.
+    pub fn run_assigned(
+        &mut self,
+        tables: &[&[LayerDesc]],
+        plan: &ShardPlan,
+        assignments: &[usize],
+        sched: &mut Scheduler,
+    ) -> Result<ShardedMetrics> {
+        let m = Driver::run_table_sharded(&mut self.drivers, tables, plan, assignments)?;
+        for run in &m.shards {
+            sched.complete(run.replica, run.metrics.requests, run.metrics.total_cycles());
+        }
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::SchedulePolicy;
+
+    fn small_soc() -> SocConfig {
+        SocConfig {
+            dram_words: 4096,
+            spad_words: 512,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn zero_replicas_rejected() {
+        assert!(Cluster::new(ClusterConfig {
+            replicas: 0,
+            soc: small_soc()
+        })
+        .is_err());
+    }
+
+    #[test]
+    fn replicas_are_independent_socs() {
+        let mut c = Cluster::new(ClusterConfig {
+            replicas: 2,
+            soc: small_soc(),
+        })
+        .unwrap();
+        assert_eq!(c.len(), 2);
+        // writing replica 0's DRAM must not leak into replica 1
+        let a0 = c.driver_mut(0).upload(&[1, 2, 3]).unwrap();
+        assert_eq!(c.driver_mut(0).read_region(a0, 3).unwrap(), vec![1, 2, 3]);
+        assert_eq!(c.driver_mut(1).read_region(a0, 3).unwrap(), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn run_assigned_retires_work_into_scheduler() {
+        let mut c = Cluster::new(ClusterConfig {
+            replicas: 2,
+            soc: small_soc(),
+        })
+        .unwrap();
+        // per-replica FIR over each replica's own data
+        let mut tables = Vec::new();
+        for r in 0..2 {
+            let drv = c.driver_mut(r);
+            let taps = drv.upload(&[1, 1]).unwrap();
+            let input = drv.upload(&[1, 2, 3, 4]).unwrap();
+            let out = drv.alloc(4).unwrap();
+            tables.push(vec![LayerDesc::Fir {
+                taps_addr: taps,
+                n_taps: 2,
+                in_addr: input,
+                n: 4,
+                out_addr: out,
+            }]);
+        }
+        let refs: Vec<&[LayerDesc]> = tables.iter().map(|t| t.as_slice()).collect();
+        let plan = ShardPlan::split(2, 2).unwrap();
+        let mut sched = Scheduler::new(SchedulePolicy::LeastOutstandingCycles, 2).unwrap();
+        let asg = sched.assign_plan(&plan).unwrap();
+        let m = c.run_assigned(&refs, &plan, &asg, &mut sched).unwrap();
+        assert_eq!(m.shards.len(), 2);
+        assert_eq!(m.requests(), 2);
+        assert!(m.total_cycles() > 0);
+        // all in-flight work retired, busy time recorded on both replicas
+        assert!(sched.outstanding_cycles().iter().all(|&c| c == 0));
+        assert!(sched.busy_cycles().iter().all(|&c| c > 0));
+    }
+}

@@ -1,0 +1,30 @@
+//! Multi-SoC cluster: sharded batch execution across replicated
+//! accelerators.
+//!
+//! One simulated SoC serves one batch at a time; this subsystem scales the
+//! design out the way Shen et al. ("Maximizing CNN Accelerator Efficiency
+//! Through Resource Partitioning") partition one FPGA into multiple
+//! convolutional processors, and the way multi-accelerator serving nodes
+//! replicate a proven single-kernel design:
+//!
+//! * [`plan`] — [`ShardPlan`]: split one batch data-parallel across
+//!   replicas (uneven tails front-loaded, every shard ≥ 1 request),
+//! * [`scheduler`] — [`Scheduler`] with round-robin and
+//!   least-outstanding-cycles placement policies,
+//! * [`cluster`] — [`Cluster`]: N independent [`crate::accel::Driver`]
+//!   replicas (each with its own DRAM, descriptor tables and cycle
+//!   counters) dispatched concurrently.
+//!
+//! The aggregate cost of a sharded run is **max over shards, not sum**
+//! ([`crate::accel::ShardedMetrics::total_cycles`]): replicas run in
+//! parallel, so the batch is done when the slowest shard is done — that is
+//! the scale-out speedup claim, and `rust/tests/cluster_sharding.rs` gates
+//! it at ≥ 2× for 4 shards on a batch-16 Tiny run.
+
+pub mod cluster;
+pub mod plan;
+pub mod scheduler;
+
+pub use cluster::{Cluster, ClusterConfig};
+pub use plan::{Shard, ShardPlan};
+pub use scheduler::{SchedulePolicy, Scheduler};

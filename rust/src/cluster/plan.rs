@@ -1,0 +1,115 @@
+//! Shard planning: split one batch data-parallel across replicas.
+//!
+//! A [`ShardPlan`] carves an incoming batch of `N` requests into at most
+//! `max_shards` contiguous shards. The remainder is front-loaded, so shard
+//! sizes differ by at most one and every shard holds at least one request
+//! — a batch smaller than the replica count simply leaves some replicas
+//! idle instead of shipping empty work.
+
+use crate::error::{Error, Result};
+
+/// One contiguous slice of the batch, destined for a single replica.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shard {
+    /// Shard index within the plan.
+    pub index: usize,
+    /// First request index (into the batch) this shard covers.
+    pub offset: usize,
+    /// Requests in this shard (always ≥ 1).
+    pub len: usize,
+}
+
+/// A data-parallel split of a batch across cluster replicas.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    /// Total requests across all shards.
+    pub batch: usize,
+    /// The shards, in batch order (offsets are contiguous and ascending).
+    pub shards: Vec<Shard>,
+}
+
+impl ShardPlan {
+    /// Split `batch` requests into `min(max_shards, batch)` shards whose
+    /// sizes differ by at most one (remainder front-loaded). Errors on a
+    /// zero batch or a zero shard count.
+    pub fn split(batch: usize, max_shards: usize) -> Result<ShardPlan> {
+        if max_shards == 0 {
+            return Err(Error::Cluster("shard count of 0".into()));
+        }
+        if batch == 0 {
+            return Err(Error::Cluster("cannot shard a batch of 0".into()));
+        }
+        let n_shards = max_shards.min(batch);
+        let base = batch / n_shards;
+        let rem = batch % n_shards;
+        let mut shards = Vec::with_capacity(n_shards);
+        let mut offset = 0;
+        for index in 0..n_shards {
+            let len = base + usize::from(index < rem);
+            shards.push(Shard { index, offset, len });
+            offset += len;
+        }
+        debug_assert_eq!(offset, batch);
+        Ok(ShardPlan { batch, shards })
+    }
+
+    /// Number of shards in the plan.
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// True when the plan holds no shards (never produced by [`split`](Self::split)).
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    /// The largest sub-batch in the plan (capacity each replica must hold).
+    pub fn max_shard_len(&self) -> usize {
+        self.shards.iter().map(|s| s.len).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_split() {
+        let p = ShardPlan::split(16, 4).unwrap();
+        assert_eq!(p.len(), 4);
+        assert!(p.shards.iter().all(|s| s.len == 4));
+        assert_eq!(p.max_shard_len(), 4);
+        let offsets: Vec<usize> = p.shards.iter().map(|s| s.offset).collect();
+        assert_eq!(offsets, vec![0, 4, 8, 12]);
+    }
+
+    #[test]
+    fn uneven_tail_front_loaded_and_loses_nothing() {
+        let p = ShardPlan::split(7, 3).unwrap();
+        let lens: Vec<usize> = p.shards.iter().map(|s| s.len).collect();
+        assert_eq!(lens, vec![3, 2, 2]);
+        assert_eq!(p.shards.iter().map(|s| s.len).sum::<usize>(), 7);
+        assert_eq!(p.max_shard_len(), 3);
+        // contiguous, ascending coverage of the whole batch
+        let mut next = 0;
+        for s in &p.shards {
+            assert_eq!(s.offset, next);
+            assert!(s.len >= 1);
+            next += s.len;
+        }
+        assert_eq!(next, 7);
+    }
+
+    #[test]
+    fn batch_smaller_than_shard_count_caps_at_batch() {
+        let p = ShardPlan::split(2, 8).unwrap();
+        assert_eq!(p.len(), 2);
+        assert!(p.shards.iter().all(|s| s.len == 1));
+    }
+
+    #[test]
+    fn zero_inputs_rejected() {
+        assert!(ShardPlan::split(0, 4).is_err());
+        assert!(ShardPlan::split(4, 0).is_err());
+    }
+}

@@ -1,0 +1,241 @@
+//! Shard dispatch policies: which replica runs which shard.
+//!
+//! Two policies (Shen et al.'s resource-partitioned processors need the
+//! same placement decision):
+//!
+//! * **round-robin** — rotate through replicas in order, stateless beyond
+//!   the rotation cursor; optimal when every shard costs the same,
+//! * **least-outstanding-cycles** — send each shard to the replica with
+//!   the least in-flight work. Replicas are identical, so in-flight
+//!   *requests* order the same as in-flight *cycles*; the sort key is
+//!   kept in request units, and a cycles-per-request EMA learned from
+//!   completed runs converts the view to cycles for reporting
+//!   ([`Scheduler::outstanding_cycles`]). With equal shards the two
+//!   policies agree; under uneven shards or staggered completion the
+//!   least-outstanding policy avoids stacking work on a busy replica.
+
+use super::plan::ShardPlan;
+use crate::error::{Error, Result};
+
+/// Dispatch policy for assigning shards to replicas.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulePolicy {
+    /// Rotate through replicas in index order.
+    RoundRobin,
+    /// Pick the replica with the least estimated outstanding cycles.
+    LeastOutstandingCycles,
+}
+
+impl SchedulePolicy {
+    /// Parse a CLI name (`rr`/`round-robin`, `loc`/`least-outstanding`).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "rr" | "round-robin" => SchedulePolicy::RoundRobin,
+            "loc" | "least-outstanding" | "least-outstanding-cycles" => {
+                SchedulePolicy::LeastOutstandingCycles
+            }
+            other => return Err(Error::Usage(format!("unknown schedule policy '{other}'"))),
+        })
+    }
+}
+
+/// Stateful shard→replica scheduler over a fixed replica set.
+#[derive(Debug)]
+pub struct Scheduler {
+    policy: SchedulePolicy,
+    next_rr: usize,
+    /// Requests currently in flight per replica.
+    in_flight: Vec<u64>,
+    /// EMA of accelerator cycles per request, learned from completions
+    /// (starts at 1 so the first plan still orders replicas sensibly).
+    cycles_per_req: u64,
+    /// Cumulative completed cycles per replica (busy time, for reports).
+    busy_cycles: Vec<u64>,
+}
+
+impl Scheduler {
+    /// Scheduler over `replicas` identical accelerators.
+    pub fn new(policy: SchedulePolicy, replicas: usize) -> Result<Self> {
+        if replicas == 0 {
+            return Err(Error::Cluster("scheduler over 0 replicas".into()));
+        }
+        Ok(Scheduler {
+            policy,
+            next_rr: 0,
+            in_flight: vec![0; replicas],
+            cycles_per_req: 1,
+            busy_cycles: vec![0; replicas],
+        })
+    }
+
+    /// The configured policy.
+    pub fn policy(&self) -> SchedulePolicy {
+        self.policy
+    }
+
+    /// Replica count this scheduler places onto.
+    pub fn replicas(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    /// Estimated outstanding cycles per replica.
+    pub fn outstanding_cycles(&self) -> Vec<u64> {
+        self.in_flight
+            .iter()
+            .map(|&reqs| reqs * self.cycles_per_req)
+            .collect()
+    }
+
+    /// Cumulative completed cycles per replica.
+    pub fn busy_cycles(&self) -> &[u64] {
+        &self.busy_cycles
+    }
+
+    /// Assign every shard of `plan` to a distinct replica and mark the
+    /// work in flight. Errors when the plan holds more shards than there
+    /// are replicas (one shard's inputs would overwrite another's DRAM
+    /// region on the shared replica).
+    pub fn assign_plan(&mut self, plan: &ShardPlan) -> Result<Vec<usize>> {
+        let n = self.in_flight.len();
+        if plan.len() > n {
+            return Err(Error::Cluster(format!(
+                "plan has {} shards but the cluster has {n} replicas",
+                plan.len()
+            )));
+        }
+        let order: Vec<usize> = match self.policy {
+            SchedulePolicy::RoundRobin => {
+                let start = self.next_rr;
+                self.next_rr = (self.next_rr + plan.len()) % n;
+                (0..n).map(|i| (start + i) % n).collect()
+            }
+            SchedulePolicy::LeastOutstandingCycles => {
+                let mut idx: Vec<usize> = (0..n).collect();
+                // replicas are identical, so outstanding requests order
+                // the same as outstanding cycles — the sort key stays in
+                // request units and the learned cycles/request estimate
+                // only converts the view for `outstanding_cycles()`.
+                // Stable sort: ties go to the lowest replica index.
+                idx.sort_by_key(|&r| self.in_flight[r]);
+                idx
+            }
+        };
+        let assignments: Vec<usize> = order.into_iter().take(plan.len()).collect();
+        for (shard, &r) in plan.shards.iter().zip(&assignments) {
+            self.in_flight[r] += shard.len as u64;
+        }
+        Ok(assignments)
+    }
+
+    /// Retire a completed shard: `requests` leave the replica's in-flight
+    /// count and `cycles` (the measured run cost) updates both the
+    /// replica's busy time and the learned per-request estimate.
+    pub fn complete(&mut self, replica: usize, requests: u64, cycles: u64) {
+        self.retire(replica, requests);
+        if let Some(b) = self.busy_cycles.get_mut(replica) {
+            *b += cycles;
+        }
+        if requests > 0 {
+            let observed = cycles / requests;
+            // EMA with 1/4 weight on the new observation
+            self.cycles_per_req = (self.cycles_per_req * 3 + observed).div_ceil(4);
+        }
+    }
+
+    /// Drop in-flight work without recording a completion — for failed or
+    /// abandoned dispatches, so an error path cannot leak phantom load
+    /// into future placement decisions. Busy time and the learned cycle
+    /// estimate are untouched.
+    pub fn retire(&mut self, replica: usize, requests: u64) {
+        if let Some(f) = self.in_flight.get_mut(replica) {
+            *f = f.saturating_sub(requests);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_rotates_across_plans() {
+        let mut s = Scheduler::new(SchedulePolicy::RoundRobin, 4).unwrap();
+        let one = ShardPlan::split(3, 1).unwrap();
+        assert_eq!(s.assign_plan(&one).unwrap(), vec![0]);
+        assert_eq!(s.assign_plan(&one).unwrap(), vec![1]);
+        assert_eq!(s.assign_plan(&one).unwrap(), vec![2]);
+        assert_eq!(s.assign_plan(&one).unwrap(), vec![3]);
+        assert_eq!(s.assign_plan(&one).unwrap(), vec![0], "wraps");
+        let two = ShardPlan::split(8, 2).unwrap();
+        assert_eq!(s.assign_plan(&two).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn least_outstanding_prefers_idle_replicas() {
+        let mut s = Scheduler::new(SchedulePolicy::LeastOutstandingCycles, 3).unwrap();
+        let one = ShardPlan::split(4, 1).unwrap();
+        // replica 0 takes 4 in-flight requests and never completes
+        assert_eq!(s.assign_plan(&one).unwrap(), vec![0]);
+        // the next singleton plans land on the idle replicas
+        assert_eq!(s.assign_plan(&one).unwrap(), vec![1]);
+        assert_eq!(s.assign_plan(&one).unwrap(), vec![2]);
+        // everyone equally loaded → lowest index wins the tie
+        assert_eq!(s.assign_plan(&one).unwrap(), vec![0]);
+        // completing replica 1's work makes it the least loaded
+        s.complete(1, 4, 400);
+        assert_eq!(s.assign_plan(&one).unwrap(), vec![1]);
+        assert_eq!(s.busy_cycles()[1], 400);
+    }
+
+    #[test]
+    fn assignments_are_distinct_per_plan() {
+        for policy in [SchedulePolicy::RoundRobin, SchedulePolicy::LeastOutstandingCycles] {
+            let mut s = Scheduler::new(policy, 4).unwrap();
+            let plan = ShardPlan::split(10, 4).unwrap();
+            let asg = s.assign_plan(&plan).unwrap();
+            let mut seen = asg.clone();
+            seen.sort_unstable();
+            seen.dedup();
+            assert_eq!(seen.len(), asg.len(), "{policy:?} duplicated a replica");
+        }
+    }
+
+    #[test]
+    fn retire_drops_in_flight_without_completion_side_effects() {
+        let mut s = Scheduler::new(SchedulePolicy::LeastOutstandingCycles, 2).unwrap();
+        assert_eq!(s.replicas(), 2);
+        let plan = ShardPlan::split(6, 2).unwrap();
+        let asg = s.assign_plan(&plan).unwrap();
+        assert!(s.outstanding_cycles().iter().any(|&c| c > 0));
+        // abandon the dispatch: in-flight drains, busy time stays zero
+        for (shard, &r) in plan.shards.iter().zip(&asg) {
+            s.retire(r, shard.len as u64);
+        }
+        assert!(s.outstanding_cycles().iter().all(|&c| c == 0));
+        assert!(s.busy_cycles().iter().all(|&c| c == 0));
+        // out-of-range replica is a no-op, not a panic
+        s.retire(99, 1);
+    }
+
+    #[test]
+    fn too_many_shards_rejected() {
+        let mut s = Scheduler::new(SchedulePolicy::RoundRobin, 2).unwrap();
+        let plan = ShardPlan::split(9, 3).unwrap();
+        assert!(s.assign_plan(&plan).is_err());
+    }
+
+    #[test]
+    fn zero_replicas_rejected() {
+        assert!(Scheduler::new(SchedulePolicy::RoundRobin, 0).is_err());
+    }
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(SchedulePolicy::parse("rr").unwrap(), SchedulePolicy::RoundRobin);
+        assert_eq!(
+            SchedulePolicy::parse("least-outstanding").unwrap(),
+            SchedulePolicy::LeastOutstandingCycles
+        );
+        assert!(SchedulePolicy::parse("bogus").is_err());
+    }
+}

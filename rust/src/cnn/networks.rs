@@ -4,7 +4,8 @@
 
 use super::layers::{Layer, LayerShape};
 use super::tensor::{self, Tensor};
-use crate::accel::{Driver, LayerDesc, RunMetrics};
+use crate::accel::{Driver, LayerDesc, RunMetrics, ShardedMetrics};
+use crate::cluster::{Cluster, ShardPlan, Scheduler};
 use crate::error::{Error, Result};
 use crate::systolic::PoolKind;
 
@@ -384,6 +385,25 @@ impl NetworkInstance {
             max_batch,
         })
     }
+
+    /// Deploy onto every replica of a cluster: one [`Deployment`] per
+    /// replica, each sized for up to `max_batch_per_shard` images, all
+    /// produced from this instance's **single quantized weight set** (the
+    /// host-side tensors are uploaded once per replica DRAM; no replica
+    /// re-quantizes). The result drives
+    /// [`ClusterDeployment::run_sharded`].
+    pub fn deploy_cluster(
+        &self,
+        cluster: &mut Cluster,
+        max_batch_per_shard: usize,
+    ) -> Result<ClusterDeployment> {
+        let deps = cluster
+            .drivers_mut()
+            .iter_mut()
+            .map(|drv| self.deploy_batched(drv, max_batch_per_shard))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ClusterDeployment { deps })
+    }
 }
 
 /// A network deployed onto an accelerator: the descriptor table plus the
@@ -419,6 +439,119 @@ impl Deployment {
             )));
         }
         drv.run_table_batch(&self.descs, batch)
+    }
+}
+
+/// A network deployed onto every replica of a [`Cluster`]: one
+/// [`Deployment`] per replica (each with its own DRAM geometry), all
+/// sharing one quantized weight set. The sharded entry point packs each
+/// shard's inputs into its replica, dispatches every shard concurrently,
+/// and reassembles per-request outputs in batch order.
+pub struct ClusterDeployment {
+    /// Per-replica deployments, indexed by replica.
+    pub deps: Vec<Deployment>,
+}
+
+impl ClusterDeployment {
+    /// Words per single input image.
+    pub fn in_len(&self) -> usize {
+        self.deps.first().map(|d| d.in_len).unwrap_or(0)
+    }
+
+    /// Words per single output vector.
+    pub fn out_len(&self) -> usize {
+        self.deps.first().map(|d| d.out_len).unwrap_or(0)
+    }
+
+    /// Per-shard batch capacity each replica was deployed with.
+    pub fn max_shard_batch(&self) -> usize {
+        self.deps.first().map(|d| d.max_batch).unwrap_or(0)
+    }
+
+    /// Serve one batch sharded across the cluster: plan the split, place
+    /// shards with `sched`, write each shard's packed inputs into its
+    /// replica, run all shards concurrently (one batched descriptor-table
+    /// run per replica), and read the outputs back in request order.
+    /// Returns per-request logits plus the [`ShardedMetrics`] aggregate
+    /// (total = max over shards).
+    pub fn run_sharded(
+        &self,
+        cluster: &mut Cluster,
+        sched: &mut Scheduler,
+        inputs: &[&[i64]],
+    ) -> Result<(Vec<Vec<i64>>, ShardedMetrics)> {
+        if cluster.len() != self.deps.len() {
+            return Err(Error::Cluster(format!(
+                "deployment spans {} replicas but the cluster has {}",
+                self.deps.len(),
+                cluster.len()
+            )));
+        }
+        if sched.replicas() != cluster.len() {
+            return Err(Error::Cluster(format!(
+                "scheduler places onto {} replicas but the cluster has {}",
+                sched.replicas(),
+                cluster.len()
+            )));
+        }
+        let in_len = self.in_len();
+        for (i, input) in inputs.iter().enumerate() {
+            if input.len() != in_len {
+                return Err(Error::Shape(format!(
+                    "request {i}: input of {} words, network takes {in_len}",
+                    input.len()
+                )));
+            }
+        }
+        let plan = ShardPlan::split(inputs.len(), cluster.len())?;
+        if plan.max_shard_len() > self.max_shard_batch() {
+            return Err(Error::Cluster(format!(
+                "batch {} exceeds cluster capacity {} replicas × {} per shard",
+                inputs.len(),
+                self.deps.len(),
+                self.max_shard_batch()
+            )));
+        }
+        let assignments = sched.assign_plan(&plan)?;
+        // anything failing past this point must retire the placed work,
+        // or the scheduler's in-flight view leaks phantom load forever
+        let retire_all = |sched: &mut Scheduler| {
+            for (shard, &r) in plan.shards.iter().zip(&assignments) {
+                sched.retire(r, shard.len as u64);
+            }
+        };
+        // host-side input staging, one packed region per shard
+        for (shard, &r) in plan.shards.iter().zip(&assignments) {
+            let mut packed = Vec::with_capacity(shard.len * in_len);
+            for input in &inputs[shard.offset..shard.offset + shard.len] {
+                packed.extend_from_slice(input);
+            }
+            if let Err(e) = cluster.driver_mut(r).write_region(self.deps[r].in_addr, &packed) {
+                retire_all(sched);
+                return Err(e);
+            }
+        }
+        let tables: Vec<&[LayerDesc]> = self.deps.iter().map(|d| d.descs.as_slice()).collect();
+        let metrics = match cluster.run_assigned(&tables, &plan, &assignments, sched) {
+            Ok(m) => m,
+            Err(e) => {
+                // run_assigned only completes shards on full success
+                retire_all(sched);
+                return Err(e);
+            }
+        };
+        // reassemble outputs in request order
+        let out_len = self.out_len();
+        let mut outs = vec![Vec::new(); inputs.len()];
+        for (shard, &r) in plan.shards.iter().zip(&assignments) {
+            let flat = cluster
+                .driver_mut(r)
+                .read_region(self.deps[r].out_addr, shard.len * out_len)?;
+            for (j, chunk) in flat.chunks(out_len).enumerate() {
+                outs[shard.offset + j] = chunk.to_vec();
+            }
+        }
+        Ok((outs, metrics))
     }
 }
 
@@ -508,6 +641,49 @@ mod tests {
                 "request {i} in batch ≡ forward_ref"
             );
         }
+    }
+
+    #[test]
+    fn cluster_deploy_shards_bit_exact_and_reordered() {
+        use crate::cluster::{ClusterConfig, SchedulePolicy};
+        let inst = NetworkInstance::random(Network::build(NetworkKind::Tiny), 42).unwrap();
+        let mut cluster = Cluster::new(ClusterConfig {
+            replicas: 3,
+            soc: SocConfig {
+                dram_words: 1 << 21,
+                spad_words: 1 << 14,
+                ..Default::default()
+            },
+        })
+        .unwrap();
+        let cdep = inst.deploy_cluster(&mut cluster, 3).unwrap();
+        assert_eq!(cdep.deps.len(), 3);
+        assert_eq!(cdep.in_len(), 256);
+        assert_eq!(cdep.out_len(), 10);
+        let mut sched = Scheduler::new(SchedulePolicy::RoundRobin, 3).unwrap();
+        // uneven: 7 requests over 3 replicas → shards of 3/2/2
+        let inputs: Vec<Tensor> = (0..7)
+            .map(|i| Tensor::random(vec![1, 16, 16], 127, 500 + i as u64))
+            .collect();
+        let slices: Vec<&[i64]> = inputs.iter().map(|t| t.data.as_slice()).collect();
+        let (outs, m) = cdep.run_sharded(&mut cluster, &mut sched, &slices).unwrap();
+        assert_eq!(outs.len(), 7);
+        assert_eq!(m.shards.len(), 3);
+        assert_eq!(m.requests(), 7);
+        for (i, t) in inputs.iter().enumerate() {
+            let want = inst.forward_ref(t).unwrap();
+            assert_eq!(outs[i], want.data, "request {i} through the sharded path");
+        }
+        // oversized batch is rejected before any DRAM write
+        let big: Vec<Tensor> = (0..10)
+            .map(|i| Tensor::random(vec![1, 16, 16], 127, 900 + i as u64))
+            .collect();
+        let big_slices: Vec<&[i64]> = big.iter().map(|t| t.data.as_slice()).collect();
+        assert!(cdep.run_sharded(&mut cluster, &mut sched, &big_slices).is_err());
+        // a scheduler sized for the wrong replica count errors cleanly
+        // instead of indexing out of bounds
+        let mut wrong = Scheduler::new(SchedulePolicy::RoundRobin, 5).unwrap();
+        assert!(cdep.run_sharded(&mut cluster, &mut wrong, &slices).is_err());
     }
 
     #[test]

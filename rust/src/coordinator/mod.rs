@@ -4,9 +4,11 @@
 //!
 //! Shape: a vLLM-router-style serving loop scaled to this paper — clients
 //! submit images, the [`batcher`] groups them under a max-batch/max-wait
-//! policy, and [`server`] workers (each owning a private accelerator SoC
-//! simulation, optionally cross-checked against the XLA artifact) execute
-//! batches and report per-request latency to [`stats`].
+//! policy, and [`server`] workers (each owning a private accelerator
+//! **cluster** of `CoordinatorConfig::shards` replicated SoCs, see
+//! [`crate::cluster`]) shard each batch data-parallel across their
+//! replicas, dispatch the shards concurrently, and report per-request
+//! latency plus per-shard utilization to [`stats`].
 
 pub mod batcher;
 pub mod request;

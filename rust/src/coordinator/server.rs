@@ -19,8 +19,9 @@
 use super::batcher::{BatchPolicy, Batcher};
 use super::request::{InferenceRequest, InferenceResponse, RequestId};
 use super::stats::StatsCollector;
-use crate::accel::{Driver, SocConfig};
-use crate::cnn::networks::{Deployment, NetworkInstance};
+use crate::accel::{ShardedMetrics, SocConfig};
+use crate::cluster::{Cluster, ClusterConfig, SchedulePolicy, Scheduler};
+use crate::cnn::networks::{ClusterDeployment, NetworkInstance};
 use crate::cnn::tensor::Tensor;
 use crate::error::{Error, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -32,11 +33,17 @@ use std::time::Instant;
 /// Coordinator sizing/policy.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
-    /// Worker (accelerator) count.
+    /// Worker (accelerator cluster) count.
     pub workers: usize,
+    /// Replicated SoCs per worker: each worker's batch is sharded
+    /// data-parallel across this many accelerators and dispatched
+    /// concurrently (1 = the single-SoC path).
+    pub shards: usize,
+    /// Shard placement policy within each worker's cluster.
+    pub sched: SchedulePolicy,
     /// Batching policy.
     pub batch: BatchPolicy,
-    /// Per-worker SoC configuration.
+    /// Per-replica SoC configuration.
     pub soc: SocConfig,
     /// Simulated accelerator clock (MHz) used to convert cycles into
     /// simulated service time for reporting.
@@ -47,6 +54,8 @@ impl Default for CoordinatorConfig {
     fn default() -> Self {
         CoordinatorConfig {
             workers: 2,
+            shards: 1,
+            sched: SchedulePolicy::LeastOutstandingCycles,
             batch: BatchPolicy::default(),
             soc: SocConfig::serving(),
             clock_mhz: 200.0,
@@ -55,20 +64,32 @@ impl Default for CoordinatorConfig {
 }
 
 struct Worker {
-    drv: Driver,
-    dep: Deployment,
+    cluster: Cluster,
+    cdep: ClusterDeployment,
+    sched: Scheduler,
+    /// Total batch capacity across the worker's shards.
+    capacity: usize,
     /// Expected per-request input shape, for upfront validation.
     input_dims: Vec<usize>,
 }
 
 impl Worker {
     fn build(cfg: &CoordinatorConfig, inst: &NetworkInstance) -> Result<Self> {
-        let mut drv = Driver::new(cfg.soc);
-        let dep = inst.deploy_batched(&mut drv, cfg.batch.max_batch.max(1))?;
+        let max_batch = cfg.batch.max_batch.max(1);
+        // a batch of max_batch splits into shards of at most ⌈max/shards⌉
+        let per_shard = max_batch.div_ceil(cfg.shards);
+        let mut cluster = Cluster::new(ClusterConfig {
+            replicas: cfg.shards,
+            soc: cfg.soc,
+        })?;
+        let cdep = inst.deploy_cluster(&mut cluster, per_shard)?;
+        let sched = Scheduler::new(cfg.sched, cfg.shards)?;
         let input_dims = inst.net.input.dims();
         Ok(Worker {
-            drv,
-            dep,
+            cluster,
+            cdep,
+            sched,
+            capacity: per_shard * cfg.shards,
             input_dims,
         })
     }
@@ -77,7 +98,7 @@ impl Worker {
     /// *before* they join a batch (a wrong-sized write would otherwise
     /// silently corrupt neighbouring DRAM regions).
     fn validate(&self, input: &Tensor) -> Result<()> {
-        if input.shape != self.input_dims || input.len() != self.dep.in_len {
+        if input.shape != self.input_dims || input.len() != self.cdep.in_len() {
             return Err(Error::Shape(format!(
                 "input shape {:?} does not match network input {:?}",
                 input.shape, self.input_dims
@@ -86,27 +107,21 @@ impl Worker {
         Ok(())
     }
 
-    /// Run a whole batch through the accelerator as one unit: pack the
-    /// inputs back to back, execute the descriptor table once, split the
-    /// packed outputs per request. Returns per-request logits plus the
-    /// batch's total accelerator cycles.
-    fn infer_batch(&mut self, inputs: &[&Tensor]) -> Result<(Vec<Vec<i64>>, u64)> {
+    /// Run a whole batch sharded across the worker's cluster: split it
+    /// data-parallel over the replicas, dispatch one batched
+    /// descriptor-table run per shard concurrently, and reassemble the
+    /// per-request logits. Returns the [`ShardedMetrics`] aggregate whose
+    /// total is the max over shards (the parallel-completion model).
+    fn infer_batch(&mut self, inputs: &[&Tensor]) -> Result<(Vec<Vec<i64>>, ShardedMetrics)> {
         let n = inputs.len();
-        if n == 0 || n > self.dep.max_batch {
+        if n == 0 || n > self.capacity {
             return Err(Error::Coordinator(format!(
                 "batch of {n} exceeds deployed capacity {}",
-                self.dep.max_batch
+                self.capacity
             )));
         }
-        let mut packed = Vec::with_capacity(n * self.dep.in_len);
-        for t in inputs {
-            packed.extend_from_slice(&t.data);
-        }
-        self.drv.write_region(self.dep.in_addr, &packed)?;
-        let m = self.dep.run(&mut self.drv, n as u32)?;
-        let flat = self.drv.read_region(self.dep.out_addr, n * self.dep.out_len)?;
-        let outs = flat.chunks(self.dep.out_len).map(|c| c.to_vec()).collect();
-        Ok((outs, m.total_cycles()))
+        let slices: Vec<&[i64]> = inputs.iter().map(|t| t.data.as_slice()).collect();
+        self.cdep.run_sharded(&mut self.cluster, &mut self.sched, &slices)
     }
 }
 
@@ -125,6 +140,11 @@ impl Coordinator {
     pub fn start(cfg: CoordinatorConfig, inst: &NetworkInstance) -> Result<Self> {
         if cfg.workers == 0 {
             return Err(Error::Coordinator("need at least one worker".into()));
+        }
+        if cfg.shards == 0 {
+            return Err(Error::Coordinator(
+                "need at least one shard (SoC replica) per worker".into(),
+            ));
         }
         let (tx, rx) = channel::<InferenceRequest>();
         let (batch_tx, batch_rx) = channel::<Vec<InferenceRequest>>();
@@ -185,18 +205,25 @@ impl Coordinator {
                         worker.infer_batch(&inputs)
                     };
                     match result {
-                        Ok((outs, cycles)) => {
+                        Ok((outs, m)) => {
                             let n = valid.len();
+                            let cycles = m.total_cycles();
+                            let per_shard: Vec<(usize, u64)> = m
+                                .shards
+                                .iter()
+                                .map(|s| (s.replica, s.metrics.total_cycles()))
+                                .collect();
                             let latencies: Vec<u64> = valid
                                 .iter()
                                 .map(|r| r.submitted.elapsed().as_micros() as u64)
                                 .collect();
                             {
-                                // one lock for the whole batch: cycles are
-                                // recorded once per batch, requests carry
-                                // latency only
+                                // one lock for the whole batch: the batch
+                                // is charged its critical-path (max over
+                                // shards) cycles once, each shard logs its
+                                // own busy time, requests carry latency
                                 let mut s = stats.lock().expect("stats poisoned");
-                                s.record_batch(cycles);
+                                s.record_sharded_batch(&per_shard);
                                 for &latency_us in &latencies {
                                     s.record(latency_us, n, 0);
                                 }
@@ -417,6 +444,52 @@ mod tests {
             (stats.mean_batch_cycles() * stats.batches as f64 - stats.accel_cycles as f64).abs()
                 < 1e-6
         );
+    }
+
+    #[test]
+    fn sharded_worker_serves_bit_exact_and_reports_utilization() {
+        let inst = tiny_instance();
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                shards: 3,
+                ..Default::default()
+            },
+            &inst,
+        )
+        .unwrap();
+        let inputs: Vec<Tensor> = (0..10)
+            .map(|i| Tensor::random(vec![1, 16, 16], 127, 7000 + i))
+            .collect();
+        let rxs: Vec<_> = inputs
+            .iter()
+            .map(|t| coord.submit(t.clone()).unwrap())
+            .collect();
+        for ((id, rx), input) in rxs.into_iter().zip(&inputs) {
+            let resp = rx.recv().expect("response");
+            assert_eq!(resp.id, id);
+            assert!(resp.is_ok(), "{:?}", resp.error);
+            let want = inst.forward_ref(input).unwrap();
+            assert_eq!(resp.logits, want.data, "request {id} through 3 shards");
+        }
+        let stats = coord.shutdown();
+        assert_eq!(stats.count(), 10);
+        let busy = stats.shard_busy_cycles().to_vec();
+        assert!(!busy.is_empty() && busy.iter().any(|&c| c > 0), "{busy:?}");
+        assert!(busy.len() <= 3, "slots are per-cluster replicas: {busy:?}");
+    }
+
+    #[test]
+    fn zero_shards_rejected() {
+        let inst = tiny_instance();
+        assert!(Coordinator::start(
+            CoordinatorConfig {
+                shards: 0,
+                ..Default::default()
+            },
+            &inst
+        )
+        .is_err());
     }
 
     #[test]

@@ -28,6 +28,9 @@ pub struct StatsCollector {
     /// Total cycles across accelerator batch runs (accumulated once per
     /// `run_table_batch`, *not* per request).
     batch_cycles_sum: u64,
+    /// Busy cycles per shard slot (replica index within a worker's
+    /// cluster, aggregated across workers). Grows on demand.
+    shard_busy_cycles: Vec<u64>,
     started: Instant,
     /// Total simulated accelerator cycles across batches.
     pub accel_cycles: u64,
@@ -50,6 +53,7 @@ impl StatsCollector {
             latencies_us: Vec::new(),
             batch_sizes: Vec::new(),
             batch_cycles_sum: 0,
+            shard_busy_cycles: Vec::new(),
             started: Instant::now(),
             accel_cycles: 0,
             batches: 0,
@@ -72,6 +76,22 @@ impl StatsCollector {
         self.batches += 1;
         self.batch_cycles_sum += cycles;
         self.accel_cycles += cycles;
+    }
+
+    /// Record one **sharded** accelerator batch: `per_shard` holds
+    /// `(shard slot, cycles)` for every shard that ran. The batch is
+    /// charged its critical path — the **max over shards, not the sum**
+    /// (replicas run concurrently) — while each slot's own cycles
+    /// accumulate as busy time for [`StatsCollector::shard_utilization`].
+    pub fn record_sharded_batch(&mut self, per_shard: &[(usize, u64)]) {
+        let critical = per_shard.iter().map(|&(_, c)| c).max().unwrap_or(0);
+        self.record_batch(critical);
+        for &(slot, cycles) in per_shard {
+            if slot >= self.shard_busy_cycles.len() {
+                self.shard_busy_cycles.resize(slot + 1, 0);
+            }
+            self.shard_busy_cycles[slot] += cycles;
+        }
     }
 
     /// Record one failed request (explicit error response sent).
@@ -115,7 +135,9 @@ impl StatsCollector {
     /// Amortized accelerator cycles per completed request — total batch
     /// cycles spread over every request that rode in those batches. This
     /// is the number the weight-stationary batching is supposed to push
-    /// down versus the sequential per-request path.
+    /// down versus the sequential per-request path. Sharded batches are
+    /// charged their max-over-shards critical path, so this figure is also
+    /// **shard-count-amortized**: R concurrent shards divide it by up to R.
     pub fn amortized_cycles_per_request(&self) -> f64 {
         if self.latencies_us.is_empty() {
             0.0
@@ -124,7 +146,30 @@ impl StatsCollector {
         }
     }
 
-    /// Latency percentiles.
+    /// Per-shard-slot utilization: each slot's busy cycles over the
+    /// critical-path cycles the collector charged across all batches. The
+    /// slowest slot of every batch sits at ~1.0; gaps below that are
+    /// shard-imbalance (uneven tails) made visible. Empty when no sharded
+    /// batch was recorded.
+    pub fn shard_utilization(&self) -> Vec<f64> {
+        if self.batch_cycles_sum == 0 {
+            return vec![0.0; self.shard_busy_cycles.len()];
+        }
+        self.shard_busy_cycles
+            .iter()
+            .map(|&busy| busy as f64 / self.batch_cycles_sum as f64)
+            .collect()
+    }
+
+    /// Busy cycles per shard slot (raw counters behind
+    /// [`StatsCollector::shard_utilization`]).
+    pub fn shard_busy_cycles(&self) -> &[u64] {
+        &self.shard_busy_cycles
+    }
+
+    /// Latency percentiles. A collector with no recorded samples returns
+    /// the zeroed [`LatencyStats`] — no path through here unwraps on an
+    /// empty sample vector.
     pub fn latency(&self) -> LatencyStats {
         if self.latencies_us.is_empty() {
             return LatencyStats::default();
@@ -138,7 +183,7 @@ impl StatsCollector {
             p50_us: pct(0.50),
             p95_us: pct(0.95),
             p99_us: pct(0.99),
-            max_us: *v.last().unwrap(),
+            max_us: v.last().copied().unwrap_or_default(),
         }
     }
 }
@@ -169,6 +214,28 @@ mod tests {
         assert_eq!(s.mean_batch(), 0.0);
         assert_eq!(s.mean_batch_cycles(), 0.0);
         assert_eq!(s.amortized_cycles_per_request(), 0.0);
+    }
+
+    #[test]
+    fn sharded_batch_charged_max_not_sum() {
+        let mut s = StatsCollector::new();
+        // 3 shards: 400/1000/600 cycles → the batch costs its critical path
+        s.record_sharded_batch(&[(0, 400), (1, 1000), (2, 600)]);
+        for _ in 0..8 {
+            s.record(10, 8, 0);
+        }
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.accel_cycles, 1000, "max over shards, not 2000");
+        assert!((s.amortized_cycles_per_request() - 125.0).abs() < 1e-9);
+        assert_eq!(s.shard_busy_cycles(), &[400, 1000, 600]);
+        let u = s.shard_utilization();
+        assert!((u[0] - 0.4).abs() < 1e-9);
+        assert!((u[1] - 1.0).abs() < 1e-9, "slowest shard pins the path");
+        assert!((u[2] - 0.6).abs() < 1e-9);
+        // empty collector stays safe
+        let empty = StatsCollector::new();
+        assert!(empty.shard_utilization().is_empty());
+        assert_eq!(empty.latency().max_us, 0);
     }
 
     #[test]

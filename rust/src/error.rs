@@ -35,6 +35,9 @@ pub enum Error {
     /// Coordinator / serving error.
     Coordinator(String),
 
+    /// Multi-SoC cluster error (shard planning, replica dispatch).
+    Cluster(String),
+
     /// XLA / PJRT runtime error.
     Runtime(String),
 
@@ -57,6 +60,7 @@ impl fmt::Display for Error {
             Error::Accel(m) => write!(f, "accelerator error: {m}"),
             Error::Shape(m) => write!(f, "shape error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Cluster(m) => write!(f, "cluster error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Usage(m) => write!(f, "usage error: {m}"),
             Error::Io(e) => write!(f, "{e}"),

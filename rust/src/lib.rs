@@ -22,6 +22,8 @@
 //! * [`riscv`] — the RV32I control processor of §III,
 //! * [`mem`] — BRAM / DRAM / DMA models,
 //! * [`accel`] — the SoC top-level and host driver,
+//! * [`cluster`] — multi-SoC scale-out: shard plans, dispatch policies and
+//!   N replicated accelerators serving one batch concurrently,
 //! * [`cnn`] — integer tensors, quantisation and the AlexNet/VGG16/VGG19
 //!   network descriptions (§V analysis),
 //! * [`runtime`] — the PJRT bridge that loads JAX/Pallas-AOT HLO artifacts,
@@ -34,6 +36,7 @@ pub mod accel;
 pub mod bench_harness;
 pub mod bits;
 pub mod cli;
+pub mod cluster;
 pub mod cnn;
 pub mod coordinator;
 pub mod error;

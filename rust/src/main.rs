@@ -10,11 +10,13 @@
 //! kom-accel analyze [--net alexnet|vgg16|vgg19]             §V network analysis
 //! kom-accel golden  [--artifacts dir]                       3-way golden check
 //! kom-accel serve   [--requests 64] [--workers 2]           coordinator demo
+//! kom-accel cluster [--batch 16] [--shards 4]               sharded multi-SoC run
 //! ```
 
 use kom_accel::accel::SocConfig;
 use kom_accel::bits::BitVec;
 use kom_accel::cli::Args;
+use kom_accel::cluster::{Cluster, ClusterConfig, SchedulePolicy, Scheduler};
 use kom_accel::cnn::networks::{Network, NetworkInstance, NetworkKind};
 use kom_accel::cnn::{analysis, Tensor};
 use kom_accel::coordinator::{Coordinator, CoordinatorConfig};
@@ -36,7 +38,8 @@ COMMANDS
   wave     [--out kom32.vcd]         gate-level waveform (paper Fig 5)
   analyze  [--net alexnet]           network analysis (paper Sec V)
   golden   [--artifacts artifacts]   XLA vs systolic vs reference
-  serve    [--requests 64] [--workers 2] [--batch 8]
+  serve    [--requests 64] [--workers 2] [--batch 8] [--shards 1]
+  cluster  [--batch 16] [--shards 4] [--policy rr|least-outstanding] [--net tiny]
 ";
 
 fn mult_spec(name: &str) -> kom_accel::Result<(String, MultiplierSpec)> {
@@ -190,15 +193,17 @@ fn cmd_serve(args: &Args) -> kom_accel::Result<()> {
     let requests: usize = args.get_num("requests", 64usize)?;
     let workers: usize = args.get_num("workers", 2usize)?;
     let max_batch: usize = args.get_num("batch", 8usize)?;
+    let shards: usize = args.get_num("shards", 1usize)?;
     let inst = NetworkInstance::random(Network::build(NetworkKind::Tiny), 42)?;
     let cfg = CoordinatorConfig {
         workers,
+        shards,
         batch: kom_accel::coordinator::BatchPolicy {
             max_batch,
             ..Default::default()
         },
         soc: SocConfig::serving(),
-        clock_mhz: 200.0,
+        ..Default::default()
     };
     let coord = Coordinator::start(cfg, &inst)?;
     let rxs: Vec<_> = (0..requests)
@@ -209,10 +214,91 @@ fn cmd_serve(args: &Args) -> kom_accel::Result<()> {
     }
     let stats = coord.shutdown();
     let l = stats.latency();
-    println!("served {requests} requests on {workers} workers (max batch {max_batch})");
+    println!("served {requests} requests on {workers} workers (max batch {max_batch}, {shards} shard(s)/worker)");
     println!("  host latency: p50={}us p95={}us p99={}us max={}us", l.p50_us, l.p95_us, l.p99_us, l.max_us);
     println!("  mean batch: {:.2}", stats.mean_batch());
     println!("  simulated accel cycles: {}", stats.accel_cycles);
+    if shards > 1 {
+        let util: Vec<String> = stats
+            .shard_utilization()
+            .iter()
+            .map(|u| format!("{:.0}%", u * 100.0))
+            .collect();
+        println!("  per-shard utilization: [{}]", util.join(", "));
+        println!("  amortized cycles/req: {:.0}", stats.amortized_cycles_per_request());
+    }
+    Ok(())
+}
+
+/// Run one sharded Tiny-network batch across a multi-SoC cluster and print
+/// the per-shard cycle table — the cluster subsystem drivable from the CLI.
+fn cmd_cluster(args: &Args) -> kom_accel::Result<()> {
+    let batch: usize = args.get_num("batch", 16usize)?;
+    let shards: usize = args.get_num("shards", 4usize)?;
+    let policy = SchedulePolicy::parse(&args.get_or("policy", "least-outstanding"))?;
+    let kind = NetworkKind::parse(&args.get_or("net", "tiny"))?;
+    let inst = NetworkInstance::random(Network::build(kind), 42)?;
+    let inputs: Vec<Tensor> = (0..batch)
+        .map(|i| Tensor::random(inst.net.input.dims(), 127, i as u64 + 1))
+        .collect();
+
+    let mut cluster = Cluster::new(ClusterConfig {
+        replicas: shards,
+        soc: SocConfig::serving(),
+    })?;
+    let per_shard_cap = batch.div_ceil(shards);
+    let cdep = inst.deploy_cluster(&mut cluster, per_shard_cap)?;
+    let mut sched = Scheduler::new(policy, shards)?;
+    let slices: Vec<&[i64]> = inputs.iter().map(|t| t.data.as_slice()).collect();
+    let (outs, m) = cdep.run_sharded(&mut cluster, &mut sched, &slices)?;
+
+    // per-request correctness against the host reference
+    for (i, t) in inputs.iter().enumerate() {
+        let want = inst.forward_ref(t)?;
+        if outs[i] != want.data {
+            return Err(kom_accel::Error::Cluster(format!(
+                "request {i} diverged from forward_ref"
+            )));
+        }
+    }
+
+    println!(
+        "{}: batch {batch} over {shards} shard(s), policy {policy:?}",
+        inst.net.name
+    );
+    let mut t = Table::new(&[
+        "shard", "replica", "requests", "cpu", "compute", "mem", "total cycles",
+    ]);
+    for run in &m.shards {
+        t.row(vec![
+            run.shard.to_string(),
+            run.replica.to_string(),
+            run.metrics.requests.to_string(),
+            run.metrics.cpu_cycles.to_string(),
+            run.metrics.compute_cycles.to_string(),
+            run.metrics.mem_cycles.to_string(),
+            run.metrics.total_cycles().to_string(),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+    println!("cluster cycles (max over shards): {}", m.total_cycles());
+    println!("serial sum over shards:           {}", m.serial_cycles());
+    println!("parallel speedup:                 {:.2}x", m.parallel_speedup());
+
+    // single-SoC baseline: the same batch through one replica
+    let mut base = Cluster::new(ClusterConfig {
+        replicas: 1,
+        soc: SocConfig::serving(),
+    })?;
+    let base_dep = inst.deploy_cluster(&mut base, batch)?;
+    let mut base_sched = Scheduler::new(policy, 1)?;
+    let (_, bm) = base_dep.run_sharded(&mut base, &mut base_sched, &slices)?;
+    println!(
+        "single-SoC baseline: {} cycles → sharded speedup {:.2}x",
+        bm.total_cycles(),
+        bm.total_cycles() as f64 / m.total_cycles() as f64
+    );
+    println!("all {batch} requests bit-exact with forward_ref");
     Ok(())
 }
 
@@ -232,6 +318,7 @@ fn main() {
         Some("analyze") => cmd_analyze(&args),
         Some("golden") => cmd_golden(&args),
         Some("serve") => cmd_serve(&args),
+        Some("cluster") => cmd_cluster(&args),
         Some("help") | None => {
             println!("{USAGE}");
             Ok(())

@@ -1,0 +1,181 @@
+//! Multi-SoC cluster acceptance tests: sharded batches stay bit-exact
+//! with the host reference, uneven tails lose no requests, zero shard
+//! counts fail cleanly, and the scale-out speedup claim — total cluster
+//! cycles are the **max over shards**, because replicas run concurrently
+//! — is gated at ≥ 2× for 4 shards on a batch-16 Tiny run.
+
+use kom_accel::accel::SocConfig;
+use kom_accel::cluster::{Cluster, ClusterConfig, SchedulePolicy, Scheduler, ShardPlan};
+use kom_accel::cnn::networks::{Network, NetworkInstance, NetworkKind};
+use kom_accel::cnn::Tensor;
+use kom_accel::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use std::time::Duration;
+
+fn soc() -> SocConfig {
+    SocConfig::serving()
+}
+
+fn tiny_instance() -> NetworkInstance {
+    NetworkInstance::random(Network::build(NetworkKind::Tiny), 42).unwrap()
+}
+
+fn tiny_inputs(n: usize, seed: u64) -> Vec<Tensor> {
+    (0..n)
+        .map(|i| Tensor::random(vec![1, 16, 16], 127, seed + i as u64))
+        .collect()
+}
+
+/// Run `inputs` as one sharded batch on a fresh cluster of `shards`
+/// replicas and return (per-request outputs, cluster cycles) from the
+/// **second** run — both paths warmed, so weight staging does not skew
+/// the comparison either way.
+fn sharded_cycles(
+    inst: &NetworkInstance,
+    inputs: &[Tensor],
+    shards: usize,
+) -> (Vec<Vec<i64>>, u64) {
+    let mut cluster = Cluster::new(ClusterConfig {
+        replicas: shards,
+        soc: soc(),
+    })
+    .unwrap();
+    let per_shard = inputs.len().div_ceil(shards);
+    let cdep = inst.deploy_cluster(&mut cluster, per_shard).unwrap();
+    let mut sched = Scheduler::new(SchedulePolicy::LeastOutstandingCycles, shards).unwrap();
+    let slices: Vec<&[i64]> = inputs.iter().map(|t| t.data.as_slice()).collect();
+    cdep.run_sharded(&mut cluster, &mut sched, &slices).unwrap(); // warm
+    let (outs, m) = cdep.run_sharded(&mut cluster, &mut sched, &slices).unwrap();
+    assert_eq!(m.requests() as usize, inputs.len());
+    (outs, m.total_cycles())
+}
+
+#[test]
+fn four_shards_at_least_2x_over_one_shard_on_batch16_tiny() {
+    let inst = tiny_instance();
+    let inputs = tiny_inputs(16, 4000);
+
+    let (outs1, cycles1) = sharded_cycles(&inst, &inputs, 1);
+    let (outs4, cycles4) = sharded_cycles(&inst, &inputs, 4);
+
+    // same answers through one SoC and through four
+    for (i, t) in inputs.iter().enumerate() {
+        let want = inst.forward_ref(t).unwrap();
+        assert_eq!(outs1[i], want.data, "request {i}, 1 shard");
+        assert_eq!(outs4[i], want.data, "request {i}, 4 shards");
+    }
+
+    // the speedup claim: cluster cycles are max-over-shards, so four
+    // replicas each running a quarter of the batch must cut the critical
+    // path at least in half (fixed per-run control/reconfig overhead is
+    // why it is not a clean 4×)
+    let speedup = cycles1 as f64 / cycles4 as f64;
+    assert!(
+        speedup >= 2.0,
+        "4-shard speedup {speedup:.2}× < 2× (1 shard: {cycles1} cycles, 4 shards: {cycles4})"
+    );
+}
+
+#[test]
+fn coordinator_sharded_dispatch_bit_exact_for_every_request() {
+    let inst = tiny_instance();
+    for shards in [2usize, 4] {
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 2,
+                shards,
+                batch: BatchPolicy {
+                    max_batch: 8,
+                    max_wait: Duration::from_millis(2),
+                },
+                ..Default::default()
+            },
+            &inst,
+        )
+        .unwrap();
+        let inputs = tiny_inputs(24, 8000);
+        let rxs: Vec<_> = inputs
+            .iter()
+            .map(|t| coord.submit(t.clone()).unwrap())
+            .collect();
+        for ((id, rx), input) in rxs.into_iter().zip(&inputs) {
+            let resp = rx.recv().expect("response");
+            assert_eq!(resp.id, id);
+            assert!(resp.is_ok(), "{:?}", resp.error);
+            let want = inst.forward_ref(input).unwrap();
+            assert_eq!(
+                resp.logits, want.data,
+                "request {id} with {shards} shards ≡ forward_ref"
+            );
+            assert_eq!(resp.class, want.argmax());
+        }
+        let stats = coord.shutdown();
+        assert_eq!(stats.count(), 24, "{shards} shards");
+        assert!(stats.batches >= 1);
+    }
+}
+
+#[test]
+fn uneven_batch_over_shards_loses_no_requests() {
+    // 7 requests over 3 shards: the plan is 3/2/2 and every request must
+    // come back, in order, bit-exact
+    let inst = tiny_instance();
+    let inputs = tiny_inputs(7, 12000);
+    let (outs, _) = sharded_cycles(&inst, &inputs, 3);
+    assert_eq!(outs.len(), 7);
+    for (i, t) in inputs.iter().enumerate() {
+        let want = inst.forward_ref(t).unwrap();
+        assert_eq!(outs[i], want.data, "request {i} of the uneven batch");
+    }
+
+    // the same shape through the coordinator front door: exactly 7
+    // submissions against a 7-wide batch policy on 3 shards
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            shards: 3,
+            batch: BatchPolicy {
+                max_batch: 7,
+                max_wait: Duration::from_millis(5),
+            },
+            ..Default::default()
+        },
+        &inst,
+    )
+    .unwrap();
+    let rxs: Vec<_> = inputs
+        .iter()
+        .map(|t| coord.submit(t.clone()).unwrap())
+        .collect();
+    let mut seen = std::collections::HashSet::new();
+    for (id, rx) in rxs {
+        let resp = rx.recv().expect("no request may be lost");
+        assert!(resp.is_ok(), "{:?}", resp.error);
+        assert!(seen.insert(resp.id), "duplicate id {}", resp.id);
+        assert_eq!(resp.id, id);
+    }
+    assert_eq!(seen.len(), 7);
+    let stats = coord.shutdown();
+    assert_eq!(stats.count(), 7);
+}
+
+#[test]
+fn zero_shard_count_errors_cleanly() {
+    // at every layer: the plan, the cluster, and the coordinator knob
+    assert!(ShardPlan::split(8, 0).is_err());
+    assert!(Cluster::new(ClusterConfig {
+        replicas: 0,
+        soc: soc()
+    })
+    .is_err());
+    let inst = tiny_instance();
+    let err = Coordinator::start(
+        CoordinatorConfig {
+            shards: 0,
+            ..Default::default()
+        },
+        &inst,
+    )
+    .err()
+    .expect("shards: 0 must be rejected");
+    assert!(err.to_string().contains("shard"), "{err}");
+}
