@@ -162,6 +162,71 @@ fn main() {
     }
     println!("{}", t.to_ascii());
 
+    // ---- pipelined vs serial: layer DMA overlapped with compute --------
+    // Same simulator, same weights, same inputs; the only difference is
+    // the SoC PIPELINE register. Serial charges cpu + compute + mem;
+    // pipelined charges cpu + compute + (mem − overlapped). Emitted as
+    // BENCH_pipeline.json so CI tracks the perf trajectory.
+    println!("===== pipelined vs serial (simulated cluster cycles/req, batch 8) =====");
+    let pipe_batch = 8usize;
+    let mut t = Table::new(&[
+        "shards",
+        "serial cycles/req",
+        "pipelined cycles/req",
+        "overlapped",
+        "speedup",
+    ]);
+    let mut json_rows = Vec::new();
+    for shards in [1usize, 2, 4] {
+        let slices: Vec<&[i64]> = inputs[..pipe_batch].iter().map(|t| t.data.as_slice()).collect();
+        let mut totals = [0u64; 2];
+        let mut overlapped = 0u64;
+        for (i, pipeline) in [false, true].into_iter().enumerate() {
+            let mut cluster = Cluster::new(ClusterConfig {
+                replicas: shards,
+                soc: bench_soc(),
+            })
+            .unwrap();
+            cluster.set_pipeline(pipeline).unwrap();
+            let cdep = inst
+                .deploy_cluster(&mut cluster, pipe_batch.div_ceil(shards))
+                .unwrap();
+            let mut sched =
+                Scheduler::new(SchedulePolicy::LeastOutstandingCycles, shards).unwrap();
+            let (_, m) = cdep.run_sharded(&mut cluster, &mut sched, &slices).unwrap();
+            totals[i] = m.total_cycles();
+            if pipeline {
+                overlapped = m.overlapped_cycles();
+            }
+        }
+        let serial_per = totals[0] as f64 / pipe_batch as f64;
+        let piped_per = totals[1] as f64 / pipe_batch as f64;
+        let speedup = totals[0] as f64 / totals[1] as f64;
+        t.row(vec![
+            shards.to_string(),
+            format!("{serial_per:.0}"),
+            format!("{piped_per:.0}"),
+            overlapped.to_string(),
+            format!("{speedup:.2}x"),
+        ]);
+        json_rows.push(format!(
+            "    {{\"shards\": {shards}, \"batch\": {pipe_batch}, \
+             \"serial_cycles_per_req\": {serial_per:.1}, \
+             \"pipelined_cycles_per_req\": {piped_per:.1}, \
+             \"overlapped_cycles\": {overlapped}, \
+             \"speedup\": {speedup:.4}}}"
+        ));
+    }
+    println!("{}", t.to_ascii());
+    let json = format!(
+        "{{\n  \"bench\": \"pipeline\",\n  \"network\": \"tiny\",\n  \"rows\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    match std::fs::write("BENCH_pipeline.json", &json) {
+        Ok(()) => println!("wrote BENCH_pipeline.json (cycles/req, serial vs pipelined x shards)"),
+        Err(e) => println!("(could not write BENCH_pipeline.json: {e})"),
+    }
+
     // XLA-artifact execution path (the L1/L2 kernels through PJRT)
     match ArtifactStore::open(Path::new("artifacts")) {
         Ok(store) => match Runtime::cpu() {

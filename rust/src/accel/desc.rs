@@ -262,6 +262,30 @@ impl LayerDesc {
         }
     }
 
+    /// DRAM weight regions this descriptor stages, as `(addr, words)`
+    /// pairs — what the pipelined SoC's look-ahead prefetcher walks.
+    /// Weights are data-independent of the running layer, so their DMA
+    /// may overlap the previous layer's compute; activations may not
+    /// (layer `k+1`'s input *is* layer `k`'s output).
+    pub fn weight_regions(&self) -> Vec<(u32, u32)> {
+        match *self {
+            LayerDesc::Conv {
+                cout, cin, k, w_addr, ..
+            } => vec![(w_addr, cout * cin * k * k)],
+            LayerDesc::Fc {
+                n_in,
+                n_out,
+                w_addr,
+                b_addr,
+                ..
+            } => vec![(w_addr, n_in * n_out), (b_addr, n_out)],
+            LayerDesc::Fir {
+                taps_addr, n_taps, ..
+            } => vec![(taps_addr, n_taps)],
+            LayerDesc::Pool { .. } | LayerDesc::End => Vec::new(),
+        }
+    }
+
     /// Output element count per image given the descriptor geometry (a
     /// batch of `n` occupies `n × out_len()` words at `out_addr`).
     pub fn out_len(&self) -> usize {
@@ -403,5 +427,47 @@ mod tests {
         assert_eq!(f.in_len(), 128);
         assert_eq!(f.out_len(), 10);
         assert_eq!(LayerDesc::End.in_len(), 0);
+    }
+
+    #[test]
+    fn weight_regions_cover_all_staged_coefficients() {
+        let c = LayerDesc::Conv {
+            cout: 4,
+            cin: 3,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            w_addr: 100,
+            in_addr: 0,
+            h: 8,
+            w: 8,
+            out_addr: 0,
+            relu: false,
+            out_shift: 0,
+        };
+        assert_eq!(c.weight_regions(), vec![(100, 4 * 3 * 9)]);
+        let f = LayerDesc::Fc {
+            n_in: 16,
+            n_out: 4,
+            w_addr: 200,
+            b_addr: 300,
+            in_addr: 0,
+            out_addr: 0,
+            relu: false,
+            out_shift: 0,
+        };
+        assert_eq!(f.weight_regions(), vec![(200, 64), (300, 4)]);
+        let p = LayerDesc::Pool {
+            k: 2,
+            stride: 2,
+            kind: PoolKind::Max,
+            in_addr: 0,
+            c: 1,
+            h: 4,
+            w: 4,
+            out_addr: 0,
+        };
+        assert!(p.weight_regions().is_empty());
+        assert!(LayerDesc::End.weight_regions().is_empty());
     }
 }

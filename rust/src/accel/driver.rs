@@ -12,7 +12,7 @@ use super::soc::{map, Soc, SocConfig};
 use crate::cluster::ShardPlan;
 use crate::error::{Error, Result};
 use crate::riscv::asm::{reg, Assembler};
-use crate::riscv::cpu::{Cpu, StopReason};
+use crate::riscv::cpu::{Bus, Cpu, StopReason};
 
 /// Metrics from one accelerator run.
 #[derive(Clone, Copy, Debug, Default)]
@@ -23,6 +23,11 @@ pub struct RunMetrics {
     pub compute_cycles: u64,
     /// DMA/memory cycles.
     pub mem_cycles: u64,
+    /// DMA cycles hidden under engine compute by the pipelined execution
+    /// model (0 when the SoC's `PIPELINE` register is off). Invariant:
+    /// `overlapped_cycles ≤ min(compute_cycles, mem_cycles)` — enforced
+    /// where the metrics are assembled.
+    pub overlapped_cycles: u64,
     /// Engine reconfigurations.
     pub reconfigs: u64,
     /// Layers executed.
@@ -34,8 +39,18 @@ pub struct RunMetrics {
 }
 
 impl RunMetrics {
-    /// Total accelerator cycles (serial control/compute/memory model).
+    /// Total accelerator cycles: `cpu + compute + (mem − overlapped)`.
+    /// With pipelining off this is the serial control/compute/memory sum;
+    /// with pipelining on, DMA traffic hidden under compute is not paid
+    /// twice.
     pub fn total_cycles(&self) -> u64 {
+        (self.cpu_cycles + self.compute_cycles + self.mem_cycles)
+            .saturating_sub(self.overlapped_cycles)
+    }
+
+    /// What the same run costs under the serial model (`cpu + compute +
+    /// mem`, no overlap) — the baseline of the pipelining speedup claim.
+    pub fn serial_total_cycles(&self) -> u64 {
         self.cpu_cycles + self.compute_cycles + self.mem_cycles
     }
 
@@ -98,6 +113,12 @@ impl ShardedMetrics {
         self.shards.iter().map(|s| s.metrics.requests).sum()
     }
 
+    /// DMA cycles hidden under compute across all shards (pipelined
+    /// execution model; 0 when every replica ran serial).
+    pub fn overlapped_cycles(&self) -> u64 {
+        self.shards.iter().map(|s| s.metrics.overlapped_cycles).sum()
+    }
+
     /// MAC/reduce operations across all shards.
     pub fn ops(&self) -> u64 {
         self.shards.iter().map(|s| s.metrics.ops).sum()
@@ -149,6 +170,34 @@ impl Driver {
         Ok(at as u32)
     }
 
+    /// DRAM words currently allocated out of the bump arena.
+    pub fn dram_used(&self) -> usize {
+        self.next_dram
+    }
+
+    /// Reset the DRAM bump arena so the address space can be reused (e.g.
+    /// to redeploy a different network on one driver). Every deployment
+    /// made before the reset is invalid afterwards. The SoC's
+    /// weight-stationary cache is invalidated wholesale: `upload` does not
+    /// invalidate per-region (fresh addresses never alias), so reusing
+    /// addresses without this flush would serve stale cached weights.
+    pub fn reset_arena(&mut self) {
+        self.next_dram = 0;
+        self.soc.invalidate_all_weights();
+    }
+
+    /// Set the SoC's `PIPELINE` MMIO register: `true` overlaps layer DMA
+    /// with engine compute (double-buffered scratchpad staging), `false`
+    /// restores the serial model.
+    pub fn set_pipeline(&mut self, on: bool) -> Result<()> {
+        self.soc.store(map::R_PIPE, on as u32)
+    }
+
+    /// Is the pipelined execution model enabled on this driver's SoC?
+    pub fn pipeline_enabled(&self) -> bool {
+        self.soc.pipeline_enabled()
+    }
+
     /// Allocate + preload data (host-side, zero cycle cost — model load).
     pub fn upload(&mut self, data: &[i64]) -> Result<u32> {
         let at = self.alloc(data.len())?;
@@ -173,7 +222,25 @@ impl Driver {
     /// Build the §III control program for an `n_layers` descriptor table
     /// based at control-RAM word index 0, serving `batch` packed images
     /// per layer (written to the `BATCH` MMIO register before the walk).
+    ///
+    /// Both operands are validated against the register file's i32 range:
+    /// `li` sign-extends, so an unchecked `batch as i32` beyond `i32::MAX`
+    /// would wrap negative and poison the `BATCH` register, and a table
+    /// whose end address overflows `i32` would corrupt the loop bound.
     fn control_program(n_layers: usize, batch: u32) -> Result<Vec<u32>> {
+        if batch > i32::MAX as u32 {
+            return Err(Error::Accel(format!(
+                "batch {batch} exceeds the BATCH register range (max {})",
+                i32::MAX
+            )));
+        }
+        let table_end = map::RAM_BASE as u64 + (n_layers as u64) * (DESC_WORDS * 4) as u64;
+        if table_end > i32::MAX as u64 {
+            return Err(Error::Accel(format!(
+                "descriptor table of {n_layers} layers ends at {table_end:#x}, beyond the \
+                 control program's address range"
+            )));
+        }
         let mut a = Assembler::new();
         // a1 = BATCH register, a2 = batch value
         a.li(reg::A1, map::R_BATCH as i32);
@@ -225,16 +292,26 @@ impl Driver {
         let ops0 = self.soc.engine.stats.ops;
         let cc0 = self.soc.compute_cycles();
         let mc0 = self.soc.mem_cycles();
+        let ov0 = self.soc.overlapped_cycles;
         let lr0 = self.soc.layers_run;
         let rc0 = self.soc.engine.stats.reconfigs;
         let stop = cpu.run(&mut self.soc, 10_000_000)?;
         if stop != StopReason::Ecall {
             return Err(Error::Accel("control program exceeded budget".into()));
         }
+        let compute_cycles = self.soc.compute_cycles() - cc0;
+        let mem_cycles = self.soc.mem_cycles() - mc0;
+        // the SoC books at most one hidden cycle per compute cycle and per
+        // mem cycle; clamping here makes the invariant hold per run even
+        // when a drain/prefetch window spans two runs
+        let overlapped_cycles = (self.soc.overlapped_cycles - ov0)
+            .min(compute_cycles)
+            .min(mem_cycles);
         Ok(RunMetrics {
             cpu_cycles: cpu.cycles,
-            compute_cycles: self.soc.compute_cycles() - cc0,
-            mem_cycles: self.soc.mem_cycles() - mc0,
+            compute_cycles,
+            mem_cycles,
+            overlapped_cycles,
             reconfigs: self.soc.engine.stats.reconfigs - rc0,
             layers: self.soc.layers_run - lr0,
             ops: self.soc.engine.stats.ops - ops0,
@@ -559,5 +636,41 @@ mod tests {
         });
         assert!(drv.alloc(6).is_ok());
         assert!(drv.alloc(6).is_err());
+    }
+
+    #[test]
+    fn arena_reset_reclaims_dram() {
+        let mut drv = Driver::new(SocConfig {
+            dram_words: 8,
+            ..Default::default()
+        });
+        assert_eq!(drv.alloc(6).unwrap(), 0);
+        assert!(drv.alloc(6).is_err(), "bump arena exhausted");
+        drv.reset_arena();
+        assert_eq!(drv.dram_used(), 0);
+        assert_eq!(drv.alloc(6).unwrap(), 0, "addresses reusable after reset");
+    }
+
+    #[test]
+    fn control_program_rejects_table_beyond_address_range() {
+        // a table whose end address would overflow the i32 loop bound is
+        // rejected instead of assembling a corrupted comparison
+        let too_many = ((i32::MAX as usize - map::RAM_BASE as usize) / (DESC_WORDS * 4)) + 1;
+        assert!(Driver::control_program(too_many, 1).is_err());
+        assert!(Driver::control_program(4, 1).is_ok());
+    }
+
+    #[test]
+    fn pipeline_toggle_via_driver() {
+        let mut drv = Driver::new(SocConfig {
+            dram_words: 4096,
+            spad_words: 512,
+            ..Default::default()
+        });
+        assert!(!drv.pipeline_enabled());
+        drv.set_pipeline(true).unwrap();
+        assert!(drv.pipeline_enabled());
+        drv.set_pipeline(false).unwrap();
+        assert!(!drv.pipeline_enabled());
     }
 }

@@ -14,17 +14,65 @@
 //!        +0x18   BATCH      (R/W: images per descriptor execution; the
 //!                            in/out DMA regions hold that many images
 //!                            packed back to back. Defaults to 1.)
+//!        +0x1C   PIPELINE   (R/W: 1 = double-buffered layer pipelining —
+//!                            DMA staging overlaps engine compute through
+//!                            ping/pong scratchpad banks. Defaults to 0.)
+//!        +0x20   OVLP_LO    (R: DMA cycles hidden under compute)
+//!        +0x24   OVLP_HI
 //! ```
 //!
 //! The data plane (weights/activations, i64) lives in [`Dram`] and streams
 //! through a [`Scratchpad`] via [`Dma`] before each layer — the §I memory
 //! bottleneck is visible in [`Soc::mem_cycles`] vs [`Soc::compute_cycles`].
+//!
+//! ## The pipelined execution model (`PIPELINE = 1`)
+//!
+//! With pipelining off, every layer pays DMA-in → compute → DMA-out
+//! serially. With pipelining on, the scratchpad's banks act as ping/pong
+//! staging buffers and the DMA runs concurrently with the engine; the SoC
+//! tracks how many DMA cycles were hidden in [`Soc::overlapped_cycles`],
+//! and the driver reports `total = cpu + compute + (mem − overlapped)`.
+//! Per layer, the hideable traffic is:
+//!
+//! 1. the earlier layers' output writeback finishing its drain — sound
+//!    despite layer `k+1` re-reading that region, because both sides are
+//!    tile-granular and FIFO-ordered: output tiles drain in exactly the
+//!    order the staged re-read consumes them, the writes started a whole
+//!    compute phase earlier, so a read never overtakes the write of its
+//!    tile; the only irreducibly serial element is the first-tile fill,
+//!    which is always charged. The write-back queue is bounded: it holds
+//!    at most half the scratchpad's worth of undrained tiles (the pong
+//!    half), and backlog beyond that stalls back to the serial lane,
+//! 2. this layer's own input and weight tiles past each region's first
+//!    (the pipeline fill — the engine cannot start before the first input
+//!    rows and the first tap set are resident; later tiles stream while
+//!    earlier ones compute),
+//! 3. this layer's early output tiles — all but the last, which the
+//!    engine only produces as compute ends; it joins the write-back queue
+//!    and drains under a later window,
+//! 4. a **look-ahead prefetch** of the *next* descriptor's weight regions
+//!    (weights are data-independent; activations are not — layer `k+1`'s
+//!    input is layer `k`'s output, so it is never prefetched).
+//!
+//! Every hidden cycle is bounded by the layer's engine cycles, so the run
+//! invariant `overlapped ≤ min(compute, mem)` holds by construction.
+//!
+//! ## Weight-stationary cache honesty
+//!
+//! Weights staged once stay resident across runs **only while they fit the
+//! scratchpad**: the cache is LRU-bounded by the residency budget —
+//! `SocConfig::spad_words` minus the two ping/pong staging banks the DMA
+//! claims, so resident weights and in-flight tiles never double-book the
+//! same capacity. A region larger than the budget is never cached (VGG16's
+//! FC1 at ~102M words cannot be "resident" in a 16K-word scratchpad — it
+//! re-pays its DMA every run, as it would in hardware).
 
 use super::desc::{LayerDesc, DESC_WORDS};
 use crate::error::{Error, Result};
-use crate::mem::{Dma, Dram, Scratchpad};
+use crate::mem::{Dma, Dram, Scratchpad, StageCost};
 use crate::riscv::cpu::Bus;
 use crate::systolic::{Engine, EngineConfig, EngineMode};
+use std::collections::{HashMap, VecDeque};
 
 /// Memory-map constants.
 pub mod map {
@@ -48,6 +96,12 @@ pub mod map {
     pub const R_LAYERS: u32 = MMIO_BASE + 20;
     /// BATCH register (images per descriptor execution).
     pub const R_BATCH: u32 = MMIO_BASE + 24;
+    /// PIPELINE register (1 = overlap layer DMA with compute).
+    pub const R_PIPE: u32 = MMIO_BASE + 28;
+    /// OVLP_LO register (DMA cycles hidden under compute).
+    pub const R_OVLP_LO: u32 = MMIO_BASE + 32;
+    /// OVLP_HI register.
+    pub const R_OVLP_HI: u32 = MMIO_BASE + 36;
 }
 
 /// SoC sizing.
@@ -108,11 +162,32 @@ pub struct Soc {
     /// batched engine path streams all of them through each layer's
     /// configuration before reconfiguring — weight-stationary reuse.
     pub batch_n: u32,
+    /// DMA cycles hidden under engine compute by the pipelined execution
+    /// model (cumulative; the `OVLP` MMIO registers and
+    /// `RunMetrics::overlapped_cycles` read deltas of this).
+    pub overlapped_cycles: u64,
+    /// The `PIPELINE` MMIO register: 1 = double-buffered layer pipelining.
+    pipeline_on: bool,
+    /// Residual output-writeback cycles from the last executed layer,
+    /// drainable under the next layer's compute window.
+    pending_drain: u64,
+    /// Look-ahead prefetch credits: weight regions whose staging cycles
+    /// were (partially) hidden under an earlier layer's compute, consumed
+    /// when the region is actually staged.
+    prefetched: HashMap<(u32, u32), u64>,
+    /// The next descriptor in the table, set by the `DESC_ADDR` handler so
+    /// the prefetch state machine can look ahead one layer.
+    lookahead: Option<LayerDesc>,
     /// Weight-stationary cache: weights staged once stay resident in the
-    /// scratchpad across inferences (addr, len) → data. Repeat layers skip
-    /// the DRAM burst entirely — the standard CNN-accelerator optimisation
-    /// (EXPERIMENTS.md §Perf records the cycle impact).
-    weight_cache: std::collections::HashMap<(u32, u32), Vec<i64>>,
+    /// scratchpad across inferences (addr, len) → data. Bounded by the
+    /// scratchpad capacity with LRU eviction — repeats of *resident*
+    /// regions skip the DRAM burst; evicted or oversized regions re-pay
+    /// it (EXPERIMENTS.md §Perf records the cycle impact).
+    weight_cache: HashMap<(u32, u32), Vec<i64>>,
+    /// LRU order of `weight_cache` keys (front = coldest).
+    cache_lru: VecDeque<(u32, u32)>,
+    /// Words currently held by `weight_cache`.
+    cache_words: usize,
     cfg: SocConfig,
 }
 
@@ -127,28 +202,120 @@ impl Soc {
             engine: Engine::new(cfg.cells),
             layers_run: 0,
             batch_n: 1,
-            weight_cache: std::collections::HashMap::new(),
+            overlapped_cycles: 0,
+            pipeline_on: false,
+            pending_drain: 0,
+            prefetched: HashMap::new(),
+            lookahead: None,
+            weight_cache: HashMap::new(),
+            cache_lru: VecDeque::new(),
+            cache_words: 0,
             cfg,
         }
     }
 
     /// Invalidate cached weights overlapping `[addr, addr+len)` — called by
-    /// the driver when the host rewrites a DRAM region.
+    /// the driver when the host rewrites a DRAM region. Prefetch credits
+    /// for the region are dropped too (the prefetched data is stale).
     pub fn invalidate_weights(&mut self, addr: u32, len: usize) {
         let end = addr as u64 + len as u64;
-        self.weight_cache
-            .retain(|&(a, l), _| (a as u64 + l as u64) <= addr as u64 || a as u64 >= end);
+        let live = |a: u32, l: u32| (a as u64 + l as u64) <= addr as u64 || a as u64 >= end;
+        self.weight_cache.retain(|&(a, l), _| live(a, l));
+        let cache = &self.weight_cache;
+        self.cache_lru.retain(|k| cache.contains_key(k));
+        self.cache_words = self.weight_cache.values().map(|v| v.len()).sum();
+        self.prefetched.retain(|&(a, l), _| live(a, l));
     }
 
-    /// Stage a weight region: first touch pays the DMA, repeats are free
-    /// (weight-stationary scratchpad residency).
-    fn stage_weights(&mut self, dram_addr: u32, len: u32) -> Result<Vec<i64>> {
-        if let Some(w) = self.weight_cache.get(&(dram_addr, len)) {
-            return Ok(w.clone());
+    /// Drop every cached weight region and prefetch credit — used by the
+    /// driver's arena reset, where DRAM addresses are about to be reused.
+    pub fn invalidate_all_weights(&mut self) {
+        self.weight_cache.clear();
+        self.cache_lru.clear();
+        self.cache_words = 0;
+        self.prefetched.clear();
+    }
+
+    /// Words currently resident in the weight-stationary cache (always
+    /// ≤ the residency budget: scratchpad capacity minus the two staging
+    /// banks the DMA uses for ping/pong tiles).
+    pub fn weight_cache_words(&self) -> usize {
+        self.cache_words
+    }
+
+    /// Is the pipelined execution model enabled (the `PIPELINE` register)?
+    pub fn pipeline_enabled(&self) -> bool {
+        self.pipeline_on
+    }
+
+    /// Stage a weight region: a cache-resident region is free, otherwise
+    /// the DMA is charged. Returns the data plus the cycles still hideable
+    /// under this layer's compute: like the input path, the first tile is
+    /// pipeline fill (the engine cannot start until the first tap set is
+    /// resident) and stays serial — unless a look-ahead prefetch already
+    /// landed it early, in which case the credit covers the fill first.
+    fn stage_weights(&mut self, dram_addr: u32, len: u32) -> Result<(Vec<i64>, u64)> {
+        let key = (dram_addr, len);
+        if let Some(w) = self.weight_cache.get(&key) {
+            let data = w.clone();
+            self.cache_touch(key);
+            return Ok((data, 0));
         }
-        let data = self.stage_in(dram_addr as usize, len as usize)?;
-        self.weight_cache.insert((dram_addr, len), data.clone());
-        Ok(data)
+        let credit = self.prefetched.remove(&key).unwrap_or(0);
+        let (data, hideable) = if self.pipeline_on {
+            let (data, cost) = self.dma.load_staged(
+                &mut self.dram,
+                &mut self.spad,
+                dram_addr as usize,
+                len as usize,
+            )?;
+            (data, cost.cycles.saturating_sub(cost.fill.max(credit)))
+        } else {
+            (self.stage_in_serial(dram_addr as usize, len as usize)?, 0)
+        };
+        // only clone for residency if the region can actually fit — an
+        // oversized region (VGG-scale FC weights) would otherwise pay a
+        // huge transient copy just for cache_insert to discard it
+        if data.len() <= self.residency_budget() {
+            self.cache_insert(key, data.clone());
+        }
+        Ok((data, hideable))
+    }
+
+    fn cache_touch(&mut self, key: (u32, u32)) {
+        if let Some(pos) = self.cache_lru.iter().position(|&k| k == key) {
+            self.cache_lru.remove(pos);
+            self.cache_lru.push_back(key);
+        }
+    }
+
+    /// Scratchpad words available for resident weights: total capacity
+    /// minus the ping/pong staging bank pair, which the (pipelined) DMA
+    /// claims for in-flight tiles — resident weights and staging buffers
+    /// must not double-book the same on-chip capacity.
+    fn residency_budget(&self) -> usize {
+        self.cfg.spad_words.saturating_sub(2 * self.spad.bank_words())
+    }
+
+    /// Insert under the scratchpad residency budget: oversized regions are
+    /// never cached, and LRU regions are evicted until the new one fits.
+    fn cache_insert(&mut self, key: (u32, u32), data: Vec<i64>) {
+        let words = data.len();
+        let budget = self.residency_budget();
+        if words > budget {
+            return;
+        }
+        while self.cache_words + words > budget {
+            let Some(old) = self.cache_lru.pop_front() else {
+                break;
+            };
+            if let Some(v) = self.weight_cache.remove(&old) {
+                self.cache_words -= v.len();
+            }
+        }
+        self.cache_words += words;
+        self.weight_cache.insert(key, data);
+        self.cache_lru.push_back(key);
     }
 
     /// Config used to build this SoC.
@@ -189,6 +356,8 @@ impl Soc {
     /// `BATCH` register holds `n > 1`, the layer's in/out regions carry `n`
     /// images back to back and the whole batch runs through one engine
     /// configuration (conv/pool/FC; FIR is inherently single-stream).
+    /// When the `PIPELINE` register is set, the overlap model above books
+    /// the hideable DMA cycles into [`Soc::overlapped_cycles`].
     pub fn exec_descriptor(&mut self, desc: &LayerDesc) -> Result<()> {
         let batch = self.batch_n.max(1) as usize;
         match *desc {
@@ -208,9 +377,10 @@ impl Soc {
                 out_shift,
             } => {
                 let in_len = batch * desc.in_len();
-                let w_len = (cout * cin * k * k) as usize;
-                let input = self.stage_in(in_addr as usize, in_len)?;
-                let weights = self.stage_weights(w_addr, w_len as u32)?;
+                let w_len = cout * cin * k * k;
+                let (input, in_cost) = self.stage_in(in_addr as usize, in_len)?;
+                let (weights, w_hideable) = self.stage_weights(w_addr, w_len)?;
+                let c0 = self.engine.stats.total_cycles();
                 self.engine.reconfigure(EngineConfig {
                     mode: EngineMode::Conv2d {
                         cout: cout as usize,
@@ -227,9 +397,8 @@ impl Soc {
                 let out = self
                     .engine
                     .run_batch(&input, batch, &[cin as usize, h as usize, w as usize])?;
-                self.stage_out(out_addr as usize, &out.data)?;
-                self.layers_run += 1;
-                Ok(())
+                let compute = self.engine.stats.total_cycles() - c0;
+                self.finish_layer(out_addr as usize, &out.data, compute, in_cost, w_hideable)
             }
             LayerDesc::Pool {
                 k,
@@ -241,7 +410,8 @@ impl Soc {
                 w,
                 out_addr,
             } => {
-                let input = self.stage_in(in_addr as usize, batch * desc.in_len())?;
+                let (input, in_cost) = self.stage_in(in_addr as usize, batch * desc.in_len())?;
+                let c0 = self.engine.stats.total_cycles();
                 self.engine.reconfigure(EngineConfig {
                     mode: EngineMode::Pool {
                         k: k as usize,
@@ -254,9 +424,8 @@ impl Soc {
                 let out = self
                     .engine
                     .run_batch(&input, batch, &[c as usize, h as usize, w as usize])?;
-                self.stage_out(out_addr as usize, &out.data)?;
-                self.layers_run += 1;
-                Ok(())
+                let compute = self.engine.stats.total_cycles() - c0;
+                self.finish_layer(out_addr as usize, &out.data, compute, in_cost, 0)
             }
             LayerDesc::Fc {
                 n_in,
@@ -268,9 +437,10 @@ impl Soc {
                 relu,
                 out_shift,
             } => {
-                let input = self.stage_in(in_addr as usize, batch * n_in as usize)?;
-                let weights = self.stage_weights(w_addr, n_in * n_out)?;
-                let bias = self.stage_weights(b_addr, n_out)?;
+                let (input, in_cost) = self.stage_in(in_addr as usize, batch * n_in as usize)?;
+                let (weights, w_hide) = self.stage_weights(w_addr, n_in * n_out)?;
+                let (bias, b_hide) = self.stage_weights(b_addr, n_out)?;
+                let c0 = self.engine.stats.total_cycles();
                 self.engine.reconfigure(EngineConfig {
                     mode: EngineMode::Fc {
                         n_in: n_in as usize,
@@ -282,9 +452,8 @@ impl Soc {
                     out_shift,
                 })?;
                 let out = self.engine.run_batch(&input, batch, &[n_in as usize])?;
-                self.stage_out(out_addr as usize, &out.data)?;
-                self.layers_run += 1;
-                Ok(())
+                let compute = self.engine.stats.total_cycles() - c0;
+                self.finish_layer(out_addr as usize, &out.data, compute, in_cost, w_hide + b_hide)
             }
             LayerDesc::Fir {
                 taps_addr,
@@ -298,24 +467,130 @@ impl Soc {
                         "FIR descriptor streams one signal; BATCH={batch} is not supported"
                     )));
                 }
-                let taps = self.stage_weights(taps_addr, n_taps)?;
-                let input = self.stage_in(in_addr as usize, n as usize)?;
+                let (taps, w_hideable) = self.stage_weights(taps_addr, n_taps)?;
+                let (input, in_cost) = self.stage_in(in_addr as usize, n as usize)?;
+                let c0 = self.engine.stats.total_cycles();
                 self.engine.reconfigure(EngineConfig {
                     mode: EngineMode::Fir { taps },
                     relu: false,
                     out_shift: 0,
                 })?;
                 let out = self.engine.run(&input, &[n as usize])?;
-                self.stage_out(out_addr as usize, &out.data)?;
-                self.layers_run += 1;
-                Ok(())
+                let compute = self.engine.stats.total_cycles() - c0;
+                self.finish_layer(out_addr as usize, &out.data, compute, in_cost, w_hideable)
             }
         }
     }
 
-    /// DMA a DRAM region into the scratchpad (tiled if larger) and return
-    /// it. Cycle costs land on the DMA/DRAM/scratchpad counters.
-    fn stage_in(&mut self, dram_addr: usize, len: usize) -> Result<Vec<i64>> {
+    /// Write the layer's output back and, in pipelined mode, book the
+    /// overlap this layer's compute window can hide.
+    fn finish_layer(
+        &mut self,
+        out_addr: usize,
+        data: &[i64],
+        compute: u64,
+        in_cost: StageCost,
+        w_hideable: u64,
+    ) -> Result<()> {
+        let out_cost = self.stage_out(out_addr, data)?;
+        self.layers_run += 1;
+        if self.pipeline_on {
+            self.account_overlap(compute, in_cost, w_hideable, out_cost);
+        } else {
+            self.pending_drain = 0;
+            self.lookahead = None;
+        }
+        Ok(())
+    }
+
+    /// The per-layer overlap state machine (see the module docs): hide
+    /// DMA traffic under this layer's `compute` cycles in priority order —
+    /// previous drain, own streams, own output, look-ahead weight
+    /// prefetch. Every hidden cycle consumes compute budget, so the sum of
+    /// hides never exceeds total engine cycles.
+    fn account_overlap(
+        &mut self,
+        compute: u64,
+        in_cost: StageCost,
+        w_hideable: u64,
+        out_cost: StageCost,
+    ) {
+        let mut budget = compute;
+        let mut hidden = 0u64;
+        // (1) the previous layers' writeback FIFO keeps draining under this
+        //     compute window. This does not break write-before-read on the
+        //     chained in-region: drains and staged re-reads are both
+        //     tile-FIFO and the writes lead by a full compute phase, so a
+        //     read never overtakes the write of its own tile.
+        let d = budget.min(self.pending_drain);
+        budget -= d;
+        hidden += d;
+        let drain_residue = self.pending_drain - d;
+        // (2) own staging streams tile-by-tile through the ping/pong banks;
+        //     only the first input tile (pipeline fill) is serial, and
+        //     weight tap sets stream while earlier sets compute
+        let stream = in_cost.cycles.saturating_sub(in_cost.fill) + w_hideable;
+        let s = budget.min(stream);
+        budget -= s;
+        hidden += s;
+        // (3) early output tiles drain while the compute tail runs — all
+        //     but the last tile, which the engine only produces as compute
+        //     ends (out_cost.fill). That final tile, plus whatever did not
+        //     fit this window, joins the write-back queue and drains under
+        //     later windows; the queue is bounded by the drain cost of half
+        //     the scratchpad (the pong half buffers undrained tiles), and
+        //     anything beyond that stalls back to the serial lane.
+        let o = budget.min(out_cost.cycles.saturating_sub(out_cost.fill));
+        budget -= o;
+        hidden += o;
+        let queue_cap = Dma::staged_cost(&self.dram, &self.spad, self.spad.len() / 2);
+        self.pending_drain = (drain_residue + (out_cost.cycles - o)).min(queue_cap);
+        // (4) leftover slack prefetches the next descriptor's weights into
+        //     the pong staging half (credited when actually staged)
+        if let Some(next) = self.lookahead.take() {
+            for (addr, len) in next.weight_regions() {
+                if budget == 0 {
+                    break;
+                }
+                let key = (addr, len);
+                if len == 0
+                    || self.weight_cache.contains_key(&key)
+                    || len as usize > self.spad.len() / 2
+                {
+                    continue;
+                }
+                let cost = Dma::staged_cost(&self.dram, &self.spad, len as usize);
+                let have = self.prefetched.get(&key).copied().unwrap_or(0);
+                if have >= cost {
+                    continue;
+                }
+                let take = budget.min(cost - have);
+                *self.prefetched.entry(key).or_insert(0) += take;
+                budget -= take;
+                hidden += take;
+            }
+        }
+        self.overlapped_cycles += hidden;
+    }
+
+    /// DMA a DRAM region into the scratchpad and return it with its cost
+    /// split. Serial mode fills one whole-scratchpad window per burst (the
+    /// whole cost is pipeline fill); pipelined mode streams bank-sized
+    /// ping/pong tiles, so only the first tile is fill.
+    fn stage_in(&mut self, dram_addr: usize, len: usize) -> Result<(Vec<i64>, StageCost)> {
+        if self.pipeline_on {
+            return self
+                .dma
+                .load_staged(&mut self.dram, &mut self.spad, dram_addr, len);
+        }
+        let c0 = self.dma.cycles;
+        let data = self.stage_in_serial(dram_addr, len)?;
+        let cycles = self.dma.cycles - c0;
+        Ok((data, StageCost { cycles, fill: cycles }))
+    }
+
+    /// The serial staging path: whole-scratchpad tiles into window 0.
+    fn stage_in_serial(&mut self, dram_addr: usize, len: usize) -> Result<Vec<i64>> {
         let mut out = Vec::with_capacity(len);
         let tile = self.spad.len();
         let mut off = 0;
@@ -329,7 +604,13 @@ impl Soc {
         Ok(out)
     }
 
-    fn stage_out(&mut self, dram_addr: usize, data: &[i64]) -> Result<()> {
+    fn stage_out(&mut self, dram_addr: usize, data: &[i64]) -> Result<StageCost> {
+        if self.pipeline_on {
+            return self
+                .dma
+                .store_staged(&mut self.dram, &mut self.spad, data, dram_addr);
+        }
+        let c0 = self.dma.cycles;
         let tile = self.spad.len();
         let mut off = 0;
         while off < data.len() {
@@ -339,7 +620,8 @@ impl Soc {
                 .store(&mut self.dram, &mut self.spad, 0, dram_addr + off, chunk)?;
             off += chunk;
         }
-        Ok(())
+        let cycles = self.dma.cycles - c0;
+        Ok(StageCost { cycles, fill: cycles })
     }
 }
 
@@ -359,6 +641,9 @@ impl Bus for Soc {
             map::R_RECONF => Ok(self.engine.stats.reconfigs as u32),
             map::R_LAYERS => Ok(self.layers_run as u32),
             map::R_BATCH => Ok(self.batch_n),
+            map::R_PIPE => Ok(self.pipeline_on as u32),
+            map::R_OVLP_LO => Ok(self.overlapped_cycles as u32),
+            map::R_OVLP_HI => Ok((self.overlapped_cycles >> 32) as u32),
             _ => Err(Error::Accel(format!("bus read {addr:#x}"))),
         }
     }
@@ -381,10 +666,28 @@ impl Bus for Soc {
                 }
                 let words: Vec<u32> = self.ctrl_ram[idx..idx + DESC_WORDS].to_vec();
                 let desc = LayerDesc::decode(&words)?;
-                self.exec_descriptor(&desc)
+                // descriptor look-ahead: tables are contiguous, so the next
+                // block (if decodable) feeds the weight prefetcher
+                self.lookahead = if self.pipeline_on && idx + 2 * DESC_WORDS <= self.ctrl_ram.len()
+                {
+                    LayerDesc::decode(&self.ctrl_ram[idx + DESC_WORDS..idx + 2 * DESC_WORDS]).ok()
+                } else {
+                    None
+                };
+                let r = self.exec_descriptor(&desc);
+                self.lookahead = None;
+                r
             }
             map::R_BATCH => {
                 self.batch_n = value.max(1);
+                Ok(())
+            }
+            map::R_PIPE => {
+                self.pipeline_on = value != 0;
+                // a mode change resets the in-flight overlap state
+                self.pending_drain = 0;
+                self.prefetched.clear();
+                self.lookahead = None;
                 Ok(())
             }
             _ => Err(Error::Accel(format!("bus write {addr:#x} = {value:#x}"))),
@@ -492,5 +795,132 @@ mod tests {
         });
         assert!(soc.load(0xDEAD_0000).is_err());
         assert!(soc.store(0xF000_00FF & !3, 0).is_err());
+    }
+
+    #[test]
+    fn pipeline_register_toggles_and_reports_overlap() {
+        let mut soc = Soc::new(SocConfig {
+            dram_words: 8192,
+            spad_words: 512,
+            ..Default::default()
+        });
+        assert_eq!(soc.load(map::R_PIPE).unwrap(), 0, "pipelining off by default");
+        soc.store(map::R_PIPE, 1).unwrap();
+        assert_eq!(soc.load(map::R_PIPE).unwrap(), 1);
+        assert!(soc.pipeline_enabled());
+        // a pipelined conv layer produces identical data and books overlap
+        let img: Vec<i64> = (0..256).map(|i| (i as i64 % 13) - 6).collect();
+        soc.dram.preload(0, &img).unwrap();
+        soc.dram.preload(1000, &[1, 2, 1, 0, -1, 0, 2, 1, 2]).unwrap();
+        let desc = LayerDesc::Conv {
+            cout: 1,
+            cin: 1,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            w_addr: 1000,
+            in_addr: 0,
+            h: 16,
+            w: 16,
+            out_addr: 2000,
+            relu: false,
+            out_shift: 0,
+        };
+        soc.write_descriptors(0, &[desc.clone()]).unwrap();
+        soc.store(map::R_DESC, map::RAM_BASE).unwrap();
+        let pipelined_out = soc.dram.read_burst(2000, 256).unwrap();
+        let overlapped = soc.load(map::R_OVLP_LO).unwrap() as u64
+            | ((soc.load(map::R_OVLP_HI).unwrap() as u64) << 32);
+        assert_eq!(overlapped, soc.overlapped_cycles);
+        assert!(overlapped > 0, "a conv layer must hide some DMA traffic");
+        assert!(
+            overlapped <= soc.compute_cycles().min(soc.mem_cycles()),
+            "invariant: overlapped ≤ min(compute, mem)"
+        );
+
+        // the serial model on a fresh SoC computes the same data
+        let mut serial = Soc::new(SocConfig {
+            dram_words: 8192,
+            spad_words: 512,
+            ..Default::default()
+        });
+        serial.dram.preload(0, &img).unwrap();
+        serial.dram.preload(1000, &[1, 2, 1, 0, -1, 0, 2, 1, 2]).unwrap();
+        serial.write_descriptors(0, &[desc]).unwrap();
+        serial.store(map::R_DESC, map::RAM_BASE).unwrap();
+        assert_eq!(serial.dram.read_burst(2000, 256).unwrap(), pipelined_out);
+        assert_eq!(serial.overlapped_cycles, 0, "serial model hides nothing");
+    }
+
+    #[test]
+    fn oversized_weight_region_is_not_cached() {
+        // 64-word scratchpad, 8 banks → 48-word residency budget (two
+        // banks are staging): an 80-tap region cannot be resident, so a
+        // repeat execution re-pays its DMA; a 2-tap region is resident
+        // and the repeat is cheaper
+        let mut soc = Soc::new(SocConfig {
+            dram_words: 4096,
+            spad_words: 64,
+            ..Default::default()
+        });
+        let taps_big: Vec<i64> = vec![1; 80];
+        soc.dram.preload(0, &taps_big).unwrap();
+        soc.dram.preload(200, &vec![3; 100]).unwrap();
+        let big = LayerDesc::Fir {
+            taps_addr: 0,
+            n_taps: 80,
+            in_addr: 200,
+            n: 100,
+            out_addr: 400,
+        };
+        let m0 = soc.mem_cycles();
+        soc.exec_descriptor(&big).unwrap();
+        let first = soc.mem_cycles() - m0;
+        assert_eq!(soc.weight_cache_words(), 0, "80 words cannot fit the 48-word budget");
+        let m1 = soc.mem_cycles();
+        soc.exec_descriptor(&big).unwrap();
+        let second = soc.mem_cycles() - m1;
+        assert_eq!(first, second, "oversized weights re-pay DMA every run");
+
+        soc.dram.preload(100, &[1, 1]).unwrap();
+        let small = LayerDesc::Fir {
+            taps_addr: 100,
+            n_taps: 2,
+            in_addr: 200,
+            n: 100,
+            out_addr: 400,
+        };
+        let m2 = soc.mem_cycles();
+        soc.exec_descriptor(&small).unwrap();
+        let cold = soc.mem_cycles() - m2;
+        assert_eq!(soc.weight_cache_words(), 2);
+        let m3 = soc.mem_cycles();
+        soc.exec_descriptor(&small).unwrap();
+        let warm = soc.mem_cycles() - m3;
+        assert!(warm < cold, "resident taps skip the DRAM burst: {warm} !< {cold}");
+    }
+
+    #[test]
+    fn weight_cache_evicts_lru_under_budget() {
+        let mut soc = Soc::new(SocConfig {
+            dram_words: 4096,
+            spad_words: 64,
+            ..Default::default()
+        });
+        soc.dram.preload(500, &vec![7; 64]).unwrap();
+        // 48-word budget (64 minus two 8-word staging banks): two 40-word
+        // regions cannot both be resident
+        let (a, _) = soc.stage_weights(500, 40).unwrap();
+        assert_eq!(a.len(), 40);
+        assert_eq!(soc.weight_cache_words(), 40);
+        let _ = soc.stage_weights(510, 40).unwrap();
+        assert_eq!(soc.weight_cache_words(), 40, "LRU evicted the first region");
+        // re-staging the evicted region pays DMA again
+        let m0 = soc.mem_cycles();
+        let _ = soc.stage_weights(500, 40).unwrap();
+        assert!(soc.mem_cycles() > m0, "evicted region is no longer free");
+        // invalidation drops residency accounting too
+        soc.invalidate_weights(500, 64);
+        assert_eq!(soc.weight_cache_words(), 0);
     }
 }

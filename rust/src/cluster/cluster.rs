@@ -74,6 +74,17 @@ impl Cluster {
         &self.drivers
     }
 
+    /// Toggle the pipelined execution model (`PIPELINE` MMIO register) on
+    /// every replica: per-replica pipelined runs compose with sharding —
+    /// each shard's `RunMetrics` subtracts its own overlapped cycles, and
+    /// the max-over-shards aggregate shrinks accordingly.
+    pub fn set_pipeline(&mut self, on: bool) -> Result<()> {
+        for drv in &mut self.drivers {
+            drv.set_pipeline(on)?;
+        }
+        Ok(())
+    }
+
     /// Dispatch an already-placed plan: shard `i` runs on replica
     /// `assignments[i]` against that replica's own descriptor table
     /// `tables[assignments[i]]`, all replicas concurrently. Completed
@@ -164,5 +175,19 @@ mod tests {
         // all in-flight work retired, busy time recorded on both replicas
         assert!(sched.outstanding_cycles().iter().all(|&c| c == 0));
         assert!(sched.busy_cycles().iter().all(|&c| c > 0));
+    }
+
+    #[test]
+    fn set_pipeline_reaches_every_replica() {
+        let mut c = Cluster::new(ClusterConfig {
+            replicas: 3,
+            soc: small_soc(),
+        })
+        .unwrap();
+        assert!(c.drivers().iter().all(|d| !d.pipeline_enabled()));
+        c.set_pipeline(true).unwrap();
+        assert!(c.drivers().iter().all(|d| d.pipeline_enabled()));
+        c.set_pipeline(false).unwrap();
+        assert!(c.drivers().iter().all(|d| !d.pipeline_enabled()));
     }
 }

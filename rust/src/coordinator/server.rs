@@ -14,7 +14,11 @@
 //! so the accelerator sees the batch as a unit and the weight-stationary
 //! engine amortises tap loads and reconfiguration across it — then fan
 //! the per-request outputs back out. Malformed requests are rejected with
-//! an explicit error response before the batch forms.
+//! an explicit error response before the batch forms. Replica SoCs run
+//! with the pipelined execution model on by default
+//! (`CoordinatorConfig::pipeline`): layer DMA overlaps engine compute
+//! through double-buffered scratchpad staging, and the hidden cycles are
+//! reported via `StatsCollector::overlapped_cycles`.
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::request::{InferenceRequest, InferenceResponse, RequestId};
@@ -41,6 +45,11 @@ pub struct CoordinatorConfig {
     pub shards: usize,
     /// Shard placement policy within each worker's cluster.
     pub sched: SchedulePolicy,
+    /// Overlap layer DMA with engine compute on every replica (the SoC
+    /// `PIPELINE` register — double-buffered scratchpad staging). On by
+    /// default: the serving hot path should not pay memory traffic it can
+    /// hide. Disable to reproduce the serial cycle model.
+    pub pipeline: bool,
     /// Batching policy.
     pub batch: BatchPolicy,
     /// Per-replica SoC configuration.
@@ -56,6 +65,7 @@ impl Default for CoordinatorConfig {
             workers: 2,
             shards: 1,
             sched: SchedulePolicy::LeastOutstandingCycles,
+            pipeline: true,
             batch: BatchPolicy::default(),
             soc: SocConfig::serving(),
             clock_mhz: 200.0,
@@ -82,6 +92,7 @@ impl Worker {
             replicas: cfg.shards,
             soc: cfg.soc,
         })?;
+        cluster.set_pipeline(cfg.pipeline)?;
         let cdep = inst.deploy_cluster(&mut cluster, per_shard)?;
         let sched = Scheduler::new(cfg.sched, cfg.shards)?;
         let input_dims = inst.net.input.dims();
@@ -224,6 +235,7 @@ impl Coordinator {
                                 // own busy time, requests carry latency
                                 let mut s = stats.lock().expect("stats poisoned");
                                 s.record_sharded_batch(&per_shard);
+                                s.record_overlapped(m.overlapped_cycles());
                                 for &latency_us in &latencies {
                                     s.record(latency_us, n, 0);
                                 }
@@ -477,6 +489,55 @@ mod tests {
         let busy = stats.shard_busy_cycles().to_vec();
         assert!(!busy.is_empty() && busy.iter().any(|&c| c > 0), "{busy:?}");
         assert!(busy.len() <= 3, "slots are per-cluster replicas: {busy:?}");
+    }
+
+    #[test]
+    fn pipelined_serving_stays_bit_exact_and_records_overlap() {
+        let inst = tiny_instance();
+        // pipeline on (the default): answers must still equal forward_ref,
+        // and the workers must report hidden DMA cycles
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                ..Default::default()
+            },
+            &inst,
+        )
+        .unwrap();
+        let inputs: Vec<Tensor> = (0..8)
+            .map(|i| Tensor::random(vec![1, 16, 16], 127, 9000 + i))
+            .collect();
+        let rxs: Vec<_> = inputs
+            .iter()
+            .map(|t| coord.submit(t.clone()).unwrap())
+            .collect();
+        for ((id, rx), input) in rxs.into_iter().zip(&inputs) {
+            let resp = rx.recv().expect("response");
+            assert_eq!(resp.id, id);
+            assert!(resp.is_ok(), "{:?}", resp.error);
+            let want = inst.forward_ref(input).unwrap();
+            assert_eq!(resp.logits, want.data, "request {id} under pipelining");
+        }
+        let stats = coord.shutdown();
+        assert!(stats.overlapped_cycles > 0, "pipelining must hide DMA traffic");
+        assert!(stats.overlap_fraction() > 0.0 && stats.overlap_fraction() < 1.0);
+
+        // pipeline off: the serial model hides nothing
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                pipeline: false,
+                ..Default::default()
+            },
+            &inst,
+        )
+        .unwrap();
+        let (_, rx) = coord
+            .submit(Tensor::random(vec![1, 16, 16], 127, 9100))
+            .unwrap();
+        assert!(rx.recv().unwrap().is_ok());
+        let stats = coord.shutdown();
+        assert_eq!(stats.overlapped_cycles, 0);
     }
 
     #[test]

@@ -34,6 +34,9 @@ pub struct StatsCollector {
     started: Instant,
     /// Total simulated accelerator cycles across batches.
     pub accel_cycles: u64,
+    /// DMA cycles hidden under compute by pipelined execution, summed
+    /// over every shard run (0 when serving with the pipeline disabled).
+    pub overlapped_cycles: u64,
     /// Accelerator batch runs executed.
     pub batches: u64,
     /// Requests that failed with an explicit error response.
@@ -56,6 +59,7 @@ impl StatsCollector {
             shard_busy_cycles: Vec::new(),
             started: Instant::now(),
             accel_cycles: 0,
+            overlapped_cycles: 0,
             batches: 0,
             errors: 0,
         }
@@ -91,6 +95,29 @@ impl StatsCollector {
                 self.shard_busy_cycles.resize(slot + 1, 0);
             }
             self.shard_busy_cycles[slot] += cycles;
+        }
+    }
+
+    /// Record DMA cycles a batch run hid under compute (pipelined
+    /// execution). Kept separate from the critical-path charge: the hidden
+    /// cycles are *savings* relative to the serial model, reported by
+    /// [`StatsCollector::overlap_fraction`].
+    pub fn record_overlapped(&mut self, cycles: u64) {
+        self.overlapped_cycles += cycles;
+    }
+
+    /// Fraction of accelerator cycles that pipelining hid:
+    /// `overlapped / (charged + overlapped)`. Exact for single-shard
+    /// workers; with sharding it is an upper-bound indicator, since
+    /// batches are charged their critical path (max over shards) while
+    /// overlap sums over shards. 0.0 when nothing was recorded or the
+    /// pipeline is off.
+    pub fn overlap_fraction(&self) -> f64 {
+        let serial = self.accel_cycles + self.overlapped_cycles;
+        if serial == 0 {
+            0.0
+        } else {
+            self.overlapped_cycles as f64 / serial as f64
         }
     }
 
@@ -214,6 +241,16 @@ mod tests {
         assert_eq!(s.mean_batch(), 0.0);
         assert_eq!(s.mean_batch_cycles(), 0.0);
         assert_eq!(s.amortized_cycles_per_request(), 0.0);
+        assert_eq!(s.overlap_fraction(), 0.0);
+    }
+
+    #[test]
+    fn overlap_fraction_tracks_hidden_cycles() {
+        let mut s = StatsCollector::new();
+        s.record_batch(750);
+        s.record_overlapped(250);
+        assert_eq!(s.overlapped_cycles, 250);
+        assert!((s.overlap_fraction() - 0.25).abs() < 1e-9);
     }
 
     #[test]

@@ -38,8 +38,13 @@ COMMANDS
   wave     [--out kom32.vcd]         gate-level waveform (paper Fig 5)
   analyze  [--net alexnet]           network analysis (paper Sec V)
   golden   [--artifacts artifacts]   XLA vs systolic vs reference
-  serve    [--requests 64] [--workers 2] [--batch 8] [--shards 1]
+  serve    [--requests 64] [--workers 2] [--batch 8] [--shards 1] [--no-pipeline]
   cluster  [--batch 16] [--shards 4] [--policy rr|least-outstanding] [--net tiny]
+           [--no-pipeline]
+
+Pipelining: replica SoCs overlap layer DMA with engine compute by default
+(double-buffered scratchpad staging); --no-pipeline restores the serial
+cpu + compute + mem cycle model.
 ";
 
 fn mult_spec(name: &str) -> kom_accel::Result<(String, MultiplierSpec)> {
@@ -194,10 +199,12 @@ fn cmd_serve(args: &Args) -> kom_accel::Result<()> {
     let workers: usize = args.get_num("workers", 2usize)?;
     let max_batch: usize = args.get_num("batch", 8usize)?;
     let shards: usize = args.get_num("shards", 1usize)?;
+    let pipeline = !args.has("no-pipeline");
     let inst = NetworkInstance::random(Network::build(NetworkKind::Tiny), 42)?;
     let cfg = CoordinatorConfig {
         workers,
         shards,
+        pipeline,
         batch: kom_accel::coordinator::BatchPolicy {
             max_batch,
             ..Default::default()
@@ -214,10 +221,21 @@ fn cmd_serve(args: &Args) -> kom_accel::Result<()> {
     }
     let stats = coord.shutdown();
     let l = stats.latency();
-    println!("served {requests} requests on {workers} workers (max batch {max_batch}, {shards} shard(s)/worker)");
+    println!(
+        "served {requests} requests on {workers} workers (max batch {max_batch}, {shards} \
+         shard(s)/worker, pipelining {})",
+        if pipeline { "on" } else { "off" }
+    );
     println!("  host latency: p50={}us p95={}us p99={}us max={}us", l.p50_us, l.p95_us, l.p99_us, l.max_us);
     println!("  mean batch: {:.2}", stats.mean_batch());
     println!("  simulated accel cycles: {}", stats.accel_cycles);
+    if pipeline {
+        println!(
+            "  DMA cycles hidden under compute: {} ({:.0}% of serial traffic+compute charge)",
+            stats.overlapped_cycles,
+            stats.overlap_fraction() * 100.0
+        );
+    }
     if shards > 1 {
         let util: Vec<String> = stats
             .shard_utilization()
@@ -235,6 +253,7 @@ fn cmd_serve(args: &Args) -> kom_accel::Result<()> {
 fn cmd_cluster(args: &Args) -> kom_accel::Result<()> {
     let batch: usize = args.get_num("batch", 16usize)?;
     let shards: usize = args.get_num("shards", 4usize)?;
+    let pipeline = !args.has("no-pipeline");
     let policy = SchedulePolicy::parse(&args.get_or("policy", "least-outstanding"))?;
     let kind = NetworkKind::parse(&args.get_or("net", "tiny"))?;
     let inst = NetworkInstance::random(Network::build(kind), 42)?;
@@ -246,6 +265,7 @@ fn cmd_cluster(args: &Args) -> kom_accel::Result<()> {
         replicas: shards,
         soc: SocConfig::serving(),
     })?;
+    cluster.set_pipeline(pipeline)?;
     let per_shard_cap = batch.div_ceil(shards);
     let cdep = inst.deploy_cluster(&mut cluster, per_shard_cap)?;
     let mut sched = Scheduler::new(policy, shards)?;
@@ -263,11 +283,12 @@ fn cmd_cluster(args: &Args) -> kom_accel::Result<()> {
     }
 
     println!(
-        "{}: batch {batch} over {shards} shard(s), policy {policy:?}",
-        inst.net.name
+        "{}: batch {batch} over {shards} shard(s), policy {policy:?}, pipelining {}",
+        inst.net.name,
+        if pipeline { "on" } else { "off" }
     );
     let mut t = Table::new(&[
-        "shard", "replica", "requests", "cpu", "compute", "mem", "total cycles",
+        "shard", "replica", "requests", "cpu", "compute", "mem", "overlapped", "total cycles",
     ]);
     for run in &m.shards {
         t.row(vec![
@@ -277,6 +298,7 @@ fn cmd_cluster(args: &Args) -> kom_accel::Result<()> {
             run.metrics.cpu_cycles.to_string(),
             run.metrics.compute_cycles.to_string(),
             run.metrics.mem_cycles.to_string(),
+            run.metrics.overlapped_cycles.to_string(),
             run.metrics.total_cycles().to_string(),
         ]);
     }
@@ -290,6 +312,7 @@ fn cmd_cluster(args: &Args) -> kom_accel::Result<()> {
         replicas: 1,
         soc: SocConfig::serving(),
     })?;
+    base.set_pipeline(pipeline)?;
     let base_dep = inst.deploy_cluster(&mut base, batch)?;
     let mut base_sched = Scheduler::new(policy, 1)?;
     let (_, bm) = base_dep.run_sharded(&mut base, &mut base_sched, &slices)?;

@@ -33,6 +33,25 @@ impl Scratchpad {
         self.data.len()
     }
 
+    /// Bank count.
+    pub fn bank_count(&self) -> usize {
+        self.banks
+    }
+
+    /// Words per bank — the staging-tile granularity of the pipelined
+    /// (double-buffered) DMA path: one bank fills while its sibling is
+    /// being consumed.
+    pub fn bank_words(&self) -> usize {
+        (self.data.len() / self.banks).max(1)
+    }
+
+    /// Cycles a `len`-word streamed block access costs (bank-parallel,
+    /// conflict-free): `ceil(len / banks)` — the scratchpad side of the
+    /// DMA's max(producer, consumer) double-buffer accounting.
+    pub fn stream_cost(&self, len: usize) -> u64 {
+        len.div_ceil(self.banks) as u64
+    }
+
     /// True if capacity is zero.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
@@ -96,6 +115,18 @@ mod tests {
         assert_eq!(s.read(3).unwrap(), -7);
         assert!(s.read(16).is_err());
         assert!(s.write_block(14, &[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn bank_partition_geometry() {
+        let s = Scratchpad::new(64, 4);
+        assert_eq!(s.bank_count(), 4);
+        assert_eq!(s.bank_words(), 16);
+        assert_eq!(s.stream_cost(15), 4);
+        assert_eq!(s.stream_cost(16), 4);
+        // degenerate: fewer words than banks still tiles by ≥ 1 word
+        let tiny = Scratchpad::new(2, 8);
+        assert_eq!(tiny.bank_words(), 1);
     }
 
     #[test]

@@ -52,8 +52,16 @@ impl Dram {
         Ok(())
     }
 
+    /// Cycles one `len`-word burst costs (row activate + streaming) —
+    /// the cost model behind [`Dram::read_burst`]/[`Dram::write_burst`],
+    /// exposed so the pipelined SoC can price a prospective prefetch
+    /// without moving data.
+    pub fn burst_cost(&self, len: usize) -> u64 {
+        self.burst_latency + (len as u64).div_ceil(self.words_per_cycle)
+    }
+
     fn charge(&mut self, len: usize) {
-        self.cycles += self.burst_latency + (len as u64).div_ceil(self.words_per_cycle);
+        self.cycles += self.burst_cost(len);
         self.words_moved += len as u64;
     }
 

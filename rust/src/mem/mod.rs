@@ -1,14 +1,15 @@
 //! Memory subsystem models — the paper's §I "memory bottleneck" substrate.
 //!
 //! * [`bram`] — banked on-chip scratchpad (BRAM) with port-conflict
-//!   accounting,
+//!   accounting and bank-partitioned ping/pong staging regions,
 //! * [`dram`] — external memory with latency + bandwidth cycle model,
-//! * [`dma`] — burst transfer engine between the two.
+//! * [`dma`] — burst transfer engine between the two, with serial and
+//!   double-buffered (staged) transfer shapes.
 
 pub mod bram;
 pub mod dma;
 pub mod dram;
 
 pub use bram::Scratchpad;
-pub use dma::Dma;
+pub use dma::{Dma, StageCost};
 pub use dram::Dram;
