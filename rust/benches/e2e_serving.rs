@@ -227,6 +227,86 @@ fn main() {
         Err(e) => println!("(could not write BENCH_pipeline.json: {e})"),
     }
 
+    // ---- fused vs pipelined vs serial: the DRAM round trip eliminated --
+    // Fusion keeps chained layers' intermediates scratchpad-resident, so
+    // their store+reload is skipped outright (pipelining could only hide
+    // it under compute). Same simulator, weights and inputs; the columns
+    // differ only in the PIPELINE register / fusion planner settings.
+    // Emitted as BENCH_fusion.json — including the serial baseline so the
+    // perf trajectory is self-describing.
+    println!("===== fused x pipelined x shards (simulated cluster cycles/req, batch 8) =====");
+    let mut t = Table::new(&[
+        "shards",
+        "serial",
+        "pipelined",
+        "fused+pipelined",
+        "fused-saved",
+        "vs serial",
+        "vs pipelined",
+    ]);
+    let mut json_rows = Vec::new();
+    for shards in [1usize, 2, 4] {
+        let slices: Vec<&[i64]> = inputs[..pipe_batch].iter().map(|t| t.data.as_slice()).collect();
+        // (pipeline, fuse): serial, pipelined-only, fused+pipelined
+        let mut totals = [0u64; 3];
+        let mut fused_saved = 0u64;
+        for (i, (pipeline, fuse)) in [(false, false), (true, false), (true, true)]
+            .into_iter()
+            .enumerate()
+        {
+            let mut cluster = Cluster::new(ClusterConfig {
+                replicas: shards,
+                soc: bench_soc(),
+            })
+            .unwrap();
+            cluster.set_pipeline(pipeline).unwrap();
+            cluster.set_fusion(fuse);
+            let cdep = inst
+                .deploy_cluster(&mut cluster, pipe_batch.div_ceil(shards))
+                .unwrap();
+            let mut sched =
+                Scheduler::new(SchedulePolicy::LeastOutstandingCycles, shards).unwrap();
+            let (_, m) = cdep.run_sharded(&mut cluster, &mut sched, &slices).unwrap();
+            totals[i] = m.total_cycles();
+            if fuse {
+                fused_saved = m.fused_saved_cycles();
+            }
+        }
+        let per = |c: u64| c as f64 / pipe_batch as f64;
+        let vs_serial = totals[0] as f64 / totals[2] as f64;
+        let vs_pipelined = totals[1] as f64 / totals[2] as f64;
+        t.row(vec![
+            shards.to_string(),
+            format!("{:.0}", per(totals[0])),
+            format!("{:.0}", per(totals[1])),
+            format!("{:.0}", per(totals[2])),
+            fused_saved.to_string(),
+            format!("{vs_serial:.2}x"),
+            format!("{vs_pipelined:.2}x"),
+        ]);
+        json_rows.push(format!(
+            "    {{\"shards\": {shards}, \"batch\": {pipe_batch}, \
+             \"serial_cycles_per_req\": {:.1}, \
+             \"pipelined_cycles_per_req\": {:.1}, \
+             \"fused_pipelined_cycles_per_req\": {:.1}, \
+             \"fused_saved_cycles\": {fused_saved}, \
+             \"speedup_vs_serial\": {vs_serial:.4}, \
+             \"speedup_vs_pipelined\": {vs_pipelined:.4}}}",
+            per(totals[0]),
+            per(totals[1]),
+            per(totals[2]),
+        ));
+    }
+    println!("{}", t.to_ascii());
+    let json = format!(
+        "{{\n  \"bench\": \"fusion\",\n  \"network\": \"tiny\",\n  \"rows\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    match std::fs::write("BENCH_fusion.json", &json) {
+        Ok(()) => println!("wrote BENCH_fusion.json (cycles/req, fused x pipelined x shards)"),
+        Err(e) => println!("(could not write BENCH_fusion.json: {e})"),
+    }
+
     // XLA-artifact execution path (the L1/L2 kernels through PJRT)
     match ArtifactStore::open(Path::new("artifacts")) {
         Ok(store) => match Runtime::cpu() {

@@ -13,11 +13,82 @@
 //! image-major), and the whole batch is streamed DRAM→scratchpad as one
 //! burst sequence per layer.
 
+//! **Fusion side-band:** words 13–15 of every descriptor block are a
+//! versioned side-band written by the fusion planner
+//! (`super::fusion::FusionPlan`): a [`FusionCtl`] telling the SoC that the
+//! layer's output region stays **scratchpad-resident** for the next layer
+//! instead of round-tripping through DRAM. Word 13 carries the encoding
+//! version and the `fuse_next` flag, word 14 the scratchpad binding of the
+//! resident region, word 15 its footprint in words. An all-zero side-band
+//! (the [`LayerDesc::encode`] default) means "not fused" — tables written
+//! before fusion existed decode unchanged.
+
 use crate::error::{Error, Result};
 use crate::systolic::PoolKind;
 
 /// Maximum words a descriptor occupies in control RAM.
 pub const DESC_WORDS: usize = 16;
+
+/// Version of the fusion side-band carried in descriptor words 13–15.
+/// Bumped whenever the side-band layout changes; the SoC rejects blocks
+/// whose version it does not speak instead of misreading them.
+pub const FUSION_ENC_VERSION: u32 = 1;
+
+/// Fusion control side-band of one descriptor: set on a **producer**
+/// layer whose output region the next layer consumes straight out of the
+/// scratchpad (no DRAM store, no reload).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FusionCtl {
+    /// This layer's output stays resident for the next descriptor.
+    pub fuse_next: bool,
+    /// Scratchpad word offset the resident region binds to (always past
+    /// the two DMA staging banks).
+    pub spad_binding: u32,
+    /// Scratchpad words the resident region occupies (the whole
+    /// intermediate, or the row-band line buffer for tiled fusion).
+    pub resident_words: u32,
+}
+
+impl FusionCtl {
+    /// The "not fused" side-band (encodes to all-zero words).
+    pub fn none() -> Self {
+        FusionCtl::default()
+    }
+
+    /// True when this control word requests no fusion.
+    pub fn is_none(&self) -> bool {
+        !self.fuse_next
+    }
+
+    /// Write the side-band into a descriptor block's tail words.
+    pub fn encode_into(&self, w: &mut [u32; DESC_WORDS]) {
+        if self.fuse_next {
+            w[13] = (FUSION_ENC_VERSION << 8) | 1;
+            w[14] = self.spad_binding;
+            w[15] = self.resident_words;
+        }
+    }
+
+    /// Decode the side-band from a descriptor block. An all-zero word 13
+    /// means "not fused"; a non-zero word with an unknown version is an
+    /// error (a newer encoding must not be silently misread).
+    pub fn decode(w: &[u32]) -> Result<FusionCtl> {
+        if w.len() < DESC_WORDS || w[13] == 0 {
+            return Ok(FusionCtl::none());
+        }
+        let version = w[13] >> 8;
+        if version != FUSION_ENC_VERSION {
+            return Err(Error::Accel(format!(
+                "fusion side-band version {version} (this SoC speaks {FUSION_ENC_VERSION})"
+            )));
+        }
+        Ok(FusionCtl {
+            fuse_next: w[13] & 1 != 0,
+            spad_binding: w[14],
+            resident_words: w[15],
+        })
+    }
+}
 
 /// One layer of work for the engine.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -262,6 +333,30 @@ impl LayerDesc {
         }
     }
 
+    /// DRAM word address of the input region (0 for `End`).
+    pub fn in_addr(&self) -> u32 {
+        match *self {
+            LayerDesc::Conv { in_addr, .. }
+            | LayerDesc::Pool { in_addr, .. }
+            | LayerDesc::Fc { in_addr, .. }
+            | LayerDesc::Fir { in_addr, .. } => in_addr,
+            LayerDesc::End => 0,
+        }
+    }
+
+    /// DRAM word address of the output region (0 for `End`) — the region
+    /// the fusion planner checks against the next layer's `in_addr` to
+    /// detect a producer→consumer chain.
+    pub fn out_addr(&self) -> u32 {
+        match *self {
+            LayerDesc::Conv { out_addr, .. }
+            | LayerDesc::Pool { out_addr, .. }
+            | LayerDesc::Fc { out_addr, .. }
+            | LayerDesc::Fir { out_addr, .. } => out_addr,
+            LayerDesc::End => 0,
+        }
+    }
+
     /// DRAM weight regions this descriptor stages, as `(addr, words)`
     /// pairs — what the pipelined SoC's look-ahead prefetcher walks.
     /// Weights are data-independent of the running layer, so their DMA
@@ -370,6 +465,75 @@ mod tests {
         for d in descs {
             assert_eq!(LayerDesc::decode(&d.encode()).unwrap(), d);
         }
+    }
+
+    #[test]
+    fn fusion_ctl_roundtrip_and_versioning() {
+        let desc = LayerDesc::Pool {
+            k: 2,
+            stride: 2,
+            kind: PoolKind::Max,
+            in_addr: 100,
+            c: 4,
+            h: 8,
+            w: 8,
+            out_addr: 500,
+        };
+        // a plain encode carries no side-band
+        let words = desc.encode();
+        assert!(FusionCtl::decode(&words).unwrap().is_none());
+        // side-band rides the tail words and roundtrips
+        let ctl = FusionCtl {
+            fuse_next: true,
+            spad_binding: 4096,
+            resident_words: 512,
+        };
+        let mut words = desc.encode();
+        ctl.encode_into(&mut words);
+        assert_eq!(FusionCtl::decode(&words).unwrap(), ctl);
+        // the layer descriptor itself is untouched by the side-band
+        assert_eq!(LayerDesc::decode(&words).unwrap(), desc);
+        // an unknown version is rejected, not misread
+        words[13] = ((FUSION_ENC_VERSION + 1) << 8) | 1;
+        assert!(FusionCtl::decode(&words).is_err());
+        // FusionCtl::none encodes to all-zero tail words
+        let mut w2 = desc.encode();
+        FusionCtl::none().encode_into(&mut w2);
+        assert!(w2[13..].iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn addr_accessors() {
+        let c = LayerDesc::Conv {
+            cout: 4,
+            cin: 3,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            w_addr: 100,
+            in_addr: 7,
+            h: 8,
+            w: 8,
+            out_addr: 900,
+            relu: false,
+            out_shift: 0,
+        };
+        assert_eq!(c.in_addr(), 7);
+        assert_eq!(c.out_addr(), 900);
+        let f = LayerDesc::Fc {
+            n_in: 16,
+            n_out: 4,
+            w_addr: 200,
+            b_addr: 300,
+            in_addr: 10,
+            out_addr: 20,
+            relu: false,
+            out_shift: 0,
+        };
+        assert_eq!(f.in_addr(), 10);
+        assert_eq!(f.out_addr(), 20);
+        assert_eq!(LayerDesc::End.in_addr(), 0);
+        assert_eq!(LayerDesc::End.out_addr(), 0);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! ROM, and lets the RISC-V core sequence the run.
 
 use super::desc::{LayerDesc, DESC_WORDS};
+use super::fusion::FusionPlan;
 use super::soc::{map, Soc, SocConfig};
 use crate::cluster::ShardPlan;
 use crate::error::{Error, Result};
@@ -28,6 +29,13 @@ pub struct RunMetrics {
     /// `overlapped_cycles ≤ min(compute_cycles, mem_cycles)` — enforced
     /// where the metrics are assembled.
     pub overlapped_cycles: u64,
+    /// DMA cycles **eliminated** by scratchpad-resident layer fusion (0
+    /// when the driver's fusion planner is off or nothing fused). Unlike
+    /// `overlapped_cycles` these are not subtracted from anything:
+    /// `mem_cycles` never contained the skipped traffic in the first
+    /// place — the counter reports what the unfused model would have
+    /// charged for the intermediates that stayed on-chip.
+    pub fused_saved_cycles: u64,
     /// Engine reconfigurations.
     pub reconfigs: u64,
     /// Layers executed.
@@ -57,6 +65,19 @@ impl RunMetrics {
     /// Wall-clock estimate at `clock_mhz`.
     pub fn time_ms(&self, clock_mhz: f64) -> f64 {
         self.total_cycles() as f64 / (clock_mhz * 1e3)
+    }
+
+    /// Fraction of this run's memory traffic that fusion eliminated:
+    /// `fused_saved / (mem + fused_saved)` — the share of the unfused
+    /// model's DMA charge that never left the scratchpad. 0.0 when
+    /// nothing fused.
+    pub fn fused_fraction(&self) -> f64 {
+        let unfused_mem = self.mem_cycles + self.fused_saved_cycles;
+        if unfused_mem == 0 {
+            0.0
+        } else {
+            self.fused_saved_cycles as f64 / unfused_mem as f64
+        }
     }
 
     /// Effective MACs/cycle.
@@ -119,6 +140,12 @@ impl ShardedMetrics {
         self.shards.iter().map(|s| s.metrics.overlapped_cycles).sum()
     }
 
+    /// DMA cycles eliminated by layer fusion across all shards (0 when
+    /// every replica ran unfused).
+    pub fn fused_saved_cycles(&self) -> u64 {
+        self.shards.iter().map(|s| s.metrics.fused_saved_cycles).sum()
+    }
+
     /// MAC/reduce operations across all shards.
     pub fn ops(&self) -> u64 {
         self.shards.iter().map(|s| s.metrics.ops).sum()
@@ -145,6 +172,9 @@ pub struct Driver {
     /// the program only depends on the layer count and the batch value it
     /// pokes into the `BATCH` register (EXPERIMENTS.md §Perf).
     program_cache: std::collections::HashMap<(usize, u32), Vec<u32>>,
+    /// Run descriptor tables through the fusion planner: chained layers
+    /// whose intermediates fit the scratchpad skip the DRAM round trip.
+    fusion_on: bool,
 }
 
 impl Driver {
@@ -154,6 +184,7 @@ impl Driver {
             soc: Soc::new(cfg),
             next_dram: 0,
             program_cache: std::collections::HashMap::new(),
+            fusion_on: false,
         }
     }
 
@@ -180,7 +211,10 @@ impl Driver {
     /// made before the reset is invalid afterwards. The SoC's
     /// weight-stationary cache is invalidated wholesale: `upload` does not
     /// invalidate per-region (fresh addresses never alias), so reusing
-    /// addresses without this flush would serve stale cached weights.
+    /// addresses without this flush would serve stale cached weights. The
+    /// same goes for fusion-plan address bindings — a resident-region
+    /// claim keyed by a reused DRAM address would serve the *previous*
+    /// deployment's activations, so the reset drops those too.
     pub fn reset_arena(&mut self) {
         self.next_dram = 0;
         self.soc.invalidate_all_weights();
@@ -196,6 +230,21 @@ impl Driver {
     /// Is the pipelined execution model enabled on this driver's SoC?
     pub fn pipeline_enabled(&self) -> bool {
         self.soc.pipeline_enabled()
+    }
+
+    /// Enable/disable scratchpad-resident layer fusion: with fusion on,
+    /// every submitted descriptor table is run through the
+    /// [`FusionPlan`] planner and chained layers whose intermediates fit
+    /// the scratchpad budget skip their DRAM store + reload entirely.
+    /// Composes with [`Driver::set_pipeline`] — fusion removes traffic,
+    /// pipelining hides what remains.
+    pub fn set_fusion(&mut self, on: bool) {
+        self.fusion_on = on;
+    }
+
+    /// Is the fusion planner applied to submitted tables?
+    pub fn fusion_enabled(&self) -> bool {
+        self.fusion_on
     }
 
     /// Allocate + preload data (host-side, zero cycle cost — model load).
@@ -278,7 +327,20 @@ impl Driver {
         if batch == 0 {
             return Err(Error::Accel("batch of 0".into()));
         }
-        self.soc.write_descriptors(0, descs)?;
+        // resident claims only have meaning within one run; drop anything
+        // a previous (possibly aborted) run left behind before planning
+        self.soc.clear_resident();
+        if self.fusion_on {
+            let plan = FusionPlan::plan(
+                descs,
+                batch,
+                self.soc.config().spad_words,
+                self.soc.spad.bank_words(),
+            );
+            self.soc.write_descriptors_fused(0, descs, &plan)?;
+        } else {
+            self.soc.write_descriptors(0, descs)?;
+        }
         let key = (descs.len(), batch);
         let program = match self.program_cache.get(&key) {
             Some(p) => p.clone(),
@@ -293,6 +355,7 @@ impl Driver {
         let cc0 = self.soc.compute_cycles();
         let mc0 = self.soc.mem_cycles();
         let ov0 = self.soc.overlapped_cycles;
+        let fs0 = self.soc.fused_saved_cycles;
         let lr0 = self.soc.layers_run;
         let rc0 = self.soc.engine.stats.reconfigs;
         let stop = cpu.run(&mut self.soc, 10_000_000)?;
@@ -312,6 +375,7 @@ impl Driver {
             compute_cycles,
             mem_cycles,
             overlapped_cycles,
+            fused_saved_cycles: self.soc.fused_saved_cycles - fs0,
             reconfigs: self.soc.engine.stats.reconfigs - rc0,
             layers: self.soc.layers_run - lr0,
             ops: self.soc.engine.stats.ops - ops0,
@@ -658,6 +722,69 @@ mod tests {
         let too_many = ((i32::MAX as usize - map::RAM_BASE as usize) / (DESC_WORDS * 4)) + 1;
         assert!(Driver::control_program(too_many, 1).is_err());
         assert!(Driver::control_program(4, 1).is_ok());
+    }
+
+    #[test]
+    fn fusion_toggle_and_fused_metrics_via_driver() {
+        let mut drv = Driver::new(SocConfig {
+            dram_words: 8192,
+            spad_words: 1024,
+            ..Default::default()
+        });
+        assert!(!drv.fusion_enabled());
+        // conv 1x4x4 -> 3x3, then 3x3 max pool: a fusable chain
+        let img: Vec<i64> = (0..16).collect();
+        let in_addr = drv.upload(&img).unwrap();
+        let w_addr = drv.upload(&[1, 1, 1, 1]).unwrap();
+        let conv_out = drv.alloc(9).unwrap();
+        let pool_out = drv.alloc(1).unwrap();
+        let descs = vec![
+            LayerDesc::Conv {
+                cout: 1,
+                cin: 1,
+                k: 2,
+                stride: 1,
+                pad: 0,
+                w_addr,
+                in_addr,
+                h: 4,
+                w: 4,
+                out_addr: conv_out,
+                relu: false,
+                out_shift: 0,
+            },
+            LayerDesc::Pool {
+                k: 3,
+                stride: 1,
+                kind: PoolKind::Max,
+                in_addr: conv_out,
+                c: 1,
+                h: 3,
+                w: 3,
+                out_addr: pool_out,
+            },
+        ];
+        drv.run_table(&descs).unwrap(); // warm the weight cache
+        let unfused = drv.run_table(&descs).unwrap();
+        assert_eq!(unfused.fused_saved_cycles, 0);
+        assert_eq!(unfused.fused_fraction(), 0.0);
+        assert_eq!(drv.read_region(pool_out, 1).unwrap(), vec![50]);
+
+        drv.set_fusion(true);
+        assert!(drv.fusion_enabled());
+        let fused = drv.run_table(&descs).unwrap();
+        assert_eq!(drv.read_region(pool_out, 1).unwrap(), vec![50]);
+        assert!(fused.fused_saved_cycles > 0, "the chain must fuse");
+        assert!(fused.fused_fraction() > 0.0 && fused.fused_fraction() < 1.0);
+        assert!(
+            fused.mem_cycles < unfused.mem_cycles,
+            "fused mem {} !< unfused {} (both warm-cache runs)",
+            fused.mem_cycles,
+            unfused.mem_cycles
+        );
+        // mem already excludes the skipped traffic: adding it back gives
+        // exactly what the unfused run charged
+        assert_eq!(fused.mem_cycles + fused.fused_saved_cycles, unfused.mem_cycles);
     }
 
     #[test]

@@ -1,0 +1,405 @@
+//! Layer-fusion planner: keep intermediate activations scratchpad-resident
+//! across producer→consumer chains so their DRAM store + reload is
+//! **eliminated**, not merely overlapped.
+//!
+//! PR 3's pipelining can only *hide* inter-layer activation traffic behind
+//! compute; every layer still writes its output to DRAM and the next layer
+//! reads it straight back. This module decides, per descriptor-table edge,
+//! whether that round trip can be skipped entirely — the on-chip
+//! inter-layer buffering both Shen et al. (resource partitioning) and the
+//! Abdelouahab et al. survey name as the dominant off-chip-bandwidth lever.
+//!
+//! ## What fuses
+//!
+//! An edge `(layer i → layer i+1)` is fusable when:
+//!
+//! * the pair is one of Conv→Pool, Conv→Conv, Pool→Conv or Fc→Fc (FIR is a
+//!   single-stream demo mode and never fuses; Flatten emits no descriptor,
+//!   so Pool→Fc across a flatten is a *different* address-compatible pair
+//!   and stays unfused),
+//! * the producer's `out_addr`/`out_len` exactly match the consumer's
+//!   `in_addr`/`in_len` (the regions chain), and
+//! * the intermediate fits the scratchpad budget left after the two DMA
+//!   staging banks, **charged together with the weights that must share
+//!   the scratchpad while the region is live** (see
+//!   [`FusionPlan::plan`]) — either
+//!   * **whole** (`batch × out_len` words resident), or
+//!   * **row-band tiled**: the consumer only ever needs a sliding window
+//!     of `k` intermediate rows (line buffers), so a
+//!     `(k + stride) × w × c` band is resident while producer rows stream
+//!     into it — VGG-style 3×3/2×2 chains qualify even when the whole
+//!     activation does not fit. Fc→Fc has no spatial dimension and only
+//!     fuses whole.
+//!
+//! Chains longer than two layers fuse edge by edge; at any instant at most
+//! two resident regions are live (a layer's input band and its output
+//! band), and the planner assigns non-overlapping scratchpad bindings for
+//! exactly that pair. Anything that does not fit falls back to the
+//! existing serial/pipelined DRAM path — never to a corrupted bank.
+
+use super::desc::{FusionCtl, LayerDesc};
+
+/// How a fused intermediate is kept resident.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FuseMode {
+    /// The whole `batch × out_len` intermediate stays in the scratchpad.
+    Whole,
+    /// Only a `(k + stride) × w × c` row band is resident (line buffers):
+    /// producer rows stream into the band while the consumer's window
+    /// walks behind — zero DRAM traffic, same compute, bounded footprint.
+    RowBand,
+}
+
+/// One fused producer→consumer edge of the plan (its producer layer is
+/// the index it is stored under — see [`FusionPlan::edge`]).
+#[derive(Clone, Copy, Debug)]
+pub struct FusedEdge {
+    /// Whole-buffer or row-band residency.
+    pub mode: FuseMode,
+    /// Scratchpad words the resident region occupies (the footprint the
+    /// planner charged against the budget — for row bands this is the
+    /// line-buffer size, not the full intermediate).
+    pub resident_words: usize,
+    /// Scratchpad word offset the region binds to (always past the two
+    /// DMA staging banks, and disjoint from the chain-adjacent region
+    /// that is live at the same time).
+    pub spad_binding: u32,
+}
+
+/// A maximal chain of fused layers: `len` consecutive layers starting at
+/// `start` whose `len − 1` intermediate activations never touch DRAM.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FusionGroup {
+    /// First layer index of the chain.
+    pub start: usize,
+    /// Layer count in the chain (≥ 2).
+    pub len: usize,
+}
+
+/// Per-table fusion decisions, indexed by producer layer.
+#[derive(Clone, Debug, Default)]
+pub struct FusionPlan {
+    edges: Vec<Option<FusedEdge>>,
+}
+
+impl FusionPlan {
+    /// The empty plan for an `n_layers` table (nothing fuses).
+    pub fn none(n_layers: usize) -> Self {
+        FusionPlan {
+            edges: vec![None; n_layers],
+        }
+    }
+
+    /// Plan fusion for a descriptor table running `batch` packed images on
+    /// a scratchpad of `spad_words` whose DMA staging tiles are
+    /// `bank_words` each.
+    ///
+    /// The budget every resident footprint is charged against is
+    /// `spad_words − 2 × bank_words` — the same residency budget the
+    /// weight-stationary LRU cache is bounded by, so fused activations and
+    /// resident weights compete for (and are charged against) the **same**
+    /// on-chip words rather than double-booking them:
+    ///
+    /// * while layer `i` computes, the scratchpad holds its resident input
+    ///   band (if edge `i−1` fused), its resident output (if edge `i`
+    ///   fuses) and layer `i`'s weights — the plan requires their extent
+    ///   to fit the budget,
+    /// * while layer `i+1` consumes the region, the region plus layer
+    ///   `i+1`'s weights must fit.
+    ///
+    /// A chain that does not satisfy both constraints falls back to
+    /// row-band residency, and failing that to the unfused DRAM path.
+    pub fn plan(descs: &[LayerDesc], batch: u32, spad_words: usize, bank_words: usize) -> Self {
+        let n = descs.len();
+        let mut edges: Vec<Option<FusedEdge>> = vec![None; n];
+        let budget = spad_words.saturating_sub(2 * bank_words);
+        let batch = batch.max(1) as usize;
+        for i in 0..n.saturating_sub(1) {
+            let (p, c) = (&descs[i], &descs[i + 1]);
+            if !pair_fusable(p, c)
+                || p.out_addr() != c.in_addr()
+                || p.out_len() == 0
+                || p.out_len() != c.in_len()
+            {
+                continue;
+            }
+            // the chain-adjacent region live at the same time as this one
+            let prev = if i > 0 { edges[i - 1] } else { None };
+            let (prev_off, prev_words) = prev
+                .map(|e| (e.spad_binding as usize - 2 * bank_words, e.resident_words))
+                .unwrap_or((0, 0));
+            // weights share the budget only while they can be *resident*:
+            // a region larger than the budget is never cached — it streams
+            // through the staging banks, which the budget already excludes
+            // (mirrors the SoC's per-region cache_insert rule)
+            let resident_weights = |d: &LayerDesc| -> usize {
+                d.weight_regions()
+                    .iter()
+                    .map(|&(_, l)| l as usize)
+                    .filter(|&l| l <= budget)
+                    .sum()
+            };
+            let w_p = resident_weights(p);
+            let w_c = resident_weights(c);
+            // place the region at arena offset 0 unless the live
+            // predecessor's static range is in the way, then stack past it
+            let place = |foot: usize| -> usize {
+                if prev_words == 0 || foot <= prev_off {
+                    0
+                } else {
+                    prev_off + prev_words
+                }
+            };
+            // producer-side: predecessor band + this region + producer
+            // weights share the arena; consumer-side: this region + the
+            // consumer's weights do
+            let fits = |foot: usize| -> bool {
+                let off = place(foot);
+                let high_water = (prev_off + prev_words).max(off + foot);
+                high_water + w_p <= budget && off + foot + w_c <= budget
+            };
+            let whole = batch * p.out_len();
+            let choice = if fits(whole) {
+                Some((FuseMode::Whole, whole))
+            } else {
+                row_band_words(c)
+                    .filter(|&band| band < whole && fits(band))
+                    .map(|band| (FuseMode::RowBand, band))
+            };
+            if let Some((mode, foot)) = choice {
+                edges[i] = Some(FusedEdge {
+                    mode,
+                    resident_words: foot,
+                    spad_binding: (2 * bank_words + place(foot)) as u32,
+                });
+            }
+        }
+        FusionPlan { edges }
+    }
+
+    /// The fused edge whose producer is layer `i`, if any.
+    pub fn edge(&self, producer: usize) -> Option<&FusedEdge> {
+        self.edges.get(producer).and_then(|e| e.as_ref())
+    }
+
+    /// The descriptor side-band control word for layer `i`.
+    pub fn ctl(&self, producer: usize) -> FusionCtl {
+        match self.edge(producer) {
+            Some(e) => FusionCtl {
+                fuse_next: true,
+                spad_binding: e.spad_binding,
+                resident_words: e.resident_words as u32,
+            },
+            None => FusionCtl::none(),
+        }
+    }
+
+    /// Number of fused edges (skipped intermediate round trips).
+    pub fn fused_edges(&self) -> usize {
+        self.edges.iter().filter(|e| e.is_some()).count()
+    }
+
+    /// True when nothing fuses.
+    pub fn is_empty(&self) -> bool {
+        self.fused_edges() == 0
+    }
+
+    /// Maximal fused chains, for deployment metadata and reporting.
+    pub fn groups(&self) -> Vec<FusionGroup> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.edges.len() {
+            if self.edges[i].is_none() {
+                i += 1;
+                continue;
+            }
+            let start = i;
+            while i < self.edges.len() && self.edges[i].is_some() {
+                i += 1;
+            }
+            // edges start..i are fused: layers start..=i form the chain
+            out.push(FusionGroup {
+                start,
+                len: i - start + 1,
+            });
+        }
+        out
+    }
+}
+
+fn pair_fusable(p: &LayerDesc, c: &LayerDesc) -> bool {
+    matches!(
+        (p, c),
+        (LayerDesc::Conv { .. }, LayerDesc::Pool { .. })
+            | (LayerDesc::Conv { .. }, LayerDesc::Conv { .. })
+            | (LayerDesc::Pool { .. }, LayerDesc::Conv { .. })
+            | (LayerDesc::Fc { .. }, LayerDesc::Fc { .. })
+    )
+}
+
+/// Line-buffer words a row-band fusion needs for this consumer: its
+/// sliding window of `k` intermediate rows plus the `stride` rows the
+/// producer streams in behind it, across the full row width and every
+/// channel. `None` for consumers without a spatial window (FC/FIR).
+fn row_band_words(consumer: &LayerDesc) -> Option<usize> {
+    match *consumer {
+        LayerDesc::Conv {
+            cin, k, stride, w, ..
+        } => Some(((k + stride) * w * cin) as usize),
+        LayerDesc::Pool {
+            c, k, stride, w, ..
+        } => Some(((k + stride) * w * c) as usize),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::systolic::PoolKind;
+
+    fn conv(in_addr: u32, out_addr: u32, cin: u32, cout: u32, h: u32, w: u32) -> LayerDesc {
+        LayerDesc::Conv {
+            cout,
+            cin,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            w_addr: 10_000,
+            in_addr,
+            h,
+            w,
+            out_addr,
+            relu: true,
+            out_shift: 8,
+        }
+    }
+
+    fn pool(in_addr: u32, out_addr: u32, c: u32, h: u32, w: u32) -> LayerDesc {
+        LayerDesc::Pool {
+            k: 2,
+            stride: 2,
+            kind: PoolKind::Max,
+            in_addr,
+            c,
+            h,
+            w,
+            out_addr,
+        }
+    }
+
+    #[test]
+    fn conv_pool_chain_fuses_whole_when_it_fits() {
+        // conv 4×8×8 out = 256 words/img; budget = 2048 − 2·256 = 1536
+        let descs = vec![conv(0, 1000, 1, 4, 8, 8), pool(1000, 2000, 4, 8, 8)];
+        let plan = FusionPlan::plan(&descs, 2, 2048, 256);
+        let e = plan.edge(0).expect("conv→pool must fuse");
+        assert_eq!(e.mode, FuseMode::Whole);
+        assert_eq!(e.resident_words, 2 * 256);
+        assert_eq!(e.spad_binding, 512, "binding starts past the staging banks");
+        assert_eq!(plan.fused_edges(), 1);
+        assert_eq!(plan.groups(), vec![FusionGroup { start: 0, len: 2 }]);
+    }
+
+    #[test]
+    fn oversized_whole_falls_back_to_row_band() {
+        // conv 8×16×16 out = 2048 words/img, batch 8 → 16384 words whole;
+        // budget = 4096 − 2·512 = 3072 → row band (2+2)·16·8 = 512 fits
+        let descs = vec![conv(0, 1000, 1, 8, 16, 16), pool(1000, 3000, 8, 16, 16)];
+        let plan = FusionPlan::plan(&descs, 8, 4096, 512);
+        let e = plan.edge(0).expect("row band must fuse");
+        assert_eq!(e.mode, FuseMode::RowBand);
+        assert_eq!(e.resident_words, (2 + 2) * 16 * 8);
+    }
+
+    #[test]
+    fn chain_that_barely_misses_the_budget_is_not_fused() {
+        // Fc→Fc: the binding constraint is the consumer side — resident
+        // 1×32 words + consumer weights 8·32 + 8 = 296 words; one word
+        // less of budget and the edge must fall back instead of
+        // overflowing (the producer side, 32 + 4·32 + 32 = 192, is looser)
+        let fc1 = LayerDesc::Fc {
+            n_in: 4,
+            n_out: 32,
+            w_addr: 100,
+            b_addr: 612,
+            in_addr: 0,
+            out_addr: 1000,
+            relu: true,
+            out_shift: 8,
+        };
+        let fc2 = LayerDesc::Fc {
+            n_in: 32,
+            n_out: 8,
+            w_addr: 700,
+            b_addr: 956,
+            in_addr: 1000,
+            out_addr: 2000,
+            relu: false,
+            out_shift: 8,
+        };
+        let descs = vec![fc1, fc2];
+        // budget = spad − 2·banks; footprint 32 + consumer weights 264 = 296
+        let fits = FusionPlan::plan(&descs, 1, 296 + 2 * 8, 8);
+        assert_eq!(fits.edge(0).map(|e| e.mode), Some(FuseMode::Whole));
+        let misses = FusionPlan::plan(&descs, 1, 295 + 2 * 8, 8);
+        assert!(misses.is_empty(), "one word short must fall back cleanly");
+    }
+
+    #[test]
+    fn producer_weights_are_charged_too() {
+        // the producer conv's own weights must share the scratchpad with
+        // the resident output while the producer computes
+        let descs = vec![conv(0, 1000, 4, 4, 8, 8), pool(1000, 2000, 4, 8, 8)];
+        // whole footprint 256, producer weights 4·4·9 = 144: 400 > 256+143
+        let plan = FusionPlan::plan(&descs, 1, 399 + 2 * 8, 8);
+        assert!(plan.edge(0).is_none() || plan.edge(0).unwrap().mode == FuseMode::RowBand);
+        let plan = FusionPlan::plan(&descs, 1, 400 + 2 * 8, 8);
+        assert_eq!(plan.edge(0).map(|e| e.mode), Some(FuseMode::Whole));
+    }
+
+    #[test]
+    fn misaligned_addresses_or_pairs_do_not_fuse() {
+        // pool→pool is not a fusable pair; conv→pool with a gap in the
+        // address chain is not either
+        let descs = vec![pool(0, 1000, 4, 8, 8), pool(1000, 2000, 4, 4, 4)];
+        assert!(FusionPlan::plan(&descs, 1, 1 << 20, 8).is_empty());
+        let descs = vec![conv(0, 1000, 1, 4, 8, 8), pool(1234, 2000, 4, 8, 8)];
+        assert!(FusionPlan::plan(&descs, 1, 1 << 20, 8).is_empty());
+    }
+
+    #[test]
+    fn adjacent_chain_bindings_do_not_overlap() {
+        // conv→conv→pool: while the middle layer runs, its input band and
+        // output band are both live — their static ranges must be disjoint
+        let descs = vec![
+            conv(0, 1000, 1, 8, 16, 16),
+            conv(1000, 4000, 8, 8, 16, 16),
+            pool(4000, 8000, 8, 16, 16),
+        ];
+        let plan = FusionPlan::plan(&descs, 1, 1 << 16, 1 << 10);
+        for i in 0..2 {
+            let (a, b) = (plan.edge(i), plan.edge(i + 1));
+            let (Some(a), Some(b)) = (a, b) else { continue };
+            let (a0, a1) = (a.spad_binding as usize, a.spad_binding as usize + a.resident_words);
+            let (b0, b1) = (b.spad_binding as usize, b.spad_binding as usize + b.resident_words);
+            assert!(
+                a1 <= b0 || b1 <= a0,
+                "edges {i},{} overlap: [{a0},{a1}) vs [{b0},{b1})",
+                i + 1
+            );
+        }
+        assert_eq!(plan.groups(), vec![FusionGroup { start: 0, len: 3 }]);
+    }
+
+    #[test]
+    fn last_layer_never_fuses_and_empty_plan_is_safe() {
+        let plan = FusionPlan::none(4);
+        assert!(plan.is_empty());
+        assert!(plan.groups().is_empty());
+        assert!(plan.ctl(0).is_none());
+        // single-layer table: no edges at all
+        let descs = vec![conv(0, 1000, 1, 4, 8, 8)];
+        assert!(FusionPlan::plan(&descs, 1, 1 << 20, 8).is_empty());
+    }
+}

@@ -2,7 +2,11 @@
 //! Systolic Engine + memory subsystem, plus the host-side driver.
 //!
 //! * [`desc`] — layer descriptors (the "instructions to configure systolic
-//!   cells" of §III) with a packed u32 in-memory format,
+//!   cells" of §III) with a packed u32 in-memory format and the versioned
+//!   fusion side-band ([`desc::FusionCtl`]),
+//! * [`fusion`] — the layer-fusion planner: producer→consumer chains
+//!   whose intermediates fit the scratchpad budget skip the DRAM round
+//!   trip (whole-buffer or row-band-tiled residency),
 //! * [`soc`] — the SoC: memory map, MMIO bridge between the control CPU
 //!   and the engine, cycle accounting,
 //! * [`driver`] — host API: load weights, submit a descriptor table, run
@@ -12,8 +16,10 @@
 
 pub mod desc;
 pub mod driver;
+pub mod fusion;
 pub mod soc;
 
-pub use desc::LayerDesc;
+pub use desc::{FusionCtl, LayerDesc};
 pub use driver::{Driver, RunMetrics, ShardRun, ShardedMetrics};
+pub use fusion::{FuseMode, FusedEdge, FusionGroup, FusionPlan};
 pub use soc::{Soc, SocConfig};

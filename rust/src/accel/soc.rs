@@ -19,6 +19,9 @@
 //!                            ping/pong scratchpad banks. Defaults to 0.)
 //!        +0x20   OVLP_LO    (R: DMA cycles hidden under compute)
 //!        +0x24   OVLP_HI
+//!        +0x28   FUSED_LO   (R: DMA cycles *eliminated* by scratchpad-
+//!                            resident layer fusion — skipped, not hidden)
+//!        +0x2C   FUSED_HI
 //! ```
 //!
 //! The data plane (weights/activations, i64) lives in [`Dram`] and streams
@@ -57,6 +60,26 @@
 //! Every hidden cycle is bounded by the layer's engine cycles, so the run
 //! invariant `overlapped ≤ min(compute, mem)` holds by construction.
 //!
+//! ## Scratchpad-resident layer fusion (descriptor `fuse_next` side-band)
+//!
+//! Pipelining *hides* inter-layer activation traffic; fusion **removes**
+//! it. A descriptor whose [`FusionCtl`] side-band sets `fuse_next` keeps
+//! its output region resident in the scratchpad (whole, or as a row-band
+//! line buffer — the planner in [`super::fusion`] decides which fits);
+//! the next descriptor consumes the region without issuing its input DMA.
+//! Neither transfer is charged to [`Soc::mem_cycles`], so the driver's
+//! `total = cpu + compute + (mem − overlapped)` already excludes the
+//! skipped round trip; the [`Soc::fused_saved_cycles`] counter (the
+//! `FUSED` MMIO registers) records what it would have cost under the
+//! active execution model. Fused intermediates are zero-traffic to the
+//! overlap state machine: they enter no write-back queue and claim no
+//! prefetch slot. Resident regions are charged against the **same**
+//! residency budget as the weight-stationary cache (capacity minus the
+//! two staging banks) — weights are evicted to make room, never
+//! double-booked — and a `fuse_next` whose binding would land inside the
+//! staging banks or off the end of the scratchpad falls back to the
+//! ordinary DRAM store instead of corrupting a bank.
+//!
 //! ## Weight-stationary cache honesty
 //!
 //! Weights staged once stay resident across runs **only while they fit the
@@ -67,7 +90,8 @@
 //! FC1 at ~102M words cannot be "resident" in a 16K-word scratchpad — it
 //! re-pays its DMA every run, as it would in hardware).
 
-use super::desc::{LayerDesc, DESC_WORDS};
+use super::desc::{FusionCtl, LayerDesc, DESC_WORDS};
+use super::fusion::FusionPlan;
 use crate::error::{Error, Result};
 use crate::mem::{Dma, Dram, Scratchpad, StageCost};
 use crate::riscv::cpu::Bus;
@@ -102,6 +126,28 @@ pub mod map {
     pub const R_OVLP_LO: u32 = MMIO_BASE + 32;
     /// OVLP_HI register.
     pub const R_OVLP_HI: u32 = MMIO_BASE + 36;
+    /// FUSED_LO register (DMA cycles eliminated by layer fusion).
+    pub const R_FUSED_LO: u32 = MMIO_BASE + 40;
+    /// FUSED_HI register.
+    pub const R_FUSED_HI: u32 = MMIO_BASE + 44;
+}
+
+/// An activation region held in the scratchpad across a fused
+/// producer→consumer edge instead of round-tripping through DRAM.
+struct ResidentRegion {
+    /// The intermediate data (functionally the full region; for row-band
+    /// fusion only `footprint` words are physically resident at once —
+    /// the band streams, the data does not change). Moved out (not
+    /// copied) when the consumer stages it; the emptied entry keeps
+    /// holding the claim until the consumer finishes.
+    data: Vec<i64>,
+    /// Words of the DRAM region this claim shadows (stable across the
+    /// consume window, unlike `data.len()` after the move-out).
+    len: usize,
+    /// Scratchpad word offset of the binding.
+    binding: u32,
+    /// Scratchpad words charged against the residency budget.
+    footprint: usize,
 }
 
 /// SoC sizing.
@@ -166,8 +212,22 @@ pub struct Soc {
     /// model (cumulative; the `OVLP` MMIO registers and
     /// `RunMetrics::overlapped_cycles` read deltas of this).
     pub overlapped_cycles: u64,
+    /// DMA cycles eliminated outright by scratchpad-resident layer fusion
+    /// (cumulative; the `FUSED` MMIO registers and
+    /// `RunMetrics::fused_saved_cycles` read deltas of this). Disjoint
+    /// from `overlapped_cycles`: overlap hides traffic that is still
+    /// charged, fusion skips traffic that is never charged at all.
+    pub fused_saved_cycles: u64,
     /// The `PIPELINE` MMIO register: 1 = double-buffered layer pipelining.
     pipeline_on: bool,
+    /// Fused intermediates currently resident in the scratchpad, keyed by
+    /// the DRAM address the region *would* occupy (the consumer matches
+    /// on its `in_addr`).
+    resident: HashMap<u32, ResidentRegion>,
+    /// Scratchpad words the resident regions occupy (their footprints) —
+    /// subtracted from the weight-stationary residency budget so fused
+    /// activations and resident weights never double-book capacity.
+    resident_words: usize,
     /// Residual output-writeback cycles from the last executed layer,
     /// drainable under the next layer's compute window.
     pending_drain: u64,
@@ -203,7 +263,10 @@ impl Soc {
             layers_run: 0,
             batch_n: 1,
             overlapped_cycles: 0,
+            fused_saved_cycles: 0,
             pipeline_on: false,
+            resident: HashMap::new(),
+            resident_words: 0,
             pending_drain: 0,
             prefetched: HashMap::new(),
             lookahead: None,
@@ -216,7 +279,9 @@ impl Soc {
 
     /// Invalidate cached weights overlapping `[addr, addr+len)` — called by
     /// the driver when the host rewrites a DRAM region. Prefetch credits
-    /// for the region are dropped too (the prefetched data is stale).
+    /// for the region are dropped too (the prefetched data is stale), as
+    /// is any fused-resident claim over it (the host's write supersedes
+    /// the resident copy).
     pub fn invalidate_weights(&mut self, addr: u32, len: usize) {
         let end = addr as u64 + len as u64;
         let live = |a: u32, l: u32| (a as u64 + l as u64) <= addr as u64 || a as u64 >= end;
@@ -225,15 +290,36 @@ impl Soc {
         self.cache_lru.retain(|k| cache.contains_key(k));
         self.cache_words = self.weight_cache.values().map(|v| v.len()).sum();
         self.prefetched.retain(|&(a, l), _| live(a, l));
+        self.resident.retain(|&a, r| live(a, r.len as u32));
+        self.resident_words = self.resident.values().map(|r| r.footprint).sum();
     }
 
-    /// Drop every cached weight region and prefetch credit — used by the
-    /// driver's arena reset, where DRAM addresses are about to be reused.
+    /// Drop every cached weight region, prefetch credit **and fused
+    /// resident-region claim** — used by the driver's arena reset, where
+    /// DRAM addresses are about to be reused: a stale resident binding
+    /// would serve the previous deployment's activations at a reused
+    /// address, mirroring the stale-weight bug the cache flush prevents.
     pub fn invalidate_all_weights(&mut self) {
         self.weight_cache.clear();
         self.cache_lru.clear();
         self.cache_words = 0;
         self.prefetched.clear();
+        self.clear_resident();
+    }
+
+    /// Drop every fused resident-region claim (the driver calls this at
+    /// the start of each table run: resident regions only have meaning
+    /// within one run, and a claim left behind by an aborted run must not
+    /// leak into the next).
+    pub fn clear_resident(&mut self) {
+        self.resident.clear();
+        self.resident_words = 0;
+    }
+
+    /// Scratchpad words currently claimed by fused resident activation
+    /// regions (their planner-charged footprints).
+    pub fn resident_words(&self) -> usize {
+        self.resident_words
     }
 
     /// Words currently resident in the weight-stationary cache (always
@@ -290,11 +376,41 @@ impl Soc {
     }
 
     /// Scratchpad words available for resident weights: total capacity
-    /// minus the ping/pong staging bank pair, which the (pipelined) DMA
-    /// claims for in-flight tiles — resident weights and staging buffers
-    /// must not double-book the same on-chip capacity.
-    fn residency_budget(&self) -> usize {
-        self.cfg.spad_words.saturating_sub(2 * self.spad.bank_words())
+    /// minus the ping/pong staging bank pair the (pipelined) DMA claims
+    /// for in-flight tiles, minus the footprints of fused resident
+    /// activation regions — resident weights, fused intermediates and
+    /// staging buffers must not double-book the same on-chip capacity.
+    pub fn residency_budget(&self) -> usize {
+        self.cfg
+            .spad_words
+            .saturating_sub(2 * self.spad.bank_words())
+            .saturating_sub(self.resident_words)
+    }
+
+    /// Evict LRU weight regions until the cache holds at most `budget`
+    /// words — the one eviction loop both [`Soc::cache_insert`] and the
+    /// fused-region claim path share.
+    fn evict_lru_until(&mut self, budget: usize) {
+        while self.cache_words > budget {
+            let Some(old) = self.cache_lru.pop_front() else {
+                break;
+            };
+            if let Some(v) = self.weight_cache.remove(&old) {
+                self.cache_words -= v.len();
+            }
+        }
+    }
+
+    /// What staging `len` words DRAM↔scratchpad would cost under the
+    /// active execution model, without moving data — serial
+    /// whole-scratchpad windows, or pipelined bank-sized tiles. Prices
+    /// the traffic a fused intermediate skips (the `FUSED` counter).
+    fn staging_cost(&self, len: usize) -> u64 {
+        if self.pipeline_on {
+            Dma::staged_cost(&self.dram, &self.spad, len)
+        } else {
+            Dma::serial_cost(&self.dram, &self.spad, len)
+        }
     }
 
     /// Insert under the scratchpad residency budget: oversized regions are
@@ -305,14 +421,7 @@ impl Soc {
         if words > budget {
             return;
         }
-        while self.cache_words + words > budget {
-            let Some(old) = self.cache_lru.pop_front() else {
-                break;
-            };
-            if let Some(v) = self.weight_cache.remove(&old) {
-                self.cache_words -= v.len();
-            }
-        }
+        self.evict_lru_until(budget - words);
         self.cache_words += words;
         self.weight_cache.insert(key, data);
         self.cache_lru.push_back(key);
@@ -335,6 +444,20 @@ impl Soc {
 
     /// Write a descriptor table into control RAM at word index `at`.
     pub fn write_descriptors(&mut self, at: usize, descs: &[LayerDesc]) -> Result<()> {
+        self.write_descriptors_fused(at, descs, &FusionPlan::none(descs.len()))
+    }
+
+    /// Write a descriptor table with its fusion plan: each fused
+    /// producer's block carries the versioned [`FusionCtl`] side-band in
+    /// its tail words, so the control program (which only pokes block
+    /// addresses) needs no changes — the SoC reads the binding straight
+    /// from the descriptor it executes.
+    pub fn write_descriptors_fused(
+        &mut self,
+        at: usize,
+        descs: &[LayerDesc],
+        plan: &FusionPlan,
+    ) -> Result<()> {
         let need = (descs.len() + 1) * DESC_WORDS;
         if at + need > self.ctrl_ram.len() {
             return Err(Error::Accel(format!(
@@ -342,8 +465,10 @@ impl Soc {
             )));
         }
         let mut idx = at;
-        for d in descs.iter().chain(std::iter::once(&LayerDesc::End)) {
-            self.ctrl_ram[idx..idx + DESC_WORDS].copy_from_slice(&d.encode());
+        for (i, d) in descs.iter().chain(std::iter::once(&LayerDesc::End)).enumerate() {
+            let mut words = d.encode();
+            plan.ctl(i).encode_into(&mut words);
+            self.ctrl_ram[idx..idx + DESC_WORDS].copy_from_slice(&words);
             idx += DESC_WORDS;
         }
         Ok(())
@@ -359,6 +484,16 @@ impl Soc {
     /// When the `PIPELINE` register is set, the overlap model above books
     /// the hideable DMA cycles into [`Soc::overlapped_cycles`].
     pub fn exec_descriptor(&mut self, desc: &LayerDesc) -> Result<()> {
+        self.exec_descriptor_fused(desc, FusionCtl::none())
+    }
+
+    /// Execute one layer descriptor with its fusion side-band: when `ctl`
+    /// sets `fuse_next`, the output region stays scratchpad-resident for
+    /// the next descriptor (no output DMA is issued or charged); when the
+    /// input region is already resident from the previous descriptor, it
+    /// is consumed without issuing the input DMA. Both skipped transfers
+    /// are priced into [`Soc::fused_saved_cycles`].
+    pub fn exec_descriptor_fused(&mut self, desc: &LayerDesc, ctl: FusionCtl) -> Result<()> {
         let batch = self.batch_n.max(1) as usize;
         match *desc {
             LayerDesc::End => Ok(()),
@@ -378,7 +513,7 @@ impl Soc {
             } => {
                 let in_len = batch * desc.in_len();
                 let w_len = cout * cin * k * k;
-                let (input, in_cost) = self.stage_in(in_addr as usize, in_len)?;
+                let (input, in_cost, consumed) = self.stage_activation_in(in_addr, in_len)?;
                 let (weights, w_hideable) = self.stage_weights(w_addr, w_len)?;
                 let c0 = self.engine.stats.total_cycles();
                 self.engine.reconfigure(EngineConfig {
@@ -398,7 +533,7 @@ impl Soc {
                     .engine
                     .run_batch(&input, batch, &[cin as usize, h as usize, w as usize])?;
                 let compute = self.engine.stats.total_cycles() - c0;
-                self.finish_layer(out_addr as usize, &out.data, compute, in_cost, w_hideable)
+                self.finish_layer(out_addr, &out.data, compute, in_cost, w_hideable, ctl, consumed)
             }
             LayerDesc::Pool {
                 k,
@@ -410,7 +545,8 @@ impl Soc {
                 w,
                 out_addr,
             } => {
-                let (input, in_cost) = self.stage_in(in_addr as usize, batch * desc.in_len())?;
+                let (input, in_cost, consumed) =
+                    self.stage_activation_in(in_addr, batch * desc.in_len())?;
                 let c0 = self.engine.stats.total_cycles();
                 self.engine.reconfigure(EngineConfig {
                     mode: EngineMode::Pool {
@@ -425,7 +561,7 @@ impl Soc {
                     .engine
                     .run_batch(&input, batch, &[c as usize, h as usize, w as usize])?;
                 let compute = self.engine.stats.total_cycles() - c0;
-                self.finish_layer(out_addr as usize, &out.data, compute, in_cost, 0)
+                self.finish_layer(out_addr, &out.data, compute, in_cost, 0, ctl, consumed)
             }
             LayerDesc::Fc {
                 n_in,
@@ -437,7 +573,8 @@ impl Soc {
                 relu,
                 out_shift,
             } => {
-                let (input, in_cost) = self.stage_in(in_addr as usize, batch * n_in as usize)?;
+                let (input, in_cost, consumed) =
+                    self.stage_activation_in(in_addr, batch * n_in as usize)?;
                 let (weights, w_hide) = self.stage_weights(w_addr, n_in * n_out)?;
                 let (bias, b_hide) = self.stage_weights(b_addr, n_out)?;
                 let c0 = self.engine.stats.total_cycles();
@@ -453,7 +590,15 @@ impl Soc {
                 })?;
                 let out = self.engine.run_batch(&input, batch, &[n_in as usize])?;
                 let compute = self.engine.stats.total_cycles() - c0;
-                self.finish_layer(out_addr as usize, &out.data, compute, in_cost, w_hide + b_hide)
+                self.finish_layer(
+                    out_addr,
+                    &out.data,
+                    compute,
+                    in_cost,
+                    w_hide + b_hide,
+                    ctl,
+                    consumed,
+                )
             }
             LayerDesc::Fir {
                 taps_addr,
@@ -468,7 +613,7 @@ impl Soc {
                     )));
                 }
                 let (taps, w_hideable) = self.stage_weights(taps_addr, n_taps)?;
-                let (input, in_cost) = self.stage_in(in_addr as usize, n as usize)?;
+                let (input, in_cost, consumed) = self.stage_activation_in(in_addr, n as usize)?;
                 let c0 = self.engine.stats.total_cycles();
                 self.engine.reconfigure(EngineConfig {
                     mode: EngineMode::Fir { taps },
@@ -477,22 +622,48 @@ impl Soc {
                 })?;
                 let out = self.engine.run(&input, &[n as usize])?;
                 let compute = self.engine.stats.total_cycles() - c0;
-                self.finish_layer(out_addr as usize, &out.data, compute, in_cost, w_hideable)
+                self.finish_layer(out_addr, &out.data, compute, in_cost, w_hideable, ctl, consumed)
             }
         }
     }
 
-    /// Write the layer's output back and, in pipelined mode, book the
-    /// overlap this layer's compute window can hide.
+    /// Write the layer's output back — or keep it scratchpad-resident when
+    /// the fusion side-band asks for it — and, in pipelined mode, book the
+    /// overlap this layer's compute window can hide. The consumed resident
+    /// input (if any) is released only *after* the output is placed: both
+    /// regions are live simultaneously during the hand-off, which is
+    /// exactly what the planner's pairwise budget constraint sized.
+    #[allow(clippy::too_many_arguments)]
     fn finish_layer(
         &mut self,
-        out_addr: usize,
+        out_addr: u32,
         data: &[i64],
         compute: u64,
         in_cost: StageCost,
         w_hideable: u64,
+        ctl: FusionCtl,
+        consumed: Option<u32>,
     ) -> Result<()> {
-        let out_cost = self.stage_out(out_addr, data)?;
+        // an in-place consumer (its out_addr IS the consumed region's
+        // address) has fully drained the input by compute end: release it
+        // *before* the output is placed, or the release below would
+        // delete the freshly inserted fused output under the same key
+        if consumed == Some(out_addr) {
+            self.release_resident(out_addr);
+        }
+        // a fused output is zero-traffic: no DMA charge, no write-back
+        // queue entry, no prefetch slot — StageCost::default() feeds the
+        // overlap state machine nothing to hide or drain
+        let out_cost = if self.make_resident(out_addr, data, ctl) {
+            StageCost::default()
+        } else {
+            self.stage_out(out_addr as usize, data)?
+        };
+        if let Some(addr) = consumed {
+            if addr != out_addr {
+                self.release_resident(addr);
+            }
+        }
         self.layers_run += 1;
         if self.pipeline_on {
             self.account_overlap(compute, in_cost, w_hideable, out_cost);
@@ -501,6 +672,98 @@ impl Soc {
             self.lookahead = None;
         }
         Ok(())
+    }
+
+    /// Try to keep a layer output scratchpad-resident per its fusion
+    /// side-band. Returns `false` — falling back to the ordinary DRAM
+    /// store, never corrupting a bank — when the binding is malformed:
+    /// inside the two DMA staging banks, past the end of the scratchpad,
+    /// zero-sized, or overlapping another live resident region.
+    fn make_resident(&mut self, out_addr: u32, data: &[i64], ctl: FusionCtl) -> bool {
+        if ctl.is_none() {
+            return false;
+        }
+        let footprint = ctl.resident_words as usize;
+        let lo = ctl.spad_binding as usize;
+        let hi = lo + footprint;
+        let staging_end = 2 * self.spad.bank_words();
+        if footprint == 0 || lo < staging_end || hi > self.spad.len() {
+            return false;
+        }
+        let overlaps_live = self.resident.values().any(|r| {
+            let (a, b) = (r.binding as usize, r.binding as usize + r.footprint);
+            lo < b && a < hi
+        });
+        if overlaps_live {
+            return false;
+        }
+        // price the store this region skips under the active model, then
+        // claim the words — evicting LRU weights that were using them
+        let skipped = self.staging_cost(data.len());
+        self.fused_saved_cycles += skipped;
+        if let Some(old) = self.resident.insert(
+            out_addr,
+            ResidentRegion {
+                len: data.len(),
+                data: data.to_vec(),
+                binding: ctl.spad_binding,
+                footprint,
+            },
+        ) {
+            self.resident_words -= old.footprint;
+        }
+        self.resident_words += footprint;
+        let budget = self.residency_budget();
+        self.evict_lru_until(budget);
+        true
+    }
+
+    /// Release a consumed fused region's scratchpad claim.
+    fn release_resident(&mut self, addr: u32) {
+        if let Some(r) = self.resident.remove(&addr) {
+            self.resident_words -= r.footprint;
+        }
+    }
+
+    /// Stage a layer's input activations: a region the previous fused
+    /// descriptor left resident is consumed straight from the scratchpad —
+    /// zero DMA issued or charged, the skipped reload priced into the
+    /// `FUSED` counter — anything else takes the ordinary DRAM path.
+    /// Returns the staged data, its (possibly zero) cost split, and the
+    /// resident key to release once the layer finishes.
+    fn stage_activation_in(
+        &mut self,
+        dram_addr: u32,
+        len: usize,
+    ) -> Result<(Vec<i64>, StageCost, Option<u32>)> {
+        if let Some(r) = self.resident.get_mut(&dram_addr) {
+            if r.len != len {
+                return Err(Error::Accel(format!(
+                    "fused region at {dram_addr:#x} holds {} words, consumer wants {len}",
+                    r.len
+                )));
+            }
+            // move the data out (no copy); the emptied entry keeps its
+            // binding + footprint claim until the consumer finishes
+            let data = std::mem::take(&mut r.data);
+            let skipped = self.staging_cost(len);
+            self.fused_saved_cycles += skipped;
+            return Ok((data, StageCost::default(), Some(dram_addr)));
+        }
+        // a partial read of a resident region would see stale DRAM (the
+        // producer skipped its store): fused tables must consume regions
+        // exactly as produced, in order
+        let (lo, hi) = (dram_addr as u64, dram_addr as u64 + len as u64);
+        if self.resident.iter().any(|(&a, r)| {
+            let (b0, b1) = (a as u64, a as u64 + r.len as u64);
+            lo < b1 && b0 < hi
+        }) {
+            return Err(Error::Accel(format!(
+                "read [{dram_addr:#x}, +{len}) overlaps a fused-resident region out of order"
+            )));
+        }
+        let (data, cost) = self.stage_in(dram_addr as usize, len)?;
+        Ok((data, cost, None))
     }
 
     /// The per-layer overlap state machine (see the module docs): hide
@@ -543,7 +806,14 @@ impl Soc {
         let o = budget.min(out_cost.cycles.saturating_sub(out_cost.fill));
         budget -= o;
         hidden += o;
-        let queue_cap = Dma::staged_cost(&self.dram, &self.spad, self.spad.len() / 2);
+        // the queue buffers undrained tiles in the pong half — minus any
+        // words fused resident regions have claimed out of it
+        let queue_words = (self.spad.len() / 2).min(
+            self.spad
+                .len()
+                .saturating_sub(2 * self.spad.bank_words() + self.resident_words),
+        );
+        let queue_cap = Dma::staged_cost(&self.dram, &self.spad, queue_words);
         self.pending_drain = (drain_residue + (out_cost.cycles - o)).min(queue_cap);
         // (4) leftover slack prefetches the next descriptor's weights into
         //     the pong staging half (credited when actually staged)
@@ -644,6 +914,8 @@ impl Bus for Soc {
             map::R_PIPE => Ok(self.pipeline_on as u32),
             map::R_OVLP_LO => Ok(self.overlapped_cycles as u32),
             map::R_OVLP_HI => Ok((self.overlapped_cycles >> 32) as u32),
+            map::R_FUSED_LO => Ok(self.fused_saved_cycles as u32),
+            map::R_FUSED_HI => Ok((self.fused_saved_cycles >> 32) as u32),
             _ => Err(Error::Accel(format!("bus read {addr:#x}"))),
         }
     }
@@ -666,6 +938,7 @@ impl Bus for Soc {
                 }
                 let words: Vec<u32> = self.ctrl_ram[idx..idx + DESC_WORDS].to_vec();
                 let desc = LayerDesc::decode(&words)?;
+                let ctl = FusionCtl::decode(&words)?;
                 // descriptor look-ahead: tables are contiguous, so the next
                 // block (if decodable) feeds the weight prefetcher
                 self.lookahead = if self.pipeline_on && idx + 2 * DESC_WORDS <= self.ctrl_ram.len()
@@ -674,7 +947,7 @@ impl Bus for Soc {
                 } else {
                     None
                 };
-                let r = self.exec_descriptor(&desc);
+                let r = self.exec_descriptor_fused(&desc, ctl);
                 self.lookahead = None;
                 r
             }
@@ -850,6 +1123,216 @@ mod tests {
         serial.store(map::R_DESC, map::RAM_BASE).unwrap();
         assert_eq!(serial.dram.read_burst(2000, 256).unwrap(), pipelined_out);
         assert_eq!(serial.overlapped_cycles, 0, "serial model hides nothing");
+    }
+
+    fn fused_pair() -> (LayerDesc, LayerDesc, FusionCtl) {
+        // conv 1×4×4 (2×2 all-ones, stride 1) → 3×3 at addr 100, then a
+        // 3×3 max pool of it; the ctl binds the 9-word intermediate past
+        // the two 8-word staging banks of a 64-word scratchpad
+        let conv = LayerDesc::Conv {
+            cout: 1,
+            cin: 1,
+            k: 2,
+            stride: 1,
+            pad: 0,
+            w_addr: 50,
+            in_addr: 0,
+            h: 4,
+            w: 4,
+            out_addr: 100,
+            relu: false,
+            out_shift: 0,
+        };
+        let pool = LayerDesc::Pool {
+            k: 3,
+            stride: 1,
+            kind: crate::systolic::PoolKind::Max,
+            in_addr: 100,
+            c: 1,
+            h: 3,
+            w: 3,
+            out_addr: 200,
+        };
+        let ctl = FusionCtl {
+            fuse_next: true,
+            spad_binding: 16,
+            resident_words: 9,
+        };
+        (conv, pool, ctl)
+    }
+
+    fn fused_soc() -> Soc {
+        let mut soc = Soc::new(SocConfig {
+            dram_words: 4096,
+            spad_words: 64,
+            ..Default::default()
+        });
+        soc.dram.preload(0, &(0..16).collect::<Vec<i64>>()).unwrap();
+        soc.dram.preload(50, &[1, 1, 1, 1]).unwrap();
+        soc
+    }
+
+    #[test]
+    fn fused_pair_skips_the_dram_round_trip() {
+        let (conv, pool, ctl) = fused_pair();
+        // unfused baseline on its own SoC
+        let mut base = fused_soc();
+        base.exec_descriptor(&conv).unwrap();
+        base.exec_descriptor(&pool).unwrap();
+        let want = base.dram.read_burst(200, 1).unwrap();
+        assert_eq!(want, vec![50], "conv max window 10+11+14+15");
+        let base_mem = base.mem_cycles();
+
+        let mut soc = fused_soc();
+        soc.exec_descriptor_fused(&conv, ctl).unwrap();
+        // the intermediate never touched DRAM…
+        assert_eq!(soc.dram.read_burst(100, 9).unwrap(), vec![0; 9]);
+        assert_eq!(soc.resident_words(), 9, "…it is scratchpad-resident");
+        assert!(soc.fused_saved_cycles > 0);
+        soc.exec_descriptor_fused(&pool, FusionCtl::none()).unwrap();
+        assert_eq!(soc.resident_words(), 0, "consumer releases the region");
+        // …and the final output is bit-exact with the unfused run
+        assert_eq!(soc.dram.read_burst(200, 1).unwrap(), want);
+        assert!(
+            soc.mem_cycles() < base_mem,
+            "fused mem {} !< unfused {base_mem}",
+            soc.mem_cycles()
+        );
+        // the FUSED registers expose the counter over the bus
+        let fused = soc.load(map::R_FUSED_LO).unwrap() as u64
+            | ((soc.load(map::R_FUSED_HI).unwrap() as u64) << 32);
+        assert_eq!(fused, soc.fused_saved_cycles);
+        // what was skipped is exactly the baseline's extra traffic
+        assert_eq!(soc.mem_cycles() + soc.fused_saved_cycles, base_mem);
+    }
+
+    #[test]
+    fn malformed_fusion_binding_falls_back_to_dram_store() {
+        let (conv, pool, _) = fused_pair();
+        for bad in [
+            // binding inside the staging banks would corrupt the pong bank
+            FusionCtl { fuse_next: true, spad_binding: 8, resident_words: 9 },
+            // binding past the end of the scratchpad
+            FusionCtl { fuse_next: true, spad_binding: 60, resident_words: 9 },
+            // zero-sized claim
+            FusionCtl { fuse_next: true, spad_binding: 16, resident_words: 0 },
+        ] {
+            let mut soc = fused_soc();
+            soc.exec_descriptor_fused(&conv, bad).unwrap();
+            assert_eq!(soc.resident_words(), 0, "{bad:?} must not claim words");
+            assert_eq!(soc.fused_saved_cycles, 0, "{bad:?} must not count savings");
+            // clean fallback: the store happened, the consumer reads DRAM
+            soc.exec_descriptor_fused(&pool, FusionCtl::none()).unwrap();
+            assert_eq!(soc.dram.read_burst(200, 1).unwrap(), vec![50]);
+        }
+    }
+
+    #[test]
+    fn resident_regions_and_weight_cache_share_the_budget() {
+        let (conv, pool, ctl) = fused_pair();
+        let mut soc = fused_soc();
+        soc.dram.preload(500, &vec![7; 48]).unwrap();
+        // fill most of the 48-word budget with resident weights
+        let _ = soc.stage_weights(500, 44).unwrap();
+        assert_eq!(soc.weight_cache_words(), 44);
+        // a fused region claiming 9 words shrinks the budget to 39 and
+        // must evict the cached weights rather than double-book capacity
+        soc.exec_descriptor_fused(&conv, ctl).unwrap();
+        assert_eq!(soc.resident_words(), 9);
+        assert!(
+            soc.weight_cache_words() <= soc.residency_budget(),
+            "cache {} words > budget {}",
+            soc.weight_cache_words(),
+            soc.residency_budget()
+        );
+        soc.exec_descriptor_fused(&pool, FusionCtl::none()).unwrap();
+        assert_eq!(soc.dram.read_burst(200, 1).unwrap(), vec![50]);
+        // arena-style wholesale invalidation clears resident claims too
+        let mut soc2 = fused_soc();
+        soc2.exec_descriptor_fused(&fused_pair().0, fused_pair().2).unwrap();
+        assert_eq!(soc2.resident_words(), 9);
+        soc2.invalidate_all_weights();
+        assert_eq!(soc2.resident_words(), 0);
+    }
+
+    #[test]
+    fn in_place_consumer_inside_fused_chain_stays_correct() {
+        // L1 reads region B and writes region B (in-place) with BOTH its
+        // edges fused: the consumed input's release must not delete the
+        // freshly inserted fused output under the same key — L2 must see
+        // L1's output, not stale DRAM
+        let fc = |w_addr: u32, b_addr: u32, in_addr: u32, out_addr: u32| LayerDesc::Fc {
+            n_in: 4,
+            n_out: 4,
+            w_addr,
+            b_addr,
+            in_addr,
+            out_addr,
+            relu: false,
+            out_shift: 0,
+        };
+        let ctl = |binding: u32| FusionCtl {
+            fuse_next: true,
+            spad_binding: binding,
+            resident_words: 4,
+        };
+        let mk = || {
+            let mut soc = Soc::new(SocConfig {
+                dram_words: 4096,
+                spad_words: 64,
+                ..Default::default()
+            });
+            soc.dram.preload(0, &[1, 2, 3, 4]).unwrap();
+            for (at, seed) in [(300usize, 1i64), (400, 2), (500, 3)] {
+                let w: Vec<i64> = (0..16).map(|i| (i % 5) - 2 + seed).collect();
+                soc.dram.preload(at, &w).unwrap();
+                soc.dram.preload(at + 50, &[seed; 4]).unwrap();
+            }
+            soc
+        };
+        let l0 = fc(300, 350, 0, 100);
+        let l1 = fc(400, 450, 100, 100); // in-place: reads and writes B=100
+        let l2 = fc(500, 550, 100, 200);
+
+        // unfused reference
+        let mut base = mk();
+        for d in [&l0, &l1, &l2] {
+            base.exec_descriptor(d).unwrap();
+        }
+        let want = base.dram.read_burst(200, 4).unwrap();
+
+        // fused chain with the in-place middle layer
+        let mut soc = mk();
+        soc.exec_descriptor_fused(&l0, ctl(16)).unwrap();
+        soc.exec_descriptor_fused(&l1, ctl(20)).unwrap();
+        assert_eq!(soc.resident_words(), 4, "L1's output must stay claimed");
+        soc.exec_descriptor_fused(&l2, FusionCtl::none()).unwrap();
+        assert_eq!(soc.resident_words(), 0);
+        assert_eq!(
+            soc.dram.read_burst(200, 4).unwrap(),
+            want,
+            "the in-place consumer's fused output must reach L2, not stale DRAM"
+        );
+    }
+
+    #[test]
+    fn out_of_order_read_of_resident_region_is_an_error() {
+        let (conv, _, ctl) = fused_pair();
+        let mut soc = fused_soc();
+        soc.exec_descriptor_fused(&conv, ctl).unwrap();
+        // a consumer reading a *partial* slice of the resident region
+        // would see stale DRAM: the SoC refuses instead
+        let bad_pool = LayerDesc::Pool {
+            k: 2,
+            stride: 1,
+            kind: crate::systolic::PoolKind::Max,
+            in_addr: 102,
+            c: 1,
+            h: 2,
+            w: 2,
+            out_addr: 300,
+        };
+        assert!(soc.exec_descriptor_fused(&bad_pool, FusionCtl::none()).is_err());
     }
 
     #[test]

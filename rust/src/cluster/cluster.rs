@@ -85,6 +85,18 @@ impl Cluster {
         Ok(())
     }
 
+    /// Toggle scratchpad-resident layer fusion on every replica: each
+    /// shard's descriptor table runs through its replica's fusion planner
+    /// independently, so fusion composes with sharding (per-shard
+    /// `RunMetrics` exclude the skipped traffic, and the max-over-shards
+    /// aggregate shrinks) and with pipelining (fusion removes traffic,
+    /// the overlap machine hides what remains).
+    pub fn set_fusion(&mut self, on: bool) {
+        for drv in &mut self.drivers {
+            drv.set_fusion(on);
+        }
+    }
+
     /// Dispatch an already-placed plan: shard `i` runs on replica
     /// `assignments[i]` against that replica's own descriptor table
     /// `tables[assignments[i]]`, all replicas concurrently. Completed
@@ -175,6 +187,20 @@ mod tests {
         // all in-flight work retired, busy time recorded on both replicas
         assert!(sched.outstanding_cycles().iter().all(|&c| c == 0));
         assert!(sched.busy_cycles().iter().all(|&c| c > 0));
+    }
+
+    #[test]
+    fn set_fusion_reaches_every_replica() {
+        let mut c = Cluster::new(ClusterConfig {
+            replicas: 3,
+            soc: small_soc(),
+        })
+        .unwrap();
+        assert!(c.drivers().iter().all(|d| !d.fusion_enabled()));
+        c.set_fusion(true);
+        assert!(c.drivers().iter().all(|d| d.fusion_enabled()));
+        c.set_fusion(false);
+        assert!(c.drivers().iter().all(|d| !d.fusion_enabled()));
     }
 
     #[test]

@@ -4,7 +4,7 @@
 
 use super::layers::{Layer, LayerShape};
 use super::tensor::{self, Tensor};
-use crate::accel::{Driver, LayerDesc, RunMetrics, ShardedMetrics};
+use crate::accel::{Driver, FusionGroup, FusionPlan, LayerDesc, RunMetrics, ShardedMetrics};
 use crate::cluster::{Cluster, ShardPlan, Scheduler};
 use crate::error::{Error, Result};
 use crate::systolic::PoolKind;
@@ -376,6 +376,16 @@ impl NetworkInstance {
                 }
             }
         }
+        // fusion-group metadata: which producer→consumer chains keep
+        // their intermediates scratchpad-resident when the driver runs
+        // this table with fusion enabled at the deployed batch capacity
+        let fusion_groups = FusionPlan::plan(
+            &descs,
+            max_batch as u32,
+            drv.soc.config().spad_words,
+            drv.soc.spad.bank_words(),
+        )
+        .groups();
         Ok(Deployment {
             descs,
             in_addr,
@@ -383,6 +393,7 @@ impl NetworkInstance {
             in_len: shapes[0].volume(),
             out_len: shapes.last().unwrap().volume(),
             max_batch,
+            fusion_groups,
         })
     }
 
@@ -424,6 +435,13 @@ pub struct Deployment {
     pub out_len: usize,
     /// Batch capacity the activation buffers were sized for.
     pub max_batch: usize,
+    /// Fused layer chains the planner finds for this table at `max_batch`
+    /// on the target SoC's scratchpad geometry: each group's `len − 1`
+    /// intermediate activations stay on-chip when the driver enables
+    /// fusion. Metadata for reporting/monitoring — the driver re-plans
+    /// per run with the actual batch, which can only fuse *more* (smaller
+    /// batches shrink whole-buffer footprints, never grow them).
+    pub fusion_groups: Vec<FusionGroup>,
 }
 
 impl Deployment {
@@ -621,6 +639,14 @@ mod tests {
         let dep = inst.deploy_batched(&mut drv, batch).unwrap();
         assert_eq!(dep.in_len, 256);
         assert_eq!(dep.out_len, 10);
+        // Tiny on the serving scratchpad fuses conv→pool→conv→pool and
+        // fc→fc — the deployment advertises the chains
+        assert!(
+            !dep.fusion_groups.is_empty(),
+            "Tiny must have at least one fusable chain at batch {batch}"
+        );
+        let fused_layers: usize = dep.fusion_groups.iter().map(|g| g.len).sum();
+        assert!(fused_layers <= dep.descs.len());
         let inputs: Vec<Tensor> = (0..batch)
             .map(|i| Tensor::random(vec![1, 16, 16], 127, 70 + i as u64))
             .collect();

@@ -18,7 +18,11 @@
 //! with the pipelined execution model on by default
 //! (`CoordinatorConfig::pipeline`): layer DMA overlaps engine compute
 //! through double-buffered scratchpad staging, and the hidden cycles are
-//! reported via `StatsCollector::overlapped_cycles`.
+//! reported via `StatsCollector::overlapped_cycles`. Scratchpad-resident
+//! layer fusion is on by default too (`CoordinatorConfig::fuse`): chained
+//! layers whose intermediates fit on-chip skip the DRAM round trip, with
+//! the eliminated cycles reported via
+//! `StatsCollector::fused_saved_cycles`.
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::request::{InferenceRequest, InferenceResponse, RequestId};
@@ -50,6 +54,13 @@ pub struct CoordinatorConfig {
     /// default: the serving hot path should not pay memory traffic it can
     /// hide. Disable to reproduce the serial cycle model.
     pub pipeline: bool,
+    /// Run every replica's descriptor tables through the layer-fusion
+    /// planner: chained layers whose intermediates fit the scratchpad
+    /// skip the DRAM store + reload entirely. On by default — the serving
+    /// hot path should not pay memory traffic it can eliminate; composes
+    /// with `pipeline` (fusion removes traffic, overlap hides the rest)
+    /// and with `shards`. Disable to reproduce the unfused model.
+    pub fuse: bool,
     /// Batching policy.
     pub batch: BatchPolicy,
     /// Per-replica SoC configuration.
@@ -66,6 +77,7 @@ impl Default for CoordinatorConfig {
             shards: 1,
             sched: SchedulePolicy::LeastOutstandingCycles,
             pipeline: true,
+            fuse: true,
             batch: BatchPolicy::default(),
             soc: SocConfig::serving(),
             clock_mhz: 200.0,
@@ -93,6 +105,7 @@ impl Worker {
             soc: cfg.soc,
         })?;
         cluster.set_pipeline(cfg.pipeline)?;
+        cluster.set_fusion(cfg.fuse);
         let cdep = inst.deploy_cluster(&mut cluster, per_shard)?;
         let sched = Scheduler::new(cfg.sched, cfg.shards)?;
         let input_dims = inst.net.input.dims();
@@ -236,6 +249,7 @@ impl Coordinator {
                                 let mut s = stats.lock().expect("stats poisoned");
                                 s.record_sharded_batch(&per_shard);
                                 s.record_overlapped(m.overlapped_cycles());
+                                s.record_fused_saved(m.fused_saved_cycles());
                                 for &latency_us in &latencies {
                                     s.record(latency_us, n, 0);
                                 }
@@ -538,6 +552,55 @@ mod tests {
         assert!(rx.recv().unwrap().is_ok());
         let stats = coord.shutdown();
         assert_eq!(stats.overlapped_cycles, 0);
+    }
+
+    #[test]
+    fn fused_serving_stays_bit_exact_and_records_savings() {
+        let inst = tiny_instance();
+        // fusion on (the default): answers must still equal forward_ref,
+        // and the workers must report eliminated DMA cycles
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                ..Default::default()
+            },
+            &inst,
+        )
+        .unwrap();
+        let inputs: Vec<Tensor> = (0..8)
+            .map(|i| Tensor::random(vec![1, 16, 16], 127, 9500 + i))
+            .collect();
+        let rxs: Vec<_> = inputs
+            .iter()
+            .map(|t| coord.submit(t.clone()).unwrap())
+            .collect();
+        for ((id, rx), input) in rxs.into_iter().zip(&inputs) {
+            let resp = rx.recv().expect("response");
+            assert_eq!(resp.id, id);
+            assert!(resp.is_ok(), "{:?}", resp.error);
+            let want = inst.forward_ref(input).unwrap();
+            assert_eq!(resp.logits, want.data, "request {id} under fusion");
+        }
+        let stats = coord.shutdown();
+        assert!(stats.fused_saved_cycles > 0, "fusion must skip DMA traffic");
+        assert!(stats.fused_fraction() > 0.0 && stats.fused_fraction() < 1.0);
+
+        // fusion off: nothing is skipped
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                fuse: false,
+                ..Default::default()
+            },
+            &inst,
+        )
+        .unwrap();
+        let (_, rx) = coord
+            .submit(Tensor::random(vec![1, 16, 16], 127, 9600))
+            .unwrap();
+        assert!(rx.recv().unwrap().is_ok());
+        let stats = coord.shutdown();
+        assert_eq!(stats.fused_saved_cycles, 0);
     }
 
     #[test]

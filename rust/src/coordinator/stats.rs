@@ -37,6 +37,11 @@ pub struct StatsCollector {
     /// DMA cycles hidden under compute by pipelined execution, summed
     /// over every shard run (0 when serving with the pipeline disabled).
     pub overlapped_cycles: u64,
+    /// DMA cycles eliminated outright by scratchpad-resident layer
+    /// fusion, summed over every shard run (0 when serving with fusion
+    /// disabled). Unlike `overlapped_cycles`, these were never charged:
+    /// they price the store+reload the fused intermediates skipped.
+    pub fused_saved_cycles: u64,
     /// Accelerator batch runs executed.
     pub batches: u64,
     /// Requests that failed with an explicit error response.
@@ -60,6 +65,7 @@ impl StatsCollector {
             started: Instant::now(),
             accel_cycles: 0,
             overlapped_cycles: 0,
+            fused_saved_cycles: 0,
             batches: 0,
             errors: 0,
         }
@@ -118,6 +124,29 @@ impl StatsCollector {
             0.0
         } else {
             self.overlapped_cycles as f64 / serial as f64
+        }
+    }
+
+    /// Record DMA cycles a batch run eliminated via layer fusion
+    /// (scratchpad-resident intermediates). Reported by
+    /// [`StatsCollector::fused_fraction`].
+    pub fn record_fused_saved(&mut self, cycles: u64) {
+        self.fused_saved_cycles += cycles;
+    }
+
+    /// Fraction of the unfused model's accelerator charge that layer
+    /// fusion eliminated: `fused_saved / (charged + fused_saved)`. Exact
+    /// for single-shard workers; with sharding it is an upper-bound
+    /// indicator (batches are charged their critical path, savings sum
+    /// over shards — the same caveat as
+    /// [`StatsCollector::overlap_fraction`]). 0.0 when nothing was
+    /// recorded or fusion is off.
+    pub fn fused_fraction(&self) -> f64 {
+        let unfused = self.accel_cycles + self.fused_saved_cycles;
+        if unfused == 0 {
+            0.0
+        } else {
+            self.fused_saved_cycles as f64 / unfused as f64
         }
     }
 
@@ -251,6 +280,17 @@ mod tests {
         s.record_overlapped(250);
         assert_eq!(s.overlapped_cycles, 250);
         assert!((s.overlap_fraction() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fused_fraction_tracks_eliminated_cycles() {
+        let mut s = StatsCollector::new();
+        assert_eq!(s.fused_fraction(), 0.0);
+        s.record_batch(600);
+        s.record_fused_saved(200);
+        assert_eq!(s.fused_saved_cycles, 200);
+        // 200 of a would-be 800 cycles never left the scratchpad
+        assert!((s.fused_fraction() - 0.25).abs() < 1e-9);
     }
 
     #[test]

@@ -39,12 +39,16 @@ COMMANDS
   analyze  [--net alexnet]           network analysis (paper Sec V)
   golden   [--artifacts artifacts]   XLA vs systolic vs reference
   serve    [--requests 64] [--workers 2] [--batch 8] [--shards 1] [--no-pipeline]
+           [--no-fuse]
   cluster  [--batch 16] [--shards 4] [--policy rr|least-outstanding] [--net tiny]
-           [--no-pipeline]
+           [--no-pipeline] [--no-fuse]
 
 Pipelining: replica SoCs overlap layer DMA with engine compute by default
 (double-buffered scratchpad staging); --no-pipeline restores the serial
 cpu + compute + mem cycle model.
+Fusion: chained layers whose intermediate activations fit the scratchpad
+skip the DRAM store + reload entirely (whole-buffer or row-band-tiled
+residency) by default; --no-fuse restores the per-layer round trip.
 ";
 
 fn mult_spec(name: &str) -> kom_accel::Result<(String, MultiplierSpec)> {
@@ -200,11 +204,13 @@ fn cmd_serve(args: &Args) -> kom_accel::Result<()> {
     let max_batch: usize = args.get_num("batch", 8usize)?;
     let shards: usize = args.get_num("shards", 1usize)?;
     let pipeline = !args.has("no-pipeline");
+    let fuse = !args.has("no-fuse");
     let inst = NetworkInstance::random(Network::build(NetworkKind::Tiny), 42)?;
     let cfg = CoordinatorConfig {
         workers,
         shards,
         pipeline,
+        fuse,
         batch: kom_accel::coordinator::BatchPolicy {
             max_batch,
             ..Default::default()
@@ -223,8 +229,9 @@ fn cmd_serve(args: &Args) -> kom_accel::Result<()> {
     let l = stats.latency();
     println!(
         "served {requests} requests on {workers} workers (max batch {max_batch}, {shards} \
-         shard(s)/worker, pipelining {})",
-        if pipeline { "on" } else { "off" }
+         shard(s)/worker, pipelining {}, fusion {})",
+        if pipeline { "on" } else { "off" },
+        if fuse { "on" } else { "off" }
     );
     println!("  host latency: p50={}us p95={}us p99={}us max={}us", l.p50_us, l.p95_us, l.p99_us, l.max_us);
     println!("  mean batch: {:.2}", stats.mean_batch());
@@ -234,6 +241,13 @@ fn cmd_serve(args: &Args) -> kom_accel::Result<()> {
             "  DMA cycles hidden under compute: {} ({:.0}% of serial traffic+compute charge)",
             stats.overlapped_cycles,
             stats.overlap_fraction() * 100.0
+        );
+    }
+    if fuse {
+        println!(
+            "  DMA cycles eliminated by layer fusion: {} ({:.0}% of the unfused charge)",
+            stats.fused_saved_cycles,
+            stats.fused_fraction() * 100.0
         );
     }
     if shards > 1 {
@@ -254,6 +268,7 @@ fn cmd_cluster(args: &Args) -> kom_accel::Result<()> {
     let batch: usize = args.get_num("batch", 16usize)?;
     let shards: usize = args.get_num("shards", 4usize)?;
     let pipeline = !args.has("no-pipeline");
+    let fuse = !args.has("no-fuse");
     let policy = SchedulePolicy::parse(&args.get_or("policy", "least-outstanding"))?;
     let kind = NetworkKind::parse(&args.get_or("net", "tiny"))?;
     let inst = NetworkInstance::random(Network::build(kind), 42)?;
@@ -266,6 +281,7 @@ fn cmd_cluster(args: &Args) -> kom_accel::Result<()> {
         soc: SocConfig::serving(),
     })?;
     cluster.set_pipeline(pipeline)?;
+    cluster.set_fusion(fuse);
     let per_shard_cap = batch.div_ceil(shards);
     let cdep = inst.deploy_cluster(&mut cluster, per_shard_cap)?;
     let mut sched = Scheduler::new(policy, shards)?;
@@ -283,12 +299,21 @@ fn cmd_cluster(args: &Args) -> kom_accel::Result<()> {
     }
 
     println!(
-        "{}: batch {batch} over {shards} shard(s), policy {policy:?}, pipelining {}",
+        "{}: batch {batch} over {shards} shard(s), policy {policy:?}, pipelining {}, fusion {}",
         inst.net.name,
-        if pipeline { "on" } else { "off" }
+        if pipeline { "on" } else { "off" },
+        if fuse { "on" } else { "off" }
     );
     let mut t = Table::new(&[
-        "shard", "replica", "requests", "cpu", "compute", "mem", "overlapped", "total cycles",
+        "shard",
+        "replica",
+        "requests",
+        "cpu",
+        "compute",
+        "mem",
+        "overlapped",
+        "fused-saved",
+        "total cycles",
     ]);
     for run in &m.shards {
         t.row(vec![
@@ -299,10 +324,17 @@ fn cmd_cluster(args: &Args) -> kom_accel::Result<()> {
             run.metrics.compute_cycles.to_string(),
             run.metrics.mem_cycles.to_string(),
             run.metrics.overlapped_cycles.to_string(),
+            run.metrics.fused_saved_cycles.to_string(),
             run.metrics.total_cycles().to_string(),
         ]);
     }
     println!("{}", t.to_ascii());
+    if fuse {
+        println!(
+            "fused-saved cycles (sum over shards): {}",
+            m.fused_saved_cycles()
+        );
+    }
     println!("cluster cycles (max over shards): {}", m.total_cycles());
     println!("serial sum over shards:           {}", m.serial_cycles());
     println!("parallel speedup:                 {:.2}x", m.parallel_speedup());
@@ -313,6 +345,7 @@ fn cmd_cluster(args: &Args) -> kom_accel::Result<()> {
         soc: SocConfig::serving(),
     })?;
     base.set_pipeline(pipeline)?;
+    base.set_fusion(fuse);
     let base_dep = inst.deploy_cluster(&mut base, batch)?;
     let mut base_sched = Scheduler::new(policy, 1)?;
     let (_, bm) = base_dep.run_sharded(&mut base, &mut base_sched, &slices)?;

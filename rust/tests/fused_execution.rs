@@ -1,0 +1,455 @@
+//! Layer-fusion acceptance tests: scratchpad-resident chains must keep
+//! outputs bit-exact with the host reference while **eliminating** (not
+//! merely overlapping) the intermediate activations' DRAM round trips.
+//!
+//! Gates:
+//! * fused + pipelined beats pipelined-only by ≥ 1.15× on a batch-8 Tiny
+//!   run (cycle-model analysis predicts ≈ 1.5×: the conv→pool→conv→pool
+//!   and fc→fc chains skip ~78% of the remaining memory traffic), with
+//!   `fused_saved_cycles > 0` asserted on the raw SoC counter,
+//! * the PR 1–3 claims still hold with fusion enabled: batched fused
+//!   serving ≥ 1.5× over sequential, fused+pipelined ≥ 1.2× over the
+//!   serial model, and 4-shard fused scale-out ≥ 1.5× over 1 shard
+//!   (fusion strips the memory term sharding parallelized super-linearly,
+//!   so the composed strong-scaling number is reconfiguration-bound at a
+//!   measured ≈ 1.7× — the unfused ≥ 2× gate in `cluster_sharding.rs` is
+//!   unchanged).
+//!
+//! Regressions: a chain that *barely* misses the residency budget (the
+//! resident intermediate and the consumer's weights now compete for the
+//! same scratchpad words) falls back cleanly; `reset_arena` invalidates
+//! fusion-plan address bindings; a forced row-band-tiled chain stays
+//! bit-exact.
+
+use kom_accel::accel::{Driver, FuseMode, FusionCtl, FusionPlan, LayerDesc, SocConfig};
+use kom_accel::cnn::networks::{Network, NetworkInstance, NetworkKind};
+use kom_accel::cnn::Tensor;
+
+fn soc() -> SocConfig {
+    SocConfig::serving()
+}
+
+fn tiny_instance() -> NetworkInstance {
+    NetworkInstance::random(Network::build(NetworkKind::Tiny), 42).unwrap()
+}
+
+fn pack(inputs: &[Tensor]) -> Vec<i64> {
+    let mut packed = Vec::new();
+    for t in inputs {
+        packed.extend_from_slice(&t.data);
+    }
+    packed
+}
+
+#[test]
+fn fused_batch8_tiny_at_least_1_15x_over_pipelined_only() {
+    let inst = tiny_instance();
+    let batch = 8usize;
+    let inputs: Vec<Tensor> = (0..batch)
+        .map(|i| Tensor::random(vec![1, 16, 16], 127, 5000 + i as u64))
+        .collect();
+
+    // baseline: pipelined-only (PR 3's model — traffic hidden, not skipped)
+    let mut p_drv = Driver::new(soc());
+    p_drv.set_pipeline(true).unwrap();
+    let p_dep = inst.deploy_batched(&mut p_drv, batch).unwrap();
+    p_drv.write_region(p_dep.in_addr, &pack(&inputs)).unwrap();
+    let pm = p_dep.run(&mut p_drv, batch as u32).unwrap();
+    assert_eq!(pm.fused_saved_cycles, 0, "fusion is off on the baseline");
+
+    // fused + pipelined: fresh driver, same weights, same inputs
+    let mut f_drv = Driver::new(soc());
+    f_drv.set_pipeline(true).unwrap();
+    f_drv.set_fusion(true);
+    let f_dep = inst.deploy_batched(&mut f_drv, batch).unwrap();
+    assert!(
+        !f_dep.fusion_groups.is_empty(),
+        "Tiny at batch 8 must plan at least one fused chain"
+    );
+    f_drv.write_region(f_dep.in_addr, &pack(&inputs)).unwrap();
+    let fm = f_dep.run(&mut f_drv, batch as u32).unwrap();
+
+    // (a) bit-exact with the host reference for every request
+    let flat = f_drv
+        .read_region(f_dep.out_addr, batch * f_dep.out_len)
+        .unwrap();
+    for (i, t) in inputs.iter().enumerate() {
+        let want = inst.forward_ref(t).unwrap();
+        assert_eq!(
+            &flat[i * f_dep.out_len..(i + 1) * f_dep.out_len],
+            &want.data[..],
+            "request {i} with fusion on ≡ forward_ref"
+        );
+    }
+
+    // (b) the raw SoC counter must show eliminated traffic, and the
+    // overlap invariant must survive the composition (asserted on the raw
+    // counter, not the clamped metric — the driver is fresh)
+    assert!(
+        f_drv.soc.fused_saved_cycles > 0,
+        "fusion must eliminate DMA traffic on the raw SoC counter"
+    );
+    assert_eq!(f_drv.soc.fused_saved_cycles, fm.fused_saved_cycles);
+    let raw = f_drv.soc.overlapped_cycles;
+    assert!(
+        raw <= f_drv.soc.compute_cycles().min(f_drv.soc.mem_cycles()),
+        "raw overlapped {raw} > min(compute {}, mem {}) with fusion on",
+        f_drv.soc.compute_cycles(),
+        f_drv.soc.mem_cycles()
+    );
+    assert_eq!(raw, fm.overlapped_cycles, "clamp must be a no-op");
+    assert!(fm.fused_fraction() > 0.5, "most remaining traffic is re-reads");
+
+    // (c) ≥ 1.15× over pipelined-only (analysis predicts ≈ 1.5×)
+    let speedup = pm.total_cycles() as f64 / fm.total_cycles() as f64;
+    assert!(
+        speedup >= 1.15,
+        "fusion speedup {speedup:.3}× < 1.15× (pipelined-only {} cycles, fused {})",
+        pm.total_cycles(),
+        fm.total_cycles()
+    );
+}
+
+#[test]
+fn fused_bit_exact_on_every_tiny_prefix_table() {
+    // every prefix of the Tiny table is itself a layer table: the fused
+    // run's final output region must match the unfused serial run's,
+    // word for word, at batch 1 and 8 (intermediate regions legitimately
+    // differ — fused intermediates never reach DRAM)
+    let inst = tiny_instance();
+    for &batch in &[1usize, 8] {
+        let inputs: Vec<Tensor> = (0..batch)
+            .map(|i| Tensor::random(vec![1, 16, 16], 127, 6000 + i as u64))
+            .collect();
+        let n_layers = {
+            let mut drv = Driver::new(soc());
+            inst.deploy_batched(&mut drv, batch).unwrap().descs.len()
+        };
+        for k in 1..=n_layers {
+            let mut s_drv = Driver::new(soc());
+            let s_dep = inst.deploy_batched(&mut s_drv, batch).unwrap();
+            s_drv.write_region(s_dep.in_addr, &pack(&inputs)).unwrap();
+            s_drv.run_table_batch(&s_dep.descs[..k], batch as u32).unwrap();
+
+            let mut f_drv = Driver::new(soc());
+            f_drv.set_pipeline(true).unwrap();
+            f_drv.set_fusion(true);
+            let f_dep = inst.deploy_batched(&mut f_drv, batch).unwrap();
+            f_drv.write_region(f_dep.in_addr, &pack(&inputs)).unwrap();
+            let m = f_drv.run_table_batch(&f_dep.descs[..k], batch as u32).unwrap();
+            assert_eq!(m.layers as usize, k);
+
+            let out_addr = s_dep.descs[k - 1].out_addr();
+            let out_len = batch * s_dep.descs[k - 1].out_len();
+            assert_eq!(
+                f_drv.read_region(out_addr, out_len).unwrap(),
+                s_drv.read_region(out_addr, out_len).unwrap(),
+                "prefix of {k} layers at batch {batch}: fused ≠ unfused"
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_bit_exact_on_mini_networks() {
+    // conv-heavy (VggMini: 3×3 stacks whose whole intermediates do NOT
+    // fit at batch 8, so its chains run row-band tiled) and big-kernel
+    // (AlexNetMini) architectures, batch ∈ {1, 8}
+    for kind in [NetworkKind::VggMini, NetworkKind::AlexNetMini] {
+        let inst = NetworkInstance::random(Network::build(kind), 7).unwrap();
+        for &batch in &[1usize, 8] {
+            let inputs: Vec<Tensor> = (0..batch)
+                .map(|i| Tensor::random(inst.net.input.dims(), 127, 7000 + i as u64))
+                .collect();
+            let mut drv = Driver::new(soc());
+            drv.set_pipeline(true).unwrap();
+            drv.set_fusion(true);
+            let dep = inst.deploy_batched(&mut drv, batch).unwrap();
+            assert!(!dep.fusion_groups.is_empty(), "{kind:?} must fuse something");
+            drv.write_region(dep.in_addr, &pack(&inputs)).unwrap();
+            let m = dep.run(&mut drv, batch as u32).unwrap();
+            assert!(m.fused_saved_cycles > 0, "{kind:?} batch {batch}");
+            let raw = drv.soc.overlapped_cycles;
+            assert!(
+                raw <= drv.soc.compute_cycles().min(drv.soc.mem_cycles()),
+                "{kind:?} batch {batch}: overlap invariant with fusion on"
+            );
+            let flat = drv.read_region(dep.out_addr, batch * dep.out_len).unwrap();
+            for (i, t) in inputs.iter().enumerate() {
+                let want = inst.forward_ref(t).unwrap();
+                assert_eq!(
+                    &flat[i * dep.out_len..(i + 1) * dep.out_len],
+                    &want.data[..],
+                    "{kind:?} batch {batch} request {i} ≡ forward_ref"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn forced_row_band_tiled_chain_is_bit_exact() {
+    // shrink the scratchpad so Tiny's conv1→pool1 intermediate (8 × 2048
+    // words at batch 8) cannot be whole-buffer resident: budget is
+    // 4096 − 2·512 = 3072 words, so the planner must fall back to the
+    // (2+2)·16·8 = 512-word row band — and the outputs must not change
+    let small = SocConfig {
+        dram_words: 1 << 21,
+        spad_words: 4096,
+        ..Default::default()
+    };
+    let inst = tiny_instance();
+    let batch = 8usize;
+    let inputs: Vec<Tensor> = (0..batch)
+        .map(|i| Tensor::random(vec![1, 16, 16], 127, 7500 + i as u64))
+        .collect();
+
+    let mut drv = Driver::new(small);
+    drv.set_fusion(true);
+    let dep = inst.deploy_batched(&mut drv, batch).unwrap();
+    // confirm the plan really is row-band on the first edge
+    let plan = FusionPlan::plan(
+        &dep.descs,
+        batch as u32,
+        small.spad_words,
+        small.spad_words / small.spad_banks,
+    );
+    let edge = plan.edge(0).expect("conv1→pool1 must still fuse");
+    assert_eq!(edge.mode, FuseMode::RowBand, "whole buffer cannot fit");
+    assert_eq!(edge.resident_words, (2 + 2) * 16 * 8);
+
+    drv.write_region(dep.in_addr, &pack(&inputs)).unwrap();
+    let m = dep.run(&mut drv, batch as u32).unwrap();
+    assert!(m.fused_saved_cycles > 0, "the row band still skips DRAM");
+    let flat = drv.read_region(dep.out_addr, batch * dep.out_len).unwrap();
+    for (i, t) in inputs.iter().enumerate() {
+        let want = inst.forward_ref(t).unwrap();
+        assert_eq!(
+            &flat[i * dep.out_len..(i + 1) * dep.out_len],
+            &want.data[..],
+            "request {i} through a row-band-tiled chain ≡ forward_ref"
+        );
+    }
+}
+
+/// Build a two-FC chain on a 256-word-scratchpad driver: 2 → 32 → n_out.
+/// The fused intermediate (32 words) plus the consumer's `32·n_out +
+/// n_out` weight words are charged against the 192-word residency budget
+/// together, so `n_out = 4` (164 words) fuses and `n_out = 5` (197 words)
+/// barely does not.
+fn fc_chain(n_out2: u32) -> (Driver, Vec<LayerDesc>, u32, Vec<i64>) {
+    let mut drv = Driver::new(SocConfig {
+        dram_words: 1 << 12,
+        spad_words: 256,
+        ..Default::default()
+    });
+    let w1: Vec<i64> = (0..64).map(|i| (i % 7) - 3).collect();
+    let b1: Vec<i64> = (0..32).map(|i| i % 5).collect();
+    let w2: Vec<i64> = (0..32 * n_out2 as i64).map(|i| (i % 9) - 4).collect();
+    let b2: Vec<i64> = (0..n_out2 as i64).collect();
+    let input = vec![3i64, -2];
+    let w1_addr = drv.upload(&w1).unwrap();
+    let b1_addr = drv.upload(&b1).unwrap();
+    let w2_addr = drv.upload(&w2).unwrap();
+    let b2_addr = drv.upload(&b2).unwrap();
+    let in_addr = drv.upload(&input).unwrap();
+    let mid_addr = drv.alloc(32).unwrap();
+    let out_addr = drv.alloc(n_out2 as usize).unwrap();
+    let descs = vec![
+        LayerDesc::Fc {
+            n_in: 2,
+            n_out: 32,
+            w_addr: w1_addr,
+            b_addr: b1_addr,
+            in_addr,
+            out_addr: mid_addr,
+            relu: true,
+            out_shift: 0,
+        },
+        LayerDesc::Fc {
+            n_in: 32,
+            n_out: n_out2,
+            w_addr: w2_addr,
+            b_addr: b2_addr,
+            in_addr: mid_addr,
+            out_addr,
+            relu: false,
+            out_shift: 0,
+        },
+    ];
+    (drv, descs, out_addr, input)
+}
+
+#[test]
+fn chain_barely_over_the_shared_budget_falls_back_cleanly() {
+    // satellite regression: resident activations and the consumer's
+    // weights now compete for the same scratchpad words — a chain that
+    // *barely* does not fit must fall back to the DRAM path (bit-exact,
+    // nothing resident, nothing "saved") instead of corrupting the pong
+    // bank or double-booking capacity
+    for (n_out2, should_fuse) in [(4u32, true), (5u32, false)] {
+        let plan_check = {
+            let (_, descs, ..) = fc_chain(n_out2);
+            FusionPlan::plan(&descs, 1, 256, 32)
+        };
+        assert_eq!(
+            plan_check.edge(0).is_some(),
+            should_fuse,
+            "n_out {n_out2}: 32 resident + {} weight words vs 192-word budget",
+            32 * n_out2 + n_out2
+        );
+
+        // unfused reference
+        let (mut base, descs, out_addr, _) = fc_chain(n_out2);
+        base.run_table(&descs).unwrap();
+        let want = base.read_region(out_addr, n_out2 as usize).unwrap();
+
+        // fused driver: same outputs either way; savings only when fused
+        let (mut drv, descs, out_addr, _) = fc_chain(n_out2);
+        drv.set_fusion(true);
+        let m = drv.run_table(&descs).unwrap();
+        assert_eq!(
+            drv.read_region(out_addr, n_out2 as usize).unwrap(),
+            want,
+            "n_out {n_out2}"
+        );
+        assert_eq!(m.fused_saved_cycles > 0, should_fuse, "n_out {n_out2}");
+        assert_eq!(drv.soc.resident_words(), 0, "nothing stays claimed after a run");
+        // the weight cache never exceeds what the scratchpad can hold
+        // alongside staging banks and residents
+        assert!(drv.soc.weight_cache_words() <= drv.soc.residency_budget());
+    }
+}
+
+#[test]
+fn reset_arena_invalidates_fusion_address_bindings() {
+    // leave a resident claim behind (as an aborted run would), then make
+    // sure the arena reset drops it — a stale binding at a reused address
+    // would serve the previous deployment's activations
+    let (mut drv, descs, ..) = fc_chain(4);
+    let ctl = FusionCtl {
+        fuse_next: true,
+        spad_binding: 2 * (256 / 8),
+        resident_words: 32,
+    };
+    drv.soc.exec_descriptor_fused(&descs[0], ctl).unwrap();
+    assert_eq!(drv.soc.resident_words(), 32, "claim is live");
+    drv.reset_arena();
+    assert_eq!(
+        drv.soc.resident_words(),
+        0,
+        "reset_arena must invalidate fusion-plan address bindings"
+    );
+
+    // and end to end: reuse the addresses for new weights, run fused —
+    // the outputs must reflect the NEW deployment
+    let (mut drv, descs, out_addr, _) = fc_chain(4);
+    drv.set_fusion(true);
+    drv.run_table(&descs).unwrap();
+    let first = drv.read_region(out_addr, 4).unwrap();
+    drv.reset_arena();
+    // identical redeploy but with doubled fc2 bias: outputs must shift
+    let w1: Vec<i64> = (0..64).map(|i| (i % 7) - 3).collect();
+    let b1: Vec<i64> = (0..32).map(|i| i % 5).collect();
+    let w2: Vec<i64> = (0..32 * 4).map(|i| (i % 9) - 4).collect();
+    let b2: Vec<i64> = (0..4).map(|i| 100 + i).collect();
+    drv.upload(&w1).unwrap();
+    drv.upload(&b1).unwrap();
+    drv.upload(&w2).unwrap();
+    drv.upload(&b2).unwrap();
+    drv.upload(&[3i64, -2]).unwrap();
+    drv.alloc(32).unwrap();
+    let out2 = drv.alloc(4).unwrap();
+    assert_eq!(out2, out_addr, "the arena reuses the same addresses");
+    drv.run_table(&descs).unwrap();
+    let second = drv.read_region(out_addr, 4).unwrap();
+    let shifted: Vec<i64> = first.iter().map(|&v| v + 100).collect();
+    assert_eq!(
+        second,
+        shifted,
+        "stale resident claims or weights would reproduce the first output"
+    );
+}
+
+#[test]
+fn pr1_pr3_gates_hold_and_sharding_composes_with_fusion() {
+    let inst = tiny_instance();
+    let batch = 8usize;
+    let inputs: Vec<Tensor> = (0..batch)
+        .map(|i| Tensor::random(vec![1, 16, 16], 127, 8200 + i as u64))
+        .collect();
+
+    // sequential serial baseline: one run per request (PR 1's baseline)
+    let mut seq = Driver::new(soc());
+    let seq_dep = inst.deploy_batched(&mut seq, 1).unwrap();
+    let mut seq_cycles = 0u64;
+    for t in &inputs {
+        seq.write_region(seq_dep.in_addr, &t.data).unwrap();
+        seq_cycles += seq_dep.run(&mut seq, 1).unwrap().total_cycles();
+    }
+
+    // batched serial baseline (PR 3's denominator)
+    let mut ser = Driver::new(soc());
+    let ser_dep = inst.deploy_batched(&mut ser, batch).unwrap();
+    ser.write_region(ser_dep.in_addr, &pack(&inputs)).unwrap();
+    let ser_m = ser_dep.run(&mut ser, batch as u32).unwrap();
+
+    // fused + pipelined batched run
+    let mut drv = Driver::new(soc());
+    drv.set_pipeline(true).unwrap();
+    drv.set_fusion(true);
+    let dep = inst.deploy_batched(&mut drv, batch).unwrap();
+    drv.write_region(dep.in_addr, &pack(&inputs)).unwrap();
+    let m = dep.run(&mut drv, batch as u32).unwrap();
+
+    // PR 1: batching still ≥ 1.5× over sequential, now with fusion on
+    let batched_speedup = seq_cycles as f64 / m.total_cycles() as f64;
+    assert!(
+        batched_speedup >= 1.5,
+        "fused batched {batched_speedup:.2}× < 1.5× over sequential"
+    );
+    // PR 3: ≥ 1.2× over the serial model still holds (fusion only widens it)
+    let pipe_speedup = ser_m.total_cycles() as f64 / m.total_cycles() as f64;
+    assert!(
+        pipe_speedup >= 1.2,
+        "fused+pipelined {pipe_speedup:.2}× < 1.2× over serial"
+    );
+
+    // PR 2 composed: 4 fused shards vs 1 fused shard on batch 16, warmed.
+    // Fusion removes the memory term sharding parallelized super-linearly,
+    // leaving per-shard reconfiguration as the serial fraction — the
+    // honest composed gate is ≥ 1.5× (measured ≈ 1.7×; the unfused ≥ 2×
+    // gate lives in cluster_sharding.rs and is unchanged).
+    use kom_accel::cluster::{Cluster, ClusterConfig, SchedulePolicy, Scheduler};
+    let inputs16: Vec<Tensor> = (0..16)
+        .map(|i| Tensor::random(vec![1, 16, 16], 127, 8300 + i as u64))
+        .collect();
+    let slices: Vec<&[i64]> = inputs16.iter().map(|t| t.data.as_slice()).collect();
+    let mut cycles = [0u64; 2];
+    for (idx, shards) in [1usize, 4].into_iter().enumerate() {
+        let mut cluster = Cluster::new(ClusterConfig {
+            replicas: shards,
+            soc: soc(),
+        })
+        .unwrap();
+        cluster.set_pipeline(true).unwrap();
+        cluster.set_fusion(true);
+        let cdep = inst.deploy_cluster(&mut cluster, 16usize.div_ceil(shards)).unwrap();
+        let mut sched = Scheduler::new(SchedulePolicy::LeastOutstandingCycles, shards).unwrap();
+        cdep.run_sharded(&mut cluster, &mut sched, &slices).unwrap(); // warm
+        let (outs, sm) = cdep.run_sharded(&mut cluster, &mut sched, &slices).unwrap();
+        assert!(sm.fused_saved_cycles() > 0, "{shards} shard(s)");
+        for (i, t) in inputs16.iter().enumerate() {
+            let want = inst.forward_ref(t).unwrap();
+            assert_eq!(outs[i], want.data, "request {i}, {shards} fused shard(s)");
+        }
+        cycles[idx] = sm.total_cycles();
+    }
+    let shard_speedup = cycles[0] as f64 / cycles[1] as f64;
+    assert!(
+        shard_speedup >= 1.5,
+        "4 fused shards {shard_speedup:.2}× < 1.5× over 1 (1: {} cycles, 4: {})",
+        cycles[0],
+        cycles[1]
+    );
+}
