@@ -307,6 +307,73 @@ fn main() {
         Err(e) => println!("(could not write BENCH_fusion.json: {e})"),
     }
 
+    // ---- compiled plans: cold vs warm execution ------------------------
+    // The cold dispatch compiles the execution plan (fusion planning,
+    // descriptor encoding, control program) and loads the engine's
+    // configuration contexts; warm dispatches execute the cached plan and
+    // skip every per-layer reconfiguration. Fused + pipelined + config
+    // cache on — the full serving configuration. Emitted as
+    // BENCH_plan_cache.json so CI tracks the warm-path trajectory.
+    println!("===== compiled plans: cold vs warm (simulated cluster cycles/req, batch 16) =====");
+    let plan_batch = 16usize;
+    let mut t = Table::new(&[
+        "shards",
+        "cold cycles/req",
+        "warm cycles/req",
+        "warm speedup",
+        "reconf skipped",
+        "plan hit rate",
+    ]);
+    let mut json_rows = Vec::new();
+    for shards in [1usize, 2, 4] {
+        let slices: Vec<&[i64]> = inputs[..plan_batch].iter().map(|t| t.data.as_slice()).collect();
+        let mut cluster = Cluster::new(ClusterConfig {
+            replicas: shards,
+            soc: bench_soc(),
+        })
+        .unwrap();
+        cluster.set_pipeline(true).unwrap();
+        cluster.set_fusion(true);
+        cluster.set_config_cache(true);
+        let cdep = inst
+            .deploy_cluster(&mut cluster, plan_batch.div_ceil(shards))
+            .unwrap();
+        let mut sched = Scheduler::new(SchedulePolicy::LeastOutstandingCycles, shards).unwrap();
+        let (_, cold) = cdep.run_sharded(&mut cluster, &mut sched, &slices).unwrap();
+        let (_, warm) = cdep.run_sharded(&mut cluster, &mut sched, &slices).unwrap();
+        let cold_per = cold.total_cycles() as f64 / plan_batch as f64;
+        let warm_per = warm.total_cycles() as f64 / plan_batch as f64;
+        let speedup = cold.total_cycles() as f64 / warm.total_cycles().max(1) as f64;
+        let skipped = warm.reconfigs_skipped();
+        let (hits, compiles) = cluster.plan_cache_stats();
+        let hit_rate = hits as f64 / (hits + compiles).max(1) as f64;
+        t.row(vec![
+            shards.to_string(),
+            format!("{cold_per:.0}"),
+            format!("{warm_per:.0}"),
+            format!("{speedup:.2}x"),
+            skipped.to_string(),
+            format!("{:.0}%", hit_rate * 100.0),
+        ]);
+        json_rows.push(format!(
+            "    {{\"shards\": {shards}, \"batch\": {plan_batch}, \
+             \"cold_cycles_per_req\": {cold_per:.1}, \
+             \"warm_cycles_per_req\": {warm_per:.1}, \
+             \"warm_speedup\": {speedup:.4}, \
+             \"warm_reconfigs_skipped\": {skipped}, \
+             \"plan_cache_hit_rate\": {hit_rate:.4}}}"
+        ));
+    }
+    println!("{}", t.to_ascii());
+    let json = format!(
+        "{{\n  \"bench\": \"plan_cache\",\n  \"network\": \"tiny\",\n  \"rows\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    match std::fs::write("BENCH_plan_cache.json", &json) {
+        Ok(()) => println!("wrote BENCH_plan_cache.json (cold vs warm compiled-plan execution)"),
+        Err(e) => println!("(could not write BENCH_plan_cache.json: {e})"),
+    }
+
     // XLA-artifact execution path (the L1/L2 kernels through PJRT)
     match ArtifactStore::open(Path::new("artifacts")) {
         Ok(store) => match Runtime::cpu() {

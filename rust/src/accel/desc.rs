@@ -24,7 +24,7 @@
 //! before fusion existed decode unchanged.
 
 use crate::error::{Error, Result};
-use crate::systolic::PoolKind;
+use crate::systolic::{EngineConfig, EngineMode, PoolKind};
 
 /// Maximum words a descriptor occupies in control RAM.
 pub const DESC_WORDS: usize = 16;
@@ -379,6 +379,72 @@ impl LayerDesc {
             } => vec![(taps_addr, n_taps)],
             LayerDesc::Pool { .. } | LayerDesc::End => Vec::new(),
         }
+    }
+
+    /// Build the [`EngineConfig`] this descriptor programs into the
+    /// fabric, given its staged coefficient regions in
+    /// [`LayerDesc::weight_regions`] order. `None` for `End`. The SoC's
+    /// execution path and the plan compiler's per-layer fingerprints both
+    /// go through here, so a plan's predicted configuration identity can
+    /// never drift from what the engine actually loads.
+    pub fn engine_config(&self, mut regions: Vec<Vec<i64>>) -> Option<EngineConfig> {
+        Some(match *self {
+            LayerDesc::Conv {
+                cout,
+                cin,
+                k,
+                stride,
+                pad,
+                relu,
+                out_shift,
+                ..
+            } => EngineConfig {
+                mode: EngineMode::Conv2d {
+                    cout: cout as usize,
+                    cin: cin as usize,
+                    kh: k as usize,
+                    kw: k as usize,
+                    stride: stride as usize,
+                    pad: pad as usize,
+                    weights: std::mem::take(regions.get_mut(0)?),
+                },
+                relu,
+                out_shift,
+            },
+            LayerDesc::Pool { k, stride, kind, .. } => EngineConfig {
+                mode: EngineMode::Pool {
+                    k: k as usize,
+                    stride: stride as usize,
+                    kind,
+                },
+                relu: false,
+                out_shift: 0,
+            },
+            LayerDesc::Fc {
+                n_in,
+                n_out,
+                relu,
+                out_shift,
+                ..
+            } => EngineConfig {
+                mode: EngineMode::Fc {
+                    n_in: n_in as usize,
+                    n_out: n_out as usize,
+                    weights: std::mem::take(regions.get_mut(0)?),
+                    bias: std::mem::take(regions.get_mut(1)?),
+                },
+                relu,
+                out_shift,
+            },
+            LayerDesc::Fir { .. } => EngineConfig {
+                mode: EngineMode::Fir {
+                    taps: std::mem::take(regions.get_mut(0)?),
+                },
+                relu: false,
+                out_shift: 0,
+            },
+            LayerDesc::End => return None,
+        })
     }
 
     /// Output element count per image given the descriptor geometry (a

@@ -9,11 +9,19 @@
 
 use super::desc::{LayerDesc, DESC_WORDS};
 use super::fusion::FusionPlan;
+use super::plan::{encode_raw, encode_table_image, CompiledPlan, PlanCache, PlanKey};
 use super::soc::{map, Soc, SocConfig};
 use crate::cluster::ShardPlan;
 use crate::error::{Error, Result};
 use crate::riscv::asm::{reg, Assembler};
 use crate::riscv::cpu::{Bus, Cpu, StopReason};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Process-unique driver identities — what stamps a [`CompiledPlan`] to
+/// its compiling driver, so a handle can never silently execute against
+/// another driver's DRAM just because two epoch counters coincide.
+static NEXT_DRIVER_ID: AtomicU64 = AtomicU64::new(0);
 
 /// Metrics from one accelerator run.
 #[derive(Clone, Copy, Debug, Default)]
@@ -38,6 +46,14 @@ pub struct RunMetrics {
     pub fused_saved_cycles: u64,
     /// Engine reconfigurations.
     pub reconfigs: u64,
+    /// Engine reconfigurations skipped by the configuration-context cache
+    /// (0 unless [`Driver::set_config_cache`] enabled it): the layer's
+    /// configuration was already resident on-chip, so the switch charged
+    /// 0 cycles. On a warm run of an unchanged table this equals `layers`.
+    pub reconfigs_skipped: u64,
+    /// Did this run execute a cached [`CompiledPlan`] (plan-cache hit)
+    /// rather than compiling one?
+    pub plan_hit: bool,
     /// Layers executed.
     pub layers: u64,
     /// MAC/reduce operations.
@@ -146,6 +162,22 @@ impl ShardedMetrics {
         self.shards.iter().map(|s| s.metrics.fused_saved_cycles).sum()
     }
 
+    /// Engine reconfigurations performed across all shards.
+    pub fn reconfigs(&self) -> u64 {
+        self.shards.iter().map(|s| s.metrics.reconfigs).sum()
+    }
+
+    /// Engine reconfigurations skipped by the configuration-context cache
+    /// across all shards (0 when the cache is off or every run was cold).
+    pub fn reconfigs_skipped(&self) -> u64 {
+        self.shards.iter().map(|s| s.metrics.reconfigs_skipped).sum()
+    }
+
+    /// Shards of this dispatch that executed a cached plan.
+    pub fn plan_hits(&self) -> u64 {
+        self.shards.iter().filter(|s| s.metrics.plan_hit).count() as u64
+    }
+
     /// MAC/reduce operations across all shards.
     pub fn ops(&self) -> u64 {
         self.shards.iter().map(|s| s.metrics.ops).sum()
@@ -168,10 +200,16 @@ pub struct Driver {
     /// The SoC (exposed for tests and metrics).
     pub soc: Soc,
     next_dram: usize,
-    /// Control-program cache keyed by (descriptor-table length, batch) —
-    /// the program only depends on the layer count and the batch value it
-    /// pokes into the `BATCH` register (EXPERIMENTS.md §Perf).
-    program_cache: std::collections::HashMap<(usize, u32), Vec<u32>>,
+    /// Bounded LRU cache of [`CompiledPlan`]s, keyed by table content,
+    /// batch, fusion setting and scratchpad geometry. Replaces the old
+    /// unbounded `program_cache` (which was keyed only on
+    /// `(n_layers, batch)` and survived `reset_arena`).
+    plans: PlanCache,
+    /// This driver's process-unique identity (stamped into plans).
+    driver_id: u64,
+    /// Bumped by [`Driver::reset_arena`]; plans compiled against an older
+    /// epoch reference reused DRAM addresses and are refused.
+    arena_epoch: u64,
     /// Run descriptor tables through the fusion planner: chained layers
     /// whose intermediates fit the scratchpad skip the DRAM round trip.
     fusion_on: bool,
@@ -183,7 +221,9 @@ impl Driver {
         Driver {
             soc: Soc::new(cfg),
             next_dram: 0,
-            program_cache: std::collections::HashMap::new(),
+            plans: PlanCache::default(),
+            driver_id: NEXT_DRIVER_ID.fetch_add(1, Ordering::Relaxed),
+            arena_epoch: 0,
             fusion_on: false,
         }
     }
@@ -214,9 +254,15 @@ impl Driver {
     /// addresses without this flush would serve stale cached weights. The
     /// same goes for fusion-plan address bindings — a resident-region
     /// claim keyed by a reused DRAM address would serve the *previous*
-    /// deployment's activations, so the reset drops those too.
+    /// deployment's activations, so the reset drops those too. Compiled
+    /// plans are invalidated wholesale for the same reason: their DRAM
+    /// bindings reference addresses the next deployment will reuse, so
+    /// the cache is cleared and the arena epoch bumps — [`Driver::execute`]
+    /// refuses a plan handle compiled before the reset.
     pub fn reset_arena(&mut self) {
         self.next_dram = 0;
+        self.arena_epoch += 1;
+        self.plans.clear();
         self.soc.invalidate_all_weights();
     }
 
@@ -247,6 +293,38 @@ impl Driver {
         self.fusion_on
     }
 
+    /// Enable/disable the engine's configuration-context cache: with it
+    /// on, a reconfiguration whose configuration is already resident
+    /// on-chip charges 0 cycles and bumps
+    /// [`RunMetrics::reconfigs_skipped`] — on a warm run of an unchanged
+    /// table, every per-layer reconfiguration is skipped. Off by default
+    /// (like [`Driver::set_pipeline`] and [`Driver::set_fusion`]) so a
+    /// bare driver keeps the cold cycle model the existing speedup
+    /// baselines are measured against; the serving coordinator enables it.
+    pub fn set_config_cache(&mut self, on: bool) {
+        self.soc.engine.set_context_cache(on);
+    }
+
+    /// Is the engine configuration-context cache enabled?
+    pub fn config_cache_enabled(&self) -> bool {
+        self.soc.engine.context_cache_enabled()
+    }
+
+    /// `(plan-cache hits, plan compiles)` since this driver came up.
+    pub fn plan_cache_stats(&self) -> (u64, u64) {
+        self.plans.stats()
+    }
+
+    /// Fraction of plan requests served from the cache.
+    pub fn plan_cache_hit_rate(&self) -> f64 {
+        self.plans.hit_rate()
+    }
+
+    /// Resident compiled plans.
+    pub fn plan_cache_len(&self) -> usize {
+        self.plans.len()
+    }
+
     /// Allocate + preload data (host-side, zero cycle cost — model load).
     pub fn upload(&mut self, data: &[i64]) -> Result<u32> {
         let at = self.alloc(data.len())?;
@@ -255,8 +333,13 @@ impl Driver {
     }
 
     /// Overwrite an existing region (e.g. per-request input tensor).
+    /// Cached plans whose **weight bindings** overlap the write are
+    /// dropped — their compile-time layer fingerprints no longer describe
+    /// the DRAM contents. Input-region rewrites (the serving hot path)
+    /// bind no plan and drop nothing.
     pub fn write_region(&mut self, addr: u32, data: &[i64]) -> Result<()> {
         self.soc.invalidate_weights(addr, data.len());
+        self.plans.invalidate_region(addr, data.len());
         self.soc.dram.preload(addr as usize, data)
     }
 
@@ -323,34 +406,152 @@ impl Driver {
     /// `batch` images packed back to back in every layer's in/out region.
     /// The whole batch travels to the SoC as one unit: one control-program
     /// run, one engine reconfiguration per layer, batch-sized DMA bursts.
+    ///
+    /// This is now a thin `compile → execute` split: the first submission
+    /// of a `(table, batch)` pays for fusion planning, descriptor
+    /// encoding, control-program assembly and fingerprinting; repeats hit
+    /// the plan cache and go straight to [`Driver::execute`].
     pub fn run_table_batch(&mut self, descs: &[LayerDesc], batch: u32) -> Result<RunMetrics> {
+        let (plan, was_hit) = self.compile_inner(descs, batch)?;
+        let mut m = self.execute(&plan)?;
+        m.plan_hit = was_hit;
+        Ok(m)
+    }
+
+    /// The key under which this driver would cache a plan for
+    /// `(descs, batch)` — table content, batch, current fusion setting and
+    /// scratchpad geometry.
+    pub fn plan_key(&self, descs: &[LayerDesc], batch: u32) -> PlanKey {
+        PlanKey::new(
+            descs,
+            batch,
+            self.fusion_on,
+            self.soc.config().spad_words,
+            self.soc.spad.bank_words(),
+        )
+    }
+
+    /// Compile `(descs, batch)` into a [`CompiledPlan`] — fusion plan,
+    /// encoded control-RAM image, control program, per-layer engine-config
+    /// fingerprints and DRAM weight bindings — or return the cached plan
+    /// if an identical one is resident. Host-side work: no simulated
+    /// cycles are charged. (Fingerprinting reads each weight region back
+    /// from DRAM once per compile; networks big enough for that to matter
+    /// cannot fit the modeled DRAM in the first place.)
+    pub fn compile(&mut self, descs: &[LayerDesc], batch: u32) -> Result<Arc<CompiledPlan>> {
+        self.compile_inner(descs, batch).map(|(plan, _)| plan)
+    }
+
+    /// [`Driver::compile`] plus whether the plan came from the cache —
+    /// what `run_table_batch` records as [`RunMetrics::plan_hit`].
+    fn compile_inner(&mut self, descs: &[LayerDesc], batch: u32) -> Result<(Arc<CompiledPlan>, bool)> {
         if batch == 0 {
             return Err(Error::Accel("batch of 0".into()));
         }
-        // resident claims only have meaning within one run; drop anything
-        // a previous (possibly aborted) run left behind before planning
-        self.soc.clear_resident();
-        if self.fusion_on {
-            let plan = FusionPlan::plan(
-                descs,
-                batch,
-                self.soc.config().spad_words,
-                self.soc.spad.bank_words(),
-            );
-            self.soc.write_descriptors_fused(0, descs, &plan)?;
-        } else {
-            self.soc.write_descriptors(0, descs)?;
-        }
-        let key = (descs.len(), batch);
-        let program = match self.program_cache.get(&key) {
-            Some(p) => p.clone(),
-            None => {
-                let p = Self::control_program(descs.len(), batch)?;
-                self.program_cache.insert(key, p.clone());
-                p
+        let raw = encode_raw(descs);
+        let key = PlanKey::from_raw(
+            &raw,
+            batch,
+            self.fusion_on,
+            self.soc.config().spad_words,
+            self.soc.spad.bank_words(),
+        );
+        if let Some(plan) = self.plans.get(&key) {
+            // byte-verify the hit: a table_fp collision (astronomically
+            // unlikely, but a hash) degrades to a recompile that replaces
+            // the colliding entry — never to executing the wrong plan
+            if plan.src_words == raw {
+                return Ok((plan, true));
             }
+        }
+        let fusion = if self.fusion_on {
+            FusionPlan::plan(descs, batch, key.spad_words, key.bank_words)
+        } else {
+            FusionPlan::none(descs.len())
         };
-        let mut cpu = Cpu::new(program, map::ROM_BASE);
+        let table_words = encode_table_image(descs, &fusion);
+        let program = Self::control_program(descs.len(), batch)?;
+        let weight_regions: Vec<(u32, u32)> =
+            descs.iter().flat_map(|d| d.weight_regions()).collect();
+        // per-layer configuration identities, from the weights as they sit
+        // in DRAM right now (host-side read, no cycles) through the same
+        // builder the SoC executes — a later host rewrite of any bound
+        // region invalidates the plan via `write_region`
+        let mut layer_fingerprints = Vec::with_capacity(descs.len());
+        for d in descs {
+            let mut regions = Vec::new();
+            for (addr, len) in d.weight_regions() {
+                regions.push(self.read_region(addr, len as usize)?);
+            }
+            let fp = d.engine_config(regions).map(|c| c.fingerprint()).unwrap_or(0);
+            layer_fingerprints.push(fp);
+        }
+        let plan = Arc::new(CompiledPlan {
+            key,
+            n_layers: descs.len(),
+            batch,
+            src_words: raw,
+            table_words,
+            program,
+            fusion_groups: fusion.groups(),
+            fused_edges: fusion.fused_edges(),
+            weight_regions,
+            layer_fingerprints,
+            owner: self.driver_id,
+            epoch: self.arena_epoch,
+        });
+        self.plans.insert(plan.clone());
+        Ok((plan, false))
+    }
+
+    /// Seed this driver's plan cache with a plan another driver compiled
+    /// (cluster replicas sharing one artifact). Accepted only when the
+    /// plan's scratchpad geometry matches this SoC; the adopted copy is
+    /// re-stamped with **this** driver's identity and arena epoch — the
+    /// plan's content is content-addressed by its key, so a later
+    /// `run_table_batch` can only hit it with the byte-identical table.
+    /// Returns whether it was adopted.
+    pub fn seed_plan(&mut self, plan: &Arc<CompiledPlan>) -> bool {
+        if plan.key.spad_words != self.soc.config().spad_words
+            || plan.key.bank_words != self.soc.spad.bank_words()
+        {
+            return false;
+        }
+        let adopted = Arc::new(CompiledPlan {
+            owner: self.driver_id,
+            epoch: self.arena_epoch,
+            ..(**plan).clone()
+        });
+        self.plans.seed(adopted);
+        true
+    }
+
+    /// Execute a compiled plan. Warm-path fast exits: the control-RAM
+    /// image rewrite is skipped when the identical image is resident, and
+    /// (with [`Driver::set_config_cache`] on) per-layer reconfigurations
+    /// whose configuration is already on-chip charge 0 cycles. A plan
+    /// compiled before the last [`Driver::reset_arena`] is refused — its
+    /// DRAM bindings reference reused addresses.
+    pub fn execute(&mut self, plan: &CompiledPlan) -> Result<RunMetrics> {
+        if plan.owner != self.driver_id {
+            return Err(Error::Accel(
+                "foreign plan: compiled by a different driver, whose DRAM layout this \
+                 driver does not share (adopt it via seed_plan + run_table_batch instead)"
+                    .into(),
+            ));
+        }
+        if plan.epoch != self.arena_epoch {
+            return Err(Error::Accel(format!(
+                "stale plan: compiled at arena epoch {} but the driver is at {} \
+                 (reset_arena invalidates plan handles)",
+                plan.epoch, self.arena_epoch
+            )));
+        }
+        // resident claims only have meaning within one run; drop anything
+        // a previous (possibly aborted) run left behind
+        self.soc.clear_resident();
+        self.soc.load_table_image(0, &plan.table_words)?;
+        let mut cpu = Cpu::new(plan.program.clone(), map::ROM_BASE);
         let ops0 = self.soc.engine.stats.ops;
         let cc0 = self.soc.compute_cycles();
         let mc0 = self.soc.mem_cycles();
@@ -358,6 +559,7 @@ impl Driver {
         let fs0 = self.soc.fused_saved_cycles;
         let lr0 = self.soc.layers_run;
         let rc0 = self.soc.engine.stats.reconfigs;
+        let rs0 = self.soc.engine.stats.reconfigs_skipped;
         let stop = cpu.run(&mut self.soc, 10_000_000)?;
         if stop != StopReason::Ecall {
             return Err(Error::Accel("control program exceeded budget".into()));
@@ -377,9 +579,11 @@ impl Driver {
             overlapped_cycles,
             fused_saved_cycles: self.soc.fused_saved_cycles - fs0,
             reconfigs: self.soc.engine.stats.reconfigs - rc0,
+            reconfigs_skipped: self.soc.engine.stats.reconfigs_skipped - rs0,
+            plan_hit: false,
             layers: self.soc.layers_run - lr0,
             ops: self.soc.engine.stats.ops - ops0,
-            requests: batch as u64,
+            requests: plan.batch as u64,
         })
     }
 
@@ -426,6 +630,26 @@ impl Driver {
                 return Err(Error::Cluster(format!(
                     "replica {r} assigned more than one shard"
                 )));
+            }
+        }
+        // compile once, share across replicas: every distinct
+        // (table content, sub-batch) pair is compiled by the first replica
+        // that needs it, and byte-identical siblings adopt a re-stamped
+        // copy into their own plan caches — the concurrent run_table_batch
+        // calls below then all hit. A replica whose scratchpad geometry
+        // diverged just declines the seed and compiles locally.
+        {
+            let mut shared: Vec<Arc<CompiledPlan>> = Vec::new();
+            for (r, job) in job_of.iter().enumerate() {
+                let Some((_, batch)) = *job else { continue };
+                let key = replicas[r].plan_key(tables[r], batch);
+                match shared.iter().position(|p| p.key == key) {
+                    Some(i) => {
+                        let p = shared[i].clone();
+                        replicas[r].seed_plan(&p);
+                    }
+                    None => shared.push(replicas[r].compile(tables[r], batch)?),
+                }
             }
         }
         let mut results: Vec<(usize, usize, Result<RunMetrics>)> = std::thread::scope(|s| {
@@ -785,6 +1009,198 @@ mod tests {
         // mem already excludes the skipped traffic: adding it back gives
         // exactly what the unfused run charged
         assert_eq!(fused.mem_cycles + fused.fused_saved_cycles, unfused.mem_cycles);
+    }
+
+    fn fir_driver() -> (Driver, Vec<LayerDesc>) {
+        let mut drv = Driver::new(SocConfig {
+            dram_words: 4096,
+            spad_words: 512,
+            ..Default::default()
+        });
+        let taps = drv.upload(&[1, 1]).unwrap();
+        let input = drv.upload(&[1, 2, 3, 4]).unwrap();
+        let out = drv.alloc(4).unwrap();
+        let descs = vec![LayerDesc::Fir {
+            taps_addr: taps,
+            n_taps: 2,
+            in_addr: input,
+            n: 4,
+            out_addr: out,
+        }];
+        (drv, descs)
+    }
+
+    #[test]
+    fn repeat_runs_hit_the_plan_cache() {
+        let (mut drv, descs) = fir_driver();
+        let cold = drv.run_table(&descs).unwrap();
+        assert!(!cold.plan_hit, "first run compiles");
+        assert_eq!(drv.plan_cache_stats(), (0, 1));
+        let warm = drv.run_table(&descs).unwrap();
+        assert!(warm.plan_hit, "repeat executes the cached plan");
+        assert_eq!(drv.plan_cache_stats(), (1, 1));
+        assert!((drv.plan_cache_hit_rate() - 0.5).abs() < 1e-12);
+        // warm execution skipped the control-RAM rewrite too
+        assert_eq!(drv.soc.table_loads_skipped, 1);
+        // run_table is run_table_batch at batch 1: the identical key hits
+        assert!(drv.run_table_batch(&descs, 1).unwrap().plan_hit);
+        // a different batch is a different plan: compiling the same table
+        // at batch 2 must miss the cache (FIR cannot *execute* batched,
+        // but the compile-side keying is what this guards)
+        let (_, compiles_before) = drv.plan_cache_stats();
+        drv.compile(&descs, 2).unwrap();
+        assert_eq!(drv.plan_cache_stats().1, compiles_before + 1, "batch keys the plan");
+        drv.set_fusion(true);
+        assert!(!drv.run_table(&descs).unwrap().plan_hit, "fusion flag keys the plan");
+    }
+
+    #[test]
+    fn explicit_compile_execute_split() {
+        let (mut drv, descs) = fir_driver();
+        let plan = drv.compile(&descs, 1).unwrap();
+        assert_eq!(plan.n_layers, 1);
+        assert_eq!(plan.table_words.len(), 2 * DESC_WORDS, "layer + End blocks");
+        assert_eq!(plan.weight_regions, vec![(0, 2)], "taps are the only binding");
+        assert_eq!(plan.layer_fingerprints.len(), 1);
+        let m = drv.execute(&plan).unwrap();
+        assert_eq!(m.layers, 1);
+        assert_eq!(drv.read_region(descs[0].out_addr(), 4).unwrap(), vec![1, 3, 5, 7]);
+        // the plan's fingerprint matches what the engine actually loaded
+        let staged = drv.read_region(0, 2).unwrap();
+        let cfg = descs[0].engine_config(vec![staged]).unwrap();
+        assert_eq!(plan.layer_fingerprints[0], cfg.fingerprint());
+    }
+
+    #[test]
+    fn foreign_plan_handles_are_refused() {
+        // a plan compiled by driver A describes A's DRAM layout; handing
+        // the raw handle to driver B must be a typed error, not a silent
+        // run against unrelated memory — even though both sit at epoch 0
+        let (mut a, descs) = fir_driver();
+        let (mut b, _) = fir_driver();
+        let plan = a.compile(&descs, 1).unwrap();
+        let err = b.execute(&plan).unwrap_err();
+        assert!(err.to_string().contains("foreign plan"), "{err}");
+        // the supported path: adopt via seed_plan, then run the table
+        assert!(b.seed_plan(&plan));
+        let m = b.run_table(&descs).unwrap();
+        assert!(m.plan_hit, "adopted plan serves the byte-identical table");
+        assert_eq!(b.read_region(descs[0].out_addr(), 4).unwrap(), vec![1, 3, 5, 7]);
+    }
+
+    #[test]
+    fn reset_arena_invalidates_plan_handles_and_cache() {
+        let (mut drv, descs) = fir_driver();
+        let plan = drv.compile(&descs, 1).unwrap();
+        drv.reset_arena();
+        assert_eq!(drv.plan_cache_len(), 0, "cache cleared by the reset");
+        let err = drv.execute(&plan).unwrap_err();
+        assert!(err.to_string().contains("stale plan"), "{err}");
+        // recompiling against the fresh arena works
+        let taps = drv.upload(&[1, 1]).unwrap();
+        assert_eq!(taps, 0, "arena reuses addresses");
+        drv.upload(&[1, 2, 3, 4]).unwrap();
+        drv.alloc(4).unwrap();
+        let fresh = drv.compile(&descs, 1).unwrap();
+        assert!(drv.execute(&fresh).is_ok());
+    }
+
+    #[test]
+    fn weight_rewrite_drops_bound_plans_but_not_input_rewrites() {
+        let (mut drv, descs) = fir_driver();
+        drv.run_table(&descs).unwrap();
+        assert_eq!(drv.plan_cache_len(), 1);
+        // input rewrite (the serving hot path): plan survives
+        drv.write_region(descs[0].in_addr(), &[5, 6, 7, 8]).unwrap();
+        assert_eq!(drv.plan_cache_len(), 1);
+        assert!(drv.run_table(&descs).unwrap().plan_hit);
+        assert_eq!(
+            drv.read_region(descs[0].out_addr(), 4).unwrap(),
+            vec![5, 11, 13, 15],
+            "warm plan must see the new inputs"
+        );
+        // weight (taps) rewrite: the bound plan is dropped and recompiled
+        drv.write_region(0, &[2, 2]).unwrap();
+        assert_eq!(drv.plan_cache_len(), 0, "rewritten binding invalidates");
+        let m = drv.run_table(&descs).unwrap();
+        assert!(!m.plan_hit);
+        assert_eq!(
+            drv.read_region(descs[0].out_addr(), 4).unwrap(),
+            vec![10, 22, 26, 30],
+            "recompiled plan reflects the new taps"
+        );
+    }
+
+    #[test]
+    fn config_cache_toggle_skips_warm_reconfigurations() {
+        let (mut drv, descs) = fir_driver();
+        // default off: every run pays its reconfiguration
+        let a = drv.run_table(&descs).unwrap();
+        let b = drv.run_table(&descs).unwrap();
+        assert_eq!((a.reconfigs, a.reconfigs_skipped), (1, 0));
+        assert_eq!((b.reconfigs, b.reconfigs_skipped), (1, 0));
+        assert!(!drv.config_cache_enabled());
+        // enabled: the warm run's reconfiguration is free
+        drv.set_config_cache(true);
+        let warm0 = drv.run_table(&descs).unwrap();
+        assert_eq!((warm0.reconfigs, warm0.reconfigs_skipped), (1, 0), "first sighting loads");
+        let warm1 = drv.run_table(&descs).unwrap();
+        assert_eq!((warm1.reconfigs, warm1.reconfigs_skipped), (0, 1));
+        assert_eq!(
+            warm1.compute_cycles,
+            warm0.compute_cycles - 4,
+            "the skipped reconfiguration's 4 config words charge nothing"
+        );
+        assert_eq!(
+            drv.read_region(descs[0].out_addr(), 4).unwrap(),
+            vec![1, 3, 5, 7],
+            "outputs unchanged by the skip"
+        );
+    }
+
+    #[test]
+    fn sharded_dispatch_shares_one_compiled_plan() {
+        // two replicas, identically deployed: the dispatch compiles the
+        // shard plan once and seeds the sibling, so both runs plan-hit
+        let mk = || {
+            let mut drv = Driver::new(SocConfig {
+                dram_words: 8192,
+                spad_words: 1024,
+                ..Default::default()
+            });
+            let in_addr = drv.alloc(16 * 2).unwrap();
+            let w_addr = drv.upload(&[1, 1, 1, 1]).unwrap();
+            let out_addr = drv.alloc(9 * 2).unwrap();
+            let img: Vec<i64> = (0..16).collect();
+            let mut packed = Vec::new();
+            packed.extend_from_slice(&img);
+            packed.extend_from_slice(&img);
+            drv.write_region(in_addr, &packed).unwrap();
+            let descs = vec![LayerDesc::Conv {
+                cout: 1,
+                cin: 1,
+                k: 2,
+                stride: 1,
+                pad: 0,
+                w_addr,
+                in_addr,
+                h: 4,
+                w: 4,
+                out_addr,
+                relu: false,
+                out_shift: 0,
+            }];
+            (drv, descs)
+        };
+        let (d0, t0) = mk();
+        let (d1, t1) = mk();
+        let mut replicas = vec![d0, d1];
+        let tables: Vec<&[LayerDesc]> = vec![&t0, &t1];
+        let plan = ShardPlan::split(4, 2).unwrap();
+        let m = Driver::run_table_sharded(&mut replicas, &tables, &plan, &[0, 1]).unwrap();
+        assert_eq!(m.plan_hits(), 2, "both shards executed the shared plan");
+        assert_eq!(replicas[0].plan_cache_stats().1, 1, "replica 0 compiled it");
+        assert_eq!(replicas[1].plan_cache_stats().1, 0, "replica 1 was seeded");
     }
 
     #[test]

@@ -7,19 +7,26 @@
 //! * [`fusion`] — the layer-fusion planner: producer→consumer chains
 //!   whose intermediates fit the scratchpad budget skip the DRAM round
 //!   trip (whole-buffer or row-band-tiled residency),
+//! * [`plan`] — compiled execution plans: the plan-once / execute-many
+//!   artifact (fusion plan, encoded descriptor image, control program,
+//!   per-layer configuration fingerprints, DRAM bindings) behind the
+//!   driver's bounded LRU plan cache,
 //! * [`soc`] — the SoC: memory map, MMIO bridge between the control CPU
 //!   and the engine, cycle accounting,
-//! * [`driver`] — host API: load weights, submit a descriptor table, run
-//!   the control program, read back outputs and metrics — including the
-//!   cluster-aware [`Driver::run_table_sharded`] dispatch across
-//!   replicated accelerators (see [`crate::cluster`]).
+//! * [`driver`] — host API: load weights, compile a descriptor table into
+//!   a [`CompiledPlan`], execute it under RISC-V control, read back
+//!   outputs and metrics — including the cluster-aware
+//!   [`Driver::run_table_sharded`] dispatch across replicated
+//!   accelerators (see [`crate::cluster`]).
 
 pub mod desc;
 pub mod driver;
 pub mod fusion;
+pub mod plan;
 pub mod soc;
 
 pub use desc::{FusionCtl, LayerDesc};
 pub use driver::{Driver, RunMetrics, ShardRun, ShardedMetrics};
 pub use fusion::{FuseMode, FusedEdge, FusionGroup, FusionPlan};
+pub use plan::{CompiledPlan, PlanCache, PlanKey};
 pub use soc::{Soc, SocConfig};

@@ -1,0 +1,352 @@
+//! Compiled execution plans: hoist per-run planning out of the hot path.
+//!
+//! Before this module, every [`super::driver::Driver::run_table_batch`]
+//! re-ran the fusion planner, re-encoded the descriptor table, re-wrote
+//! control RAM and re-generated the control program — even when the run
+//! was byte-identical to the previous one, which is exactly what a serving
+//! hot loop looks like. A [`CompiledPlan`] is the **plan-once /
+//! execute-many** artifact that fixes this (the specialize-then-amortize
+//! move of Shen et al.'s resource partitioning and the ahead-of-time
+//! design-point compilation surveyed by Abdelouahab et al.):
+//!
+//! * the fusion plan and its descriptor side-band encoding,
+//! * the fully encoded control-RAM image (layer blocks + `End` block) —
+//!   warm executions whose identical image is already resident in control
+//!   RAM skip the rewrite (byte-compared, see `Soc::load_table_image`),
+//! * the §III control program,
+//! * per-layer [`EngineConfig`](crate::systolic::EngineConfig)
+//!   fingerprints (the configuration identities the engine's context
+//!   cache will see) and the table's DRAM weight bindings — the regions
+//!   whose host rewrite invalidates the plan.
+//!
+//! Plans are cached per driver in a bounded LRU ([`PlanCache`]) keyed by
+//! [`PlanKey`] — descriptor-table content, batch, fusion setting and
+//! scratchpad geometry — replacing the old unbounded `program_cache` that
+//! was keyed only on `(n_layers, batch)` and survived `reset_arena`.
+//! `reset_arena` clears the cache wholesale (a stale plan would reference
+//! reused DRAM addresses); a host rewrite overlapping a plan's weight
+//! bindings drops that plan (its layer fingerprints no longer describe
+//! the DRAM contents). Plans are driver-independent values behind an
+//! `Arc`, so a cluster compiles each distinct `(table, sub-batch)` once
+//! and seeds every replica's cache with the shared artifact.
+
+use super::desc::{LayerDesc, DESC_WORDS};
+use super::fusion::{FusionGroup, FusionPlan};
+use crate::systolic::config::Fnv;
+
+/// FNV-1a 64-bit over a `u32` word stream (descriptor images) — same
+/// shared accumulator as [`crate::systolic::EngineConfig::fingerprint`].
+pub(crate) fn fnv_words(words: &[u32]) -> u64 {
+    let mut h = Fnv::new();
+    h.u32s(words);
+    h.finish()
+}
+
+/// Cache identity of a compiled plan: everything the compiled artifact
+/// depends on. Two tables with identical descriptor encodings, batch,
+/// fusion setting and scratchpad geometry compile to the identical plan —
+/// which is what lets replicas of a cluster share one artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// Fingerprint of the raw (side-band-free) descriptor encodings.
+    pub table_fp: u64,
+    /// Batch the control program pokes into the `BATCH` register.
+    pub batch: u32,
+    /// Was the fusion planner applied?
+    pub fused: bool,
+    /// Scratchpad words the fusion plan was sized against.
+    pub spad_words: usize,
+    /// Staging-bank words the fusion plan was sized against.
+    pub bank_words: usize,
+}
+
+/// Raw (side-band-free) descriptor encodings of a table — the content a
+/// plan's identity is derived from, and what a cache hit is byte-verified
+/// against so a fingerprint collision can never serve the wrong plan.
+pub(crate) fn encode_raw(descs: &[LayerDesc]) -> Vec<u32> {
+    let mut words = Vec::with_capacity(descs.len() * DESC_WORDS);
+    for d in descs {
+        words.extend_from_slice(&d.encode());
+    }
+    words
+}
+
+impl PlanKey {
+    /// Key for `descs` at `batch` under the given fusion/scratchpad
+    /// parameters.
+    pub fn new(
+        descs: &[LayerDesc],
+        batch: u32,
+        fused: bool,
+        spad_words: usize,
+        bank_words: usize,
+    ) -> Self {
+        Self::from_raw(&encode_raw(descs), batch, fused, spad_words, bank_words)
+    }
+
+    /// Key from already-encoded raw descriptor words (avoids re-encoding
+    /// when the caller needs the words too, as the compile path does).
+    pub(crate) fn from_raw(
+        raw_words: &[u32],
+        batch: u32,
+        fused: bool,
+        spad_words: usize,
+        bank_words: usize,
+    ) -> Self {
+        PlanKey {
+            table_fp: fnv_words(raw_words),
+            batch,
+            fused,
+            spad_words,
+            bank_words,
+        }
+    }
+}
+
+/// The compile-once / execute-many artifact (see the module docs). Built
+/// by `Driver::compile`, executed by `Driver::execute`, shared across
+/// cluster replicas behind an `Arc`.
+#[derive(Clone, Debug)]
+pub struct CompiledPlan {
+    /// Cache identity.
+    pub key: PlanKey,
+    /// Layers in the table (excluding the `End` block).
+    pub n_layers: usize,
+    /// Batch baked into the control program.
+    pub batch: u32,
+    /// Raw (side-band-free) descriptor encodings the plan was compiled
+    /// from — byte-verified on every cache hit, so a `table_fp` collision
+    /// degrades to a recompile, never to executing the wrong plan.
+    pub src_words: Vec<u32>,
+    /// Encoded control-RAM image: every layer block plus the `End` block,
+    /// fusion side-band applied. Warm executions whose identical image is
+    /// already resident skip the control-RAM rewrite (byte-compared by
+    /// `Soc::load_table_image`).
+    pub table_words: Vec<u32>,
+    /// Assembled §III control program.
+    pub program: Vec<u32>,
+    /// Maximal fused chains of the plan (reporting/deployment metadata).
+    pub fusion_groups: Vec<FusionGroup>,
+    /// Fused producer→consumer edges (intermediate round trips skipped).
+    pub fused_edges: usize,
+    /// DRAM bindings: every weight region the table stages, as
+    /// `(addr, words)`. A host rewrite overlapping any of these drops the
+    /// plan from the cache.
+    pub weight_regions: Vec<(u32, u32)>,
+    /// Per-layer engine-configuration fingerprints, computed from the
+    /// DRAM weight contents at compile time through the same
+    /// `LayerDesc::engine_config` builder the SoC executes — the
+    /// configuration identities a warm run presents to the engine's
+    /// context cache.
+    pub layer_fingerprints: Vec<u64>,
+    /// Identity of the driver that compiled (or adopted) this plan;
+    /// `Driver::execute` refuses a plan stamped by a different driver —
+    /// its DRAM bindings describe someone else's address space. Cluster
+    /// sharing goes through `Driver::seed_plan`, which re-stamps an
+    /// adopted copy.
+    pub(crate) owner: u64,
+    /// Driver arena epoch at compile time; `Driver::execute` refuses a
+    /// plan compiled against a since-reset arena.
+    pub(crate) epoch: u64,
+}
+
+impl CompiledPlan {
+    /// Does `[addr, addr+len)` overlap any of this plan's DRAM weight
+    /// bindings?
+    pub fn binds_region(&self, addr: u32, len: usize) -> bool {
+        let (lo, hi) = (addr as u64, addr as u64 + len as u64);
+        self.weight_regions
+            .iter()
+            .any(|&(a, l)| (a as u64) < hi && lo < a as u64 + l as u64)
+    }
+}
+
+/// Bounded LRU cache of compiled plans (per driver). Replaces the old
+/// unbounded `program_cache`: capped at [`PlanCache::CAPACITY`] entries,
+/// cleared by `reset_arena`, per-plan invalidated by host weight rewrites.
+#[derive(Default)]
+pub struct PlanCache {
+    entries: Vec<(PlanKey, std::sync::Arc<CompiledPlan>)>,
+    hits: u64,
+    compiles: u64,
+}
+
+impl PlanCache {
+    /// Maximum resident plans; the least recently used is evicted beyond
+    /// this. Sixteen covers every (network, batch, fusion) combination a
+    /// serving worker rotates through with room to spare, while bounding
+    /// the driver's footprint.
+    pub const CAPACITY: usize = 16;
+
+    /// Look up a plan, refreshing its LRU position and counting the hit.
+    pub fn get(&mut self, key: &PlanKey) -> Option<std::sync::Arc<CompiledPlan>> {
+        let pos = self.entries.iter().position(|(k, _)| k == key)?;
+        let entry = self.entries.remove(pos);
+        let plan = entry.1.clone();
+        self.entries.push(entry);
+        self.hits += 1;
+        Some(plan)
+    }
+
+    /// Insert a freshly compiled plan, counting the compile and evicting
+    /// the LRU entry beyond capacity.
+    pub fn insert(&mut self, plan: std::sync::Arc<CompiledPlan>) {
+        self.compiles += 1;
+        self.seed(plan);
+    }
+
+    /// Insert without counting a compile — used when a cluster seeds a
+    /// replica's cache with a plan another replica compiled.
+    pub fn seed(&mut self, plan: std::sync::Arc<CompiledPlan>) {
+        self.entries.retain(|(k, _)| *k != plan.key);
+        if self.entries.len() >= Self::CAPACITY {
+            self.entries.remove(0);
+        }
+        self.entries.push((plan.key, plan));
+    }
+
+    /// Drop every plan (arena reset: all DRAM bindings are invalid).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    /// Drop plans whose weight bindings overlap a rewritten host region.
+    pub fn invalidate_region(&mut self, addr: u32, len: usize) {
+        self.entries.retain(|(_, p)| !p.binds_region(addr, len));
+    }
+
+    /// Resident plan count.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no plan is cached.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// `(cache hits, compiles)` since construction.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.compiles)
+    }
+
+    /// Fraction of plan requests served from cache: `hits / (hits +
+    /// compiles)`. 0.0 before the first request.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.compiles;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Encode a descriptor table (plus its `End` block) into the control-RAM
+/// image `Driver::compile` caches, applying the fusion side-band.
+pub(crate) fn encode_table_image(descs: &[LayerDesc], plan: &FusionPlan) -> Vec<u32> {
+    let mut out = Vec::with_capacity((descs.len() + 1) * DESC_WORDS);
+    for (i, d) in descs.iter().chain(std::iter::once(&LayerDesc::End)).enumerate() {
+        let mut words = d.encode();
+        plan.ctl(i).encode_into(&mut words);
+        out.extend_from_slice(&words);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn fir(in_addr: u32, taps_addr: u32) -> LayerDesc {
+        LayerDesc::Fir {
+            taps_addr,
+            n_taps: 4,
+            in_addr,
+            n: 16,
+            out_addr: 500,
+        }
+    }
+
+    fn plan_with(key: PlanKey, weight_regions: Vec<(u32, u32)>) -> Arc<CompiledPlan> {
+        Arc::new(CompiledPlan {
+            key,
+            n_layers: 1,
+            batch: key.batch,
+            src_words: Vec::new(),
+            table_words: Vec::new(),
+            program: Vec::new(),
+            fusion_groups: Vec::new(),
+            fused_edges: 0,
+            weight_regions,
+            layer_fingerprints: Vec::new(),
+            owner: 0,
+            epoch: 0,
+        })
+    }
+
+    #[test]
+    fn plan_key_tracks_table_content_batch_and_fusion() {
+        let a = PlanKey::new(&[fir(0, 100)], 4, false, 1024, 128);
+        assert_eq!(a, PlanKey::new(&[fir(0, 100)], 4, false, 1024, 128));
+        assert_ne!(a, PlanKey::new(&[fir(1, 100)], 4, false, 1024, 128), "content");
+        assert_ne!(a, PlanKey::new(&[fir(0, 100)], 8, false, 1024, 128), "batch");
+        assert_ne!(a, PlanKey::new(&[fir(0, 100)], 4, true, 1024, 128), "fusion");
+        assert_ne!(a, PlanKey::new(&[fir(0, 100)], 4, false, 2048, 128), "geometry");
+    }
+
+    #[test]
+    fn cache_is_lru_bounded_and_counts_hits() {
+        let mut c = PlanCache::default();
+        assert!(c.is_empty());
+        let key = |b: u32| PlanKey::new(&[fir(0, 100)], b, false, 1024, 128);
+        for b in 0..(PlanCache::CAPACITY as u32 + 4) {
+            c.insert(plan_with(key(b + 1), Vec::new()));
+        }
+        assert_eq!(c.len(), PlanCache::CAPACITY, "bounded, unlike program_cache");
+        assert!(c.get(&key(1)).is_none(), "oldest entries evicted");
+        assert!(c.get(&key(PlanCache::CAPACITY as u32 + 4)).is_some());
+        let (hits, compiles) = c.stats();
+        assert_eq!((hits, compiles), (1, PlanCache::CAPACITY as u64 + 4));
+        assert!((c.hit_rate() - 1.0 / (1.0 + compiles as f64)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn region_invalidation_drops_only_overlapping_plans() {
+        let mut c = PlanCache::default();
+        let k1 = PlanKey::new(&[fir(0, 100)], 1, false, 1024, 128);
+        let k2 = PlanKey::new(&[fir(0, 200)], 1, false, 1024, 128);
+        c.insert(plan_with(k1, vec![(100, 4)]));
+        c.insert(plan_with(k2, vec![(200, 4)]));
+        // an input-region rewrite (no weight overlap) drops nothing — the
+        // serving hot path rewrites inputs every batch
+        c.invalidate_region(0, 16);
+        assert_eq!(c.len(), 2);
+        // a weight rewrite drops exactly the plan bound to it
+        c.invalidate_region(102, 1);
+        assert_eq!(c.len(), 1);
+        assert!(c.get(&k1).is_none());
+        assert!(c.get(&k2).is_some());
+        c.clear();
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn table_image_covers_end_block_and_side_band() {
+        let descs = vec![fir(0, 100)];
+        let image = encode_table_image(&descs, &FusionPlan::none(descs.len()));
+        assert_eq!(image.len(), 2 * DESC_WORDS, "layer block + End block");
+        assert_eq!(LayerDesc::decode(&image[..DESC_WORDS]).unwrap(), descs[0]);
+        assert_eq!(
+            LayerDesc::decode(&image[DESC_WORDS..]).unwrap(),
+            LayerDesc::End
+        );
+        // identical tables produce identical fingerprints, different ones
+        // do not
+        let again = encode_table_image(&descs, &FusionPlan::none(1));
+        assert_eq!(fnv_words(&image), fnv_words(&again));
+        let other = encode_table_image(&[fir(1, 100)], &FusionPlan::none(1));
+        assert_ne!(fnv_words(&image), fnv_words(&other));
+    }
+}

@@ -97,12 +97,37 @@ impl Cluster {
         }
     }
 
+    /// Aggregate `(plan-cache hits, plan compiles)` over every replica's
+    /// driver — the cluster-level hit-rate numerator/denominator the CLI
+    /// and benches report.
+    pub fn plan_cache_stats(&self) -> (u64, u64) {
+        self.drivers
+            .iter()
+            .map(|d| d.plan_cache_stats())
+            .fold((0, 0), |(h, c), (dh, dc)| (h + dh, c + dc))
+    }
+
+    /// Toggle the engine configuration-context cache on every replica:
+    /// with it on, warm runs of an unchanged descriptor table skip every
+    /// per-layer engine reconfiguration (charged 0 cycles, counted in
+    /// `RunMetrics::reconfigs_skipped`) — removing the per-run
+    /// reconfiguration term that caps composed fused scale-out.
+    pub fn set_config_cache(&mut self, on: bool) {
+        for drv in &mut self.drivers {
+            drv.set_config_cache(on);
+        }
+    }
+
     /// Dispatch an already-placed plan: shard `i` runs on replica
     /// `assignments[i]` against that replica's own descriptor table
-    /// `tables[assignments[i]]`, all replicas concurrently. Completed
-    /// shards are retired back into `sched` so its outstanding-cycles
-    /// view stays truthful across batches. Inputs must already sit in
-    /// each replica's DRAM; outputs are read back by the caller.
+    /// `tables[assignments[i]]`, all replicas concurrently. Each distinct
+    /// `(table, sub-batch)` pair is **compiled once** and the resulting
+    /// [`crate::accel::CompiledPlan`] is shared across the byte-identical
+    /// replicas (see `Driver::run_table_sharded`), so only the first
+    /// dispatch of a shape pays for planning. Completed shards are
+    /// retired back into `sched` so its outstanding-cycles view stays
+    /// truthful across batches. Inputs must already sit in each replica's
+    /// DRAM; outputs are read back by the caller.
     pub fn run_assigned(
         &mut self,
         tables: &[&[LayerDesc]],
@@ -201,6 +226,20 @@ mod tests {
         assert!(c.drivers().iter().all(|d| d.fusion_enabled()));
         c.set_fusion(false);
         assert!(c.drivers().iter().all(|d| !d.fusion_enabled()));
+    }
+
+    #[test]
+    fn set_config_cache_reaches_every_replica() {
+        let mut c = Cluster::new(ClusterConfig {
+            replicas: 3,
+            soc: small_soc(),
+        })
+        .unwrap();
+        assert!(c.drivers().iter().all(|d| !d.config_cache_enabled()));
+        c.set_config_cache(true);
+        assert!(c.drivers().iter().all(|d| d.config_cache_enabled()));
+        c.set_config_cache(false);
+        assert!(c.drivers().iter().all(|d| !d.config_cache_enabled()));
     }
 
     #[test]

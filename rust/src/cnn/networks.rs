@@ -4,7 +4,10 @@
 
 use super::layers::{Layer, LayerShape};
 use super::tensor::{self, Tensor};
-use crate::accel::{Driver, FusionGroup, FusionPlan, LayerDesc, RunMetrics, ShardedMetrics};
+use crate::accel::{
+    CompiledPlan, Driver, FusionGroup, FusionPlan, LayerDesc, RunMetrics, ShardedMetrics,
+};
+use std::sync::Arc;
 use crate::cluster::{Cluster, ShardPlan, Scheduler};
 use crate::error::{Error, Result};
 use crate::systolic::PoolKind;
@@ -386,6 +389,11 @@ impl NetworkInstance {
             drv.soc.spad.bank_words(),
         )
         .groups();
+        // compile the full-capacity plan at deploy time (under the
+        // driver's current fusion setting): the serving hot path's
+        // run_table_batch calls hit the plan cache from the first batch,
+        // and callers get the plan handle for metadata/direct execution
+        let plan = drv.compile(&descs, max_batch as u32)?;
         Ok(Deployment {
             descs,
             in_addr,
@@ -394,6 +402,7 @@ impl NetworkInstance {
             out_len: shapes.last().unwrap().volume(),
             max_batch,
             fusion_groups,
+            plan,
         })
     }
 
@@ -438,10 +447,17 @@ pub struct Deployment {
     /// Fused layer chains the planner finds for this table at `max_batch`
     /// on the target SoC's scratchpad geometry: each group's `len − 1`
     /// intermediate activations stay on-chip when the driver enables
-    /// fusion. Metadata for reporting/monitoring — the driver re-plans
-    /// per run with the actual batch, which can only fuse *more* (smaller
-    /// batches shrink whole-buffer footprints, never grow them).
+    /// fusion. Metadata for reporting/monitoring — the driver compiles a
+    /// plan per actual batch, which can only fuse *more* (smaller batches
+    /// shrink whole-buffer footprints, never grow them).
     pub fusion_groups: Vec<FusionGroup>,
+    /// The compiled execution plan for this table at full `max_batch`
+    /// capacity, under the fusion setting the deploying driver had:
+    /// compiled once at deploy time, resident in the driver's plan cache,
+    /// so the first full-capacity [`Deployment::run`] already executes
+    /// warm. Sub-capacity batches compile (and cache) their own plans on
+    /// first sight.
+    pub plan: Arc<CompiledPlan>,
 }
 
 impl Deployment {
@@ -484,6 +500,12 @@ impl ClusterDeployment {
     /// Per-shard batch capacity each replica was deployed with.
     pub fn max_shard_batch(&self) -> usize {
         self.deps.first().map(|d| d.max_batch).unwrap_or(0)
+    }
+
+    /// The per-replica compiled-plan handles (full shard capacity, one
+    /// per replica — identical content when the replicas are identical).
+    pub fn plans(&self) -> Vec<Arc<CompiledPlan>> {
+        self.deps.iter().map(|d| d.plan.clone()).collect()
     }
 
     /// Serve one batch sharded across the cluster: plan the split, place

@@ -1,0 +1,179 @@
+//! Front-door activation cache: exact-input request dedup.
+//!
+//! Serving traffic repeats itself — health probes, retries, viral inputs,
+//! identical thumbnails. Two requests carrying the **same quantized input
+//! tensor** are guaranteed the same logits (the whole stack is bit-exact
+//! and deterministic), so the coordinator's front door can answer a
+//! repeat straight from a result cache without forming an accelerator
+//! batch at all: zero accelerator cycles, zero queueing.
+//!
+//! The cache is a bounded LRU keyed by a content fingerprint of the
+//! quantized input, with every hit **byte-verified** against the stored
+//! full `(shape, data)` — lookups allocate nothing, and a fingerprint
+//! collision degrades to a miss, never to wrong logits. Entries are
+//! worth caching precisely because the input already *is* the canonical
+//! quantized representation: no float fuzz, no near-duplicates to worry
+//! about. On by default (`CoordinatorConfig::dedup`), disabled with
+//! `--no-dedup`; hits are counted in `StatsCollector::dedup_hits` and
+//! answered at `Coordinator::submit` — the actual front door — so they
+//! never occupy a batcher slot or pay the batching wait.
+
+use crate::cnn::tensor::Tensor;
+use crate::systolic::config::Fnv;
+use std::collections::HashMap;
+
+/// One cached result: the full input it was computed from (byte-verified
+/// on every hit, so a fingerprint collision can never serve wrong
+/// logits), the logits, and the recency stamp its eviction order is
+/// decided by.
+struct DedupEntry {
+    shape: Vec<usize>,
+    data: Vec<i64>,
+    logits: Vec<i64>,
+    /// Monotonic last-use stamp — the LRU order without a separate list,
+    /// so neither lookups nor inserts ever scan full tensor contents.
+    used: u64,
+}
+
+/// Content fingerprint of an input tensor — computed over borrowed data,
+/// so a lookup allocates nothing. Exposed crate-side so the coordinator
+/// front door can hash **outside** the shared cache mutex (hashing is the
+/// O(input) part of a lookup; concurrent submitters should not serialize
+/// on it).
+pub(crate) fn fingerprint(input: &Tensor) -> u64 {
+    let mut h = Fnv::new();
+    h.u64(input.shape.len() as u64);
+    for &d in &input.shape {
+        h.u64(d as u64);
+    }
+    h.i64s(&input.data);
+    h.finish()
+}
+
+/// Exact-input → logits LRU cache shared by every worker behind the
+/// coordinator front door.
+pub struct DedupCache {
+    map: HashMap<u64, DedupEntry>,
+    clock: u64,
+    capacity: usize,
+}
+
+impl DedupCache {
+    /// Default entry capacity the coordinator uses: at Tiny's 256-word
+    /// inputs this is ~2 MB of keys — front-door-sized, not a datastore.
+    pub const DEFAULT_CAPACITY: usize = 1024;
+
+    /// Cache holding at most `capacity` results (≥ 1).
+    pub fn new(capacity: usize) -> Self {
+        DedupCache {
+            map: HashMap::new(),
+            clock: 0,
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Cached logits for an exact repeat of `input`, refreshing its LRU
+    /// stamp. `None` for an unseen input — including a fingerprint
+    /// collision, whose byte-verify fails and degrades to a miss, never
+    /// to wrong logits. Allocation-free on the miss path.
+    pub fn get(&mut self, input: &Tensor) -> Option<Vec<i64>> {
+        self.get_keyed(fingerprint(input), input)
+    }
+
+    /// [`DedupCache::get`] with the fingerprint precomputed by the caller
+    /// (outside the cache lock) — the byte-verify still runs here.
+    pub(crate) fn get_keyed(&mut self, fp: u64, input: &Tensor) -> Option<Vec<i64>> {
+        self.clock += 1;
+        let clock = self.clock;
+        let e = self.map.get_mut(&fp)?;
+        if e.shape != input.shape || e.data != input.data {
+            return None;
+        }
+        e.used = clock;
+        Some(e.logits.clone())
+    }
+
+    /// Insert (or refresh) a served result, evicting the least recently
+    /// used entry beyond capacity (an O(entries) stamp scan — only on the
+    /// insert of a *new* key into a full cache, and over u64 stamps, not
+    /// tensor contents). Inserts happen only on served misses, so this is
+    /// the one place the input is cloned into the cache.
+    pub fn insert(&mut self, input: &Tensor, logits: Vec<i64>) {
+        self.clock += 1;
+        let key = fingerprint(input);
+        if !self.map.contains_key(&key) && self.map.len() >= self.capacity {
+            if let Some(cold) = self.map.iter().min_by_key(|(_, e)| e.used).map(|(&k, _)| k) {
+                self.map.remove(&cold);
+            }
+        }
+        self.map.insert(
+            key,
+            DedupEntry {
+                shape: input.shape.clone(),
+                data: input.data.clone(),
+                logits,
+                used: self.clock,
+            },
+        );
+    }
+
+    /// Cached results.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: Vec<usize>, seed: i64) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape,
+            data: (0..n as i64).map(|i| i * 3 + seed).collect(),
+        }
+    }
+
+    #[test]
+    fn exact_repeats_hit_near_misses_do_not() {
+        let mut c = DedupCache::new(8);
+        assert!(c.is_empty());
+        let a = t(vec![1, 2, 2], 0);
+        c.insert(&a, vec![10, 20]);
+        assert_eq!(c.get(&a), Some(vec![10, 20]));
+        // one word off → miss (full-content keys, no hash collisions)
+        let mut near = a.clone();
+        near.data[3] += 1;
+        assert_eq!(c.get(&near), None);
+        // same data, different shape → miss
+        let reshaped = Tensor {
+            shape: vec![4],
+            data: a.data.clone(),
+        };
+        assert_eq!(c.get(&reshaped), None);
+    }
+
+    #[test]
+    fn lru_bounded_eviction() {
+        let mut c = DedupCache::new(2);
+        let (a, b, d) = (t(vec![2], 0), t(vec![2], 1), t(vec![2], 2));
+        c.insert(&a, vec![1]);
+        c.insert(&b, vec![2]);
+        // touch a so b is coldest, then insert d → b evicted
+        assert!(c.get(&a).is_some());
+        c.insert(&d, vec![3]);
+        assert_eq!(c.len(), 2);
+        assert!(c.get(&b).is_none(), "LRU entry evicted");
+        assert!(c.get(&a).is_some() && c.get(&d).is_some());
+        // re-inserting an existing key refreshes, never grows
+        c.insert(&a, vec![9]);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(&a), Some(vec![9]));
+    }
+}

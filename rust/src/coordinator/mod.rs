@@ -11,11 +11,13 @@
 //! latency plus per-shard utilization to [`stats`].
 
 pub mod batcher;
+pub mod dedup;
 pub mod request;
 pub mod server;
 pub mod stats;
 
 pub use batcher::{BatchPolicy, Batcher};
+pub use dedup::DedupCache;
 pub use request::{InferenceRequest, InferenceResponse, RequestId};
 pub use server::{Coordinator, CoordinatorConfig};
 pub use stats::{LatencyStats, StatsCollector};

@@ -23,8 +23,21 @@
 //! layers whose intermediates fit on-chip skip the DRAM round trip, with
 //! the eliminated cycles reported via
 //! `StatsCollector::fused_saved_cycles`.
+//!
+//! The hot path is **compile-once / execute-many**: each worker's
+//! deployment compiles its descriptor tables into
+//! [`crate::accel::CompiledPlan`]s at worker start, per-batch runs execute
+//! cached plans (`StatsCollector::plan_cache_hit_rate`), and the engine
+//! configuration-context cache (`CoordinatorConfig::config_cache`, on by
+//! default) makes warm runs skip every per-layer reconfiguration
+//! (`StatsCollector::reconfigs_skipped`). In front of all of that sits
+//! the front-door activation cache (`CoordinatorConfig::dedup`, on by
+//! default): an exact repeat of an already-served input is answered from
+//! a bounded LRU result cache without forming an accelerator batch at
+//! all (`StatsCollector::dedup_hits`).
 
 use super::batcher::{BatchPolicy, Batcher};
+use super::dedup::DedupCache;
 use super::request::{InferenceRequest, InferenceResponse, RequestId};
 use super::stats::StatsCollector;
 use crate::accel::{ShardedMetrics, SocConfig};
@@ -61,6 +74,21 @@ pub struct CoordinatorConfig {
     /// with `pipeline` (fusion removes traffic, overlap hides the rest)
     /// and with `shards`. Disable to reproduce the unfused model.
     pub fuse: bool,
+    /// Enable the engine configuration-context cache on every replica:
+    /// warm runs of an unchanged descriptor table skip every per-layer
+    /// engine reconfiguration (0 cycles, counted in
+    /// `StatsCollector::reconfigs_skipped`). On by default — the serving
+    /// hot path runs the same compiled plan over and over, so after the
+    /// first batch of each shape the per-run reconfiguration term is
+    /// gone. Disable to reproduce the cold reconfiguration model.
+    pub config_cache: bool,
+    /// Exact-input request dedup at the front door: a request whose
+    /// quantized input tensor is byte-identical to an already-served one
+    /// is answered from a bounded LRU result cache without forming an
+    /// accelerator batch (hits counted in `StatsCollector::dedup_hits`).
+    /// On by default; disable with `--no-dedup` / `dedup: false` for
+    /// strictly-isolated request accounting.
+    pub dedup: bool,
     /// Batching policy.
     pub batch: BatchPolicy,
     /// Per-replica SoC configuration.
@@ -78,11 +106,24 @@ impl Default for CoordinatorConfig {
             sched: SchedulePolicy::LeastOutstandingCycles,
             pipeline: true,
             fuse: true,
+            config_cache: true,
+            dedup: true,
             batch: BatchPolicy::default(),
             soc: SocConfig::serving(),
             clock_mhz: 200.0,
         }
     }
+}
+
+/// Argmax class readout for a response — one definition so the dedup-hit
+/// and accelerator paths can never classify the same logits differently.
+fn class_of(logits: &[i64]) -> usize {
+    logits
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, &v)| v)
+        .map(|(i, _)| i)
+        .unwrap_or(0)
 }
 
 struct Worker {
@@ -106,6 +147,9 @@ impl Worker {
         })?;
         cluster.set_pipeline(cfg.pipeline)?;
         cluster.set_fusion(cfg.fuse);
+        cluster.set_config_cache(cfg.config_cache);
+        // deploy_cluster compiles every replica's full-capacity plan here,
+        // at worker start — the per-batch hot loop only executes plans
         let cdep = inst.deploy_cluster(&mut cluster, per_shard)?;
         let sched = Scheduler::new(cfg.sched, cfg.shards)?;
         let input_dims = inst.net.input.dims();
@@ -155,6 +199,11 @@ pub struct Coordinator {
     batcher_handle: Option<JoinHandle<()>>,
     worker_handles: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
+    /// Front-door activation cache (exact-input dedup), `None` when
+    /// disabled. Consulted in [`Coordinator::submit`] — a hit answers
+    /// immediately and never occupies a batcher slot; workers insert
+    /// served results.
+    dedup: Option<Arc<Mutex<DedupCache>>>,
     /// Shared statistics.
     pub stats: Arc<Mutex<StatsCollector>>,
 }
@@ -174,6 +223,11 @@ impl Coordinator {
         let (batch_tx, batch_rx) = channel::<Vec<InferenceRequest>>();
         let batch_rx = Arc::new(Mutex::new(batch_rx));
         let stats = Arc::new(Mutex::new(StatsCollector::new()));
+        // one activation cache behind the whole front door: a repeat can
+        // hit no matter which worker served the original
+        let dedup = cfg
+            .dedup
+            .then(|| Arc::new(Mutex::new(DedupCache::new(DedupCache::DEFAULT_CAPACITY))));
 
         // batcher thread
         let policy = cfg.batch;
@@ -195,6 +249,7 @@ impl Coordinator {
             let mut worker = Worker::build(&cfg, inst)?;
             let rx = Arc::clone(&batch_rx);
             let stats = Arc::clone(&stats);
+            let dedup = dedup.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("kom-worker-{wid}"))
                 .spawn(move || loop {
@@ -250,6 +305,12 @@ impl Coordinator {
                                 s.record_sharded_batch(&per_shard);
                                 s.record_overlapped(m.overlapped_cycles());
                                 s.record_fused_saved(m.fused_saved_cycles());
+                                s.record_plan_telemetry(
+                                    m.reconfigs(),
+                                    m.reconfigs_skipped(),
+                                    m.plan_hits(),
+                                    m.shards.len() as u64,
+                                );
                                 for &latency_us in &latencies {
                                     s.record(latency_us, n, 0);
                                 }
@@ -257,12 +318,12 @@ impl Coordinator {
                             for ((req, logits), latency_us) in
                                 valid.into_iter().zip(outs).zip(latencies)
                             {
-                                let class = logits
-                                    .iter()
-                                    .enumerate()
-                                    .max_by_key(|(_, &v)| v)
-                                    .map(|(i, _)| i)
-                                    .unwrap_or(0);
+                                if let Some(d) = dedup.as_ref() {
+                                    d.lock()
+                                        .expect("dedup poisoned")
+                                        .insert(&req.input, logits.clone());
+                                }
+                                let class = class_of(&logits);
                                 let _ = req.reply.send(InferenceResponse {
                                     id: req.id,
                                     logits,
@@ -306,21 +367,55 @@ impl Coordinator {
             batcher_handle: Some(batcher_handle),
             worker_handles,
             next_id: AtomicU64::new(0),
+            dedup,
             stats,
         })
     }
 
     /// Submit an inference; returns the response channel and the id.
+    ///
+    /// This is the dedup front door: an exact repeat of an already-served
+    /// input is answered right here from the activation cache — real
+    /// logits, zero accelerator cycles, no batcher slot, no batching
+    /// wait — before anything is enqueued.
     pub fn submit(&self, input: Tensor) -> Result<(RequestId, Receiver<InferenceResponse>)> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = channel();
+        let submitted = Instant::now();
+        if let Some(d) = self.dedup.as_ref() {
+            // hash outside the lock: concurrent submitters only serialize
+            // on the map probe + byte-verify, not on O(input) hashing
+            let fp = super::dedup::fingerprint(&input);
+            let cached = d.lock().expect("dedup poisoned").get_keyed(fp, &input);
+            if let Some(logits) = cached {
+                let latency_us = submitted.elapsed().as_micros() as u64;
+                self.stats
+                    .lock()
+                    .expect("stats poisoned")
+                    .record_dedup_hit(latency_us);
+                let class = class_of(&logits);
+                let _ = reply.send(InferenceResponse {
+                    id,
+                    logits,
+                    class,
+                    latency_us,
+                    // 0 = never reached an accelerator
+                    batch_size: 0,
+                    // served by the front door itself, not a worker
+                    worker: 0,
+                    accel_cycles: 0,
+                    error: None,
+                });
+                return Ok((id, rx));
+            }
+        }
         self.tx
             .as_ref()
             .ok_or_else(|| Error::Coordinator("coordinator stopped".into()))?
             .send(InferenceRequest {
                 id,
                 input,
-                submitted: Instant::now(),
+                submitted,
                 reply,
             })
             .map_err(|_| Error::Coordinator("submission channel closed".into()))?;
@@ -355,6 +450,7 @@ impl Drop for Coordinator {
 mod tests {
     use super::*;
     use crate::cnn::networks::{Network, NetworkKind};
+    use std::time::Duration;
 
     fn tiny_instance() -> NetworkInstance {
         NetworkInstance::random(Network::build(NetworkKind::Tiny), 42).unwrap()
@@ -601,6 +697,130 @@ mod tests {
         assert!(rx.recv().unwrap().is_ok());
         let stats = coord.shutdown();
         assert_eq!(stats.fused_saved_cycles, 0);
+    }
+
+    #[test]
+    fn dedup_answers_exact_repeats_from_the_front_door() {
+        let inst = tiny_instance();
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                ..Default::default()
+            },
+            &inst,
+        )
+        .unwrap();
+        let input = Tensor::random(vec![1, 16, 16], 127, 4242);
+        let want = inst.forward_ref(&input).unwrap();
+        // serve the original and wait for it, so the repeat is a
+        // guaranteed cache hit (not a same-batch ride-along)
+        let (_, rx) = coord.submit(input.clone()).unwrap();
+        let first = rx.recv().unwrap();
+        assert!(first.is_ok());
+        assert_eq!(first.logits, want.data);
+        // the exact repeat: same logits, zero accelerator cycles
+        let (_, rx) = coord.submit(input.clone()).unwrap();
+        let hit = rx.recv().unwrap();
+        assert!(hit.is_ok());
+        assert_eq!(hit.logits, want.data, "dedup hit must be bit-exact");
+        assert_eq!(hit.class, want.argmax());
+        assert_eq!(hit.accel_cycles, 0, "a hit never reached an accelerator");
+        assert_eq!(hit.batch_size, 0);
+        // a different input is not a hit
+        let other = Tensor::random(vec![1, 16, 16], 127, 4243);
+        let (_, rx) = coord.submit(other.clone()).unwrap();
+        let miss = rx.recv().unwrap();
+        assert_eq!(miss.logits, inst.forward_ref(&other).unwrap().data);
+        let stats = coord.shutdown();
+        assert_eq!(stats.dedup_hits, 1);
+        assert_eq!(stats.count(), 3, "hits count as served requests");
+
+        // --no-dedup: the repeat runs on the accelerator again
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                dedup: false,
+                ..Default::default()
+            },
+            &inst,
+        )
+        .unwrap();
+        for _ in 0..2 {
+            let (_, rx) = coord.submit(input.clone()).unwrap();
+            let resp = rx.recv().unwrap();
+            assert!(resp.is_ok());
+            assert_eq!(resp.logits, want.data);
+            assert!(resp.accel_cycles > 0, "no front-door cache to hit");
+        }
+        let stats = coord.shutdown();
+        assert_eq!(stats.dedup_hits, 0);
+    }
+
+    #[test]
+    fn warm_serving_skips_reconfigurations_and_hits_the_plan_cache() {
+        let inst = tiny_instance();
+        // max_batch 1 makes every accelerator batch the same shape, so
+        // the plan compiled at worker start serves every run — the hit
+        // rate and skip counts below are deterministic, not timing-bound
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                dedup: false,
+                batch: BatchPolicy {
+                    max_batch: 1,
+                    max_wait: Duration::from_micros(100),
+                },
+                ..Default::default()
+            },
+            &inst,
+        )
+        .unwrap();
+        let n_layers = 6u64; // Tiny: conv/pool/conv/pool/fc/fc
+        let distinct = 5u64; // …whose two pool layers share one configuration
+        let runs = 4u64;
+        for i in 0..runs {
+            let (_, rx) = coord
+                .submit(Tensor::random(vec![1, 16, 16], 127, 9900 + i))
+                .unwrap();
+            let resp = rx.recv().unwrap();
+            assert!(resp.is_ok(), "{:?}", resp.error);
+        }
+        let stats = coord.shutdown();
+        assert_eq!(stats.plan_runs, runs);
+        assert_eq!(stats.plan_hits, runs, "every run executed the deploy-time plan");
+        assert!((stats.plan_cache_hit_rate() - 1.0).abs() < 1e-12);
+        assert_eq!(stats.reconfigs, distinct, "only the first run configures");
+        assert_eq!(
+            stats.reconfigs_skipped,
+            runs * n_layers - distinct,
+            "warm runs skip every per-layer reconfiguration (and the cold \
+             run already skips the repeated pool configuration)"
+        );
+
+        // with the context cache disabled, every run reconfigures cold
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                dedup: false,
+                config_cache: false,
+                batch: BatchPolicy {
+                    max_batch: 1,
+                    max_wait: Duration::from_micros(100),
+                },
+                ..Default::default()
+            },
+            &inst,
+        )
+        .unwrap();
+        for i in 0..2 {
+            let (_, rx) = coord
+                .submit(Tensor::random(vec![1, 16, 16], 127, 9950 + i))
+                .unwrap();
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        let stats = coord.shutdown();
+        assert_eq!(stats.reconfigs, 2 * n_layers);
+        assert_eq!(stats.reconfigs_skipped, 0);
     }
 
     #[test]

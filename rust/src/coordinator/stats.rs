@@ -46,6 +46,20 @@ pub struct StatsCollector {
     pub batches: u64,
     /// Requests that failed with an explicit error response.
     pub errors: u64,
+    /// Requests served straight from the front-door activation cache
+    /// (exact-input dedup) without touching an accelerator.
+    pub dedup_hits: u64,
+    /// Engine reconfigurations performed across every shard run.
+    pub reconfigs: u64,
+    /// Engine reconfigurations skipped by the configuration-context cache
+    /// across every shard run (warm runs of an unchanged table skip all
+    /// of them).
+    pub reconfigs_skipped: u64,
+    /// Shard runs that executed a cached compiled plan.
+    pub plan_hits: u64,
+    /// Total shard runs (the denominator of
+    /// [`StatsCollector::plan_cache_hit_rate`]).
+    pub plan_runs: u64,
 }
 
 impl Default for StatsCollector {
@@ -68,6 +82,11 @@ impl StatsCollector {
             fused_saved_cycles: 0,
             batches: 0,
             errors: 0,
+            dedup_hits: 0,
+            reconfigs: 0,
+            reconfigs_skipped: 0,
+            plan_hits: 0,
+            plan_runs: 0,
         }
     }
 
@@ -147,6 +166,44 @@ impl StatsCollector {
             0.0
         } else {
             self.fused_saved_cycles as f64 / unfused as f64
+        }
+    }
+
+    /// Record one request served from the front-door activation cache
+    /// (exact-input dedup): it completes with real logits (a latency
+    /// sample, counted by [`StatsCollector::count`]) but never forms an
+    /// accelerator batch — it contributes no `batch_sizes` entry, matching
+    /// the `batch_size: 0` its response reports, so dedup-heavy traffic
+    /// does not drag [`StatsCollector::mean_batch`] toward 1.
+    pub fn record_dedup_hit(&mut self, latency_us: u64) {
+        self.dedup_hits += 1;
+        self.latencies_us.push(latency_us);
+    }
+
+    /// Record one shard batch's plan/reconfiguration telemetry:
+    /// reconfigurations performed and skipped, plus how many of the
+    /// `shard_runs` executed a cached compiled plan.
+    pub fn record_plan_telemetry(
+        &mut self,
+        reconfigs: u64,
+        reconfigs_skipped: u64,
+        plan_hits: u64,
+        shard_runs: u64,
+    ) {
+        self.reconfigs += reconfigs;
+        self.reconfigs_skipped += reconfigs_skipped;
+        self.plan_hits += plan_hits;
+        self.plan_runs += shard_runs;
+    }
+
+    /// Fraction of shard runs that executed a cached compiled plan —
+    /// the serving hot path should sit at ~1.0 after the first batch of
+    /// each shape. 0.0 before any sharded batch ran.
+    pub fn plan_cache_hit_rate(&self) -> f64 {
+        if self.plan_runs == 0 {
+            0.0
+        } else {
+            self.plan_hits as f64 / self.plan_runs as f64
         }
     }
 
@@ -313,6 +370,25 @@ mod tests {
         let empty = StatsCollector::new();
         assert!(empty.shard_utilization().is_empty());
         assert_eq!(empty.latency().max_us, 0);
+    }
+
+    #[test]
+    fn dedup_and_plan_telemetry() {
+        let mut s = StatsCollector::new();
+        assert_eq!(s.plan_cache_hit_rate(), 0.0);
+        s.record_dedup_hit(15);
+        assert_eq!(s.dedup_hits, 1);
+        assert_eq!(s.count(), 1, "a dedup hit is a served request");
+        assert_eq!(s.accel_cycles, 0, "…that cost no accelerator cycles");
+        assert_eq!(s.mean_batch(), 0.0, "…and rode in no accelerator batch");
+        // cold batch over 4 shards: no hits, 24 reconfigs
+        s.record_plan_telemetry(24, 0, 0, 4);
+        // two warm batches: all plans hit, all reconfigs skipped
+        s.record_plan_telemetry(0, 24, 4, 4);
+        s.record_plan_telemetry(0, 24, 4, 4);
+        assert_eq!(s.reconfigs, 24);
+        assert_eq!(s.reconfigs_skipped, 48);
+        assert!((s.plan_cache_hit_rate() - 8.0 / 12.0).abs() < 1e-12);
     }
 
     #[test]

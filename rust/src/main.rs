@@ -39,9 +39,9 @@ COMMANDS
   analyze  [--net alexnet]           network analysis (paper Sec V)
   golden   [--artifacts artifacts]   XLA vs systolic vs reference
   serve    [--requests 64] [--workers 2] [--batch 8] [--shards 1] [--no-pipeline]
-           [--no-fuse]
+           [--no-fuse] [--no-dedup] [--no-config-cache]
   cluster  [--batch 16] [--shards 4] [--policy rr|least-outstanding] [--net tiny]
-           [--no-pipeline] [--no-fuse]
+           [--no-pipeline] [--no-fuse] [--no-config-cache]
 
 Pipelining: replica SoCs overlap layer DMA with engine compute by default
 (double-buffered scratchpad staging); --no-pipeline restores the serial
@@ -49,6 +49,11 @@ cpu + compute + mem cycle model.
 Fusion: chained layers whose intermediate activations fit the scratchpad
 skip the DRAM store + reload entirely (whole-buffer or row-band-tiled
 residency) by default; --no-fuse restores the per-layer round trip.
+Compiled plans: descriptor tables compile once into cached execution
+plans, and warm runs skip every per-layer engine reconfiguration through
+the configuration-context cache; --no-config-cache restores the cold
+reconfiguration model. --no-dedup disables the front-door exact-input
+result cache.
 ";
 
 fn mult_spec(name: &str) -> kom_accel::Result<(String, MultiplierSpec)> {
@@ -205,12 +210,16 @@ fn cmd_serve(args: &Args) -> kom_accel::Result<()> {
     let shards: usize = args.get_num("shards", 1usize)?;
     let pipeline = !args.has("no-pipeline");
     let fuse = !args.has("no-fuse");
+    let dedup = !args.has("no-dedup");
+    let config_cache = !args.has("no-config-cache");
     let inst = NetworkInstance::random(Network::build(NetworkKind::Tiny), 42)?;
     let cfg = CoordinatorConfig {
         workers,
         shards,
         pipeline,
         fuse,
+        dedup,
+        config_cache,
         batch: kom_accel::coordinator::BatchPolicy {
             max_batch,
             ..Default::default()
@@ -250,6 +259,20 @@ fn cmd_serve(args: &Args) -> kom_accel::Result<()> {
             stats.fused_fraction() * 100.0
         );
     }
+    println!(
+        "  plan-cache hit rate: {:.0}% over {} shard runs",
+        stats.plan_cache_hit_rate() * 100.0,
+        stats.plan_runs
+    );
+    if config_cache {
+        println!(
+            "  engine reconfigurations: {} performed, {} skipped warm",
+            stats.reconfigs, stats.reconfigs_skipped
+        );
+    }
+    if dedup {
+        println!("  front-door dedup hits: {}", stats.dedup_hits);
+    }
     if shards > 1 {
         let util: Vec<String> = stats
             .shard_utilization()
@@ -269,6 +292,7 @@ fn cmd_cluster(args: &Args) -> kom_accel::Result<()> {
     let shards: usize = args.get_num("shards", 4usize)?;
     let pipeline = !args.has("no-pipeline");
     let fuse = !args.has("no-fuse");
+    let config_cache = !args.has("no-config-cache");
     let policy = SchedulePolicy::parse(&args.get_or("policy", "least-outstanding"))?;
     let kind = NetworkKind::parse(&args.get_or("net", "tiny"))?;
     let inst = NetworkInstance::random(Network::build(kind), 42)?;
@@ -282,10 +306,14 @@ fn cmd_cluster(args: &Args) -> kom_accel::Result<()> {
     })?;
     cluster.set_pipeline(pipeline)?;
     cluster.set_fusion(fuse);
+    cluster.set_config_cache(config_cache);
     let per_shard_cap = batch.div_ceil(shards);
     let cdep = inst.deploy_cluster(&mut cluster, per_shard_cap)?;
     let mut sched = Scheduler::new(policy, shards)?;
     let slices: Vec<&[i64]> = inputs.iter().map(|t| t.data.as_slice()).collect();
+    // cold dispatch compiles the plans and loads the engine contexts; the
+    // warm dispatch is the steady serving state the table below reports
+    let (_, cold_m) = cdep.run_sharded(&mut cluster, &mut sched, &slices)?;
     let (outs, m) = cdep.run_sharded(&mut cluster, &mut sched, &slices)?;
 
     // per-request correctness against the host reference
@@ -299,10 +327,12 @@ fn cmd_cluster(args: &Args) -> kom_accel::Result<()> {
     }
 
     println!(
-        "{}: batch {batch} over {shards} shard(s), policy {policy:?}, pipelining {}, fusion {}",
+        "{}: batch {batch} over {shards} shard(s), policy {policy:?}, pipelining {}, fusion {}, \
+         config cache {}",
         inst.net.name,
         if pipeline { "on" } else { "off" },
-        if fuse { "on" } else { "off" }
+        if fuse { "on" } else { "off" },
+        if config_cache { "on" } else { "off" }
     );
     let mut t = Table::new(&[
         "shard",
@@ -313,6 +343,8 @@ fn cmd_cluster(args: &Args) -> kom_accel::Result<()> {
         "mem",
         "overlapped",
         "fused-saved",
+        "reconf",
+        "reconf-skip",
         "total cycles",
     ]);
     for run in &m.shards {
@@ -325,6 +357,8 @@ fn cmd_cluster(args: &Args) -> kom_accel::Result<()> {
             run.metrics.mem_cycles.to_string(),
             run.metrics.overlapped_cycles.to_string(),
             run.metrics.fused_saved_cycles.to_string(),
+            run.metrics.reconfigs.to_string(),
+            run.metrics.reconfigs_skipped.to_string(),
             run.metrics.total_cycles().to_string(),
         ]);
     }
@@ -335,24 +369,44 @@ fn cmd_cluster(args: &Args) -> kom_accel::Result<()> {
             m.fused_saved_cycles()
         );
     }
+    println!(
+        "cold dispatch (compiles + configures): {} cycles; warm: {} ({:.2}x)",
+        cold_m.total_cycles(),
+        m.total_cycles(),
+        cold_m.total_cycles() as f64 / m.total_cycles().max(1) as f64
+    );
+    println!(
+        "warm reconfigurations skipped (sum over shards): {}; plan hits {}/{}",
+        m.reconfigs_skipped(),
+        m.plan_hits(),
+        m.shards.len()
+    );
+    let (hits, compiles) = cluster.plan_cache_stats();
+    println!(
+        "plan-cache hit rate across replicas: {:.0}% ({hits} hits / {compiles} compiles)",
+        hits as f64 / (hits + compiles).max(1) as f64 * 100.0
+    );
     println!("cluster cycles (max over shards): {}", m.total_cycles());
     println!("serial sum over shards:           {}", m.serial_cycles());
     println!("parallel speedup:                 {:.2}x", m.parallel_speedup());
 
-    // single-SoC baseline: the same batch through one replica
+    // single-SoC baseline: the same batch through one replica, equally
+    // warmed (one cold dispatch first) so the speedup is like for like
     let mut base = Cluster::new(ClusterConfig {
         replicas: 1,
         soc: SocConfig::serving(),
     })?;
     base.set_pipeline(pipeline)?;
     base.set_fusion(fuse);
+    base.set_config_cache(config_cache);
     let base_dep = inst.deploy_cluster(&mut base, batch)?;
     let mut base_sched = Scheduler::new(policy, 1)?;
+    base_dep.run_sharded(&mut base, &mut base_sched, &slices)?;
     let (_, bm) = base_dep.run_sharded(&mut base, &mut base_sched, &slices)?;
     println!(
-        "single-SoC baseline: {} cycles → sharded speedup {:.2}x",
+        "single-SoC baseline (warm): {} cycles → sharded speedup {:.2}x",
         bm.total_cycles(),
-        bm.total_cycles() as f64 / m.total_cycles() as f64
+        bm.total_cycles() as f64 / m.total_cycles().max(1) as f64
     );
     println!("all {batch} requests bit-exact with forward_ref");
     Ok(())

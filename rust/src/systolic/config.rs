@@ -78,7 +78,92 @@ pub struct EngineConfig {
     pub out_shift: u32,
 }
 
+/// FNV-1a 64-bit accumulator — the one content hash shared by
+/// [`EngineConfig::fingerprint`] and the compiled-plan image fingerprints
+/// (`crate::accel::plan`), so the two fingerprint domains can never drift
+/// onto different algorithms.
+pub(crate) struct Fnv(u64);
+
+impl Fnv {
+    pub(crate) fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+    pub(crate) fn u64(&mut self, v: u64) {
+        for byte in v.to_le_bytes() {
+            self.0 ^= byte as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    pub(crate) fn i64s(&mut self, vs: &[i64]) {
+        self.u64(vs.len() as u64);
+        for &v in vs {
+            self.u64(v as u64);
+        }
+    }
+    pub(crate) fn u32s(&mut self, vs: &[u32]) {
+        for &v in vs {
+            self.u64(v as u64);
+        }
+    }
+    pub(crate) fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
 impl EngineConfig {
+    /// Content fingerprint of this configuration: two configurations with
+    /// equal fingerprints program the fabric identically (mode, geometry,
+    /// coefficients, activation flags). The engine's configuration-context
+    /// cache compares fingerprints to decide whether a requested
+    /// reconfiguration is already resident on-chip — crucially the
+    /// coefficients are hashed too, so a host rewrite of a weight region
+    /// changes the fingerprint and can never be served a stale skip.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv::new();
+        match &self.mode {
+            EngineMode::Fir { taps } => {
+                h.u64(1);
+                h.i64s(taps);
+            }
+            EngineMode::Conv2d {
+                cout,
+                cin,
+                kh,
+                kw,
+                stride,
+                pad,
+                weights,
+            } => {
+                h.u64(2);
+                for g in [cout, cin, kh, kw, stride, pad] {
+                    h.u64(*g as u64);
+                }
+                h.i64s(weights);
+            }
+            EngineMode::Pool { k, stride, kind } => {
+                h.u64(3);
+                h.u64(*k as u64);
+                h.u64(*stride as u64);
+                h.u64((*kind == PoolKind::Avg) as u64);
+            }
+            EngineMode::Fc {
+                n_in,
+                n_out,
+                weights,
+                bias,
+            } => {
+                h.u64(4);
+                h.u64(*n_in as u64);
+                h.u64(*n_out as u64);
+                h.i64s(weights);
+                h.i64s(bias);
+            }
+        }
+        h.u64(self.relu as u64);
+        h.u64(self.out_shift as u64);
+        h.finish()
+    }
+
     /// Number of 32-bit configuration words the control processor writes.
     pub fn config_words(&self) -> u64 {
         let coeffs = match &self.mode {
@@ -159,6 +244,27 @@ mod tests {
             out_shift: 0,
         };
         assert_eq!(c.config_words(), 5);
+    }
+
+    #[test]
+    fn fingerprint_tracks_content() {
+        let mk = |taps: Vec<i64>, relu: bool| EngineConfig {
+            mode: EngineMode::Fir { taps },
+            relu,
+            out_shift: 0,
+        };
+        // identical content → identical fingerprint
+        assert_eq!(mk(vec![1, 2, 3], false).fingerprint(), mk(vec![1, 2, 3], false).fingerprint());
+        // any coefficient or flag change → different fingerprint
+        assert_ne!(mk(vec![1, 2, 3], false).fingerprint(), mk(vec![1, 2, 4], false).fingerprint());
+        assert_ne!(mk(vec![1, 2, 3], false).fingerprint(), mk(vec![1, 2, 3], true).fingerprint());
+        // different modes with similar payloads do not collide on the tag
+        let pool = EngineConfig {
+            mode: EngineMode::Pool { k: 2, stride: 2, kind: PoolKind::Max },
+            relu: false,
+            out_shift: 0,
+        };
+        assert_ne!(pool.fingerprint(), mk(vec![2, 2, 0], false).fingerprint());
     }
 
     #[test]

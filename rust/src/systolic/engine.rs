@@ -18,6 +18,11 @@ pub struct EngineStats {
     pub config_cycles: u64,
     /// Reconfigurations performed.
     pub reconfigs: u64,
+    /// Reconfigurations skipped by the configuration-context cache: the
+    /// requested configuration's fingerprint matched one already resident
+    /// in the context store, so switching to it charged 0 cycles (see
+    /// [`Engine::set_context_cache`]).
+    pub reconfigs_skipped: u64,
     /// MAC / reduce operations.
     pub ops: u64,
 }
@@ -38,11 +43,44 @@ impl EngineStats {
     }
 }
 
+/// Default capacity of the configuration-context store, in 32-bit config
+/// words. 128K words models a multi-context fabric's configuration SRAM:
+/// generous enough to hold every layer configuration of the small serving
+/// networks (Tiny ≈ 9.8K words, VGG-mini ≈ 70K), while full-scale VGG/
+/// AlexNet FC configurations (millions of words) can never be resident and
+/// honestly re-pay their reconfiguration every run.
+pub const DEFAULT_CTX_WORDS: u64 = 128 * 1024;
+
 /// The engine: a fixed cell pool plus a loadable configuration.
+///
+/// ## Configuration-context cache
+///
+/// Multi-context reconfigurable fabrics keep several configuration planes
+/// resident in on-chip configuration SRAM and switch among them without
+/// re-streaming the bitstream. [`Engine::reconfigure`] models this behind
+/// [`Engine::set_context_cache`] (off by default — a bare engine charges
+/// every reconfiguration, preserving the cold cycle model that the paper's
+/// Fig 3 measurements and the existing speedup baselines are built on):
+/// when enabled, a requested configuration whose [`EngineConfig::fingerprint`]
+/// matches a context already resident charges **0 cycles** and bumps
+/// [`EngineStats::reconfigs_skipped`] instead of `reconfigs`. The store is
+/// LRU-bounded by [`DEFAULT_CTX_WORDS`] config words; oversized
+/// configurations are never cached. Fingerprints hash the coefficient data
+/// itself, so a weight rewrite in DRAM produces a different fingerprint
+/// and re-pays the reconfiguration — a stale skip is impossible.
 pub struct Engine {
     /// Number of physical systolic cells in the fabric.
     pub cells: usize,
     config: Option<EngineConfig>,
+    /// Is the configuration-context cache enabled?
+    ctx_enabled: bool,
+    /// Resident context fingerprints in LRU order (front = coldest), with
+    /// each context's size in config words.
+    ctx_lru: Vec<(u64, u64)>,
+    /// Config words currently held by resident contexts.
+    ctx_words: u64,
+    /// Context-store capacity in config words.
+    ctx_capacity: u64,
     /// Statistics since construction (or [`Engine::clear_stats`]).
     pub stats: EngineStats,
 }
@@ -64,13 +102,61 @@ impl Engine {
         Engine {
             cells,
             config: None,
+            ctx_enabled: false,
+            ctx_lru: Vec::new(),
+            ctx_words: 0,
+            ctx_capacity: DEFAULT_CTX_WORDS,
             stats: EngineStats::default(),
         }
     }
 
-    /// Load a configuration (validates, charges reconfiguration cycles).
+    /// Enable/disable the configuration-context cache (see the type docs).
+    /// Disabling drops every resident context, restoring the cold model
+    /// where each reconfiguration charges its full config-word cost.
+    pub fn set_context_cache(&mut self, on: bool) {
+        self.ctx_enabled = on;
+        if !on {
+            self.ctx_lru.clear();
+            self.ctx_words = 0;
+        }
+    }
+
+    /// Is the configuration-context cache enabled?
+    pub fn context_cache_enabled(&self) -> bool {
+        self.ctx_enabled
+    }
+
+    /// Config words currently resident in the context store.
+    pub fn context_words(&self) -> u64 {
+        self.ctx_words
+    }
+
+    /// Load a configuration (validates; charges reconfiguration cycles
+    /// unless the context cache holds an identical configuration, in which
+    /// case the switch is free and `reconfigs_skipped` bumps instead).
     pub fn reconfigure(&mut self, config: EngineConfig) -> Result<()> {
         config.validate()?;
+        if self.ctx_enabled {
+            let fp = config.fingerprint();
+            if let Some(pos) = self.ctx_lru.iter().position(|&(f, _)| f == fp) {
+                // context hit: the plane is already loaded on-chip —
+                // switching to it charges nothing
+                let entry = self.ctx_lru.remove(pos);
+                self.ctx_lru.push(entry);
+                self.stats.reconfigs_skipped += 1;
+                self.config = Some(config);
+                return Ok(());
+            }
+            let words = config.config_words();
+            if words <= self.ctx_capacity {
+                while self.ctx_words + words > self.ctx_capacity {
+                    let (_, w) = self.ctx_lru.remove(0);
+                    self.ctx_words -= w;
+                }
+                self.ctx_lru.push((fp, words));
+                self.ctx_words += words;
+            }
+        }
         self.stats.config_cycles += config.config_words();
         self.stats.reconfigs += 1;
         self.config = Some(config);
@@ -358,6 +444,75 @@ mod tests {
         .unwrap();
         assert!(e.run_batch(&[1, 2, 3, 4], 2, &[2]).is_err(), "FIR is unbatched");
         assert!(e.run_batch(&[1, 2], 0, &[2]).is_err(), "batch 0");
+    }
+
+    #[test]
+    fn context_cache_skips_identical_reconfigurations() {
+        let fir = |taps: Vec<i64>| EngineConfig {
+            mode: EngineMode::Fir { taps },
+            relu: false,
+            out_shift: 0,
+        };
+        // disabled (the default): repeats charge full cost every time
+        let mut cold = Engine::new(16);
+        cold.reconfigure(fir(vec![1, 2])).unwrap();
+        cold.reconfigure(fir(vec![1, 2])).unwrap();
+        assert_eq!(cold.stats.reconfigs, 2);
+        assert_eq!(cold.stats.reconfigs_skipped, 0);
+        assert_eq!(cold.stats.config_cycles, 2 * fir(vec![1, 2]).config_words());
+
+        // enabled: the repeat is a free context switch
+        let mut e = Engine::new(16);
+        e.set_context_cache(true);
+        assert!(e.context_cache_enabled());
+        e.reconfigure(fir(vec![1, 2])).unwrap();
+        let cc = e.stats.config_cycles;
+        e.reconfigure(fir(vec![3, 4])).unwrap();
+        e.reconfigure(fir(vec![1, 2])).unwrap();
+        assert_eq!(e.stats.reconfigs, 2, "two distinct configurations");
+        assert_eq!(e.stats.reconfigs_skipped, 1, "the repeat was resident");
+        assert_eq!(
+            e.stats.config_cycles,
+            cc + fir(vec![3, 4]).config_words(),
+            "a skipped reconfiguration charges 0 cycles"
+        );
+        // the skipped switch still installs a runnable configuration
+        let out = e.run(&[5, 7], &[2]).unwrap();
+        assert_eq!(out.data, vec![5, 17], "taps [1,2] active after the skip");
+        // changed coefficients change the fingerprint: no stale skip
+        e.reconfigure(fir(vec![9, 9])).unwrap();
+        assert_eq!(e.stats.reconfigs, 3);
+
+        // disabling drops the contexts
+        e.set_context_cache(false);
+        assert_eq!(e.context_words(), 0);
+        e.reconfigure(fir(vec![9, 9])).unwrap();
+        assert_eq!(e.stats.reconfigs, 4, "cold again once disabled");
+    }
+
+    #[test]
+    fn context_store_is_lru_bounded() {
+        let fir = |seed: i64, n: usize| EngineConfig {
+            mode: EngineMode::Fir { taps: vec![seed; n] },
+            relu: false,
+            out_shift: 0,
+        };
+        let mut e = Engine::new(16);
+        e.set_context_cache(true);
+        // an oversized configuration is never cached: repeats re-pay
+        e.reconfigure(fir(1, 2 * DEFAULT_CTX_WORDS as usize)).unwrap();
+        assert_eq!(e.context_words(), 0);
+        e.reconfigure(fir(1, 2 * DEFAULT_CTX_WORDS as usize)).unwrap();
+        assert_eq!(e.stats.reconfigs, 2);
+        assert_eq!(e.stats.reconfigs_skipped, 0);
+        // two near-capacity configurations cannot both stay resident: the
+        // LRU one is evicted and its repeat charges again
+        let big = DEFAULT_CTX_WORDS as usize - 8;
+        e.reconfigure(fir(2, big)).unwrap();
+        e.reconfigure(fir(3, big)).unwrap();
+        assert!(e.context_words() <= DEFAULT_CTX_WORDS);
+        e.reconfigure(fir(2, big)).unwrap();
+        assert_eq!(e.stats.reconfigs_skipped, 0, "evicted context re-pays");
     }
 
     #[test]
