@@ -13,6 +13,7 @@ use kom_accel::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
 use kom_accel::multipliers::{generate, MultKind, MultiplierSpec};
 use kom_accel::sim::CycleSim;
 use kom_accel::systolic::conv2d::conv2d;
+use kom_accel::systolic::Conv2dGeom;
 use kom_accel::techmap;
 
 fn main() {
@@ -43,12 +44,20 @@ fn main() {
     // 3. systolic conv
     let input: Vec<i64> = (0..8 * 32 * 32).map(|i| (i % 255) as i64 - 127).collect();
     let weights: Vec<i64> = (0..16 * 8 * 3 * 3).map(|i| (i % 49) as i64 - 24).collect();
+    let conv_g = Conv2dGeom {
+        cin: 8,
+        h: 32,
+        w: 32,
+        cout: 16,
+        kh: 3,
+        kw: 3,
+        stride: 1,
+        pad: 1,
+    };
     let m = bench.run("systolic conv2d 8x32x32 -> 16 (3x3)", || {
-        conv2d(&input, 8, 32, 32, &weights, 16, 3, 3, 1, 1, 256).unwrap().macs
+        conv2d(&input, &weights, conv_g, 256).unwrap().macs
     });
-    let macs = conv2d(&input, 8, 32, 32, &weights, 16, 3, 3, 1, 1, 256)
-        .unwrap()
-        .macs as f64;
+    let macs = conv2d(&input, &weights, conv_g, 256).unwrap().macs as f64;
     println!("  -> {:.1} M MACs/s simulated", m.per_second(macs) / 1e6);
 
     // 4. coordinator round trip

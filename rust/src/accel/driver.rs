@@ -7,10 +7,11 @@
 //! address into the engine's MMIO DESC register), loads it into program
 //! ROM, and lets the RISC-V core sequence the run.
 
-use super::desc::{LayerDesc, DESC_WORDS};
+use super::desc::{FusionCtl, LayerDesc, DESC_WORDS};
 use super::fusion::FusionPlan;
 use super::plan::{encode_raw, encode_table_image, CompiledPlan, PlanCache, PlanKey};
 use super::soc::{map, Soc, SocConfig};
+use super::verify::{self, codes, Diagnostic, Severity};
 use crate::cluster::ShardPlan;
 use crate::error::{Error, Result};
 use crate::riscv::asm::{reg, Assembler};
@@ -54,6 +55,11 @@ pub struct RunMetrics {
     /// Did this run execute a cached [`CompiledPlan`] (plan-cache hit)
     /// rather than compiling one?
     pub plan_hit: bool,
+    /// Warn-level diagnostics the static plan verifier attached to the
+    /// plan this run executed (Error-level diagnostics never reach
+    /// execution — [`Driver::compile`] rejects them with
+    /// `Error::PlanVerify`).
+    pub verify_warnings: u32,
     /// Layers executed.
     pub layers: u64,
     /// MAC/reduce operations.
@@ -469,8 +475,59 @@ impl Driver {
         } else {
             FusionPlan::none(descs.len())
         };
-        let table_words = encode_table_image(descs, &fusion);
+        let plan = self.build_plan(descs, batch, raw, key, &fusion)?;
+        self.plans.insert(plan.clone());
+        Ok((plan, false))
+    }
+
+    /// Compile `(descs, batch)` against an **explicit** fusion plan
+    /// instead of running the planner — the escape hatch autotuners (and
+    /// the verifier's known-bad corpora) use to submit bindings the
+    /// planner would never emit. The result is *not* inserted into the
+    /// plan cache: its key could not be re-derived from
+    /// `(table, batch, fusion flag)` alone, so a later `run_table_batch`
+    /// must not silently hit it. The static verifier still gates it —
+    /// unsound bindings come back as `Error::PlanVerify`.
+    pub fn compile_with_fusion(
+        &mut self,
+        descs: &[LayerDesc],
+        batch: u32,
+        fusion: &FusionPlan,
+    ) -> Result<Arc<CompiledPlan>> {
+        if batch == 0 {
+            return Err(Error::Accel("batch of 0".into()));
+        }
+        let raw = encode_raw(descs);
+        let key = PlanKey::from_raw(
+            &raw,
+            batch,
+            self.fusion_on,
+            self.soc.config().spad_words,
+            self.soc.spad.bank_words(),
+        );
+        self.build_plan(descs, batch, raw, key, fusion)
+    }
+
+    /// Shared tail of [`Driver::compile`] / [`Driver::compile_with_fusion`]:
+    /// encode the ctrl-RAM image, assemble the control program, run the
+    /// static verifier (rejecting Error-level plans with
+    /// `Error::PlanVerify`), then fingerprint the bound weight regions.
+    fn build_plan(
+        &mut self,
+        descs: &[LayerDesc],
+        batch: u32,
+        raw: Vec<u32>,
+        key: PlanKey,
+        fusion: &FusionPlan,
+    ) -> Result<Arc<CompiledPlan>> {
+        let table_words = encode_table_image(descs, fusion);
         let program = Self::control_program(descs.len(), batch)?;
+        let ctls: Vec<FusionCtl> = (0..descs.len()).map(|i| fusion.ctl(i)).collect();
+        let diags = verify::verify_all(descs, &ctls, batch, &table_words, self.soc.config());
+        if verify::has_errors(&diags) {
+            return Err(Error::PlanVerify(diags));
+        }
+        let warnings = diags.len() as u32;
         let weight_regions: Vec<(u32, u32)> =
             descs.iter().flat_map(|d| d.weight_regions()).collect();
         // per-layer configuration identities, from the weights as they sit
@@ -486,7 +543,7 @@ impl Driver {
             let fp = d.engine_config(regions).map(|c| c.fingerprint()).unwrap_or(0);
             layer_fingerprints.push(fp);
         }
-        let plan = Arc::new(CompiledPlan {
+        Ok(Arc::new(CompiledPlan {
             key,
             n_layers: descs.len(),
             batch,
@@ -497,11 +554,139 @@ impl Driver {
             fused_edges: fusion.fused_edges(),
             weight_regions,
             layer_fingerprints,
+            warnings,
             owner: self.driver_id,
             epoch: self.arena_epoch,
-        });
-        self.plans.insert(plan.clone());
-        Ok((plan, false))
+        }))
+    }
+
+    /// Run the static verifier over `(descs, batch)` exactly as
+    /// [`Driver::compile`] would see it — same fusion planning, same
+    /// encoded image, same control-program validation — but return the
+    /// full diagnostic list instead of rejecting. This is the
+    /// `kom-accel lint` entry point: no plan is cached, no cycles charged.
+    pub fn lint_table(&self, descs: &[LayerDesc], batch: u32) -> Vec<Diagnostic> {
+        let fusion = if self.fusion_on {
+            FusionPlan::plan(
+                descs,
+                batch,
+                self.soc.config().spad_words,
+                self.soc.spad.bank_words(),
+            )
+        } else {
+            FusionPlan::none(descs.len())
+        };
+        let ctls: Vec<FusionCtl> = (0..descs.len()).map(|i| fusion.ctl(i)).collect();
+        let image = encode_table_image(descs, &fusion);
+        let mut diags = verify::verify_all(descs, &ctls, batch, &image, self.soc.config());
+        if let Err(e) = Self::control_program(descs.len(), batch) {
+            diags.push(Diagnostic {
+                code: codes::TABLE_TOO_LARGE,
+                severity: Severity::Error,
+                layer: None,
+                message: e.to_string(),
+            });
+        }
+        diags
+    }
+
+    /// Statically verify a compiled plan **handle** against this driver:
+    /// ownership (`KOM-E010`), arena-epoch freshness (`KOM-E009`), then
+    /// the full table/fusion/image pass re-run on the descriptors decoded
+    /// back out of the plan's own ctrl-RAM image, plus a control-program
+    /// regeneration compare. A stale or foreign handle yields typed
+    /// diagnostics — never a panic, never a silent pass.
+    pub fn verify_plan(&self, plan: &CompiledPlan) -> Vec<Diagnostic> {
+        let mut diags = Vec::new();
+        if plan.owner != self.driver_id {
+            diags.push(Diagnostic {
+                code: codes::FOREIGN_PLAN,
+                severity: Severity::Error,
+                layer: None,
+                message: "plan was compiled by a different driver, whose DRAM layout this \
+                          driver does not share"
+                    .into(),
+            });
+        }
+        if plan.epoch != self.arena_epoch {
+            diags.push(Diagnostic {
+                code: codes::STALE_PLAN,
+                severity: Severity::Error,
+                layer: None,
+                message: format!(
+                    "plan was compiled at arena epoch {} but the driver is at {} — its DRAM \
+                     bindings reference reused addresses (reset_arena invalidates plan handles)",
+                    plan.epoch, self.arena_epoch
+                ),
+            });
+        }
+        // re-derive the descriptors + side-bands from the plan's own image
+        let mut descs = Vec::with_capacity(plan.n_layers);
+        let mut ctls = Vec::with_capacity(plan.n_layers);
+        for i in 0..plan.n_layers {
+            let Some(block) = plan.table_words.get(i * DESC_WORDS..(i + 1) * DESC_WORDS) else {
+                diags.push(Diagnostic {
+                    code: codes::ENCODING_MISMATCH,
+                    severity: Severity::Error,
+                    layer: Some(i),
+                    message: format!(
+                        "plan claims {} layers but its ctrl-RAM image holds {} words",
+                        plan.n_layers,
+                        plan.table_words.len()
+                    ),
+                });
+                return diags;
+            };
+            match LayerDesc::decode(block) {
+                Ok(d) => descs.push(d),
+                Err(e) => {
+                    diags.push(Diagnostic {
+                        code: codes::ENCODING_MISMATCH,
+                        severity: Severity::Error,
+                        layer: Some(i),
+                        message: format!("plan image does not decode: {e}"),
+                    });
+                    return diags;
+                }
+            }
+            match FusionCtl::decode(block) {
+                Ok(c) => ctls.push(c),
+                Err(e) => {
+                    diags.push(Diagnostic {
+                        code: codes::BAD_FUSION_SIDEBAND_VERSION,
+                        severity: Severity::Error,
+                        layer: Some(i),
+                        message: e.to_string(),
+                    });
+                    return diags;
+                }
+            }
+        }
+        diags.extend(verify::verify_all(
+            &descs,
+            &ctls,
+            plan.batch,
+            &plan.table_words,
+            self.soc.config(),
+        ));
+        match Self::control_program(plan.n_layers, plan.batch) {
+            Ok(p) if p == plan.program => {}
+            Ok(_) => diags.push(Diagnostic {
+                code: codes::ENCODING_MISMATCH,
+                severity: Severity::Error,
+                layer: None,
+                message: "plan's control program does not match a regeneration from its \
+                          table shape and batch"
+                    .into(),
+            }),
+            Err(e) => diags.push(Diagnostic {
+                code: codes::TABLE_TOO_LARGE,
+                severity: Severity::Error,
+                layer: None,
+                message: e.to_string(),
+            }),
+        }
+        diags
     }
 
     /// Seed this driver's plan cache with a plan another driver compiled
@@ -581,6 +766,7 @@ impl Driver {
             reconfigs: self.soc.engine.stats.reconfigs - rc0,
             reconfigs_skipped: self.soc.engine.stats.reconfigs_skipped - rs0,
             plan_hit: false,
+            verify_warnings: plan.warnings,
             layers: self.soc.layers_run - lr0,
             ops: self.soc.engine.stats.ops - ops0,
             requests: plan.batch as u64,
@@ -1103,6 +1289,45 @@ mod tests {
         drv.alloc(4).unwrap();
         let fresh = drv.compile(&descs, 1).unwrap();
         assert!(drv.execute(&fresh).is_ok());
+    }
+
+    #[test]
+    fn verify_plan_flags_stale_and_foreign_handles() {
+        // verifying a handle from a stale arena epoch must return the
+        // typed stale-plan diagnostic — not panic, not silently pass
+        let (mut drv, descs) = fir_driver();
+        let plan = drv.compile(&descs, 1).unwrap();
+        assert!(!verify::has_errors(&drv.verify_plan(&plan)), "fresh handle is clean");
+        drv.reset_arena();
+        let diags = drv.verify_plan(&plan);
+        assert!(
+            diags.iter().any(|d| d.code == codes::STALE_PLAN),
+            "stale handle must yield {}: {diags:?}",
+            codes::STALE_PLAN
+        );
+        // a different driver's handle is foreign, even at a matching epoch
+        let (other, _) = fir_driver();
+        let diags = other.verify_plan(&plan);
+        assert!(
+            diags.iter().any(|d| d.code == codes::FOREIGN_PLAN),
+            "foreign handle must yield {}: {diags:?}",
+            codes::FOREIGN_PLAN
+        );
+    }
+
+    #[test]
+    fn clean_compiles_report_zero_verify_warnings() {
+        let (mut drv, descs) = fir_driver();
+        let m = drv.run_table(&descs).unwrap();
+        assert_eq!(m.verify_warnings, 0);
+        assert!(drv.lint_table(&descs, 1).is_empty());
+        // batch 2 on a FIR table compiles (the plan-cache keying test
+        // depends on it) but carries the W002 ride-along warning
+        let plan = drv.compile(&descs, 2).unwrap();
+        assert_eq!(plan.warnings, 1);
+        let diags = drv.lint_table(&descs, 2);
+        assert!(!verify::has_errors(&diags));
+        assert!(diags.iter().any(|d| d.code == codes::FIR_IN_BATCHED_TABLE), "{diags:?}");
     }
 
     #[test]

@@ -177,6 +177,27 @@ impl FusionPlan {
         FusionPlan { edges }
     }
 
+    /// Rebuild a plan from explicit per-layer side-band control words —
+    /// the inverse of [`FusionPlan::ctl`]. This is how decoded ctrl-RAM
+    /// images (and hand-built or adversarial plans, e.g. the verifier's
+    /// known-bad corpora) re-enter the planner's type. The mode is
+    /// recorded as [`FuseMode::Whole`]; execution and verification only
+    /// consume the binding and footprint.
+    pub fn from_ctls(ctls: &[FusionCtl]) -> Self {
+        FusionPlan {
+            edges: ctls
+                .iter()
+                .map(|c| {
+                    (!c.is_none()).then_some(FusedEdge {
+                        mode: FuseMode::Whole,
+                        resident_words: c.resident_words as usize,
+                        spad_binding: c.spad_binding,
+                    })
+                })
+                .collect(),
+        }
+    }
+
     /// The fused edge whose producer is layer `i`, if any.
     pub fn edge(&self, producer: usize) -> Option<&FusedEdge> {
         self.edges.get(producer).and_then(|e| e.as_ref())

@@ -13,6 +13,9 @@
 //!   driver's bounded LRU plan cache,
 //! * [`soc`] — the SoC: memory map, MMIO bridge between the control CPU
 //!   and the engine, cycle accounting,
+//! * [`verify`] — the static plan verifier: a lint pass over descriptor
+//!   tables, fusion bindings and cycle accounting that gates
+//!   `Driver::compile` and backs the `kom-accel lint` subcommand,
 //! * [`driver`] — host API: load weights, compile a descriptor table into
 //!   a [`CompiledPlan`], execute it under RISC-V control, read back
 //!   outputs and metrics — including the cluster-aware
@@ -24,9 +27,11 @@ pub mod driver;
 pub mod fusion;
 pub mod plan;
 pub mod soc;
+pub mod verify;
 
 pub use desc::{FusionCtl, LayerDesc};
 pub use driver::{Driver, RunMetrics, ShardRun, ShardedMetrics};
 pub use fusion::{FuseMode, FusedEdge, FusionGroup, FusionPlan};
 pub use plan::{CompiledPlan, PlanCache, PlanKey};
 pub use soc::{Soc, SocConfig};
+pub use verify::{Diagnostic, Severity};

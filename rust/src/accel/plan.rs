@@ -139,6 +139,10 @@ pub struct CompiledPlan {
     /// configuration identities a warm run presents to the engine's
     /// context cache.
     pub layer_fingerprints: Vec<u64>,
+    /// Warn-level diagnostics the static verifier attached at compile
+    /// time (Error-level findings reject the plan instead). Surfaced per
+    /// run as `RunMetrics::verify_warnings`.
+    pub warnings: u32,
     /// Identity of the driver that compiled (or adopted) this plan;
     /// `Driver::execute` refuses a plan stamped by a different driver —
     /// its DRAM bindings describe someone else's address space. Cluster
@@ -281,6 +285,7 @@ mod tests {
             fused_edges: 0,
             weight_regions,
             layer_fingerprints: Vec::new(),
+            warnings: 0,
             owner: 0,
             epoch: 0,
         })

@@ -132,6 +132,26 @@ pub mod map {
     pub const R_FUSED_HI: u32 = MMIO_BASE + 44;
 }
 
+/// Everything one executed layer hands to [`Soc::finish_layer`]: where the
+/// result goes, what it cost, and the fusion side-band that decides whether
+/// it stays scratchpad-resident.
+struct LayerOutcome<'a> {
+    /// DRAM address of the output region.
+    out_addr: u32,
+    /// The computed output words.
+    data: &'a [i64],
+    /// Engine cycles this layer spent computing.
+    compute: u64,
+    /// DMA cost of staging the input (zero if consumed resident).
+    in_cost: StageCost,
+    /// Weight-DMA cycles the overlap model may hide under compute.
+    w_hideable: u64,
+    /// Fusion side-band for this layer.
+    ctl: FusionCtl,
+    /// DRAM address of a resident input region consumed by this layer.
+    consumed: Option<u32>,
+}
+
 /// An activation region held in the scratchpad across a fused
 /// producer→consumer edge instead of round-tripping through DRAM.
 struct ResidentRegion {
@@ -559,7 +579,15 @@ impl Soc {
                     .engine
                     .run_batch(&input, batch, &[cin as usize, h as usize, w as usize])?;
                 let compute = self.engine.stats.total_cycles() - c0;
-                self.finish_layer(out_addr, &out.data, compute, in_cost, w_hideable, ctl, consumed)
+                self.finish_layer(LayerOutcome {
+                    out_addr,
+                    data: &out.data,
+                    compute,
+                    in_cost,
+                    w_hideable,
+                    ctl,
+                    consumed,
+                })
             }
             LayerDesc::Pool {
                 in_addr,
@@ -578,7 +606,15 @@ impl Soc {
                     .engine
                     .run_batch(&input, batch, &[c as usize, h as usize, w as usize])?;
                 let compute = self.engine.stats.total_cycles() - c0;
-                self.finish_layer(out_addr, &out.data, compute, in_cost, 0, ctl, consumed)
+                self.finish_layer(LayerOutcome {
+                    out_addr,
+                    data: &out.data,
+                    compute,
+                    in_cost,
+                    w_hideable: 0,
+                    ctl,
+                    consumed,
+                })
             }
             LayerDesc::Fc {
                 n_in,
@@ -598,15 +634,15 @@ impl Soc {
                 self.engine.reconfigure(cfg)?;
                 let out = self.engine.run_batch(&input, batch, &[n_in as usize])?;
                 let compute = self.engine.stats.total_cycles() - c0;
-                self.finish_layer(
+                self.finish_layer(LayerOutcome {
                     out_addr,
-                    &out.data,
+                    data: &out.data,
                     compute,
                     in_cost,
-                    w_hide + b_hide,
+                    w_hideable: w_hide + b_hide,
                     ctl,
                     consumed,
-                )
+                })
             }
             LayerDesc::Fir {
                 taps_addr,
@@ -627,7 +663,15 @@ impl Soc {
                 self.engine.reconfigure(cfg)?;
                 let out = self.engine.run(&input, &[n as usize])?;
                 let compute = self.engine.stats.total_cycles() - c0;
-                self.finish_layer(out_addr, &out.data, compute, in_cost, w_hideable, ctl, consumed)
+                self.finish_layer(LayerOutcome {
+                    out_addr,
+                    data: &out.data,
+                    compute,
+                    in_cost,
+                    w_hideable,
+                    ctl,
+                    consumed,
+                })
             }
         }
     }
@@ -638,17 +682,16 @@ impl Soc {
     /// input (if any) is released only *after* the output is placed: both
     /// regions are live simultaneously during the hand-off, which is
     /// exactly what the planner's pairwise budget constraint sized.
-    #[allow(clippy::too_many_arguments)]
-    fn finish_layer(
-        &mut self,
-        out_addr: u32,
-        data: &[i64],
-        compute: u64,
-        in_cost: StageCost,
-        w_hideable: u64,
-        ctl: FusionCtl,
-        consumed: Option<u32>,
-    ) -> Result<()> {
+    fn finish_layer(&mut self, o: LayerOutcome<'_>) -> Result<()> {
+        let LayerOutcome {
+            out_addr,
+            data,
+            compute,
+            in_cost,
+            w_hideable,
+            ctl,
+            consumed,
+        } = o;
         // an in-place consumer (its out_addr IS the consumed region's
         // address) has fully drained the input by compute end: release it
         // *before* the output is placed, or the release below would

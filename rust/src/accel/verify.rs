@@ -1,0 +1,1054 @@
+//! Static plan verifier — a lint pass over descriptor tables, fusion
+//! bindings, and cycle accounting.
+//!
+//! Every invariant the runtime enforces dynamically (DRAM region bounds,
+//! dataflow chaining, fusion-binding disjointness, the shared residency
+//! budget, `overlapped ≤ min(compute, mem)`) is re-derived here
+//! **statically**: a descriptor table or a compiled plan is checked
+//! without executing a single simulated cycle, and every violation comes
+//! back as a typed [`Diagnostic`] with a stable code. `Driver::compile`
+//! rejects Error-level plans with [`crate::error::Error::PlanVerify`],
+//! the `kom-accel lint` subcommand prints diagnostics for any network ×
+//! batch × shards × fusion combination, and Warn-level counts ride along
+//! in `RunMetrics::verify_warnings`.
+//!
+//! The checks deliberately do **not** call the fusion planner or the SoC:
+//! the budget arithmetic, the cycle lower bounds and the encoding layout
+//! are re-derived independently, so a bug in the planner or the cycle
+//! model cannot self-certify.
+//!
+//! ## Diagnostic codes
+//!
+//! | code | severity | meaning |
+//! |---|---|---|
+//! | `KOM-E001` | Error | a layer's weight region overlaps another live DRAM region |
+//! | `KOM-E002` | Error | a weight/input/output region is out of DRAM bounds |
+//! | `KOM-E003` | Error | consumer input and producer output intersect without chaining exactly |
+//! | `KOM-E004` | Error | adjacent fused resident bindings overlap |
+//! | `KOM-E005` | Error | fused binding inside a DMA staging bank / outside the scratchpad |
+//! | `KOM-E006` | Error | resident + cacheable-weight footprint exceeds the residency budget |
+//! | `KOM-E007` | Error | descriptor encoding does not round-trip / image or program disagree |
+//! | `KOM-E008` | Error | fusion side-band carries an unknown encoding version |
+//! | `KOM-E009` | Error | plan handle is stale (compiled at an older arena epoch) |
+//! | `KOM-E010` | Error | plan handle was compiled by a different driver |
+//! | `KOM-E011` | Error | table does not fit control RAM / batch outside register range |
+//! | `KOM-E012` | Error | degenerate geometry or an inconsistent static cycle model |
+//! | `KOM-W001` | Warn | consecutive layers are not dataflow-chained (disjoint regions) |
+//! | `KOM-W002` | Warn | FIR demo layer in a batched (`batch > 1`) table |
+
+use super::desc::{FusionCtl, LayerDesc, DESC_WORDS, FUSION_ENC_VERSION};
+use super::soc::SocConfig;
+use crate::cnn::layers::{Layer, LayerShape};
+use std::fmt;
+
+/// Stable diagnostic codes — never renumber, only append.
+pub mod codes {
+    /// A layer's weight region overlaps another live DRAM region.
+    pub const OVERLAPPING_DRAM_REGIONS: &str = "KOM-E001";
+    /// A weight/input/output region is out of DRAM bounds.
+    pub const REGION_OUT_OF_BOUNDS: &str = "KOM-E002";
+    /// Consumer input and producer output intersect without chaining exactly.
+    pub const BROKEN_DATAFLOW_CHAIN: &str = "KOM-E003";
+    /// Adjacent fused resident bindings overlap.
+    pub const FUSION_BINDING_OVERLAP: &str = "KOM-E004";
+    /// Fused binding inside a DMA staging bank or outside the scratchpad.
+    pub const FUSION_BINDING_IN_STAGING_BANK: &str = "KOM-E005";
+    /// Resident + cacheable-weight footprint exceeds the residency budget.
+    pub const FUSION_BUDGET_EXCEEDED: &str = "KOM-E006";
+    /// Descriptor encoding does not round-trip / image or program disagree.
+    pub const ENCODING_MISMATCH: &str = "KOM-E007";
+    /// Fusion side-band carries an unknown encoding version.
+    pub const BAD_FUSION_SIDEBAND_VERSION: &str = "KOM-E008";
+    /// Plan handle is stale (compiled at an older arena epoch).
+    pub const STALE_PLAN: &str = "KOM-E009";
+    /// Plan handle was compiled by a different driver.
+    pub const FOREIGN_PLAN: &str = "KOM-E010";
+    /// Table does not fit control RAM / batch outside the register range.
+    pub const TABLE_TOO_LARGE: &str = "KOM-E011";
+    /// Degenerate geometry or an inconsistent static cycle model.
+    pub const DEGENERATE_GEOMETRY: &str = "KOM-E012";
+    /// Consecutive layers are not dataflow-chained (disjoint regions).
+    pub const UNCHAINED_LAYERS: &str = "KOM-W001";
+    /// FIR demo layer in a batched (`batch > 1`) table.
+    pub const FIR_IN_BATCHED_TABLE: &str = "KOM-W002";
+}
+
+/// How bad a finding is: `Error` makes `Driver::compile` reject the plan,
+/// `Warn` is surfaced in metrics (and fails `lint --deny-warnings`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Severity {
+    /// Suspicious but executable.
+    Warn,
+    /// The plan must not execute.
+    Error,
+}
+
+/// One static-analysis finding over a descriptor table or compiled plan.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    /// Stable code from [`codes`] (e.g. `KOM-E001`).
+    pub code: &'static str,
+    /// Error-level findings reject the plan; Warn-level ride along.
+    pub severity: Severity,
+    /// Offending layer index, when the finding is layer-local.
+    pub layer: Option<usize>,
+    /// Human-readable description with the offending numbers.
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let sev = match self.severity {
+            Severity::Error => "error",
+            Severity::Warn => "warning",
+        };
+        match self.layer {
+            Some(i) => write!(f, "{} {sev} [layer {i}]: {}", self.code, self.message),
+            None => write!(f, "{} {sev}: {}", self.code, self.message),
+        }
+    }
+}
+
+fn error(code: &'static str, layer: Option<usize>, message: String) -> Diagnostic {
+    Diagnostic {
+        code,
+        severity: Severity::Error,
+        layer,
+        message,
+    }
+}
+
+fn warn(code: &'static str, layer: Option<usize>, message: String) -> Diagnostic {
+    Diagnostic {
+        code,
+        severity: Severity::Warn,
+        layer,
+        message,
+    }
+}
+
+/// True when any diagnostic is Error-level (the plan must be rejected).
+pub fn has_errors(diags: &[Diagnostic]) -> bool {
+    diags.iter().any(|d| d.severity == Severity::Error)
+}
+
+/// Number of Warn-level diagnostics.
+pub fn warn_count(diags: &[Diagnostic]) -> usize {
+    diags.iter().filter(|d| d.severity == Severity::Warn).count()
+}
+
+/// Run every static check on a table + its fusion side-bands + its encoded
+/// ctrl-RAM image: the verdict `Driver::compile` acts on.
+pub fn verify_all(
+    descs: &[LayerDesc],
+    ctls: &[FusionCtl],
+    batch: u32,
+    image: &[u32],
+    cfg: &SocConfig,
+) -> Vec<Diagnostic> {
+    let mut diags = verify_table(descs, batch, cfg);
+    diags.extend(verify_fusion(descs, ctls, cfg));
+    diags.extend(verify_image(descs, ctls, image));
+    diags
+}
+
+/// Checks (a), (b) and (e): region bounds/aliasing, dataflow chaining,
+/// geometry vs the `cnn::layers` analytical dims, table sizing and the
+/// static cycle model.
+pub fn verify_table(descs: &[LayerDesc], batch: u32, cfg: &SocConfig) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    check_config(cfg, &mut diags);
+    check_table_size(descs.len(), batch, cfg, &mut diags);
+    let lens = check_geometry(descs, &mut diags);
+    check_regions(descs, &lens, batch, cfg, &mut diags);
+    check_chain(descs, &lens, batch, &mut diags);
+    check_cycles(descs, &lens, batch, cfg, &mut diags);
+    diags
+}
+
+/// A `(per-image input words, per-image output words)` pair per layer, or
+/// `None` when the layer's geometry is degenerate — descriptor-held
+/// geometry is never trusted before passing through here, because
+/// `LayerDesc::{in_len,out_len}` divide by the descriptor's own stride
+/// and subtract its own kernel size.
+type LayerLens = Vec<Option<(u64, u64)>>;
+
+fn layer_lens(d: &LayerDesc) -> Option<(u64, u64)> {
+    match *d {
+        LayerDesc::Conv {
+            cout,
+            cin,
+            k,
+            stride,
+            pad,
+            h,
+            w,
+            ..
+        } => {
+            if cout == 0 || cin == 0 || k == 0 || stride == 0 || h == 0 || w == 0 {
+                return None;
+            }
+            let (hp, wp) = (h as u64 + 2 * pad as u64, w as u64 + 2 * pad as u64);
+            if hp < k as u64 || wp < k as u64 {
+                return None;
+            }
+            let ho = (hp - k as u64) / stride as u64 + 1;
+            let wo = (wp - k as u64) / stride as u64 + 1;
+            Some((
+                cin as u64 * h as u64 * w as u64,
+                cout as u64 * ho * wo,
+            ))
+        }
+        LayerDesc::Pool {
+            k, stride, c, h, w, ..
+        } => {
+            if k == 0 || stride == 0 || c == 0 || (h as u64) < k as u64 || (w as u64) < k as u64 {
+                return None;
+            }
+            let ho = (h as u64 - k as u64) / stride as u64 + 1;
+            let wo = (w as u64 - k as u64) / stride as u64 + 1;
+            Some((c as u64 * h as u64 * w as u64, c as u64 * ho * wo))
+        }
+        LayerDesc::Fc { n_in, n_out, .. } => {
+            if n_in == 0 || n_out == 0 {
+                return None;
+            }
+            Some((n_in as u64, n_out as u64))
+        }
+        LayerDesc::Fir { n_taps, n, .. } => {
+            if n_taps == 0 || n == 0 {
+                return None;
+            }
+            Some((n as u64, n as u64))
+        }
+        LayerDesc::End => Some((0, 0)),
+    }
+}
+
+fn check_config(cfg: &SocConfig, diags: &mut Vec<Diagnostic>) {
+    for (name, v) in [
+        ("cells", cfg.cells),
+        ("ctrl_ram_words", cfg.ctrl_ram_words),
+        ("dram_words", cfg.dram_words),
+        ("spad_words", cfg.spad_words),
+        ("spad_banks", cfg.spad_banks),
+    ] {
+        if v == 0 {
+            diags.push(error(
+                codes::DEGENERATE_GEOMETRY,
+                None,
+                format!("SoC config has {name} = 0 — no layer can execute"),
+            ));
+        }
+    }
+}
+
+fn check_table_size(n_layers: usize, batch: u32, cfg: &SocConfig, diags: &mut Vec<Diagnostic>) {
+    let need = (n_layers + 1) * DESC_WORDS;
+    if need > cfg.ctrl_ram_words {
+        diags.push(error(
+            codes::TABLE_TOO_LARGE,
+            None,
+            format!(
+                "{n_layers}-layer table needs {need} control-RAM words \
+                 (incl. End), only {} available",
+                cfg.ctrl_ram_words
+            ),
+        ));
+    }
+    if batch == 0 {
+        diags.push(error(
+            codes::TABLE_TOO_LARGE,
+            None,
+            "batch of 0 — the BATCH register needs at least 1".into(),
+        ));
+    }
+    if batch > i32::MAX as u32 {
+        diags.push(error(
+            codes::TABLE_TOO_LARGE,
+            None,
+            format!("batch {batch} exceeds the BATCH register range (max {})", i32::MAX),
+        ));
+    }
+}
+
+/// Validate per-layer geometry with checked arithmetic and cross-check
+/// Conv/Pool output shapes against the `cnn::layers` analytical model —
+/// the two derivations must agree or the verifier flags the drift.
+fn check_geometry(descs: &[LayerDesc], diags: &mut Vec<Diagnostic>) -> LayerLens {
+    let mut lens = Vec::with_capacity(descs.len());
+    for (i, d) in descs.iter().enumerate() {
+        let l = layer_lens(d);
+        match l {
+            None => diags.push(error(
+                codes::DEGENERATE_GEOMETRY,
+                Some(i),
+                format!("degenerate geometry: {d:?}"),
+            )),
+            Some((_, out)) => {
+                let analytical = match *d {
+                    LayerDesc::Conv {
+                        cout,
+                        cin,
+                        k,
+                        stride,
+                        pad,
+                        h,
+                        w,
+                        ..
+                    } => Some(
+                        Layer::Conv {
+                            cout: cout as usize,
+                            k: k as usize,
+                            stride: stride as usize,
+                            pad: pad as usize,
+                        }
+                        .out_shape(&LayerShape::Chw(cin as usize, h as usize, w as usize)),
+                    ),
+                    LayerDesc::Pool {
+                        k,
+                        stride,
+                        kind,
+                        c,
+                        h,
+                        w,
+                        ..
+                    } => Some(
+                        Layer::Pool {
+                            k: k as usize,
+                            stride: stride as usize,
+                            kind,
+                        }
+                        .out_shape(&LayerShape::Chw(c as usize, h as usize, w as usize)),
+                    ),
+                    _ => None,
+                };
+                match analytical {
+                    Some(Err(e)) => diags.push(error(
+                        codes::DEGENERATE_GEOMETRY,
+                        Some(i),
+                        format!("analytical shape model rejects the layer: {e}"),
+                    )),
+                    Some(Ok(shape)) if shape.volume() as u64 != out => diags.push(error(
+                        codes::DEGENERATE_GEOMETRY,
+                        Some(i),
+                        format!(
+                            "descriptor out_len {out} disagrees with the \
+                             cnn::layers analytical volume {}",
+                            shape.volume()
+                        ),
+                    )),
+                    _ => {}
+                }
+            }
+        }
+        lens.push(l);
+    }
+    lens
+}
+
+#[derive(Clone, Copy)]
+struct Region {
+    addr: u64,
+    len: u64,
+}
+
+impl Region {
+    fn end(&self) -> u64 {
+        self.addr + self.len
+    }
+
+    fn overlaps(&self, other: &Region) -> bool {
+        self.len > 0 && other.len > 0 && self.addr < other.end() && other.addr < self.end()
+    }
+
+    fn same(&self, other: &Region) -> bool {
+        self.addr == other.addr && self.len == other.len
+    }
+}
+
+/// Weight regions of layer `i` as `(addr, len)` pairs, batch-independent.
+fn weight_regions(d: &LayerDesc) -> Vec<Region> {
+    d.weight_regions()
+        .into_iter()
+        .map(|(addr, len)| Region {
+            addr: addr as u64,
+            len: len as u64,
+        })
+        .collect()
+}
+
+/// Batch-scaled input/output activation regions of layer `i`.
+fn activation_regions(d: &LayerDesc, lens: &Option<(u64, u64)>, batch: u64) -> Vec<Region> {
+    let Some((in_len, out_len)) = *lens else {
+        return Vec::new();
+    };
+    vec![
+        Region {
+            addr: d.in_addr() as u64,
+            len: batch * in_len,
+        },
+        Region {
+            addr: d.out_addr() as u64,
+            len: batch * out_len,
+        },
+    ]
+}
+
+/// Check (a): every region in-bounds for the DRAM arena, and no layer's
+/// weights overlap another live region. Activation↔activation overlap is
+/// legal (chained tables alias by construction); read-only weights may
+/// alias only when two layers share the *identical* region.
+fn check_regions(
+    descs: &[LayerDesc],
+    lens: &LayerLens,
+    batch: u32,
+    cfg: &SocConfig,
+    diags: &mut Vec<Diagnostic>,
+) {
+    let batch = batch.max(1) as u64;
+    let dram = cfg.dram_words as u64;
+    let mut weights: Vec<(usize, Region)> = Vec::new();
+    let mut acts: Vec<(usize, &'static str, Region)> = Vec::new();
+    for (i, d) in descs.iter().enumerate() {
+        for r in weight_regions(d) {
+            weights.push((i, r));
+        }
+        let a = activation_regions(d, &lens[i], batch);
+        for (kind, r) in ["input", "output"].into_iter().zip(a) {
+            acts.push((i, kind, r));
+        }
+    }
+    for (i, r) in &weights {
+        if r.end() > dram {
+            diags.push(error(
+                codes::REGION_OUT_OF_BOUNDS,
+                Some(*i),
+                format!(
+                    "weight region [{}, {}) is out of bounds for the {dram}-word DRAM arena",
+                    r.addr,
+                    r.end()
+                ),
+            ));
+        }
+    }
+    for (i, kind, r) in &acts {
+        if r.end() > dram {
+            diags.push(error(
+                codes::REGION_OUT_OF_BOUNDS,
+                Some(*i),
+                format!(
+                    "{kind} region [{}, {}) (batch {batch}) is out of bounds \
+                     for the {dram}-word DRAM arena",
+                    r.addr,
+                    r.end()
+                ),
+            ));
+        }
+    }
+    for (wi, (i, wr)) in weights.iter().enumerate() {
+        for (j, kind, ar) in &acts {
+            if wr.overlaps(ar) {
+                diags.push(error(
+                    codes::OVERLAPPING_DRAM_REGIONS,
+                    Some(*i),
+                    format!(
+                        "weight region [{}, {}) overlaps layer {j}'s {kind} \
+                         region [{}, {}) — activations would clobber weights",
+                        wr.addr,
+                        wr.end(),
+                        ar.addr,
+                        ar.end()
+                    ),
+                ));
+            }
+        }
+        for (j, or) in weights.iter().skip(wi + 1) {
+            if wr.overlaps(or) && !wr.same(or) {
+                diags.push(error(
+                    codes::OVERLAPPING_DRAM_REGIONS,
+                    Some(*i),
+                    format!(
+                        "weight region [{}, {}) partially overlaps layer {j}'s \
+                         weight region [{}, {})",
+                        wr.addr,
+                        wr.end(),
+                        or.addr,
+                        or.end()
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// Check (b): every consumer's input region must exactly match its
+/// producer's output region — a partial overlap is corrupt dataflow
+/// (Error), fully disjoint regions merely break the chain (Warn).
+fn check_chain(descs: &[LayerDesc], lens: &LayerLens, batch: u32, diags: &mut Vec<Diagnostic>) {
+    let batch = batch.max(1) as u64;
+    if batch > 1 {
+        for (i, d) in descs.iter().enumerate() {
+            if matches!(d, LayerDesc::Fir { .. }) {
+                diags.push(warn(
+                    codes::FIR_IN_BATCHED_TABLE,
+                    Some(i),
+                    format!(
+                        "FIR is a single-stream demo mode; batch {batch} runs \
+                         it per-image with no amortization"
+                    ),
+                ));
+            }
+        }
+    }
+    for i in 0..descs.len().saturating_sub(1) {
+        let (p, c) = (&descs[i], &descs[i + 1]);
+        if matches!(p, LayerDesc::End) || matches!(c, LayerDesc::End) {
+            continue;
+        }
+        let (Some((_, p_out)), Some((c_in, _))) = (lens[i], lens[i + 1]) else {
+            continue; // degenerate geometry already reported
+        };
+        let pr = Region {
+            addr: p.out_addr() as u64,
+            len: batch * p_out,
+        };
+        let cr = Region {
+            addr: c.in_addr() as u64,
+            len: batch * c_in,
+        };
+        if pr.same(&cr) {
+            continue;
+        }
+        if pr.overlaps(&cr) {
+            diags.push(error(
+                codes::BROKEN_DATAFLOW_CHAIN,
+                Some(i + 1),
+                format!(
+                    "input region [{}, {}) intersects producer output \
+                     [{}, {}) without matching it exactly",
+                    cr.addr,
+                    cr.end(),
+                    pr.addr,
+                    pr.end()
+                ),
+            ));
+        } else {
+            diags.push(warn(
+                codes::UNCHAINED_LAYERS,
+                Some(i + 1),
+                format!(
+                    "input region [{}, {}) is disjoint from producer output \
+                     [{}, {}) — the layers do not chain",
+                    cr.addr,
+                    cr.end(),
+                    pr.addr,
+                    pr.end()
+                ),
+            ));
+        }
+    }
+}
+
+/// Check (c): fusion soundness. The residency budget and binding rules
+/// are re-derived from first principles (`spad − 2 × staging banks`,
+/// bindings disjoint and past the banks, resident footprints charged
+/// together with both adjacent layers' cacheable weights) — NOT by
+/// calling the planner.
+pub fn verify_fusion(descs: &[LayerDesc], ctls: &[FusionCtl], cfg: &SocConfig) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    // mirror Scratchpad::bank_words: words / banks, floored, min 1
+    let bank_words = (cfg.spad_words / cfg.spad_banks.max(1)).max(1);
+    let staging = 2 * bank_words;
+    let budget = cfg.spad_words.saturating_sub(staging);
+    let cacheable = |d: &LayerDesc| -> usize {
+        d.weight_regions()
+            .iter()
+            .map(|&(_, l)| l as usize)
+            .filter(|&l| l <= budget)
+            .sum()
+    };
+    for (i, ctl) in ctls.iter().enumerate() {
+        if ctl.is_none() {
+            continue;
+        }
+        let (b, r) = (ctl.spad_binding as usize, ctl.resident_words as usize);
+        let Some(p) = descs.get(i) else { continue };
+        let consumer = descs.get(i + 1);
+        match consumer {
+            None | Some(LayerDesc::End) => {
+                diags.push(error(
+                    codes::BROKEN_DATAFLOW_CHAIN,
+                    Some(i),
+                    "fuse_next is set on the last layer — there is no consumer".into(),
+                ));
+                continue;
+            }
+            Some(c) => {
+                if p.out_addr() != c.in_addr()
+                    || p.out_len() == 0
+                    || layer_lens(p).is_none()
+                    || layer_lens(c).is_none()
+                    || p.out_len() != c.in_len()
+                {
+                    diags.push(error(
+                        codes::BROKEN_DATAFLOW_CHAIN,
+                        Some(i),
+                        format!(
+                            "fused edge over an unchained pair: producer out \
+                             {}×{} vs consumer in {}×{}",
+                            p.out_addr(),
+                            p.out_len(),
+                            c.in_addr(),
+                            c.in_len()
+                        ),
+                    ));
+                }
+            }
+        }
+        if r == 0 {
+            diags.push(error(
+                codes::FUSION_BINDING_IN_STAGING_BANK,
+                Some(i),
+                "fused binding has a zero-word resident footprint".into(),
+            ));
+            continue;
+        }
+        if b < staging {
+            diags.push(error(
+                codes::FUSION_BINDING_IN_STAGING_BANK,
+                Some(i),
+                format!(
+                    "resident binding [{b}, {}) intrudes into the DMA staging \
+                     banks [0, {staging})",
+                    b + r
+                ),
+            ));
+        }
+        if b + r > cfg.spad_words {
+            diags.push(error(
+                codes::FUSION_BINDING_IN_STAGING_BANK,
+                Some(i),
+                format!(
+                    "resident binding [{b}, {}) extends past the {}-word scratchpad",
+                    b + r,
+                    cfg.spad_words
+                ),
+            ));
+        }
+        // adjacent live regions (layer i's input band and output band)
+        let prev = (i > 0 && !ctls[i - 1].is_none()).then(|| {
+            (
+                ctls[i - 1].spad_binding as usize,
+                ctls[i - 1].resident_words as usize,
+            )
+        });
+        if let Some((pb, pr)) = prev {
+            if pb < b + r && b < pb + pr {
+                diags.push(error(
+                    codes::FUSION_BINDING_OVERLAP,
+                    Some(i),
+                    format!(
+                        "resident binding [{b}, {}) overlaps the live \
+                         predecessor band [{pb}, {}) — both are resident \
+                         while layer {i} computes",
+                        b + r,
+                        pb + pr
+                    ),
+                ));
+            }
+        }
+        // the shared residency budget, re-derived: while the producer
+        // computes, the predecessor band + this region + the producer's
+        // cacheable weights share the arena; while the consumer drains
+        // it, the region + the consumer's cacheable weights do
+        let (prev_off, prev_words) = prev
+            .map(|(pb, pr)| (pb.saturating_sub(staging), pr))
+            .unwrap_or((0, 0));
+        let off = b.saturating_sub(staging);
+        let w_p = cacheable(p);
+        let w_c = consumer.map(cacheable).unwrap_or(0);
+        let high_water = (prev_off + prev_words).max(off + r);
+        if high_water + w_p > budget {
+            diags.push(error(
+                codes::FUSION_BUDGET_EXCEEDED,
+                Some(i),
+                format!(
+                    "producer-side footprint {high_water} + {w_p} cacheable \
+                     weight words exceeds the {budget}-word residency budget",
+                ),
+            ));
+        }
+        if off + r + w_c > budget {
+            diags.push(error(
+                codes::FUSION_BUDGET_EXCEEDED,
+                Some(i),
+                format!(
+                    "consumer-side footprint {} + {w_c} cacheable weight \
+                     words exceeds the {budget}-word residency budget",
+                    off + r
+                ),
+            ));
+        }
+    }
+    diags
+}
+
+/// Check (d): the encoded ctrl-RAM image must round-trip — every block
+/// re-encodes byte-identically from its descriptor + side-band, decodes
+/// back to the same descriptor, carries a valid side-band version, and
+/// the table ends in an `End` terminator block.
+pub fn verify_image(descs: &[LayerDesc], ctls: &[FusionCtl], image: &[u32]) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let need = (descs.len() + 1) * DESC_WORDS;
+    if image.len() != need {
+        diags.push(error(
+            codes::ENCODING_MISMATCH,
+            None,
+            format!(
+                "ctrl-RAM image is {} words, a {}-layer table encodes to {need}",
+                image.len(),
+                descs.len()
+            ),
+        ));
+        return diags;
+    }
+    for (i, d) in descs.iter().enumerate() {
+        let block = &image[i * DESC_WORDS..(i + 1) * DESC_WORDS];
+        let ctl = ctls.get(i).copied().unwrap_or_default();
+        // side-band version gate first: a block from a newer encoding
+        // must not be diffed word-by-word as if we understood it
+        if block[13] != 0 && block[13] >> 8 != FUSION_ENC_VERSION {
+            diags.push(error(
+                codes::BAD_FUSION_SIDEBAND_VERSION,
+                Some(i),
+                format!(
+                    "fusion side-band version {} (this SoC speaks {FUSION_ENC_VERSION})",
+                    block[13] >> 8
+                ),
+            ));
+            continue;
+        }
+        let mut want = d.encode();
+        ctl.encode_into(&mut want);
+        if block != want {
+            diags.push(error(
+                codes::ENCODING_MISMATCH,
+                Some(i),
+                "ctrl-RAM block differs from the re-encoded descriptor + side-band".into(),
+            ));
+            continue;
+        }
+        match LayerDesc::decode(block) {
+            Ok(back) if back == *d => {}
+            Ok(_) => diags.push(error(
+                codes::ENCODING_MISMATCH,
+                Some(i),
+                "descriptor encode→decode is not the identity".into(),
+            )),
+            Err(e) => diags.push(error(
+                codes::ENCODING_MISMATCH,
+                Some(i),
+                format!("encoded block does not decode: {e}"),
+            )),
+        }
+        match FusionCtl::decode(block) {
+            Ok(back) if back == ctl => {}
+            Ok(_) => diags.push(error(
+                codes::ENCODING_MISMATCH,
+                Some(i),
+                "fusion side-band encode→decode is not the identity".into(),
+            )),
+            Err(e) => diags.push(error(
+                codes::BAD_FUSION_SIDEBAND_VERSION,
+                Some(i),
+                e.to_string(),
+            )),
+        }
+    }
+    let end = &image[descs.len() * DESC_WORDS..];
+    if end[0] != 0 {
+        diags.push(error(
+            codes::ENCODING_MISMATCH,
+            None,
+            format!("table is not End-terminated (opcode {} after the last layer)", end[0]),
+        ));
+    }
+    diags
+}
+
+/// Check (e): per-layer static cycle lower bounds. Returns
+/// `(compute, mem)` lower bounds per layer, saturating at `u64::MAX`.
+///
+/// Compute bounds mirror the engine's analytic models (conv row-FIR
+/// passes, pool comparator waves) or divide MACs by the cell pool (FC);
+/// memory bounds price each DRAM region at one burst
+/// (`latency + ⌈words / words-per-cycle⌉`, the §III DRAM defaults) — a
+/// true floor of both the serial and the staged DMA path, which only
+/// split regions into *more* bursts.
+pub fn cycle_lower_bounds(descs: &[LayerDesc], batch: u32, cfg: &SocConfig) -> Vec<(u64, u64)> {
+    let sat = |v: u128| -> u64 { v.min(u64::MAX as u128) as u64 };
+    descs
+        .iter()
+        .map(|d| {
+            let Some(lens) = layer_lens(d) else {
+                return (0, 0);
+            };
+            let (c, m) = cycle_lb(d, &lens, batch.max(1) as u64, cfg);
+            (sat(c), sat(m))
+        })
+        .collect()
+}
+
+fn cycle_lb(d: &LayerDesc, lens: &(u64, u64), batch: u64, cfg: &SocConfig) -> (u128, u128) {
+    // §III DRAM defaults (Dram::new): burst latency + streaming rate
+    const BURST_LATENCY: u128 = 30;
+    const WORDS_PER_CYCLE: u128 = 4;
+    let cells = cfg.cells.max(1) as u128;
+    let compute: u128 = match *d {
+        LayerDesc::Conv {
+            cout,
+            cin,
+            k,
+            stride,
+            pad,
+            h: _,
+            w,
+            ..
+        } => {
+            let (cout, cin, k) = (cout as u128, cin as u128, k as u128);
+            let wp = w as u128 + 2 * pad as u128;
+            let ho = (lens.1 / cout as u64 / ((wp as u64 - k as u64) / stride as u64 + 1)) as u128;
+            let lanes = (cells / k.max(1)).max(1);
+            let row_passes = cout * cin * k * ho * batch as u128;
+            let tap_sets = cout * cin * k;
+            row_passes.div_ceil(lanes) * wp + tap_sets.div_ceil(lanes) * k
+        }
+        LayerDesc::Pool { k, .. } => {
+            let windows = batch as u128 * lens.1 as u128;
+            windows.div_ceil(cells) * (k as u128 * k as u128)
+        }
+        LayerDesc::Fc { n_in, n_out, .. } => {
+            (batch as u128 * n_in as u128 * n_out as u128).div_ceil(cells).max(1)
+        }
+        LayerDesc::Fir { n, .. } => (n as u128).max(1),
+        LayerDesc::End => 0,
+    };
+    let mut mem: u128 = 0;
+    for (_, len) in d.weight_regions() {
+        if len > 0 {
+            mem += BURST_LATENCY + (len as u128).div_ceil(WORDS_PER_CYCLE);
+        }
+    }
+    for len in [batch as u128 * lens.0 as u128, batch as u128 * lens.1 as u128] {
+        if len > 0 {
+            mem += BURST_LATENCY + len.div_ceil(WORDS_PER_CYCLE);
+        }
+    }
+    (compute, mem)
+}
+
+/// Emit diagnostics when the static cycle model is inconsistent: a
+/// non-`End` layer whose compute lower bound is zero (the overlap
+/// invariant `overlapped ≤ min(compute, mem)` could then hide traffic
+/// behind no work at all), or bounds that overflow `u64` (the SoC's
+/// cycle counters would silently wrap).
+fn check_cycles(
+    descs: &[LayerDesc],
+    lens: &LayerLens,
+    batch: u32,
+    cfg: &SocConfig,
+    diags: &mut Vec<Diagnostic>,
+) {
+    let batch = batch.max(1) as u64;
+    for (i, d) in descs.iter().enumerate() {
+        if matches!(d, LayerDesc::End) {
+            continue;
+        }
+        let Some(l) = lens[i] else { continue };
+        let (compute, mem) = cycle_lb(d, &l, batch, cfg);
+        if compute == 0 {
+            diags.push(error(
+                codes::DEGENERATE_GEOMETRY,
+                Some(i),
+                "static compute lower bound is 0 — the overlap invariant \
+                 cannot be satisfied for a layer with no work"
+                    .into(),
+            ));
+        }
+        if compute > u64::MAX as u128 || mem > u64::MAX as u128 {
+            diags.push(error(
+                codes::DEGENERATE_GEOMETRY,
+                Some(i),
+                format!(
+                    "static cycle bounds (compute {compute}, mem {mem}) \
+                     overflow the SoC's 64-bit counters"
+                ),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::systolic::PoolKind;
+
+    fn cfg() -> SocConfig {
+        SocConfig {
+            dram_words: 1 << 16,
+            spad_words: 4096,
+            ..Default::default()
+        }
+    }
+
+    fn conv(in_addr: u32, out_addr: u32, w_addr: u32) -> LayerDesc {
+        LayerDesc::Conv {
+            cout: 4,
+            cin: 1,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            w_addr,
+            in_addr,
+            h: 8,
+            w: 8,
+            out_addr,
+            relu: true,
+            out_shift: 8,
+        }
+    }
+
+    fn pool(in_addr: u32, out_addr: u32) -> LayerDesc {
+        LayerDesc::Pool {
+            k: 2,
+            stride: 2,
+            kind: PoolKind::Max,
+            in_addr,
+            c: 4,
+            h: 8,
+            w: 8,
+            out_addr,
+        }
+    }
+
+    #[test]
+    fn clean_chained_table_verifies_clean() {
+        // conv (64 in → 256 out) chains into pool (256 in → 64 out);
+        // weights at 600 stay clear of the batch-8 input region [0, 512)
+        let descs = vec![conv(0, 1000, 600), pool(1000, 2000)];
+        for batch in [1u32, 8] {
+            let diags = verify_table(&descs, batch, &cfg());
+            assert!(diags.is_empty(), "batch {batch}: {diags:?}");
+        }
+    }
+
+    #[test]
+    fn degenerate_pool_is_flagged_not_panicking() {
+        // h < k would underflow-wrap LayerDesc::out_len in release builds;
+        // the verifier must report E012 without ever computing it
+        let d = LayerDesc::Pool {
+            k: 5,
+            stride: 1,
+            kind: PoolKind::Max,
+            in_addr: 0,
+            c: 1,
+            h: 3,
+            w: 3,
+            out_addr: 100,
+        };
+        let diags = verify_table(&[d], 1, &cfg());
+        assert!(diags.iter().any(|d| d.code == codes::DEGENERATE_GEOMETRY), "{diags:?}");
+        // zero stride divides in out_len — same guard
+        let d = LayerDesc::Conv {
+            cout: 1,
+            cin: 1,
+            k: 3,
+            stride: 0,
+            pad: 0,
+            w_addr: 0,
+            in_addr: 0,
+            h: 8,
+            w: 8,
+            out_addr: 100,
+            relu: false,
+            out_shift: 0,
+        };
+        let diags = verify_table(&[d], 1, &cfg());
+        assert!(diags.iter().any(|d| d.code == codes::DEGENERATE_GEOMETRY), "{diags:?}");
+    }
+
+    #[test]
+    fn weight_overlap_and_oob_are_errors() {
+        // conv weights at 1010 land inside the conv's own output [1000,
+        // 1256) — activations would clobber weights
+        let descs = vec![conv(0, 1000, 1010)];
+        let diags = verify_table(&descs, 1, &cfg());
+        assert!(diags.iter().any(|d| d.code == codes::OVERLAPPING_DRAM_REGIONS), "{diags:?}");
+        // a weight region past the arena end
+        let descs = vec![conv(0, 1000, (1 << 16) - 2)];
+        let diags = verify_table(&descs, 1, &cfg());
+        assert!(diags.iter().any(|d| d.code == codes::REGION_OUT_OF_BOUNDS), "{diags:?}");
+    }
+
+    #[test]
+    fn chain_mismatch_severity_split() {
+        // intersecting but not identical: Error
+        let descs = vec![conv(0, 1000, 100), pool(1004, 2000)];
+        let diags = verify_table(&descs, 1, &cfg());
+        assert!(diags.iter().any(|d| d.code == codes::BROKEN_DATAFLOW_CHAIN), "{diags:?}");
+        // fully disjoint: Warn only
+        let descs = vec![conv(0, 1000, 100), pool(3000, 4000)];
+        let diags = verify_table(&descs, 1, &cfg());
+        assert!(!has_errors(&diags), "{diags:?}");
+        assert!(diags.iter().any(|d| d.code == codes::UNCHAINED_LAYERS), "{diags:?}");
+    }
+
+    #[test]
+    fn image_roundtrip_catches_corruption() {
+        let descs = vec![conv(0, 1000, 100)];
+        let ctls = vec![FusionCtl::none()];
+        let mut image = Vec::new();
+        for d in &descs {
+            image.extend_from_slice(&d.encode());
+        }
+        image.extend_from_slice(&LayerDesc::End.encode());
+        assert!(verify_image(&descs, &ctls, &image).is_empty());
+        // corrupt one geometry word
+        let mut bad = image.clone();
+        bad[3] += 1;
+        let diags = verify_image(&descs, &ctls, &bad);
+        assert!(diags.iter().any(|d| d.code == codes::ENCODING_MISMATCH), "{diags:?}");
+        // clobber the End terminator
+        let mut bad = image.clone();
+        bad[DESC_WORDS] = 4;
+        let diags = verify_image(&descs, &ctls, &bad);
+        assert!(diags.iter().any(|d| d.code == codes::ENCODING_MISMATCH), "{diags:?}");
+    }
+
+    #[test]
+    fn cycle_lower_bounds_are_positive_and_monotone_in_batch() {
+        let descs = vec![conv(0, 1000, 100), pool(1000, 2000)];
+        let b1 = cycle_lower_bounds(&descs, 1, &cfg());
+        let b8 = cycle_lower_bounds(&descs, 8, &cfg());
+        for i in 0..descs.len() {
+            assert!(b1[i].0 > 0 && b1[i].1 > 0, "layer {i}: {b1:?}");
+            assert!(b8[i].0 >= b1[i].0 && b8[i].1 >= b1[i].1, "layer {i}");
+        }
+    }
+
+    #[test]
+    fn fir_in_batched_table_is_warn_only() {
+        let d = LayerDesc::Fir {
+            taps_addr: 0,
+            n_taps: 2,
+            in_addr: 2,
+            n: 4,
+            out_addr: 6,
+        };
+        let diags = verify_table(&[d], 2, &cfg());
+        assert!(!has_errors(&diags), "{diags:?}");
+        assert!(diags.iter().any(|d| d.code == codes::FIR_IN_BATCHED_TABLE), "{diags:?}");
+        assert!(verify_table(&[d], 1, &cfg()).is_empty());
+    }
+}

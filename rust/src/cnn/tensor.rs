@@ -99,15 +99,17 @@ pub fn conv2d_ref(
     }
     let (data, ho, wo) = crate::systolic::conv2d::conv2d_reference(
         &input.data,
-        c,
-        h,
-        w,
         &weights.data,
-        cout,
-        kh,
-        kw,
-        stride,
-        pad,
+        crate::systolic::Conv2dGeom {
+            cin: c,
+            h,
+            w,
+            cout,
+            kh,
+            kw,
+            stride,
+            pad,
+        },
     );
     let mut out = data;
     for v in out.iter_mut() {
@@ -129,7 +131,18 @@ pub fn pool2d_ref(
     let [c, h, w] = input.shape[..] else {
         return Err(Error::Shape(format!("pool input {:?}", input.shape)));
     };
-    let r = crate::systolic::pool::pool2d(&input.data, c, h, w, k, stride, kind, 1 << 40)?;
+    let r = crate::systolic::pool::pool2d(
+        &input.data,
+        crate::systolic::Pool2dGeom {
+            c,
+            h,
+            w,
+            k,
+            stride,
+            kind,
+        },
+        1 << 40,
+    )?;
     Tensor::new(r.data, vec![c, r.ho, r.wo])
 }
 

@@ -44,6 +44,11 @@ pub enum Error {
     /// CLI usage error.
     Usage(String),
 
+    /// Static plan verification rejected a descriptor table — the full
+    /// diagnostic list (Errors and ride-along Warns) is preserved so
+    /// callers can match on stable `KOM-Exxx` codes.
+    PlanVerify(Vec<crate::accel::verify::Diagnostic>),
+
     /// Underlying I/O error.
     Io(std::io::Error),
 }
@@ -63,6 +68,17 @@ impl fmt::Display for Error {
             Error::Cluster(m) => write!(f, "cluster error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Usage(m) => write!(f, "usage error: {m}"),
+            Error::PlanVerify(diags) => {
+                let errors = diags
+                    .iter()
+                    .filter(|d| d.severity == crate::accel::verify::Severity::Error)
+                    .count();
+                write!(f, "plan verification failed with {errors} error(s)")?;
+                for d in diags {
+                    write!(f, "\n  {d}")?;
+                }
+                Ok(())
+            }
             Error::Io(e) => write!(f, "{e}"),
         }
     }

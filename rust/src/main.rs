@@ -11,9 +11,10 @@
 //! kom-accel golden  [--artifacts dir]                       3-way golden check
 //! kom-accel serve   [--requests 64] [--workers 2]           coordinator demo
 //! kom-accel cluster [--batch 16] [--shards 4]               sharded multi-SoC run
+//! kom-accel lint    [--net tiny] [--batch 8]                static plan verifier
 //! ```
 
-use kom_accel::accel::SocConfig;
+use kom_accel::accel::{verify, Driver, LayerDesc, Severity, SocConfig};
 use kom_accel::bits::BitVec;
 use kom_accel::cli::Args;
 use kom_accel::cluster::{Cluster, ClusterConfig, SchedulePolicy, Scheduler};
@@ -42,6 +43,7 @@ COMMANDS
            [--no-fuse] [--no-dedup] [--no-config-cache]
   cluster  [--batch 16] [--shards 4] [--policy rr|least-outstanding] [--net tiny]
            [--no-pipeline] [--no-fuse] [--no-config-cache]
+  lint     [--net tiny] [--batch 8] [--shards 1] [--no-fuse] [--deny-warnings]
 
 Pipelining: replica SoCs overlap layer DMA with engine compute by default
 (double-buffered scratchpad staging); --no-pipeline restores the serial
@@ -54,6 +56,11 @@ plans, and warm runs skip every per-layer engine reconfiguration through
 the configuration-context cache; --no-config-cache restores the cold
 reconfiguration model. --no-dedup disables the front-door exact-input
 result cache.
+Lint: deploy the network's descriptor table exactly as serving would,
+then run the static plan verifier over it (region aliasing, dataflow
+chaining, fusion-binding soundness, encoding round-trip, cycle-model
+sanity) without executing a single layer. Exit 1 on any KOM-Exxx error,
+or on KOM-Wxxx warnings under --deny-warnings.
 ";
 
 fn mult_spec(name: &str) -> kom_accel::Result<(String, MultiplierSpec)> {
@@ -412,6 +419,62 @@ fn cmd_cluster(args: &Args) -> kom_accel::Result<()> {
     Ok(())
 }
 
+/// Statically verify a deployed descriptor table without executing it:
+/// deploy the chosen network at the per-shard batch exactly the way
+/// `serve`/`cluster` would, run [`Driver::lint_table`], print every
+/// diagnostic plus the per-layer cycle lower bounds, and set the exit
+/// status for CI (`1` on errors, or on warnings under `--deny-warnings`).
+fn cmd_lint(args: &Args) -> kom_accel::Result<()> {
+    let kind = NetworkKind::parse(&args.get_or("net", "tiny"))?;
+    let batch: usize = args.get_num("batch", 8usize)?;
+    let shards: usize = args.get_num("shards", 1usize)?;
+    let fuse = !args.has("no-fuse");
+    let deny_warnings = args.has("deny-warnings");
+    if batch == 0 || shards == 0 {
+        return Err(kom_accel::Error::Usage("lint: batch and shards must be >= 1".into()));
+    }
+    let per_shard = batch.div_ceil(shards);
+    let inst = NetworkInstance::random(Network::build(kind), 42)?;
+    let mut drv = Driver::new(SocConfig::serving());
+    drv.set_fusion(fuse);
+    let dep = inst.deploy_batched(&mut drv, per_shard)?;
+    println!(
+        "{}: {} layer(s), batch {batch} over {shards} shard(s) ({per_shard}/shard), fusion {}",
+        inst.net.name,
+        dep.descs.len(),
+        if fuse { "on" } else { "off" }
+    );
+
+    let diags = drv.lint_table(&dep.descs, per_shard as u32);
+    let errors = diags.iter().filter(|d| d.severity == Severity::Error).count();
+    let warns = diags.len() - errors;
+    for d in &diags {
+        println!("  {d}");
+    }
+
+    let bounds = verify::cycle_lower_bounds(&dep.descs, per_shard as u32, drv.soc.config());
+    let mut t = Table::new(&["layer", "kind", "compute >=", "mem >="]);
+    for (i, (d, (c, m))) in dep.descs.iter().zip(&bounds).enumerate() {
+        let kind = match d {
+            LayerDesc::Conv { .. } => "conv",
+            LayerDesc::Pool { .. } => "pool",
+            LayerDesc::Fc { .. } => "fc",
+            LayerDesc::Fir { .. } => "fir",
+            LayerDesc::End => "end",
+        };
+        t.row(vec![i.to_string(), kind.to_string(), c.to_string(), m.to_string()]);
+    }
+    println!("{}", t.to_ascii());
+    println!(
+        "lint: {errors} error(s), {warns} warning(s) over {} layer(s)",
+        dep.descs.len()
+    );
+    if errors > 0 || (deny_warnings && warns > 0) {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
 fn main() {
     let args = match Args::parse(std::env::args().skip(1)) {
         Ok(a) => a,
@@ -429,6 +492,7 @@ fn main() {
         Some("golden") => cmd_golden(&args),
         Some("serve") => cmd_serve(&args),
         Some("cluster") => cmd_cluster(&args),
+        Some("lint") => cmd_lint(&args),
         Some("help") | None => {
             println!("{USAGE}");
             Ok(())

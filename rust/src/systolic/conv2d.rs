@@ -22,6 +22,28 @@
 
 use super::fir::FirChain;
 
+/// Geometry of one conv2d invocation: input planes, kernel and striding —
+/// everything except the tensors themselves and the engine's cell pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Conv2dGeom {
+    /// Input channels.
+    pub cin: usize,
+    /// Input height.
+    pub h: usize,
+    /// Input width.
+    pub w: usize,
+    /// Output channels.
+    pub cout: usize,
+    /// Kernel height.
+    pub kh: usize,
+    /// Kernel width.
+    pub kw: usize,
+    /// Stride (both axes).
+    pub stride: usize,
+    /// Zero padding (both axes).
+    pub pad: usize,
+}
+
 /// Convolution geometry + result + exact cycle count (single image).
 pub struct ConvResult {
     /// Output data, `[cout][ho][wo]` flattened.
@@ -56,21 +78,23 @@ pub struct ConvBatchResult {
 /// Run a conv2d layer over a batch of images. `inputs` is `[n][cin][h][w]`
 /// flattened (image-major); `weights` is `[cout][cin][kh][kw]` flattened.
 /// `cells` is the engine's cell pool size (bounds lane parallelism).
-#[allow(clippy::too_many_arguments)]
 pub fn conv2d_batch(
     inputs: &[i64],
     batch: usize,
-    cin: usize,
-    h: usize,
-    w: usize,
     weights: &[i64],
-    cout: usize,
-    kh: usize,
-    kw: usize,
-    stride: usize,
-    pad: usize,
+    g: Conv2dGeom,
     cells: usize,
 ) -> crate::Result<ConvBatchResult> {
+    let Conv2dGeom {
+        cin,
+        h,
+        w,
+        cout,
+        kh,
+        kw,
+        stride,
+        pad,
+    } = g;
     if batch == 0 {
         return Err(crate::Error::Systolic("conv2d batch of 0".into()));
     }
@@ -165,21 +189,13 @@ pub fn conv2d_batch(
 /// Run a conv2d layer on a single image. `input` is `[cin][h][w]`
 /// flattened; `weights` is `[cout][cin][kh][kw]` flattened. `cells` is the
 /// engine's cell pool size (bounds lane parallelism).
-#[allow(clippy::too_many_arguments)]
 pub fn conv2d(
     input: &[i64],
-    cin: usize,
-    h: usize,
-    w: usize,
     weights: &[i64],
-    cout: usize,
-    kh: usize,
-    kw: usize,
-    stride: usize,
-    pad: usize,
+    g: Conv2dGeom,
     cells: usize,
 ) -> crate::Result<ConvResult> {
-    let r = conv2d_batch(input, 1, cin, h, w, weights, cout, kh, kw, stride, pad, cells)?;
+    let r = conv2d_batch(input, 1, weights, g, cells)?;
     Ok(ConvResult {
         data: r.data,
         ho: r.ho,
@@ -190,19 +206,17 @@ pub fn conv2d(
 }
 
 /// Direct (golden) convolution reference.
-#[allow(clippy::too_many_arguments)]
-pub fn conv2d_reference(
-    input: &[i64],
-    cin: usize,
-    h: usize,
-    w: usize,
-    weights: &[i64],
-    cout: usize,
-    kh: usize,
-    kw: usize,
-    stride: usize,
-    pad: usize,
-) -> (Vec<i64>, usize, usize) {
+pub fn conv2d_reference(input: &[i64], weights: &[i64], g: Conv2dGeom) -> (Vec<i64>, usize, usize) {
+    let Conv2dGeom {
+        cin,
+        h,
+        w,
+        cout,
+        kh,
+        kw,
+        stride,
+        pad,
+    } = g;
     let hp = h + 2 * pad;
     let wp = w + 2 * pad;
     let ho = (hp - kh) / stride + 1;
@@ -259,9 +273,18 @@ mod tests {
         let input = rnd_vec(cin * h * w, 1);
         let weights = rnd_vec(cout * cin * kh * kw, 2);
         for (stride, pad) in [(1usize, 0usize), (1, 1), (2, 1), (2, 0)] {
-            let got = conv2d(&input, cin, h, w, &weights, cout, kh, kw, stride, pad, 64).unwrap();
-            let (want, ho, wo) =
-                conv2d_reference(&input, cin, h, w, &weights, cout, kh, kw, stride, pad);
+            let g = Conv2dGeom {
+                cin,
+                h,
+                w,
+                cout,
+                kh,
+                kw,
+                stride,
+                pad,
+            };
+            let got = conv2d(&input, &weights, g, 64).unwrap();
+            let (want, ho, wo) = conv2d_reference(&input, &weights, g);
             assert_eq!((got.ho, got.wo), (ho, wo), "shape s={stride} p={pad}");
             assert_eq!(got.data, want, "s={stride} p={pad}");
         }
@@ -273,8 +296,18 @@ mod tests {
         for (k, h) in [(5usize, 12usize), (11, 16)] {
             let input = rnd_vec(h * h, 3);
             let weights = rnd_vec(k * k, 4);
-            let got = conv2d(&input, 1, h, h, &weights, 1, k, k, 1, 0, 256).unwrap();
-            let (want, ..) = conv2d_reference(&input, 1, h, h, &weights, 1, k, k, 1, 0);
+            let g = Conv2dGeom {
+                cin: 1,
+                h,
+                w: h,
+                cout: 1,
+                kh: k,
+                kw: k,
+                stride: 1,
+                pad: 0,
+            };
+            let got = conv2d(&input, &weights, g, 256).unwrap();
+            let (want, ..) = conv2d_reference(&input, &weights, g);
             assert_eq!(got.data, want, "k={k}");
         }
     }
@@ -283,18 +316,40 @@ mod tests {
     fn more_cells_fewer_cycles() {
         let input = rnd_vec(3 * 8 * 8, 5);
         let weights = rnd_vec(4 * 3 * 3 * 3, 6);
-        let few = conv2d(&input, 3, 8, 8, &weights, 4, 3, 3, 1, 1, 3).unwrap();
-        let many = conv2d(&input, 3, 8, 8, &weights, 4, 3, 3, 1, 1, 300).unwrap();
+        let g = Conv2dGeom {
+            cin: 3,
+            h: 8,
+            w: 8,
+            cout: 4,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+        };
+        let few = conv2d(&input, &weights, g, 3).unwrap();
+        let many = conv2d(&input, &weights, g, 300).unwrap();
         assert_eq!(few.data, many.data);
         assert!(many.cycles < few.cycles, "{} !< {}", many.cycles, few.cycles);
     }
 
     #[test]
     fn rejects_bad_shapes() {
-        assert!(conv2d(&[0; 10], 1, 2, 5, &[0; 9], 1, 3, 3, 1, 0, 8).is_err());
-        assert!(conv2d(&[0; 25], 1, 5, 5, &[0; 8], 1, 3, 3, 1, 0, 8).is_err());
-        assert!(conv2d_batch(&[0; 25], 0, 1, 5, 5, &[0; 9], 1, 3, 3, 1, 0, 8).is_err());
-        assert!(conv2d_batch(&[0; 30], 2, 1, 5, 5, &[0; 9], 1, 3, 3, 1, 0, 8).is_err());
+        let g5 = Conv2dGeom {
+            cin: 1,
+            h: 5,
+            w: 5,
+            cout: 1,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 0,
+        };
+        // 3×3 kernel taller than the unpadded 2-row input
+        assert!(conv2d(&[0; 10], &[0; 9], Conv2dGeom { h: 2, ..g5 }, 8).is_err());
+        // wrong weight count
+        assert!(conv2d(&[0; 25], &[0; 8], g5, 8).is_err());
+        assert!(conv2d_batch(&[0; 25], 0, &[0; 9], g5, 8).is_err());
+        assert!(conv2d_batch(&[0; 30], 2, &[0; 9], g5, 8).is_err());
     }
 
     #[test]
@@ -307,10 +362,20 @@ mod tests {
         for img in &images {
             packed.extend_from_slice(img);
         }
-        let got = conv2d_batch(&packed, batch, cin, h, w, &weights, cout, k, k, 1, 1, 64).unwrap();
+        let g = Conv2dGeom {
+            cin,
+            h,
+            w,
+            cout,
+            kh: k,
+            kw: k,
+            stride: 1,
+            pad: 1,
+        };
+        let got = conv2d_batch(&packed, batch, &weights, g, 64).unwrap();
         let per_img = cout * got.ho * got.wo;
         for (i, img) in images.iter().enumerate() {
-            let single = conv2d(img, cin, h, w, &weights, cout, k, k, 1, 1, 64).unwrap();
+            let single = conv2d(img, &weights, g, 64).unwrap();
             assert_eq!(
                 &got.data[i * per_img..(i + 1) * per_img],
                 &single.data[..],
@@ -329,9 +394,18 @@ mod tests {
         for _ in 0..batch {
             packed.extend_from_slice(&img);
         }
-        let single = conv2d(&img, cin, h, w, &weights, cout, k, k, 1, 1, 16).unwrap();
-        let batched =
-            conv2d_batch(&packed, batch, cin, h, w, &weights, cout, k, k, 1, 1, 16).unwrap();
+        let g = Conv2dGeom {
+            cin,
+            h,
+            w,
+            cout,
+            kh: k,
+            kw: k,
+            stride: 1,
+            pad: 1,
+        };
+        let single = conv2d(&img, &weights, g, 16).unwrap();
+        let batched = conv2d_batch(&packed, batch, &weights, g, 16).unwrap();
         // taps are loaded once for the whole batch, so the batched run is
         // strictly cheaper than N sequential runs
         assert!(
@@ -352,7 +426,17 @@ mod tests {
         let (cin, h, w, cout, k, stride, pad) = (3usize, 9usize, 11usize, 5usize, 3usize, 2usize, 1usize);
         let input = rnd_vec(cin * h * w, 13);
         let weights = rnd_vec(cout * cin * k * k, 14);
-        let got = conv2d(&input, cin, h, w, &weights, cout, k, k, stride, pad, 64).unwrap();
+        let g = Conv2dGeom {
+            cin,
+            h,
+            w,
+            cout,
+            kh: k,
+            kw: k,
+            stride,
+            pad,
+        };
+        let got = conv2d(&input, &weights, g, 64).unwrap();
         let layer = Layer::Conv { cout, k, stride, pad };
         let want = layer.macs(&LayerShape::Chw(cin, h, w)).unwrap();
         assert_eq!(got.macs, want, "engine MACs != analytical count");

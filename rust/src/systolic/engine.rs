@@ -247,7 +247,19 @@ impl Engine {
                     )));
                 }
                 let r = conv2d::conv2d_batch(
-                    input, batch, *cin, *h, *w, weights, *cout, *kh, *kw, *stride, *pad,
+                    input,
+                    batch,
+                    weights,
+                    conv2d::Conv2dGeom {
+                        cin: *cin,
+                        h: *h,
+                        w: *w,
+                        cout: *cout,
+                        kh: *kh,
+                        kw: *kw,
+                        stride: *stride,
+                        pad: *pad,
+                    },
                     self.cells,
                 )?;
                 self.stats.ops += r.macs;
@@ -263,8 +275,19 @@ impl Engine {
                         "pool needs [c,h,w] shape, got {shape:?}"
                     )));
                 };
-                let r =
-                    pool::pool2d_batch(input, batch, *c, *h, *w, *k, *stride, *kind, self.cells)?;
+                let r = pool::pool2d_batch(
+                    input,
+                    batch,
+                    pool::Pool2dGeom {
+                        c: *c,
+                        h: *h,
+                        w: *w,
+                        k: *k,
+                        stride: *stride,
+                        kind: *kind,
+                    },
+                    self.cells,
+                )?;
                 self.stats.ops += r.ops;
                 LayerOutput {
                     shape: vec![batch, *c, r.ho, r.wo],

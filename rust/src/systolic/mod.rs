@@ -32,4 +32,6 @@ pub mod pool;
 
 pub use cell::SystolicCell;
 pub use config::{EngineConfig, EngineMode, PoolKind};
+pub use conv2d::Conv2dGeom;
 pub use engine::{Engine, EngineStats};
+pub use pool::Pool2dGeom;

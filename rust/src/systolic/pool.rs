@@ -9,6 +9,24 @@
 
 use super::config::PoolKind;
 
+/// Geometry of one pool2d invocation: channel planes, window and reduce
+/// kind — everything except the tensors and the comparator-cell pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Pool2dGeom {
+    /// Channels.
+    pub c: usize,
+    /// Input height.
+    pub h: usize,
+    /// Input width.
+    pub w: usize,
+    /// Window size (square).
+    pub k: usize,
+    /// Stride (both axes).
+    pub stride: usize,
+    /// Max or average reduction.
+    pub kind: PoolKind,
+}
+
 /// Pooling result with exact cycle accounting (single image).
 pub struct PoolResult {
     /// `[c][ho][wo]` flattened.
@@ -39,18 +57,20 @@ pub struct PoolBatchResult {
 
 /// Run `k×k`/`stride` pooling over a batch of `[c][h][w]` images packed
 /// image-major into `inputs`, using a pool of `cells` comparator cells.
-#[allow(clippy::too_many_arguments)]
 pub fn pool2d_batch(
     inputs: &[i64],
     batch: usize,
-    c: usize,
-    h: usize,
-    w: usize,
-    k: usize,
-    stride: usize,
-    kind: PoolKind,
+    g: Pool2dGeom,
     cells: usize,
 ) -> crate::Result<PoolBatchResult> {
+    let Pool2dGeom {
+        c,
+        h,
+        w,
+        k,
+        stride,
+        kind,
+    } = g;
     if batch == 0 {
         return Err(crate::Error::Systolic("pool2d batch of 0".into()));
     }
@@ -108,18 +128,8 @@ pub fn pool2d_batch(
 
 /// Run `k×k`/`stride` pooling over `[c][h][w]` input using a pool of
 /// `cells` comparator cells.
-#[allow(clippy::too_many_arguments)]
-pub fn pool2d(
-    input: &[i64],
-    c: usize,
-    h: usize,
-    w: usize,
-    k: usize,
-    stride: usize,
-    kind: PoolKind,
-    cells: usize,
-) -> crate::Result<PoolResult> {
-    let r = pool2d_batch(input, 1, c, h, w, k, stride, kind, cells)?;
+pub fn pool2d(input: &[i64], g: Pool2dGeom, cells: usize) -> crate::Result<PoolResult> {
+    let r = pool2d_batch(input, 1, g, cells)?;
     Ok(PoolResult {
         data: r.data,
         ho: r.ho,
@@ -133,6 +143,17 @@ pub fn pool2d(
 mod tests {
     use super::*;
 
+    fn geom(c: usize, h: usize, w: usize, k: usize, stride: usize, kind: PoolKind) -> Pool2dGeom {
+        Pool2dGeom {
+            c,
+            h,
+            w,
+            k,
+            stride,
+            kind,
+        }
+    }
+
     #[test]
     fn max_pool_2x2() {
         #[rustfmt::skip]
@@ -142,7 +163,7 @@ mod tests {
             9, 10, 11, 12,
             13, 14, 15, 16,
         ];
-        let r = pool2d(&input, 1, 4, 4, 2, 2, PoolKind::Max, 8).unwrap();
+        let r = pool2d(&input, geom(1, 4, 4, 2, 2, PoolKind::Max), 8).unwrap();
         assert_eq!(r.data, vec![6, 8, 14, 16]);
         assert_eq!((r.ho, r.wo), (2, 2));
     }
@@ -150,7 +171,7 @@ mod tests {
     #[test]
     fn avg_pool_3x3_stride2() {
         let input: Vec<i64> = (0..25).collect();
-        let r = pool2d(&input, 1, 5, 5, 3, 2, PoolKind::Avg, 8).unwrap();
+        let r = pool2d(&input, geom(1, 5, 5, 3, 2, PoolKind::Avg), 8).unwrap();
         // windows at (0,0),(0,2),(2,0),(2,2): means of 9 elements
         assert_eq!(r.data, vec![6, 8, 16, 18]);
     }
@@ -159,7 +180,7 @@ mod tests {
     fn overlapping_windows_alexnet_style() {
         // AlexNet uses 3x3 stride-2 overlapped max pooling
         let input: Vec<i64> = (0..36).map(|i| (i * 7) % 23).collect();
-        let r = pool2d(&input, 1, 6, 6, 3, 2, PoolKind::Max, 4).unwrap();
+        let r = pool2d(&input, geom(1, 6, 6, 3, 2, PoolKind::Max), 4).unwrap();
         assert_eq!((r.ho, r.wo), (2, 2));
         for (i, &v) in r.data.iter().enumerate() {
             let (oy, ox) = (i / 2, i % 2);
@@ -176,18 +197,18 @@ mod tests {
     #[test]
     fn cycle_model_scales_with_cells() {
         let input: Vec<i64> = (0..64).collect();
-        let few = pool2d(&input, 1, 8, 8, 2, 2, PoolKind::Max, 1).unwrap();
-        let many = pool2d(&input, 1, 8, 8, 2, 2, PoolKind::Max, 16).unwrap();
+        let few = pool2d(&input, geom(1, 8, 8, 2, 2, PoolKind::Max), 1).unwrap();
+        let many = pool2d(&input, geom(1, 8, 8, 2, 2, PoolKind::Max), 16).unwrap();
         assert_eq!(few.data, many.data);
         assert!(many.cycles < few.cycles);
     }
 
     #[test]
     fn rejects_bad_geometry() {
-        assert!(pool2d(&[0; 4], 1, 2, 2, 3, 1, PoolKind::Max, 4).is_err());
-        assert!(pool2d(&[0; 4], 1, 2, 2, 2, 0, PoolKind::Max, 4).is_err());
-        assert!(pool2d_batch(&[0; 4], 0, 1, 2, 2, 2, 2, PoolKind::Max, 4).is_err());
-        assert!(pool2d_batch(&[0; 6], 2, 1, 2, 2, 2, 2, PoolKind::Max, 4).is_err());
+        assert!(pool2d(&[0; 4], geom(1, 2, 2, 3, 1, PoolKind::Max), 4).is_err());
+        assert!(pool2d(&[0; 4], geom(1, 2, 2, 2, 0, PoolKind::Max), 4).is_err());
+        assert!(pool2d_batch(&[0; 4], 0, geom(1, 2, 2, 2, 2, PoolKind::Max), 4).is_err());
+        assert!(pool2d_batch(&[0; 6], 2, geom(1, 2, 2, 2, 2, PoolKind::Max), 4).is_err());
     }
 
     #[test]
@@ -201,10 +222,10 @@ mod tests {
             packed.extend_from_slice(img);
         }
         for kind in [PoolKind::Max, PoolKind::Avg] {
-            let batched = pool2d_batch(&packed, batch, c, h, w, 2, 2, kind, 8).unwrap();
+            let batched = pool2d_batch(&packed, batch, geom(c, h, w, 2, 2, kind), 8).unwrap();
             let per_img = c * batched.ho * batched.wo;
             for (n, img) in images.iter().enumerate() {
-                let single = pool2d(img, c, h, w, 2, 2, kind, 8).unwrap();
+                let single = pool2d(img, geom(c, h, w, 2, 2, kind), 8).unwrap();
                 assert_eq!(
                     &batched.data[n * per_img..(n + 1) * per_img],
                     &single.data[..],

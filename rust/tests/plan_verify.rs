@@ -1,0 +1,245 @@
+//! Static plan verifier: known-bad descriptor corpora must yield their
+//! exact `KOM-Exxx` diagnostic codes, `Driver::compile` must provably
+//! reject Error-level plans, and every shipped mini network must lint
+//! clean at serving batch sizes with fusion on and off.
+
+use kom_accel::accel::desc::FUSION_ENC_VERSION;
+use kom_accel::accel::verify::{self, codes};
+use kom_accel::accel::{Diagnostic, Driver, FusionCtl, FusionPlan, LayerDesc, SocConfig};
+use kom_accel::cnn::networks::{Network, NetworkInstance, NetworkKind};
+use kom_accel::Error;
+
+/// The fusion planner's own test pair: fc1 (4→32) chained into fc2
+/// (32→8), weights packed below the activation arena.
+fn fc_pair() -> Vec<LayerDesc> {
+    vec![
+        LayerDesc::Fc {
+            n_in: 4,
+            n_out: 32,
+            w_addr: 100,
+            b_addr: 612,
+            in_addr: 0,
+            out_addr: 1000,
+            relu: true,
+            out_shift: 8,
+        },
+        LayerDesc::Fc {
+            n_in: 32,
+            n_out: 8,
+            w_addr: 700,
+            b_addr: 956,
+            in_addr: 1000,
+            out_addr: 2000,
+            relu: false,
+            out_shift: 8,
+        },
+    ]
+}
+
+fn small_cfg() -> SocConfig {
+    SocConfig {
+        cells: 64,
+        ctrl_ram_words: 4096,
+        dram_words: 1 << 16,
+        spad_words: 4096,
+        spad_banks: 8,
+    }
+}
+
+fn codes_of(diags: &[Diagnostic]) -> Vec<&'static str> {
+    diags.iter().map(|d| d.code).collect()
+}
+
+fn expect_plan_verify(err: Error, code: &str) {
+    match err {
+        Error::PlanVerify(diags) => assert!(
+            diags.iter().any(|d| d.code == code),
+            "expected {code} among {diags:?}"
+        ),
+        e => panic!("expected Error::PlanVerify, got: {e}"),
+    }
+}
+
+#[test]
+fn overlapping_weights_yield_e001_and_compile_rejects() {
+    let mut descs = fc_pair();
+    // drop the consumer's weight matrix inside the producer's live output
+    // region [1000, 1032)
+    let LayerDesc::Fc { w_addr, .. } = &mut descs[1] else {
+        unreachable!()
+    };
+    *w_addr = 1010;
+    let diags = verify::verify_table(&descs, 1, &small_cfg());
+    assert!(
+        codes_of(&diags).contains(&codes::OVERLAPPING_DRAM_REGIONS),
+        "{diags:?}"
+    );
+    let mut drv = Driver::new(small_cfg());
+    let err = drv.compile(&descs, 1).err().expect("compile must reject");
+    expect_plan_verify(err, codes::OVERLAPPING_DRAM_REGIONS);
+}
+
+#[test]
+fn weight_region_out_of_bounds_yields_e002() {
+    let mut descs = fc_pair();
+    let LayerDesc::Fc { w_addr, .. } = &mut descs[1] else {
+        unreachable!()
+    };
+    *w_addr = (1 << 16) - 2; // 256-word matrix off the end of DRAM
+    let diags = verify::verify_table(&descs, 1, &small_cfg());
+    assert!(
+        codes_of(&diags).contains(&codes::REGION_OUT_OF_BOUNDS),
+        "{diags:?}"
+    );
+}
+
+#[test]
+fn broken_chain_yields_e003() {
+    let mut descs = fc_pair();
+    // intersects the producer's output region without matching it — a
+    // corrupted chain, not an independent table
+    let LayerDesc::Fc { in_addr, .. } = &mut descs[1] else {
+        unreachable!()
+    };
+    *in_addr = 1004;
+    let diags = verify::verify_table(&descs, 1, &small_cfg());
+    assert!(
+        codes_of(&diags).contains(&codes::BROKEN_DATAFLOW_CHAIN),
+        "{diags:?}"
+    );
+    assert!(
+        !codes_of(&diags).contains(&codes::UNCHAINED_LAYERS),
+        "a broken chain is an error, not the disjoint-tables warning"
+    );
+}
+
+#[test]
+fn binding_inside_staging_bank_yields_e005() {
+    let descs = fc_pair();
+    // small_cfg: 512-word banks, so [0, 1024) is DMA staging territory
+    let ctls = [
+        FusionCtl {
+            fuse_next: true,
+            spad_binding: 100,
+            resident_words: 32,
+        },
+        FusionCtl::none(),
+    ];
+    let diags = verify::verify_fusion(&descs, &ctls, &small_cfg());
+    assert_eq!(
+        codes_of(&diags),
+        vec![codes::FUSION_BINDING_IN_STAGING_BANK],
+        "{diags:?}"
+    );
+}
+
+#[test]
+fn budget_exceeded_by_one_word_yields_e006_and_compile_rejects() {
+    let descs = fc_pair();
+    let ctls = [
+        FusionCtl {
+            fuse_next: true,
+            spad_binding: 16,
+            resident_words: 32,
+        },
+        FusionCtl::none(),
+    ];
+    // 312 words / 39 banks → 8-word banks, 16 words of staging, 296-word
+    // budget: resident 32 + consumer weights 264 fits exactly
+    let fits = SocConfig {
+        cells: 64,
+        ctrl_ram_words: 4096,
+        dram_words: 1 << 16,
+        spad_words: 312,
+        spad_banks: 39,
+    };
+    assert!(verify::verify_fusion(&descs, &ctls, &fits).is_empty());
+    // one budget word less (banks still 8 words) → over by exactly one
+    let tight = SocConfig {
+        spad_words: 311,
+        spad_banks: 38,
+        ..fits
+    };
+    let diags = verify::verify_fusion(&descs, &ctls, &tight);
+    assert_eq!(
+        codes_of(&diags),
+        vec![codes::FUSION_BUDGET_EXCEEDED],
+        "{diags:?}"
+    );
+    // the honest planner never emits these bindings, but an explicit
+    // fusion plan submitted through the escape hatch is still gated
+    let mut drv = Driver::new(tight);
+    let err = drv
+        .compile_with_fusion(&descs, 1, &FusionPlan::from_ctls(&ctls))
+        .err()
+        .expect("compile_with_fusion must reject");
+    expect_plan_verify(err, codes::FUSION_BUDGET_EXCEEDED);
+}
+
+#[test]
+fn bad_sideband_version_yields_e008() {
+    let descs = fc_pair();
+    let ctls = [
+        FusionCtl {
+            fuse_next: true,
+            spad_binding: 1024,
+            resident_words: 32,
+        },
+        FusionCtl::none(),
+    ];
+    let mut image = Vec::new();
+    for (d, ctl) in descs.iter().zip(&ctls) {
+        let mut w = d.encode();
+        ctl.encode_into(&mut w);
+        image.extend_from_slice(&w);
+    }
+    image.extend_from_slice(&LayerDesc::End.encode());
+    assert!(verify::verify_image(&descs, &ctls, &image).is_empty());
+
+    let mut bad = image.clone();
+    bad[13] = ((FUSION_ENC_VERSION + 1) << 8) | 1;
+    let diags = verify::verify_image(&descs, &ctls, &bad);
+    assert_eq!(
+        codes_of(&diags),
+        vec![codes::BAD_FUSION_SIDEBAND_VERSION],
+        "{diags:?}"
+    );
+}
+
+#[test]
+fn corrupted_descriptor_word_yields_e007() {
+    let descs = fc_pair();
+    let ctls = [FusionCtl::none(), FusionCtl::none()];
+    let mut image = Vec::new();
+    for d in &descs {
+        image.extend_from_slice(&d.encode());
+    }
+    image.extend_from_slice(&LayerDesc::End.encode());
+    let mut bad = image.clone();
+    bad[3] ^= 1; // flip one geometry bit in the first block
+    let diags = verify::verify_image(&descs, &ctls, &bad);
+    assert!(
+        codes_of(&diags).contains(&codes::ENCODING_MISMATCH),
+        "{diags:?}"
+    );
+}
+
+#[test]
+fn shipped_networks_lint_clean() {
+    for name in ["tiny", "alexnet-mini", "vgg-mini"] {
+        let kind = NetworkKind::parse(name).unwrap();
+        let inst = NetworkInstance::random(Network::build(kind), 42).unwrap();
+        for batch in [1usize, 8] {
+            for fuse in [true, false] {
+                let mut drv = Driver::new(SocConfig::serving());
+                drv.set_fusion(fuse);
+                let dep = inst.deploy_batched(&mut drv, batch).unwrap();
+                let diags = drv.lint_table(&dep.descs, batch as u32);
+                assert!(
+                    diags.is_empty(),
+                    "{name} batch {batch} fusion {fuse}: {diags:?}"
+                );
+            }
+        }
+    }
+}

@@ -4,7 +4,7 @@
 use kom_accel::systolic::conv2d::{conv2d, conv2d_reference};
 use kom_accel::systolic::fir::{fir_reference, FirChain};
 use kom_accel::systolic::pool::pool2d;
-use kom_accel::systolic::{Engine, EngineConfig, EngineMode, PoolKind};
+use kom_accel::systolic::{Conv2dGeom, Engine, EngineConfig, EngineMode, Pool2dGeom, PoolKind};
 use kom_accel::testing::{forall, TestRng};
 
 #[test]
@@ -20,10 +20,18 @@ fn conv2d_equals_reference_random_geometry() {
         let input = rng.signed_vec(cin * h * w, 100);
         let weights = rng.signed_vec(cout * cin * k * k, 20);
         let cells = rng.range(4, 128);
-        let got = conv2d(&input, cin, h, w, &weights, cout, k, k, stride, pad, cells)
-            .map_err(|e| e.to_string())?;
-        let (want, ho, wo) =
-            conv2d_reference(&input, cin, h, w, &weights, cout, k, k, stride, pad);
+        let g = Conv2dGeom {
+            cin,
+            h,
+            w,
+            cout,
+            kh: k,
+            kw: k,
+            stride,
+            pad,
+        };
+        let got = conv2d(&input, &weights, g, cells).map_err(|e| e.to_string())?;
+        let (want, ho, wo) = conv2d_reference(&input, &weights, g);
         if (got.ho, got.wo) != (ho, wo) {
             return Err(format!("shape ({},{}) want ({ho},{wo})", got.ho, got.wo));
         }
@@ -46,7 +54,15 @@ fn pool_windows_cover_all_elements() {
         let w = rng.range(k, 12);
         let kind = if rng.bool() { PoolKind::Max } else { PoolKind::Avg };
         let input = rng.signed_vec(c * h * w, 1000);
-        let r = pool2d(&input, c, h, w, k, stride, kind, 16).map_err(|e| e.to_string())?;
+        let g = Pool2dGeom {
+            c,
+            h,
+            w,
+            k,
+            stride,
+            kind,
+        };
+        let r = pool2d(&input, g, 16).map_err(|e| e.to_string())?;
         for ch in 0..c {
             for oy in 0..r.ho {
                 for ox in 0..r.wo {
@@ -158,7 +174,17 @@ fn cycle_model_monotone_in_work() {
         let mk = |h: usize, rng: &mut TestRng| {
             let input = rng.signed_vec(h * w, 10);
             let weights = rng.signed_vec(k * k, 5);
-            conv2d(&input, 1, h, w, &weights, 1, k, k, 1, 0, 16)
+            let g = Conv2dGeom {
+                cin: 1,
+                h,
+                w,
+                cout: 1,
+                kh: k,
+                kw: k,
+                stride: 1,
+                pad: 0,
+            };
+            conv2d(&input, &weights, g, 16)
                 .map(|r| r.cycles)
                 .map_err(|e| e.to_string())
         };
