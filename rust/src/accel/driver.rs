@@ -11,6 +11,7 @@ use super::desc::{FusionCtl, LayerDesc, DESC_WORDS};
 use super::fusion::FusionPlan;
 use super::plan::{encode_raw, encode_table_image, CompiledPlan, PlanCache, PlanKey};
 use super::soc::{map, Soc, SocConfig};
+use super::trace::{RunTrace, SpanKind, TraceRing};
 use super::verify::{self, codes, Diagnostic, Severity};
 use crate::cluster::ShardPlan;
 use crate::error::{Error, Result};
@@ -316,6 +317,39 @@ impl Driver {
         self.soc.engine.context_cache_enabled()
     }
 
+    /// Arm the execution tracer with a span ring of `capacity` (0
+    /// disables). Off by default: an untraced driver allocates nothing and
+    /// pays one flag check per would-be span — and tracing never mutates a
+    /// cycle counter, so traced and untraced runs produce bit-identical
+    /// [`RunMetrics`]. Spans accumulate until [`Driver::take_trace`]
+    /// drains them; past `capacity` the oldest are overwritten (counted in
+    /// [`RunTrace::dropped`]).
+    pub fn set_tracing(&mut self, capacity: usize) {
+        self.soc.tracer = if capacity == 0 {
+            None
+        } else {
+            Some(TraceRing::new(capacity))
+        };
+    }
+
+    /// Disarm the tracer, discarding any undrained spans.
+    pub fn disable_tracing(&mut self) {
+        self.soc.tracer = None;
+    }
+
+    /// Is the execution tracer armed?
+    pub fn tracing_enabled(&self) -> bool {
+        self.soc.tracer.is_some()
+    }
+
+    /// Drain every span recorded since the last take (oldest first), or
+    /// `None` when tracing is disabled. The trace is the cycle model's
+    /// ledger: per-kind span sums reproduce the corresponding
+    /// [`RunMetrics`] components exactly (see `accel::trace`).
+    pub fn take_trace(&mut self) -> Option<RunTrace> {
+        self.soc.tracer.as_mut().map(|t| t.drain())
+    }
+
     /// `(plan-cache hits, plan compiles)` since this driver came up.
     pub fn plan_cache_stats(&self) -> (u64, u64) {
         self.plans.stats()
@@ -477,6 +511,9 @@ impl Driver {
         };
         let plan = self.build_plan(descs, batch, raw, key, &fusion)?;
         self.plans.insert(plan.clone());
+        // host-side work charges no simulated cycles; the marker makes
+        // cold dispatches visible on the trace timeline
+        self.soc.trace(SpanKind::PlanCompile, 0);
         Ok((plan, false))
     }
 
@@ -527,6 +564,7 @@ impl Driver {
         if verify::has_errors(&diags) {
             return Err(Error::PlanVerify(diags));
         }
+        self.soc.trace(SpanKind::PlanVerify, 0);
         let warnings = diags.len() as u32;
         let weight_regions: Vec<(u32, u32)> =
             descs.iter().flat_map(|d| d.weight_regions()).collect();
@@ -745,6 +783,9 @@ impl Driver {
         let lr0 = self.soc.layers_run;
         let rc0 = self.soc.engine.stats.reconfigs;
         let rs0 = self.soc.engine.stats.reconfigs_skipped;
+        if let Some(t) = self.soc.tracer.as_mut() {
+            t.begin_run(lr0);
+        }
         let stop = cpu.run(&mut self.soc, 10_000_000)?;
         if stop != StopReason::Ecall {
             return Err(Error::Accel("control program exceeded budget".into()));

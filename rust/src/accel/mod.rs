@@ -13,6 +13,10 @@
 //!   driver's bounded LRU plan cache,
 //! * [`soc`] — the SoC: memory map, MMIO bridge between the control CPU
 //!   and the engine, cycle accounting,
+//! * [`trace`] — cycle-attributed execution tracing: a bounded ring of
+//!   typed spans (compute, DMA, weight-load, reconfig, overlap-credit,
+//!   fusion-skip) that conserves `RunMetrics` totals exactly and exports
+//!   Perfetto/chrome://tracing JSON,
 //! * [`verify`] — the static plan verifier: a lint pass over descriptor
 //!   tables, fusion bindings and cycle accounting that gates
 //!   `Driver::compile` and backs the `kom-accel lint` subcommand,
@@ -27,6 +31,7 @@ pub mod driver;
 pub mod fusion;
 pub mod plan;
 pub mod soc;
+pub mod trace;
 pub mod verify;
 
 pub use desc::{FusionCtl, LayerDesc};
@@ -34,4 +39,5 @@ pub use driver::{Driver, RunMetrics, ShardRun, ShardedMetrics};
 pub use fusion::{FuseMode, FusedEdge, FusionGroup, FusionPlan};
 pub use plan::{CompiledPlan, PlanCache, PlanKey};
 pub use soc::{Soc, SocConfig};
+pub use trace::{LayerCycles, RunTrace, SpanKind, TraceEvent, TraceRing, DEFAULT_RING_CAPACITY};
 pub use verify::{Diagnostic, Severity};

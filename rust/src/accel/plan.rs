@@ -29,6 +29,11 @@
 //! the DRAM contents). Plans are driver-independent values behind an
 //! `Arc`, so a cluster compiles each distinct `(table, sub-batch)` once
 //! and seeds every replica's cache with the shared artifact.
+//!
+//! When the execution tracer is armed, each cold compile and each static
+//! verification pass drops a zero-cycle `PlanCompile` / `PlanVerify`
+//! marker on the trace timeline (see [`crate::accel::trace`]), making
+//! cold dispatches visible without charging simulated cycles.
 
 use super::desc::{LayerDesc, DESC_WORDS};
 use super::fusion::{FusionGroup, FusionPlan};

@@ -92,6 +92,7 @@
 
 use super::desc::{FusionCtl, LayerDesc, DESC_WORDS};
 use super::fusion::FusionPlan;
+use super::trace::{SpanKind, TraceRing};
 use crate::error::{Error, Result};
 use crate::mem::{Dma, Dram, Scratchpad, StageCost};
 use crate::riscv::cpu::Bus;
@@ -278,6 +279,12 @@ pub struct Soc {
     cache_lru: VecDeque<(u32, u32)>,
     /// Words currently held by `weight_cache`.
     cache_words: usize,
+    /// Execution tracer: `None` (the default) costs nothing — no
+    /// allocation, and every emission site is one discriminant check.
+    /// When armed (see `Driver::set_tracing`), every simulated cycle the
+    /// SoC charges is attributed to a typed span; tracing never mutates a
+    /// cycle counter, so enabling it cannot perturb the simulation.
+    pub(crate) tracer: Option<TraceRing>,
     cfg: SocConfig,
 }
 
@@ -305,7 +312,18 @@ impl Soc {
             weight_cache: HashMap::new(),
             cache_lru: VecDeque::new(),
             cache_words: 0,
+            tracer: None,
             cfg,
+        }
+    }
+
+    /// Emit one trace span when the tracer is armed. Inlined to keep the
+    /// disabled path at a single `Option` discriminant check — the
+    /// zero-cost-when-off contract of the trace layer.
+    #[inline]
+    pub(crate) fn trace(&mut self, kind: SpanKind, cycles: u64) {
+        if let Some(t) = self.tracer.as_mut() {
+            t.record(kind, cycles, self.layers_run, self.batch_n);
         }
     }
 
@@ -570,15 +588,21 @@ impl Soc {
             } => {
                 let in_len = batch * desc.in_len();
                 let w_len = cout * cin * k * k;
+                let d0 = self.dma.cycles;
                 let (input, in_cost, consumed) = self.stage_activation_in(in_addr, in_len)?;
+                self.trace(SpanKind::DmaIn, self.dma.cycles - d0);
+                let d0 = self.dma.cycles;
                 let (weights, w_hideable) = self.stage_weights(w_addr, w_len)?;
+                self.trace(SpanKind::WeightLoad, self.dma.cycles - d0);
                 let c0 = self.engine.stats.total_cycles();
                 let cfg = desc.engine_config(vec![weights]).expect("conv config");
-                self.engine.reconfigure(cfg)?;
+                let cfg_cost = self.engine.reconfigure(cfg)?;
+                self.trace(SpanKind::Reconfig, cfg_cost);
                 let out = self
                     .engine
                     .run_batch(&input, batch, &[cin as usize, h as usize, w as usize])?;
                 let compute = self.engine.stats.total_cycles() - c0;
+                self.trace(SpanKind::Compute, compute - cfg_cost);
                 self.finish_layer(LayerOutcome {
                     out_addr,
                     data: &out.data,
@@ -597,15 +621,19 @@ impl Soc {
                 out_addr,
                 ..
             } => {
+                let d0 = self.dma.cycles;
                 let (input, in_cost, consumed) =
                     self.stage_activation_in(in_addr, batch * desc.in_len())?;
+                self.trace(SpanKind::DmaIn, self.dma.cycles - d0);
                 let c0 = self.engine.stats.total_cycles();
                 let cfg = desc.engine_config(Vec::new()).expect("pool config");
-                self.engine.reconfigure(cfg)?;
+                let cfg_cost = self.engine.reconfigure(cfg)?;
+                self.trace(SpanKind::Reconfig, cfg_cost);
                 let out = self
                     .engine
                     .run_batch(&input, batch, &[c as usize, h as usize, w as usize])?;
                 let compute = self.engine.stats.total_cycles() - c0;
+                self.trace(SpanKind::Compute, compute - cfg_cost);
                 self.finish_layer(LayerOutcome {
                     out_addr,
                     data: &out.data,
@@ -625,15 +653,23 @@ impl Soc {
                 out_addr,
                 ..
             } => {
+                let d0 = self.dma.cycles;
                 let (input, in_cost, consumed) =
                     self.stage_activation_in(in_addr, batch * n_in as usize)?;
+                self.trace(SpanKind::DmaIn, self.dma.cycles - d0);
+                let d0 = self.dma.cycles;
                 let (weights, w_hide) = self.stage_weights(w_addr, n_in * n_out)?;
+                self.trace(SpanKind::WeightLoad, self.dma.cycles - d0);
+                let d0 = self.dma.cycles;
                 let (bias, b_hide) = self.stage_weights(b_addr, n_out)?;
+                self.trace(SpanKind::WeightLoad, self.dma.cycles - d0);
                 let c0 = self.engine.stats.total_cycles();
                 let cfg = desc.engine_config(vec![weights, bias]).expect("fc config");
-                self.engine.reconfigure(cfg)?;
+                let cfg_cost = self.engine.reconfigure(cfg)?;
+                self.trace(SpanKind::Reconfig, cfg_cost);
                 let out = self.engine.run_batch(&input, batch, &[n_in as usize])?;
                 let compute = self.engine.stats.total_cycles() - c0;
+                self.trace(SpanKind::Compute, compute - cfg_cost);
                 self.finish_layer(LayerOutcome {
                     out_addr,
                     data: &out.data,
@@ -656,13 +692,19 @@ impl Soc {
                         "FIR descriptor streams one signal; BATCH={batch} is not supported"
                     )));
                 }
+                let d0 = self.dma.cycles;
                 let (taps, w_hideable) = self.stage_weights(taps_addr, n_taps)?;
+                self.trace(SpanKind::WeightLoad, self.dma.cycles - d0);
+                let d0 = self.dma.cycles;
                 let (input, in_cost, consumed) = self.stage_activation_in(in_addr, n as usize)?;
+                self.trace(SpanKind::DmaIn, self.dma.cycles - d0);
                 let c0 = self.engine.stats.total_cycles();
                 let cfg = desc.engine_config(vec![taps]).expect("fir config");
-                self.engine.reconfigure(cfg)?;
+                let cfg_cost = self.engine.reconfigure(cfg)?;
+                self.trace(SpanKind::Reconfig, cfg_cost);
                 let out = self.engine.run(&input, &[n as usize])?;
                 let compute = self.engine.stats.total_cycles() - c0;
+                self.trace(SpanKind::Compute, compute - cfg_cost);
                 self.finish_layer(LayerOutcome {
                     out_addr,
                     data: &out.data,
@@ -702,23 +744,27 @@ impl Soc {
         // a fused output is zero-traffic: no DMA charge, no write-back
         // queue entry, no prefetch slot — StageCost::default() feeds the
         // overlap state machine nothing to hide or drain
+        let d0 = self.dma.cycles;
         let out_cost = if self.make_resident(out_addr, data, ctl) {
             StageCost::default()
         } else {
             self.stage_out(out_addr as usize, data)?
         };
+        self.trace(SpanKind::DmaOut, self.dma.cycles - d0);
         if let Some(addr) = consumed {
             if addr != out_addr {
                 self.release_resident(addr);
             }
         }
-        self.layers_run += 1;
+        // the overlap credit below belongs to the layer that just ran, so
+        // the layer counter advances only after the books are closed
         if self.pipeline_on {
             self.account_overlap(compute, in_cost, w_hideable, out_cost);
         } else {
             self.pending_drain = 0;
             self.lookahead = None;
         }
+        self.layers_run += 1;
         Ok(())
     }
 
@@ -749,6 +795,7 @@ impl Soc {
         // claim the words — evicting LRU weights that were using them
         let skipped = self.staging_cost(data.len());
         self.fused_saved_cycles += skipped;
+        self.trace(SpanKind::FusionSkip, skipped);
         if let Some(old) = self.resident.insert(
             out_addr,
             ResidentRegion {
@@ -796,6 +843,7 @@ impl Soc {
             let data = std::mem::take(&mut r.data);
             let skipped = self.staging_cost(len);
             self.fused_saved_cycles += skipped;
+            self.trace(SpanKind::FusionSkip, skipped);
             return Ok((data, StageCost::default(), Some(dram_addr)));
         }
         // a partial read of a resident region would see stale DRAM (the
@@ -889,6 +937,7 @@ impl Soc {
             }
         }
         self.overlapped_cycles += hidden;
+        self.trace(SpanKind::OverlapCredit, hidden);
     }
 
     /// DMA a DRAM region into the scratchpad and return it with its cost

@@ -1,0 +1,555 @@
+//! Cycle-attributed execution tracing: the cycle model's ledger.
+//!
+//! Every simulated cycle the SoC charges is attributed to a typed
+//! [`TraceEvent`] span — compute, reconfiguration, the three DMA flavours,
+//! the pipeline's overlap credits, fusion's skipped staging, and the
+//! host-side plan compile/verify markers. The load-bearing property
+//! (asserted by `rust/tests/trace_attribution.rs`) is **exact
+//! conservation**: for any traced run,
+//!
+//! * `Σ Compute + Σ Reconfig == RunMetrics::compute_cycles`
+//! * `Σ DmaIn + Σ WeightLoad + Σ DmaOut == RunMetrics::mem_cycles`
+//! * `min(Σ OverlapCredit, compute, mem) == RunMetrics::overlapped_cycles`
+//!   (the driver clamps overlap credit to the smaller of the windows it
+//!   can hide under, and a drain/prefetch window may span two runs)
+//! * `Σ FusionSkip == RunMetrics::fused_saved_cycles`
+//!
+//! so the trace *is* the cycle model's accounting, not a parallel
+//! estimate. Spans are emitted into a bounded per-driver [`TraceRing`]
+//! that is **off by default and zero-cost when disabled**: the `Soc`
+//! holds an `Option<TraceRing>` (no allocation when `None`) and every
+//! emission site is a single discriminant check; tracing never mutates a
+//! cycle counter, so enabling it cannot perturb the simulation.
+//!
+//! [`RunTrace`] is the drained, shard-tagged view: `Cluster` stitches
+//! per-replica rings into one trace (one track per shard) and
+//! [`RunTrace::to_chrome_trace`] exports Perfetto / `chrome://tracing`
+//! JSON with nested per-layer spans. [`LayerCycles`] is the per-layer
+//! aggregate the coordinator accumulates into `StatsCollector` — the
+//! per-layer cost input the ROADMAP's autotuner and layer-partitioned
+//! cluster items need.
+
+/// What a traced span of simulated cycles was spent on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SpanKind {
+    /// Systolic-array execution (`Engine::run`/`run_batch` cycles).
+    Compute,
+    /// Engine reconfiguration (configuration words streamed into the
+    /// array; 0 on a context-cache hit — still emitted so warm runs are
+    /// visible in the trace).
+    Reconfig,
+    /// Activation staging, DRAM → scratchpad.
+    DmaIn,
+    /// Output staging, scratchpad → DRAM.
+    DmaOut,
+    /// Weight / bias / FIR-tap staging, DRAM → scratchpad.
+    WeightLoad,
+    /// Cycles the pipeline hid under compute. A *credit*, not timeline
+    /// time: it does not advance the shard clock.
+    OverlapCredit,
+    /// Staging cycles fusion skipped outright (scratchpad-resident
+    /// intermediate). A credit, like [`SpanKind::OverlapCredit`].
+    FusionSkip,
+    /// Host-side plan compilation (0 simulated cycles; marks cold
+    /// dispatches on the timeline).
+    PlanCompile,
+    /// Host-side static plan verification (0 simulated cycles).
+    PlanVerify,
+}
+
+impl SpanKind {
+    /// Every kind, in declaration order (metrics/table iteration).
+    pub const ALL: [SpanKind; 9] = [
+        SpanKind::Compute,
+        SpanKind::Reconfig,
+        SpanKind::DmaIn,
+        SpanKind::DmaOut,
+        SpanKind::WeightLoad,
+        SpanKind::OverlapCredit,
+        SpanKind::FusionSkip,
+        SpanKind::PlanCompile,
+        SpanKind::PlanVerify,
+    ];
+
+    /// Stable lower-snake name (trace JSON categories, metrics labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Compute => "compute",
+            SpanKind::Reconfig => "reconfig",
+            SpanKind::DmaIn => "dma_in",
+            SpanKind::DmaOut => "dma_out",
+            SpanKind::WeightLoad => "weight_load",
+            SpanKind::OverlapCredit => "overlap_credit",
+            SpanKind::FusionSkip => "fusion_skip",
+            SpanKind::PlanCompile => "plan_compile",
+            SpanKind::PlanVerify => "plan_verify",
+        }
+    }
+
+    /// Does this kind occupy timeline time on its shard's track (and so
+    /// advance the ring's clock)? Credits and host-side markers do not:
+    /// their cycles were *not* spent on the timeline — they were hidden
+    /// under it or skipped outright.
+    pub fn is_timeline(self) -> bool {
+        matches!(
+            self,
+            SpanKind::Compute
+                | SpanKind::Reconfig
+                | SpanKind::DmaIn
+                | SpanKind::DmaOut
+                | SpanKind::WeightLoad
+        )
+    }
+}
+
+/// One attributed span of simulated cycles.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Layer index within the run's descriptor table (rebased per run).
+    pub layer: u32,
+    /// Shard that executed the span (tagged at stitch time; 0 for a
+    /// single-driver trace).
+    pub shard: u32,
+    /// Batch the SoC was executing when the span was emitted.
+    pub batch: u32,
+    /// What the cycles were spent on.
+    pub kind: SpanKind,
+    /// Shard-local timeline position (simulated cycles) at emission.
+    pub start_cycle: u64,
+    /// Span length in simulated cycles (may be 0, e.g. a context-cache
+    /// reconfiguration hit).
+    pub cycles: u64,
+}
+
+/// Bounded per-driver span ring. When full, the oldest event is
+/// overwritten and [`TraceRing::dropped`] counts the loss — tracing never
+/// grows without bound and never errors the hot path.
+#[derive(Clone, Debug)]
+pub struct TraceRing {
+    events: Vec<TraceEvent>,
+    /// Index of the oldest event once the ring has wrapped.
+    head: usize,
+    capacity: usize,
+    dropped: u64,
+    /// Shard-local timeline cursor; advanced by timeline spans only, and
+    /// monotone across runs so consecutive runs lay out sequentially.
+    clock: u64,
+    /// `layers_run` at the start of the current run — emitted layer
+    /// indices are rebased against this.
+    layer_base: u64,
+}
+
+/// Default ring capacity: comfortably holds every span of a warm run on
+/// the shipped mini networks (≈ 8 spans/layer) with headroom for many
+/// runs between drains.
+pub const DEFAULT_RING_CAPACITY: usize = 65536;
+
+impl TraceRing {
+    /// Ring with room for `capacity` spans (at least 1).
+    pub fn new(capacity: usize) -> Self {
+        TraceRing {
+            events: Vec::new(),
+            head: 0,
+            capacity: capacity.max(1),
+            dropped: 0,
+            clock: 0,
+            layer_base: 0,
+        }
+    }
+
+    /// Mark the start of a run: layer indices emitted from here are
+    /// rebased to `layers_run` (the SoC's lifetime layer counter at run
+    /// start). The clock is *not* reset — consecutive runs append.
+    pub fn begin_run(&mut self, layers_run: u64) {
+        self.layer_base = layers_run;
+    }
+
+    /// Record one span. `layers_run` is the SoC's lifetime layer counter
+    /// (rebased against [`TraceRing::begin_run`]); timeline kinds advance
+    /// the clock by `cycles`, credits and host markers do not.
+    pub fn record(&mut self, kind: SpanKind, cycles: u64, layers_run: u64, batch: u32) {
+        let ev = TraceEvent {
+            layer: layers_run.saturating_sub(self.layer_base) as u32,
+            shard: 0,
+            batch,
+            kind,
+            start_cycle: self.clock,
+            cycles,
+        };
+        if kind.is_timeline() {
+            self.clock += cycles;
+        }
+        if self.events.len() < self.capacity {
+            self.events.push(ev);
+        } else {
+            self.events[self.head] = ev;
+            self.head = (self.head + 1) % self.capacity;
+            self.dropped += 1;
+        }
+    }
+
+    /// Spans currently buffered.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True when nothing is buffered.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Spans overwritten since the last drain.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Take every buffered span (oldest first) and reset the ring. The
+    /// clock persists so a later drain continues the same timeline.
+    pub fn drain(&mut self) -> RunTrace {
+        let mut events = std::mem::take(&mut self.events);
+        events.rotate_left(self.head);
+        self.head = 0;
+        let dropped = std::mem::take(&mut self.dropped);
+        RunTrace { events, dropped }
+    }
+}
+
+/// Per-layer cycle attribution: one row of the "cycle hotspots" table,
+/// and the aggregate `StatsCollector` accumulates per layer.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LayerCycles {
+    /// Systolic execution cycles.
+    pub compute: u64,
+    /// Engine reconfiguration cycles.
+    pub reconfig: u64,
+    /// Activation-staging DMA cycles.
+    pub dma_in: u64,
+    /// Output-staging DMA cycles.
+    pub dma_out: u64,
+    /// Weight/bias/tap-staging DMA cycles.
+    pub weight_load: u64,
+    /// Cycles the pipeline hid under compute (credit).
+    pub overlapped: u64,
+    /// Staging cycles fusion skipped outright (credit).
+    pub fused_saved: u64,
+    /// Spans aggregated into this row.
+    pub spans: u64,
+}
+
+impl LayerCycles {
+    /// Fold one span into the row.
+    pub fn add(&mut self, kind: SpanKind, cycles: u64) {
+        match kind {
+            SpanKind::Compute => self.compute += cycles,
+            SpanKind::Reconfig => self.reconfig += cycles,
+            SpanKind::DmaIn => self.dma_in += cycles,
+            SpanKind::DmaOut => self.dma_out += cycles,
+            SpanKind::WeightLoad => self.weight_load += cycles,
+            SpanKind::OverlapCredit => self.overlapped += cycles,
+            SpanKind::FusionSkip => self.fused_saved += cycles,
+            SpanKind::PlanCompile | SpanKind::PlanVerify => {}
+        }
+        self.spans += 1;
+    }
+
+    /// Fold another row into this one.
+    pub fn merge(&mut self, other: &LayerCycles) {
+        self.compute += other.compute;
+        self.reconfig += other.reconfig;
+        self.dma_in += other.dma_in;
+        self.dma_out += other.dma_out;
+        self.weight_load += other.weight_load;
+        self.overlapped += other.overlapped;
+        self.fused_saved += other.fused_saved;
+        self.spans += other.spans;
+    }
+
+    /// DMA cycles attributed to the layer (in + out + weights).
+    pub fn mem(&self) -> u64 {
+        self.dma_in + self.dma_out + self.weight_load
+    }
+
+    /// Timeline cycles attributed to the layer (compute + reconfig + DMA)
+    /// — the hotspot ranking key.
+    pub fn busy(&self) -> u64 {
+        self.compute + self.reconfig + self.mem()
+    }
+}
+
+/// A drained, shard-tagged batch of spans: what `Driver::take_trace`
+/// returns and `Cluster::take_stitched_trace` merges across replicas.
+#[derive(Clone, Debug, Default)]
+pub struct RunTrace {
+    /// Spans, oldest first; shard-local timelines are monotone per shard.
+    pub events: Vec<TraceEvent>,
+    /// Spans lost to ring overwrite before the drain (0 means the trace
+    /// is complete and the conservation identities hold exactly).
+    pub dropped: u64,
+}
+
+impl RunTrace {
+    /// Tag every span with the data-parallel shard that executed it.
+    pub fn tag_shard(&mut self, shard: u32) {
+        for ev in &mut self.events {
+            ev.shard = shard;
+        }
+    }
+
+    /// Append another trace (typically a different shard's).
+    pub fn absorb(&mut self, other: RunTrace) {
+        self.events.extend(other.events);
+        self.dropped += other.dropped;
+    }
+
+    /// Total cycles across every span of `kind`.
+    pub fn kind_cycles(&self, kind: SpanKind) -> u64 {
+        self.events
+            .iter()
+            .filter(|e| e.kind == kind)
+            .map(|e| e.cycles)
+            .sum()
+    }
+
+    /// Spans of `kind`.
+    pub fn kind_count(&self, kind: SpanKind) -> usize {
+        self.events.iter().filter(|e| e.kind == kind).count()
+    }
+
+    /// Per-layer aggregation across every shard and run in the trace,
+    /// indexed by layer. Host-side plan markers are skipped — they carry
+    /// no simulated cycles and belong to no layer.
+    pub fn layer_totals(&self) -> Vec<LayerCycles> {
+        let mut rows: Vec<LayerCycles> = Vec::new();
+        for ev in &self.events {
+            if matches!(ev.kind, SpanKind::PlanCompile | SpanKind::PlanVerify) {
+                continue;
+            }
+            let i = ev.layer as usize;
+            if i >= rows.len() {
+                rows.resize(i + 1, LayerCycles::default());
+            }
+            rows[i].add(ev.kind, ev.cycles);
+        }
+        rows
+    }
+
+    /// Export as Perfetto / `chrome://tracing` JSON: one process per
+    /// shard, a `timeline` thread with nested layer spans over the typed
+    /// child spans, counter tracks for the overlap/fusion credits, and
+    /// instant markers for host-side plan compile/verify. Timestamps are
+    /// simulated cycles (rendered as microseconds by the viewers).
+    pub fn to_chrome_trace(&self) -> String {
+        let mut shards: Vec<u32> = self.events.iter().map(|e| e.shard).collect();
+        shards.sort_unstable();
+        shards.dedup();
+        let mut parts: Vec<String> = Vec::with_capacity(self.events.len() * 2 + 8);
+        for &shard in &shards {
+            parts.push(format!(
+                "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{shard},\
+                 \"tid\":0,\"args\":{{\"name\":\"shard {shard}\"}}}}"
+            ));
+            parts.push(format!(
+                "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{shard},\
+                 \"tid\":0,\"args\":{{\"name\":\"timeline\"}}}}"
+            ));
+            let timeline: Vec<&TraceEvent> = self
+                .events
+                .iter()
+                .filter(|e| e.shard == shard && e.kind.is_timeline())
+                .collect();
+            // Nested layer spans: one parent per contiguous same-layer
+            // stretch, children are the typed spans inside it.
+            let mut i = 0;
+            while i < timeline.len() {
+                let mut j = i + 1;
+                while j < timeline.len() && timeline[j].layer == timeline[i].layer {
+                    j += 1;
+                }
+                let start = timeline[i].start_cycle;
+                let end = timeline[j - 1].start_cycle + timeline[j - 1].cycles;
+                parts.push(format!(
+                    "{{\"name\":\"layer {}\",\"cat\":\"layer\",\"ph\":\"X\",\
+                     \"pid\":{shard},\"tid\":0,\"ts\":{start},\"dur\":{}}}",
+                    timeline[i].layer,
+                    end - start
+                ));
+                for e in &timeline[i..j] {
+                    parts.push(format!(
+                        "{{\"name\":\"{0}\",\"cat\":\"{0}\",\"ph\":\"X\",\
+                         \"pid\":{shard},\"tid\":0,\"ts\":{1},\"dur\":{2},\
+                         \"args\":{{\"layer\":{3},\"batch\":{4}}}}}",
+                        e.kind.name(),
+                        e.start_cycle,
+                        e.cycles,
+                        e.layer,
+                        e.batch
+                    ));
+                }
+                i = j;
+            }
+            for e in self.events.iter().filter(|e| e.shard == shard) {
+                match e.kind {
+                    SpanKind::OverlapCredit | SpanKind::FusionSkip => {
+                        // Counter spike: value at emission, back to 0 one
+                        // cycle later, so credits read as impulses.
+                        parts.push(format!(
+                            "{{\"name\":\"{0}\",\"ph\":\"C\",\"pid\":{shard},\
+                             \"ts\":{1},\"args\":{{\"cycles\":{2}}}}}",
+                            e.kind.name(),
+                            e.start_cycle,
+                            e.cycles
+                        ));
+                        parts.push(format!(
+                            "{{\"name\":\"{0}\",\"ph\":\"C\",\"pid\":{shard},\
+                             \"ts\":{1},\"args\":{{\"cycles\":0}}}}",
+                            e.kind.name(),
+                            e.start_cycle + 1
+                        ));
+                    }
+                    SpanKind::PlanCompile | SpanKind::PlanVerify => {
+                        parts.push(format!(
+                            "{{\"name\":\"{0}\",\"cat\":\"plan\",\"ph\":\"i\",\
+                             \"s\":\"t\",\"pid\":{shard},\"tid\":0,\"ts\":{1}}}",
+                            e.kind.name(),
+                            e.start_cycle
+                        ));
+                    }
+                    _ => {}
+                }
+            }
+        }
+        format!(
+            "{{\"displayTimeUnit\":\"ns\",\"otherData\":{{\"unit\":\"simulated cycles\",\
+             \"dropped_spans\":{}}},\"traceEvents\":[{}]}}\n",
+            self.dropped,
+            parts.join(",")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let mut r = TraceRing::new(4);
+        for i in 0..6u64 {
+            r.record(SpanKind::Compute, 10 + i, i, 1);
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 2);
+        let t = r.drain();
+        assert_eq!(t.dropped, 2);
+        // Oldest first: spans 2..6 survive.
+        let cycles: Vec<u64> = t.events.iter().map(|e| e.cycles).collect();
+        assert_eq!(cycles, vec![12, 13, 14, 15]);
+        assert!(r.is_empty());
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn clock_advances_for_timeline_kinds_only() {
+        let mut r = TraceRing::new(16);
+        r.record(SpanKind::Compute, 100, 0, 1);
+        r.record(SpanKind::OverlapCredit, 40, 0, 1);
+        r.record(SpanKind::FusionSkip, 7, 0, 1);
+        r.record(SpanKind::DmaIn, 30, 1, 1);
+        let t = r.drain();
+        assert_eq!(t.events[0].start_cycle, 0);
+        assert_eq!(t.events[1].start_cycle, 100, "credit sits at end of compute");
+        assert_eq!(t.events[2].start_cycle, 100, "credits do not advance clock");
+        assert_eq!(t.events[3].start_cycle, 100);
+        // Drain keeps the clock: the next run appends to the timeline.
+        r.record(SpanKind::Compute, 1, 0, 1);
+        assert_eq!(r.drain().events[0].start_cycle, 130);
+    }
+
+    #[test]
+    fn begin_run_rebases_layer_indices() {
+        let mut r = TraceRing::new(16);
+        r.begin_run(12);
+        r.record(SpanKind::Compute, 5, 12, 2);
+        r.record(SpanKind::Compute, 5, 14, 2);
+        let t = r.drain();
+        assert_eq!(t.events[0].layer, 0);
+        assert_eq!(t.events[1].layer, 2);
+        assert_eq!(t.events[0].batch, 2);
+    }
+
+    #[test]
+    fn stitch_tags_shards_and_sums_kinds() {
+        let mut a = TraceRing::new(8);
+        a.record(SpanKind::Compute, 100, 0, 1);
+        a.record(SpanKind::DmaIn, 25, 0, 1);
+        let mut ta = a.drain();
+        ta.tag_shard(0);
+        let mut b = TraceRing::new(8);
+        b.record(SpanKind::Compute, 60, 0, 1);
+        b.record(SpanKind::OverlapCredit, 9, 0, 1);
+        let mut tb = b.drain();
+        tb.tag_shard(3);
+        ta.absorb(tb);
+        assert_eq!(ta.kind_cycles(SpanKind::Compute), 160);
+        assert_eq!(ta.kind_cycles(SpanKind::DmaIn), 25);
+        assert_eq!(ta.kind_cycles(SpanKind::OverlapCredit), 9);
+        assert_eq!(ta.kind_count(SpanKind::Compute), 2);
+        assert_eq!(ta.events[2].shard, 3);
+    }
+
+    #[test]
+    fn layer_totals_aggregate_across_shards() {
+        let mut r = TraceRing::new(16);
+        r.record(SpanKind::Compute, 50, 0, 1);
+        r.record(SpanKind::WeightLoad, 20, 0, 1);
+        r.record(SpanKind::Compute, 70, 1, 1);
+        r.record(SpanKind::FusionSkip, 11, 1, 1);
+        let rows = r.drain().layer_totals();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].compute, 50);
+        assert_eq!(rows[0].weight_load, 20);
+        assert_eq!(rows[0].mem(), 20);
+        assert_eq!(rows[0].busy(), 70);
+        assert_eq!(rows[1].compute, 70);
+        assert_eq!(rows[1].fused_saved, 11);
+        assert_eq!(rows[1].busy(), 70, "credits are not timeline time");
+        let mut merged = rows[0];
+        merged.merge(&rows[1]);
+        assert_eq!(merged.compute, 120);
+        assert_eq!(merged.spans, 4);
+    }
+
+    #[test]
+    fn chrome_trace_is_balanced_json_with_shard_tracks() {
+        let mut r = TraceRing::new(16);
+        r.begin_run(0);
+        r.record(SpanKind::Reconfig, 8, 0, 4);
+        r.record(SpanKind::Compute, 100, 0, 4);
+        r.record(SpanKind::OverlapCredit, 12, 0, 4);
+        r.record(SpanKind::PlanCompile, 0, 0, 4);
+        let mut t = r.drain();
+        t.tag_shard(2);
+        let json = t.to_chrome_trace();
+        assert!(json.starts_with("{\"displayTimeUnit\""));
+        assert!(json.contains("\"traceEvents\":["));
+        assert!(json.contains("\"shard 2\""));
+        assert!(json.contains("\"layer 0\""));
+        assert!(json.contains("\"compute\""));
+        assert!(json.contains("\"overlap_credit\""));
+        assert!(json.contains("\"plan_compile\""));
+        let opens = json.matches('{').count();
+        let closes = json.matches('}').count();
+        assert_eq!(opens, closes, "balanced braces");
+        let brackets = json.matches('[').count();
+        assert_eq!(brackets, json.matches(']').count());
+    }
+
+    #[test]
+    fn empty_trace_exports_cleanly() {
+        let t = RunTrace::default();
+        let json = t.to_chrome_trace();
+        assert!(json.contains("\"traceEvents\":[]"));
+        assert_eq!(t.layer_totals().len(), 0);
+        assert_eq!(t.kind_cycles(SpanKind::Compute), 0);
+    }
+}

@@ -12,6 +12,7 @@
 use super::plan::ShardPlan;
 use super::scheduler::Scheduler;
 use crate::accel::driver::ShardedMetrics;
+use crate::accel::trace::RunTrace;
 use crate::accel::{Driver, LayerDesc, SocConfig};
 use crate::error::{Error, Result};
 
@@ -116,6 +117,37 @@ impl Cluster {
         for drv in &mut self.drivers {
             drv.set_config_cache(on);
         }
+    }
+
+    /// Arm (capacity > 0) or disarm (capacity == 0) the execution tracer
+    /// on every replica. Each replica records into its own bounded ring;
+    /// [`Cluster::take_stitched_trace`] merges them with shard tags.
+    pub fn set_tracing(&mut self, capacity: usize) {
+        for drv in &mut self.drivers {
+            drv.set_tracing(capacity);
+        }
+    }
+
+    /// True when every replica has a tracer armed.
+    pub fn tracing_enabled(&self) -> bool {
+        !self.drivers.is_empty() && self.drivers.iter().all(|d| d.tracing_enabled())
+    }
+
+    /// Drain every replica's trace ring and stitch the spans into one
+    /// [`RunTrace`], tagging each replica's events with the shard it ran
+    /// (from `m`'s placement). When several shards landed on one replica
+    /// the ring drains on the first of them, so all of that replica's
+    /// spans carry the first shard's tag — an attribution approximation,
+    /// never a cycle loss. A disarmed cluster yields an empty trace.
+    pub fn take_stitched_trace(&mut self, m: &ShardedMetrics) -> RunTrace {
+        let mut stitched = RunTrace::default();
+        for run in &m.shards {
+            if let Some(mut t) = self.drivers[run.replica].take_trace() {
+                t.tag_shard(run.shard as u32);
+                stitched.absorb(t);
+            }
+        }
+        stitched
     }
 
     /// Dispatch an already-placed plan: shard `i` runs on replica
@@ -240,6 +272,45 @@ mod tests {
         assert!(c.drivers().iter().all(|d| d.config_cache_enabled()));
         c.set_config_cache(false);
         assert!(c.drivers().iter().all(|d| !d.config_cache_enabled()));
+    }
+
+    #[test]
+    fn set_tracing_reaches_every_replica_and_stitches() {
+        let mut c = Cluster::new(ClusterConfig {
+            replicas: 2,
+            soc: small_soc(),
+        })
+        .unwrap();
+        assert!(!c.tracing_enabled());
+        c.set_tracing(1024);
+        assert!(c.tracing_enabled());
+        // per-replica FIR, then stitch: both shards' spans show up tagged
+        let mut tables = Vec::new();
+        for r in 0..2 {
+            let drv = c.driver_mut(r);
+            let taps = drv.upload(&[1, 1]).unwrap();
+            let input = drv.upload(&[1, 2, 3, 4]).unwrap();
+            let out = drv.alloc(4).unwrap();
+            tables.push(vec![LayerDesc::Fir {
+                taps_addr: taps,
+                n_taps: 2,
+                in_addr: input,
+                n: 4,
+                out_addr: out,
+            }]);
+        }
+        let refs: Vec<&[LayerDesc]> = tables.iter().map(|t| t.as_slice()).collect();
+        let plan = ShardPlan::split(2, 2).unwrap();
+        let mut sched = Scheduler::new(SchedulePolicy::LeastOutstandingCycles, 2).unwrap();
+        let asg = sched.assign_plan(&plan).unwrap();
+        let m = c.run_assigned(&refs, &plan, &asg, &mut sched).unwrap();
+        let t = c.take_stitched_trace(&m);
+        assert!(!t.events.is_empty());
+        let shards: std::collections::BTreeSet<u32> =
+            t.events.iter().map(|e| e.shard).collect();
+        assert_eq!(shards.len(), 2, "one track per shard");
+        c.set_tracing(0);
+        assert!(!c.tracing_enabled());
     }
 
     #[test]

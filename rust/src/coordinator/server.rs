@@ -40,7 +40,7 @@ use super::batcher::{BatchPolicy, Batcher};
 use super::dedup::DedupCache;
 use super::request::{InferenceRequest, InferenceResponse, RequestId};
 use super::stats::StatsCollector;
-use crate::accel::{ShardedMetrics, SocConfig};
+use crate::accel::{ShardedMetrics, SocConfig, DEFAULT_RING_CAPACITY};
 use crate::cluster::{Cluster, ClusterConfig, SchedulePolicy, Scheduler};
 use crate::cnn::networks::{ClusterDeployment, NetworkInstance};
 use crate::cnn::tensor::Tensor;
@@ -89,6 +89,14 @@ pub struct CoordinatorConfig {
     /// On by default; disable with `--no-dedup` / `dedup: false` for
     /// strictly-isolated request accounting.
     pub dedup: bool,
+    /// Arm the execution tracer on every replica: each batch's stitched
+    /// per-layer cycle attribution folds into
+    /// `StatsCollector::per_layer` (the hotspots table and the
+    /// `kom_layer_cycles_total` metrics rows). Off by default — tracing
+    /// never perturbs simulated cycles, but the ring buffer and
+    /// per-batch stitching are real host work the hot path should not
+    /// pay unless asked.
+    pub trace: bool,
     /// Batching policy.
     pub batch: BatchPolicy,
     /// Per-replica SoC configuration.
@@ -108,6 +116,7 @@ impl Default for CoordinatorConfig {
             fuse: true,
             config_cache: true,
             dedup: true,
+            trace: false,
             batch: BatchPolicy::default(),
             soc: SocConfig::serving(),
             clock_mhz: 200.0,
@@ -148,6 +157,9 @@ impl Worker {
         cluster.set_pipeline(cfg.pipeline)?;
         cluster.set_fusion(cfg.fuse);
         cluster.set_config_cache(cfg.config_cache);
+        if cfg.trace {
+            cluster.set_tracing(DEFAULT_RING_CAPACITY);
+        }
         // deploy_cluster compiles every replica's full-capacity plan here,
         // at worker start — the per-batch hot loop only executes plans
         let cdep = inst.deploy_cluster(&mut cluster, per_shard)?;
@@ -296,6 +308,13 @@ impl Coordinator {
                                 .iter()
                                 .map(|r| r.submitted.elapsed().as_micros() as u64)
                                 .collect();
+                            // drain the batch's stitched trace (if armed)
+                            // before the lock: stitching walks the rings,
+                            // folding it is one cheap merge under the lock
+                            let trace = worker
+                                .cluster
+                                .tracing_enabled()
+                                .then(|| worker.cluster.take_stitched_trace(&m));
                             {
                                 // one lock for the whole batch: the batch
                                 // is charged its critical-path (max over
@@ -311,6 +330,9 @@ impl Coordinator {
                                     m.plan_hits(),
                                     m.shards.len() as u64,
                                 );
+                                if let Some(t) = &trace {
+                                    s.record_trace(t);
+                                }
                                 for &latency_us in &latencies {
                                     s.record(latency_us, n, 0);
                                 }
@@ -420,6 +442,13 @@ impl Coordinator {
             })
             .map_err(|_| Error::Coordinator("submission channel closed".into()))?;
         Ok((id, rx))
+    }
+
+    /// Render the live Prometheus-style metrics page (see
+    /// [`StatsCollector::metrics_text`]) — what `kom-accel serve
+    /// --metrics-interval` prints while serving.
+    pub fn metrics_text(&self) -> String {
+        self.stats.lock().expect("stats poisoned").metrics_text()
     }
 
     /// Drain and stop; returns the final statistics.
@@ -821,6 +850,59 @@ mod tests {
         let stats = coord.shutdown();
         assert_eq!(stats.reconfigs, 2 * n_layers);
         assert_eq!(stats.reconfigs_skipped, 0);
+    }
+
+    #[test]
+    fn traced_serving_aggregates_per_layer_cycles() {
+        let inst = tiny_instance();
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                shards: 2,
+                trace: true,
+                ..Default::default()
+            },
+            &inst,
+        )
+        .unwrap();
+        let rxs: Vec<_> = (0..8)
+            .map(|i| {
+                coord
+                    .submit(Tensor::random(vec![1, 16, 16], 127, 8800 + i))
+                    .unwrap()
+            })
+            .collect();
+        for (_, rx) in rxs {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        let metrics = coord.metrics_text();
+        assert!(metrics.contains("kom_layer_cycles_total{layer=\"0\",kind=\"compute\"}"));
+        let stats = coord.shutdown();
+        // Tiny is 6 layers deep; every one must have attributed cycles
+        assert_eq!(stats.per_layer().len(), 6);
+        assert!(stats.per_layer().iter().all(|r| r.busy() > 0));
+        assert!(!stats.hotspots(3).is_empty());
+        // the trace is the ledger: traced compute+reconfig can never
+        // undercount the charged accelerator cycles (sums over shards,
+        // while the batch charge is the max)
+        let traced: u64 = stats.per_layer().iter().map(|r| r.busy()).sum();
+        assert!(traced >= stats.accel_cycles, "{traced} < {}", stats.accel_cycles);
+
+        // tracing off (the default): no per-layer rows exist
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                ..Default::default()
+            },
+            &inst,
+        )
+        .unwrap();
+        let (_, rx) = coord
+            .submit(Tensor::random(vec![1, 16, 16], 127, 8900))
+            .unwrap();
+        assert!(rx.recv().unwrap().is_ok());
+        let stats = coord.shutdown();
+        assert!(stats.per_layer().is_empty());
     }
 
     #[test]

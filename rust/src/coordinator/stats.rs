@@ -1,7 +1,27 @@
 //! Serving statistics: latency percentiles, throughput, batch sizes, and
 //! per-batch amortized accelerator cycles.
+//!
+//! Memory is bounded under indefinite serving load: latency samples live
+//! in a fixed-size reservoir (Vitter's Algorithm R — count/mean/max stay
+//! exact forever, percentiles are exact up to [`RESERVOIR_CAP`] samples
+//! and a uniform approximation beyond), batch sizes are two counters, and
+//! the sliding throughput window keeps at most [`WINDOW_SECS`] one-second
+//! buckets. The collector also aggregates per-layer cycle attribution
+//! from drained execution traces ([`StatsCollector::record_trace`]) and
+//! renders everything as a Prometheus-style text dump
+//! ([`StatsCollector::metrics_text`]).
 
+use std::collections::VecDeque;
 use std::time::Instant;
+
+use crate::accel::trace::{LayerCycles, RunTrace};
+
+/// Latency samples retained for percentile estimation. Below this many
+/// recorded requests the reported percentiles are exact.
+pub const RESERVOIR_CAP: usize = 4096;
+
+/// Width of the sliding throughput window, in seconds.
+pub const WINDOW_SECS: u64 = 10;
 
 /// Latency summary in microseconds.
 #[derive(Clone, Copy, Debug, Default)]
@@ -20,17 +40,68 @@ pub struct LatencyStats {
     pub max_us: u64,
 }
 
+/// Bounded latency reservoir (Algorithm R). `seen`/`sum`/`max` are exact
+/// over the full stream; `samples` is a uniform subsample once the stream
+/// outgrows [`RESERVOIR_CAP`]. The replacement RNG is a deterministic
+/// xorshift64 so runs are reproducible without external crates.
+#[derive(Clone, Debug)]
+struct Reservoir {
+    samples: Vec<u64>,
+    seen: u64,
+    sum: u64,
+    max: u64,
+    rng: u64,
+}
+
+impl Reservoir {
+    fn new() -> Self {
+        Reservoir {
+            samples: Vec::new(),
+            seen: 0,
+            sum: 0,
+            max: 0,
+            rng: 0x9E37_79B9_7F4A_7C15,
+        }
+    }
+
+    fn push(&mut self, v: u64) {
+        self.seen += 1;
+        self.sum += v;
+        self.max = self.max.max(v);
+        if self.samples.len() < RESERVOIR_CAP {
+            self.samples.push(v);
+        } else {
+            self.rng ^= self.rng << 13;
+            self.rng ^= self.rng >> 7;
+            self.rng ^= self.rng << 17;
+            let j = (self.rng % self.seen) as usize;
+            if j < RESERVOIR_CAP {
+                self.samples[j] = v;
+            }
+        }
+    }
+}
+
 /// Collects per-request samples plus per-batch accelerator runs.
 #[derive(Debug)]
 pub struct StatsCollector {
-    latencies_us: Vec<u64>,
-    batch_sizes: Vec<usize>,
+    latencies: Reservoir,
+    /// Sum / count of recorded batch sizes (bounded replacement for the
+    /// old per-request `Vec<usize>`).
+    batch_size_sum: u64,
+    batch_size_n: u64,
+    /// One-second request-count buckets covering the last
+    /// [`WINDOW_SECS`] seconds, oldest first.
+    window: VecDeque<(u64, u64)>,
     /// Total cycles across accelerator batch runs (accumulated once per
     /// `run_table_batch`, *not* per request).
     batch_cycles_sum: u64,
     /// Busy cycles per shard slot (replica index within a worker's
     /// cluster, aggregated across workers). Grows on demand.
     shard_busy_cycles: Vec<u64>,
+    /// Per-layer cycle attribution aggregated from drained execution
+    /// traces, indexed by layer. Bounded by the served network's depth.
+    per_layer: Vec<LayerCycles>,
     started: Instant,
     /// Total simulated accelerator cycles across batches.
     pub accel_cycles: u64,
@@ -72,10 +143,13 @@ impl StatsCollector {
     /// Empty collector (clock starts now).
     pub fn new() -> Self {
         StatsCollector {
-            latencies_us: Vec::new(),
-            batch_sizes: Vec::new(),
+            latencies: Reservoir::new(),
+            batch_size_sum: 0,
+            batch_size_n: 0,
+            window: VecDeque::new(),
             batch_cycles_sum: 0,
             shard_busy_cycles: Vec::new(),
+            per_layer: Vec::new(),
             started: Instant::now(),
             accel_cycles: 0,
             overlapped_cycles: 0,
@@ -90,13 +164,36 @@ impl StatsCollector {
         }
     }
 
+    /// Bucket one served request into the sliding throughput window and
+    /// prune buckets that fell off its trailing edge.
+    fn note_request_in_window(&mut self) {
+        let sec = self.started.elapsed().as_secs();
+        let merge = matches!(self.window.back(), Some(&(s, _)) if s == sec);
+        if merge {
+            if let Some(last) = self.window.back_mut() {
+                last.1 += 1;
+            }
+        } else {
+            self.window.push_back((sec, 1));
+        }
+        while let Some(&(s, _)) = self.window.front() {
+            if s + WINDOW_SECS <= sec {
+                self.window.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
     /// Record one completed request. `accel_cycles` is this request's share
     /// of accelerator time; batched servers record the batch's cycles once
     /// via [`StatsCollector::record_batch`] and pass 0 here.
     pub fn record(&mut self, latency_us: u64, batch_size: usize, accel_cycles: u64) {
-        self.latencies_us.push(latency_us);
-        self.batch_sizes.push(batch_size);
+        self.latencies.push(latency_us);
+        self.batch_size_sum += batch_size as u64;
+        self.batch_size_n += 1;
         self.accel_cycles += accel_cycles;
+        self.note_request_in_window();
     }
 
     /// Record one accelerator batch run costing `cycles` total — the unit
@@ -172,12 +269,13 @@ impl StatsCollector {
     /// Record one request served from the front-door activation cache
     /// (exact-input dedup): it completes with real logits (a latency
     /// sample, counted by [`StatsCollector::count`]) but never forms an
-    /// accelerator batch — it contributes no `batch_sizes` entry, matching
+    /// accelerator batch — it contributes no batch-size sample, matching
     /// the `batch_size: 0` its response reports, so dedup-heavy traffic
     /// does not drag [`StatsCollector::mean_batch`] toward 1.
     pub fn record_dedup_hit(&mut self, latency_us: u64) {
         self.dedup_hits += 1;
-        self.latencies_us.push(latency_us);
+        self.latencies.push(latency_us);
+        self.note_request_in_window();
     }
 
     /// Record one shard batch's plan/reconfiguration telemetry:
@@ -196,6 +294,38 @@ impl StatsCollector {
         self.plan_runs += shard_runs;
     }
 
+    /// Fold a drained execution trace's per-layer cycle attribution into
+    /// the collector (see [`crate::accel::trace`]). Rows are indexed by
+    /// layer and merged across batches, shards and workers — the
+    /// aggregate behind [`StatsCollector::hotspots`] and the
+    /// `kom_layer_cycles_total` rows of
+    /// [`StatsCollector::metrics_text`].
+    pub fn record_trace(&mut self, trace: &RunTrace) {
+        for (i, row) in trace.layer_totals().into_iter().enumerate() {
+            if i >= self.per_layer.len() {
+                self.per_layer.resize(i + 1, LayerCycles::default());
+            }
+            self.per_layer[i].merge(&row);
+        }
+    }
+
+    /// Aggregated per-layer cycle attribution, indexed by layer. Empty
+    /// until a trace is recorded.
+    pub fn per_layer(&self) -> &[LayerCycles] {
+        &self.per_layer
+    }
+
+    /// The top-`k` layers by timeline cycles (compute + reconfig + DMA),
+    /// as `(layer index, aggregate)` rows — the "cycle hotspots" table the
+    /// CLI prints. Ties break toward the earlier layer.
+    pub fn hotspots(&self, k: usize) -> Vec<(usize, LayerCycles)> {
+        let mut rows: Vec<(usize, LayerCycles)> =
+            self.per_layer.iter().copied().enumerate().collect();
+        rows.sort_by(|a, b| b.1.busy().cmp(&a.1.busy()).then(a.0.cmp(&b.0)));
+        rows.truncate(k);
+        rows
+    }
+
     /// Fraction of shard runs that executed a cached compiled plan —
     /// the serving hot path should sit at ~1.0 after the first batch of
     /// each shape. 0.0 before any sharded batch ran.
@@ -212,12 +342,20 @@ impl StatsCollector {
         self.errors += 1;
     }
 
-    /// Requests completed successfully.
+    /// Requests completed successfully (exact, never sampled).
     pub fn count(&self) -> usize {
-        self.latencies_us.len()
+        self.latencies.seen as usize
     }
 
-    /// Requests per second of wall clock since construction.
+    /// Latency samples currently retained for percentile estimation —
+    /// at most [`RESERVOIR_CAP`], however long the server runs.
+    pub fn latency_samples_retained(&self) -> usize {
+        self.latencies.samples.len()
+    }
+
+    /// Requests per second of wall clock since construction — the
+    /// lifetime figure. An idle server's lifetime RPS decays toward 0;
+    /// see [`StatsCollector::throughput_rps_window`] for the recent rate.
     pub fn throughput_rps(&self) -> f64 {
         let secs = self.started.elapsed().as_secs_f64();
         if secs == 0.0 {
@@ -227,12 +365,40 @@ impl StatsCollector {
         }
     }
 
-    /// Mean batch size.
+    /// Requests counted inside the sliding [`WINDOW_SECS`] window.
+    pub fn requests_in_window(&self) -> u64 {
+        let sec = self.started.elapsed().as_secs();
+        self.window
+            .iter()
+            .filter(|&&(s, _)| s + WINDOW_SECS > sec)
+            .map(|&(_, c)| c)
+            .sum()
+    }
+
+    /// Requests per second over the last [`WINDOW_SECS`] seconds of wall
+    /// clock (or since construction, if younger than the window) — the
+    /// live rate a dashboard wants, immune to the lifetime figure's decay
+    /// during idle stretches.
+    pub fn throughput_rps_window(&self) -> f64 {
+        let n = self.requests_in_window();
+        if n == 0 {
+            return 0.0;
+        }
+        let horizon = self
+            .started
+            .elapsed()
+            .as_secs_f64()
+            .min(WINDOW_SECS as f64)
+            .max(1e-6);
+        n as f64 / horizon
+    }
+
+    /// Mean batch size (exact: running sum / count).
     pub fn mean_batch(&self) -> f64 {
-        if self.batch_sizes.is_empty() {
+        if self.batch_size_n == 0 {
             0.0
         } else {
-            self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+            self.batch_size_sum as f64 / self.batch_size_n as f64
         }
     }
 
@@ -252,10 +418,10 @@ impl StatsCollector {
     /// charged their max-over-shards critical path, so this figure is also
     /// **shard-count-amortized**: R concurrent shards divide it by up to R.
     pub fn amortized_cycles_per_request(&self) -> f64 {
-        if self.latencies_us.is_empty() {
+        if self.latencies.seen == 0 {
             0.0
         } else {
-            self.accel_cycles as f64 / self.latencies_us.len() as f64
+            self.accel_cycles as f64 / self.latencies.seen as f64
         }
     }
 
@@ -280,30 +446,97 @@ impl StatsCollector {
         &self.shard_busy_cycles
     }
 
-    /// Latency percentiles. A collector with no recorded samples returns
-    /// the zeroed [`LatencyStats`] — no path through here unwraps on an
-    /// empty sample vector.
+    /// Latency percentiles. Count, mean and max are exact over the whole
+    /// request stream; percentiles are exact up to [`RESERVOIR_CAP`]
+    /// recorded samples and computed from a uniform reservoir beyond. A
+    /// collector with no recorded samples returns the zeroed
+    /// [`LatencyStats`] — no path through here unwraps on an empty sample
+    /// vector.
     pub fn latency(&self) -> LatencyStats {
-        if self.latencies_us.is_empty() {
+        if self.latencies.seen == 0 {
             return LatencyStats::default();
         }
-        let mut v = self.latencies_us.clone();
+        let mut v = self.latencies.samples.clone();
         v.sort_unstable();
         let pct = |p: f64| v[((v.len() as f64 - 1.0) * p) as usize];
         LatencyStats {
-            count: v.len(),
-            mean_us: v.iter().sum::<u64>() as f64 / v.len() as f64,
+            count: self.latencies.seen as usize,
+            mean_us: self.latencies.sum as f64 / self.latencies.seen as f64,
             p50_us: pct(0.50),
             p95_us: pct(0.95),
             p99_us: pct(0.99),
-            max_us: v.last().copied().unwrap_or_default(),
+            max_us: self.latencies.max,
         }
+    }
+
+    /// Prometheus-style text dump: request/error/dedup counters, latency
+    /// quantiles, lifetime and windowed throughput, plan/reconfiguration
+    /// telemetry, shard utilization, and the per-layer cycle table from
+    /// recorded traces. One scrape-friendly page, no serialization crates.
+    pub fn metrics_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let l = self.latency();
+        let _ = writeln!(out, "# HELP kom_requests_total Requests served successfully.");
+        let _ = writeln!(out, "# TYPE kom_requests_total counter");
+        let _ = writeln!(out, "kom_requests_total {}", self.count());
+        let _ = writeln!(out, "kom_errors_total {}", self.errors);
+        let _ = writeln!(out, "kom_dedup_hits_total {}", self.dedup_hits);
+        let _ = writeln!(out, "kom_batches_total {}", self.batches);
+        let _ = writeln!(out, "kom_accel_cycles_total {}", self.accel_cycles);
+        let _ = writeln!(out, "kom_overlapped_cycles_total {}", self.overlapped_cycles);
+        let _ = writeln!(out, "kom_fused_saved_cycles_total {}", self.fused_saved_cycles);
+        let _ = writeln!(out, "kom_reconfigs_total {}", self.reconfigs);
+        let _ = writeln!(out, "kom_reconfigs_skipped_total {}", self.reconfigs_skipped);
+        let _ = writeln!(out, "kom_plan_cache_hit_rate {:.6}", self.plan_cache_hit_rate());
+        let _ = writeln!(out, "# HELP kom_latency_us Request latency in microseconds.");
+        let _ = writeln!(out, "# TYPE kom_latency_us summary");
+        let _ = writeln!(out, "kom_latency_us{{quantile=\"0.5\"}} {}", l.p50_us);
+        let _ = writeln!(out, "kom_latency_us{{quantile=\"0.95\"}} {}", l.p95_us);
+        let _ = writeln!(out, "kom_latency_us{{quantile=\"0.99\"}} {}", l.p99_us);
+        let _ = writeln!(out, "kom_latency_us_max {}", l.max_us);
+        let _ = writeln!(out, "kom_latency_us_mean {:.3}", l.mean_us);
+        let _ = writeln!(out, "kom_throughput_rps {:.3}", self.throughput_rps());
+        let _ = writeln!(
+            out,
+            "kom_throughput_rps_window {:.3}",
+            self.throughput_rps_window()
+        );
+        let _ = writeln!(out, "kom_mean_batch {:.3}", self.mean_batch());
+        for (i, u) in self.shard_utilization().iter().enumerate() {
+            let _ = writeln!(out, "kom_shard_utilization{{shard=\"{i}\"}} {u:.6}");
+        }
+        if !self.per_layer.is_empty() {
+            let _ = writeln!(
+                out,
+                "# HELP kom_layer_cycles_total Per-layer cycle attribution from the execution trace."
+            );
+            let _ = writeln!(out, "# TYPE kom_layer_cycles_total counter");
+            for (i, row) in self.per_layer.iter().enumerate() {
+                for (kind, v) in [
+                    ("compute", row.compute),
+                    ("reconfig", row.reconfig),
+                    ("dma_in", row.dma_in),
+                    ("dma_out", row.dma_out),
+                    ("weight_load", row.weight_load),
+                    ("overlap_credit", row.overlapped),
+                    ("fusion_skip", row.fused_saved),
+                ] {
+                    let _ = writeln!(
+                        out,
+                        "kom_layer_cycles_total{{layer=\"{i}\",kind=\"{kind}\"}} {v}"
+                    );
+                }
+            }
+        }
+        out
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::accel::trace::{SpanKind, TraceRing};
 
     #[test]
     fn percentiles() {
@@ -328,6 +561,9 @@ mod tests {
         assert_eq!(s.mean_batch_cycles(), 0.0);
         assert_eq!(s.amortized_cycles_per_request(), 0.0);
         assert_eq!(s.overlap_fraction(), 0.0);
+        assert_eq!(s.throughput_rps_window(), 0.0);
+        assert!(s.per_layer().is_empty());
+        assert!(s.hotspots(5).is_empty());
     }
 
     #[test]
@@ -408,5 +644,84 @@ mod tests {
         assert_eq!(s.errors, 1);
         assert!((s.mean_batch_cycles() - 1000.0).abs() < 1e-9);
         assert!((s.amortized_cycles_per_request() - 250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reservoir_bounds_memory_and_keeps_exact_summary() {
+        let mut s = StatsCollector::new();
+        let n = 10 * RESERVOIR_CAP as u64;
+        for i in 1..=n {
+            s.record(i, 1, 0);
+        }
+        // count/mean/max are exact over the full stream …
+        let l = s.latency();
+        assert_eq!(l.count, n as usize);
+        assert_eq!(l.max_us, n);
+        assert!((l.mean_us - (n + 1) as f64 / 2.0).abs() < 1e-6);
+        // … while retained samples stay bounded …
+        assert!(s.latency_samples_retained() <= RESERVOIR_CAP);
+        // … and percentiles stay a sane approximation of the uniform
+        // 1..=n stream (documented: exact only up to RESERVOIR_CAP).
+        let mid = n as f64 / 2.0;
+        assert!(
+            (l.p50_us as f64) > mid * 0.85 && (l.p50_us as f64) < mid * 1.15,
+            "p50 {} far from {}",
+            l.p50_us,
+            mid
+        );
+        assert!(l.p95_us > l.p50_us && l.p99_us >= l.p95_us);
+    }
+
+    #[test]
+    fn window_rps_counts_recent_requests() {
+        let mut s = StatsCollector::new();
+        for _ in 0..5 {
+            s.record(10, 1, 0);
+        }
+        s.record_dedup_hit(3);
+        assert_eq!(s.requests_in_window(), 6);
+        assert!(s.throughput_rps_window() > 0.0);
+        assert!(s.throughput_rps() > 0.0);
+    }
+
+    #[test]
+    fn record_trace_aggregates_per_layer() {
+        let mut r = TraceRing::new(64);
+        r.record(SpanKind::Compute, 100, 0, 1);
+        r.record(SpanKind::DmaIn, 30, 0, 1);
+        r.record(SpanKind::Compute, 40, 1, 1);
+        let t = r.drain();
+        let mut s = StatsCollector::new();
+        s.record_trace(&t);
+        s.record_trace(&t);
+        assert_eq!(s.per_layer().len(), 2);
+        assert_eq!(s.per_layer()[0].compute, 200);
+        assert_eq!(s.per_layer()[0].dma_in, 60);
+        assert_eq!(s.per_layer()[1].compute, 80);
+        let hot = s.hotspots(1);
+        assert_eq!(hot.len(), 1);
+        assert_eq!(hot[0].0, 0, "layer 0 has the bigger timeline share");
+    }
+
+    #[test]
+    fn metrics_text_is_scrapeable() {
+        let mut s = StatsCollector::new();
+        s.record_batch(1000);
+        for _ in 0..4 {
+            s.record(50, 4, 0);
+        }
+        let mut r = TraceRing::new(16);
+        r.record(SpanKind::Compute, 75, 0, 4);
+        s.record_trace(&r.drain());
+        let text = s.metrics_text();
+        assert!(text.contains("kom_requests_total 4"));
+        assert!(text.contains("kom_accel_cycles_total 1000"));
+        assert!(text.contains("kom_latency_us{quantile=\"0.5\"} 50"));
+        assert!(text.contains("kom_layer_cycles_total{layer=\"0\",kind=\"compute\"} 75"));
+        assert!(text.contains("kom_throughput_rps_window"));
+        // every non-comment line is `name[{labels}] value`
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(line.split_whitespace().count(), 2, "bad line: {line}");
+        }
     }
 }

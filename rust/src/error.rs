@@ -38,7 +38,9 @@ pub enum Error {
     /// Multi-SoC cluster error (shard planning, replica dispatch).
     Cluster(String),
 
-    /// XLA / PJRT runtime error.
+    /// XLA / PJRT runtime error. Also carries host-side tooling failures
+    /// with no better category — e.g. `kom-accel trace` reporting a trace
+    /// that failed its cycle-conservation check or overflowed its ring.
     Runtime(String),
 
     /// CLI usage error.

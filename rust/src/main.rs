@@ -12,15 +12,19 @@
 //! kom-accel serve   [--requests 64] [--workers 2]           coordinator demo
 //! kom-accel cluster [--batch 16] [--shards 4]               sharded multi-SoC run
 //! kom-accel lint    [--net tiny] [--batch 8]                static plan verifier
+//! kom-accel trace   [--net tiny] [--batch 8] [--shards 2]   Perfetto trace export
 //! ```
 
-use kom_accel::accel::{verify, Driver, LayerDesc, Severity, SocConfig};
+use kom_accel::accel::{
+    verify, Driver, LayerCycles, LayerDesc, RunTrace, Severity, ShardedMetrics, SocConfig,
+    SpanKind, DEFAULT_RING_CAPACITY,
+};
 use kom_accel::bits::BitVec;
 use kom_accel::cli::Args;
 use kom_accel::cluster::{Cluster, ClusterConfig, SchedulePolicy, Scheduler};
 use kom_accel::cnn::networks::{Network, NetworkInstance, NetworkKind};
 use kom_accel::cnn::{analysis, Tensor};
-use kom_accel::coordinator::{Coordinator, CoordinatorConfig};
+use kom_accel::coordinator::{Coordinator, CoordinatorConfig, StatsCollector};
 use kom_accel::multipliers::{generate, MultKind, MultiplierSpec};
 use kom_accel::report::Table;
 use kom_accel::runtime::{golden, ArtifactStore};
@@ -40,10 +44,12 @@ COMMANDS
   analyze  [--net alexnet]           network analysis (paper Sec V)
   golden   [--artifacts artifacts]   XLA vs systolic vs reference
   serve    [--requests 64] [--workers 2] [--batch 8] [--shards 1] [--no-pipeline]
-           [--no-fuse] [--no-dedup] [--no-config-cache]
+           [--no-fuse] [--no-dedup] [--no-config-cache] [--metrics-interval N]
   cluster  [--batch 16] [--shards 4] [--policy rr|least-outstanding] [--net tiny]
            [--no-pipeline] [--no-fuse] [--no-config-cache]
   lint     [--net tiny] [--batch 8] [--shards 1] [--no-fuse] [--deny-warnings]
+  trace    [--net tiny] [--batch 8] [--shards 2] [--out trace.json]
+           [--no-pipeline] [--no-fuse] [--no-config-cache]
 
 Pipelining: replica SoCs overlap layer DMA with engine compute by default
 (double-buffered scratchpad staging); --no-pipeline restores the serial
@@ -61,6 +67,13 @@ then run the static plan verifier over it (region aliasing, dataflow
 chaining, fusion-binding soundness, encoding round-trip, cycle-model
 sanity) without executing a single layer. Exit 1 on any KOM-Exxx error,
 or on KOM-Wxxx warnings under --deny-warnings.
+Trace: run one cold + one warm sharded batch with the execution tracer
+armed, check the conservation identities (per-layer span sums must equal
+every shard's RunMetrics components exactly), and write a Perfetto /
+chrome://tracing JSON — one track per shard, nested layer spans. serve's
+--metrics-interval N prints the Prometheus-style metrics page every N
+completed responses (0 = off); serve and cluster both end with a
+per-layer cycle-hotspots table from the aggregated trace.
 ";
 
 fn mult_spec(name: &str) -> kom_accel::Result<(String, MultiplierSpec)> {
@@ -219,6 +232,7 @@ fn cmd_serve(args: &Args) -> kom_accel::Result<()> {
     let fuse = !args.has("no-fuse");
     let dedup = !args.has("no-dedup");
     let config_cache = !args.has("no-config-cache");
+    let metrics_interval: usize = args.get_num("metrics-interval", 0usize)?;
     let inst = NetworkInstance::random(Network::build(NetworkKind::Tiny), 42)?;
     let cfg = CoordinatorConfig {
         workers,
@@ -227,6 +241,9 @@ fn cmd_serve(args: &Args) -> kom_accel::Result<()> {
         fuse,
         dedup,
         config_cache,
+        // the demo always traces so it can close with the per-layer
+        // hotspots table (serving defaults keep tracing off)
+        trace: true,
         batch: kom_accel::coordinator::BatchPolicy {
             max_batch,
             ..Default::default()
@@ -238,8 +255,12 @@ fn cmd_serve(args: &Args) -> kom_accel::Result<()> {
     let rxs: Vec<_> = (0..requests)
         .map(|i| coord.submit(Tensor::random(vec![1, 16, 16], 127, i as u64 + 1)).unwrap())
         .collect();
-    for (_, rx) in rxs {
+    for (i, (_, rx)) in rxs.into_iter().enumerate() {
         rx.recv().map_err(|_| kom_accel::Error::Coordinator("lost response".into()))?;
+        if metrics_interval > 0 && (i + 1) % metrics_interval == 0 {
+            println!("--- metrics after {} responses ---", i + 1);
+            print!("{}", coord.metrics_text());
+        }
     }
     let stats = coord.shutdown();
     let l = stats.latency();
@@ -289,6 +310,149 @@ fn cmd_serve(args: &Args) -> kom_accel::Result<()> {
         println!("  per-shard utilization: [{}]", util.join(", "));
         println!("  amortized cycles/req: {:.0}", stats.amortized_cycles_per_request());
     }
+    let hot = stats.hotspots(5);
+    if !hot.is_empty() {
+        println!("  per-layer cycle hotspots (top {}):", hot.len());
+        println!("{}", hotspot_table(&hot));
+    }
+    Ok(())
+}
+
+/// Render the per-layer "cycle hotspots" table: where the timeline cycles
+/// went (compute vs reconfiguration vs DMA), what pipelining hid and what
+/// fusion skipped outright, ranked by timeline share.
+fn hotspot_table(rows: &[(usize, LayerCycles)]) -> String {
+    let mut t = Table::new(&[
+        "layer",
+        "compute",
+        "reconf",
+        "dma-in",
+        "dma-out",
+        "weights",
+        "hidden",
+        "fused-skip",
+        "busy",
+    ]);
+    for (layer, r) in rows {
+        t.row(vec![
+            layer.to_string(),
+            r.compute.to_string(),
+            r.reconfig.to_string(),
+            r.dma_in.to_string(),
+            r.dma_out.to_string(),
+            r.weight_load.to_string(),
+            r.overlapped.to_string(),
+            r.fused_saved.to_string(),
+            r.busy().to_string(),
+        ]);
+    }
+    t.to_ascii()
+}
+
+/// Check the trace against every shard's metrics: the conservation
+/// identities must hold exactly — the trace is the cycle model's ledger,
+/// not a parallel estimate (see `accel::trace`).
+fn check_trace_conservation(trace: &RunTrace, m: &ShardedMetrics) -> kom_accel::Result<()> {
+    if trace.dropped > 0 {
+        return Err(kom_accel::Error::Runtime(format!(
+            "trace ring overflowed: {} span(s) dropped — raise the ring capacity",
+            trace.dropped
+        )));
+    }
+    for run in &m.shards {
+        let shard = run.shard as u32;
+        let sum = |k: SpanKind| -> u64 {
+            trace
+                .events
+                .iter()
+                .filter(|e| e.shard == shard && e.kind == k)
+                .map(|e| e.cycles)
+                .sum()
+        };
+        let compute = sum(SpanKind::Compute) + sum(SpanKind::Reconfig);
+        let mem = sum(SpanKind::DmaIn) + sum(SpanKind::WeightLoad) + sum(SpanKind::DmaOut);
+        // the driver clamps each run's overlap credit to the smaller of
+        // the windows it can hide under (a drain window may span runs)
+        let overlapped = sum(SpanKind::OverlapCredit).min(compute).min(mem);
+        let fused = sum(SpanKind::FusionSkip);
+        let mm = &run.metrics;
+        if compute != mm.compute_cycles
+            || mem != mm.mem_cycles
+            || overlapped != mm.overlapped_cycles
+            || fused != mm.fused_saved_cycles
+        {
+            return Err(kom_accel::Error::Runtime(format!(
+                "shard {shard}: trace does not conserve metrics (compute {compute} vs {}, \
+                 mem {mem} vs {}, overlapped {overlapped} vs {}, fused {fused} vs {})",
+                mm.compute_cycles, mm.mem_cycles, mm.overlapped_cycles, mm.fused_saved_cycles
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Trace one cold + one warm sharded run with the execution tracer armed,
+/// verify the conservation identities against each dispatch's metrics,
+/// and export both runs as one Perfetto / chrome://tracing JSON file.
+fn cmd_trace(args: &Args) -> kom_accel::Result<()> {
+    let batch: usize = args.get_num("batch", 8usize)?;
+    let shards: usize = args.get_num("shards", 2usize)?;
+    let out = args.get_or("out", "trace.json");
+    let pipeline = !args.has("no-pipeline");
+    let fuse = !args.has("no-fuse");
+    let config_cache = !args.has("no-config-cache");
+    let kind = NetworkKind::parse(&args.get_or("net", "tiny"))?;
+    let inst = NetworkInstance::random(Network::build(kind), 42)?;
+    let inputs: Vec<Tensor> = (0..batch)
+        .map(|i| Tensor::random(inst.net.input.dims(), 127, i as u64 + 1))
+        .collect();
+
+    let mut cluster = Cluster::new(ClusterConfig {
+        replicas: shards,
+        soc: SocConfig::serving(),
+    })?;
+    cluster.set_pipeline(pipeline)?;
+    cluster.set_fusion(fuse);
+    cluster.set_config_cache(config_cache);
+    cluster.set_tracing(DEFAULT_RING_CAPACITY);
+    let per_shard_cap = batch.div_ceil(shards);
+    let cdep = inst.deploy_cluster(&mut cluster, per_shard_cap)?;
+    let mut sched = Scheduler::new(SchedulePolicy::LeastOutstandingCycles, shards)?;
+    let slices: Vec<&[i64]> = inputs.iter().map(|t| t.data.as_slice()).collect();
+
+    // cold dispatch (plan compiles + engine configuration), then warm —
+    // each verified against its own dispatch's metrics before the two
+    // are laid out sequentially on the exported timeline
+    let (_, cold_m) = cdep.run_sharded(&mut cluster, &mut sched, &slices)?;
+    let mut trace = cluster.take_stitched_trace(&cold_m);
+    check_trace_conservation(&trace, &cold_m)?;
+    let (_, warm_m) = cdep.run_sharded(&mut cluster, &mut sched, &slices)?;
+    let warm = cluster.take_stitched_trace(&warm_m);
+    check_trace_conservation(&warm, &warm_m)?;
+    trace.absorb(warm);
+
+    std::fs::write(&out, trace.to_chrome_trace())?;
+    println!(
+        "{}: traced cold + warm batch of {batch} over {shards} shard(s) \
+         (pipelining {}, fusion {}, config cache {})",
+        inst.net.name,
+        if pipeline { "on" } else { "off" },
+        if fuse { "on" } else { "off" },
+        if config_cache { "on" } else { "off" }
+    );
+    println!(
+        "conservation OK: span sums equal RunMetrics components on every shard of both runs"
+    );
+    let mut sc = StatsCollector::new();
+    sc.record_trace(&trace);
+    println!("per-layer cycle hotspots (top {}):", sc.hotspots(5).len());
+    println!("{}", hotspot_table(&sc.hotspots(5)));
+    println!(
+        "wrote {out} ({} spans, {} plan compiles marked) — load in ui.perfetto.dev \
+         or chrome://tracing",
+        trace.events.len(),
+        trace.kind_count(SpanKind::PlanCompile)
+    );
     Ok(())
 }
 
@@ -314,6 +478,7 @@ fn cmd_cluster(args: &Args) -> kom_accel::Result<()> {
     cluster.set_pipeline(pipeline)?;
     cluster.set_fusion(fuse);
     cluster.set_config_cache(config_cache);
+    cluster.set_tracing(DEFAULT_RING_CAPACITY);
     let per_shard_cap = batch.div_ceil(shards);
     let cdep = inst.deploy_cluster(&mut cluster, per_shard_cap)?;
     let mut sched = Scheduler::new(policy, shards)?;
@@ -321,7 +486,10 @@ fn cmd_cluster(args: &Args) -> kom_accel::Result<()> {
     // cold dispatch compiles the plans and loads the engine contexts; the
     // warm dispatch is the steady serving state the table below reports
     let (_, cold_m) = cdep.run_sharded(&mut cluster, &mut sched, &slices)?;
+    // drain the cold spans so the hotspots table shows the warm state
+    let _ = cluster.take_stitched_trace(&cold_m);
     let (outs, m) = cdep.run_sharded(&mut cluster, &mut sched, &slices)?;
+    let warm_trace = cluster.take_stitched_trace(&m);
 
     // per-request correctness against the host reference
     for (i, t) in inputs.iter().enumerate() {
@@ -396,6 +564,13 @@ fn cmd_cluster(args: &Args) -> kom_accel::Result<()> {
     println!("cluster cycles (max over shards): {}", m.total_cycles());
     println!("serial sum over shards:           {}", m.serial_cycles());
     println!("parallel speedup:                 {:.2}x", m.parallel_speedup());
+    let mut sc = StatsCollector::new();
+    sc.record_trace(&warm_trace);
+    let hot = sc.hotspots(5);
+    if !hot.is_empty() {
+        println!("warm-run per-layer cycle hotspots (top {}):", hot.len());
+        println!("{}", hotspot_table(&hot));
+    }
 
     // single-SoC baseline: the same batch through one replica, equally
     // warmed (one cold dispatch first) so the speedup is like for like
@@ -493,6 +668,7 @@ fn main() {
         Some("serve") => cmd_serve(&args),
         Some("cluster") => cmd_cluster(&args),
         Some("lint") => cmd_lint(&args),
+        Some("trace") => cmd_trace(&args),
         Some("help") | None => {
             println!("{USAGE}");
             Ok(())

@@ -10,6 +10,13 @@
 //!   the serial pipeline *fill* (the first tile, which must land before
 //!   the engine can start) and the remainder, which the pipelined SoC
 //!   model may overlap with engine compute.
+//!
+//! [`Dma::cycles`] is the single memory-cycle ledger the execution tracer
+//! reads: the SoC brackets every staging call with a before/after delta
+//! of this counter to attribute each transfer to a typed trace span
+//! (see [`crate::accel::trace`]), so traced DMA spans sum exactly to the
+//! charged memory cycles on every path — cache hit, resident skip, or
+//! serial fallback.
 
 use super::{Dram, Scratchpad};
 use crate::error::Result;

@@ -134,7 +134,9 @@ impl Engine {
     /// Load a configuration (validates; charges reconfiguration cycles
     /// unless the context cache holds an identical configuration, in which
     /// case the switch is free and `reconfigs_skipped` bumps instead).
-    pub fn reconfigure(&mut self, config: EngineConfig) -> Result<()> {
+    /// Returns the cycles charged — 0 on a context hit — so callers (the
+    /// SoC's trace layer) can attribute reconfiguration time per layer.
+    pub fn reconfigure(&mut self, config: EngineConfig) -> Result<u64> {
         config.validate()?;
         if self.ctx_enabled {
             let fp = config.fingerprint();
@@ -145,7 +147,7 @@ impl Engine {
                 self.ctx_lru.push(entry);
                 self.stats.reconfigs_skipped += 1;
                 self.config = Some(config);
-                return Ok(());
+                return Ok(0);
             }
             let words = config.config_words();
             if words <= self.ctx_capacity {
@@ -157,10 +159,11 @@ impl Engine {
                 self.ctx_words += words;
             }
         }
-        self.stats.config_cycles += config.config_words();
+        let charged = config.config_words();
+        self.stats.config_cycles += charged;
         self.stats.reconfigs += 1;
         self.config = Some(config);
-        Ok(())
+        Ok(charged)
     }
 
     /// Current configuration, if loaded.

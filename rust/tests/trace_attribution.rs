@@ -1,0 +1,196 @@
+//! Trace-attribution acceptance tests: the execution trace is the cycle
+//! model's **ledger**, not a parallel estimate. For every traced run the
+//! per-kind span sums must reproduce the corresponding [`RunMetrics`]
+//! components exactly —
+//!
+//!   Σ Compute + Σ Reconfig                  == compute_cycles
+//!   Σ DmaIn + Σ WeightLoad + Σ DmaOut       == mem_cycles
+//!   min(Σ OverlapCredit, compute, mem)      == overlapped_cycles
+//!   Σ FusionSkip                            == fused_saved_cycles
+//!
+//! — on every Tiny prefix table, and on AlexNet-mini / VGG-mini across
+//! batch {1, 8} × pipeline on/off × fusion on/off × shards {1, 4}, cold
+//! and warm. A disabled tracer (the default) must emit nothing while
+//! producing bit-identical metrics.
+
+use kom_accel::accel::{Driver, RunMetrics, RunTrace, SocConfig, SpanKind, DEFAULT_RING_CAPACITY};
+use kom_accel::cluster::{Cluster, ClusterConfig, SchedulePolicy, Scheduler};
+use kom_accel::cnn::networks::{Network, NetworkInstance, NetworkKind};
+use kom_accel::cnn::Tensor;
+
+fn soc() -> SocConfig {
+    SocConfig::serving()
+}
+
+fn instance(kind: NetworkKind) -> NetworkInstance {
+    NetworkInstance::random(Network::build(kind), 42).unwrap()
+}
+
+fn inputs_for(inst: &NetworkInstance, n: usize, seed: u64) -> Vec<Tensor> {
+    (0..n)
+        .map(|i| Tensor::random(inst.net.input.dims(), 127, seed + i as u64))
+        .collect()
+}
+
+fn pack(inputs: &[Tensor]) -> Vec<i64> {
+    let mut packed = Vec::new();
+    for t in inputs {
+        packed.extend_from_slice(&t.data);
+    }
+    packed
+}
+
+/// Assert the four conservation identities for `shard`'s spans in
+/// `trace` against that run's metrics. The overlap credit is clamped to
+/// the smaller of the compute/memory windows before comparing, exactly
+/// as the driver clamps each run's hidden cycles (a pipeline drain
+/// window can span runs, so the raw credit may exceed what one run
+/// could hide).
+fn assert_conserves(trace: &RunTrace, shard: u32, m: &RunMetrics, ctx: &str) {
+    assert_eq!(trace.dropped, 0, "{ctx}: trace ring overflowed");
+    let sum = |k: SpanKind| -> u64 {
+        trace
+            .events
+            .iter()
+            .filter(|e| e.shard == shard && e.kind == k)
+            .map(|e| e.cycles)
+            .sum()
+    };
+    let compute = sum(SpanKind::Compute) + sum(SpanKind::Reconfig);
+    let mem = sum(SpanKind::DmaIn) + sum(SpanKind::WeightLoad) + sum(SpanKind::DmaOut);
+    let overlapped = sum(SpanKind::OverlapCredit).min(compute).min(mem);
+    let fused = sum(SpanKind::FusionSkip);
+    assert_eq!(compute, m.compute_cycles, "{ctx}: compute + reconfig spans");
+    assert_eq!(mem, m.mem_cycles, "{ctx}: dma-in + weight-load + dma-out spans");
+    assert_eq!(overlapped, m.overlapped_cycles, "{ctx}: clamped overlap credit");
+    assert_eq!(fused, m.fused_saved_cycles, "{ctx}: fusion-skip credit");
+}
+
+#[test]
+fn every_tiny_prefix_table_conserves_metrics() {
+    // each prefix of the Tiny descriptor table is a distinct layer
+    // table (its own plan, its own DMA/compute shape); the ledger must
+    // balance on all of them, serial and pipelined+fused alike
+    let inst = instance(NetworkKind::Tiny);
+    let batch = 4usize;
+    for (pipeline, fusion) in [(false, false), (true, true)] {
+        let mut drv = Driver::new(soc());
+        drv.set_pipeline(pipeline).unwrap();
+        drv.set_fusion(fusion);
+        drv.set_tracing(DEFAULT_RING_CAPACITY);
+        let dep = inst.deploy_batched(&mut drv, batch).unwrap();
+        let inputs = inputs_for(&inst, batch, 500);
+        drv.write_region(dep.in_addr, &pack(&inputs)).unwrap();
+        for k in 1..=dep.descs.len() {
+            let ctx = format!("tiny prefix {k}, pipeline={pipeline}, fusion={fusion}");
+            let m = drv.run_table_batch(&dep.descs[..k], batch as u32).unwrap();
+            let trace = drv.take_trace().expect("tracer armed");
+            assert!(!trace.events.is_empty(), "{ctx}: no spans emitted");
+            assert_conserves(&trace, 0, &m, &ctx);
+            // every executed layer appears in the attribution table
+            assert_eq!(trace.layer_totals().len() as u64, m.layers, "{ctx}: layer coverage");
+        }
+    }
+}
+
+/// One cold + one warm sharded dispatch of `inst` under the given
+/// toggles, each verified per shard against its own run's metrics.
+fn check_sharded_case(
+    inst: &NetworkInstance,
+    batch: usize,
+    pipeline: bool,
+    fusion: bool,
+    shards: usize,
+) {
+    let ctx = format!(
+        "{} batch={batch} pipeline={pipeline} fusion={fusion} shards={shards}",
+        inst.net.name
+    );
+    let mut cluster = Cluster::new(ClusterConfig {
+        replicas: shards,
+        soc: soc(),
+    })
+    .unwrap();
+    cluster.set_pipeline(pipeline).unwrap();
+    cluster.set_fusion(fusion);
+    cluster.set_tracing(DEFAULT_RING_CAPACITY);
+    let per_shard = batch.div_ceil(shards);
+    let cdep = inst.deploy_cluster(&mut cluster, per_shard).unwrap();
+    let mut sched = Scheduler::new(SchedulePolicy::LeastOutstandingCycles, shards).unwrap();
+    let inputs = inputs_for(inst, batch, 9000);
+    let slices: Vec<&[i64]> = inputs.iter().map(|t| t.data.as_slice()).collect();
+    for pass in ["cold", "warm"] {
+        let (_, m) = cdep.run_sharded(&mut cluster, &mut sched, &slices).unwrap();
+        let trace = cluster.take_stitched_trace(&m);
+        assert!(!trace.events.is_empty(), "{ctx} {pass}: no spans emitted");
+        for run in &m.shards {
+            assert_conserves(
+                &trace,
+                run.shard as u32,
+                &run.metrics,
+                &format!("{ctx} {pass} shard {}", run.shard),
+            );
+        }
+    }
+}
+
+#[test]
+fn alexnet_mini_conserves_across_batch_pipeline_fusion_shards() {
+    let inst = instance(NetworkKind::AlexNetMini);
+    for batch in [1usize, 8] {
+        for pipeline in [false, true] {
+            for fusion in [false, true] {
+                for shards in [1usize, 4] {
+                    check_sharded_case(&inst, batch, pipeline, fusion, shards);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn vgg_mini_conserves_across_batch_pipeline_fusion_shards() {
+    let inst = instance(NetworkKind::VggMini);
+    for batch in [1usize, 8] {
+        for pipeline in [false, true] {
+            for fusion in [false, true] {
+                for shards in [1usize, 4] {
+                    check_sharded_case(&inst, batch, pipeline, fusion, shards);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn disabled_tracer_emits_nothing_and_metrics_are_bit_identical() {
+    let inst = instance(NetworkKind::Tiny);
+    let batch = 8usize;
+    let inputs = inputs_for(&inst, batch, 700);
+
+    // identical cold+warm pipelined/fused runs on two fresh drivers,
+    // one traced and one not; `RunMetrics` has no float fields, so the
+    // Debug fingerprint is an exact bit-level comparison
+    let run_pair = |trace_on: bool| -> (String, usize) {
+        let mut drv = Driver::new(soc());
+        drv.set_pipeline(true).unwrap();
+        drv.set_fusion(true);
+        if trace_on {
+            drv.set_tracing(DEFAULT_RING_CAPACITY);
+        } else {
+            assert!(!drv.tracing_enabled(), "tracing must be off by default");
+        }
+        let dep = inst.deploy_batched(&mut drv, batch).unwrap();
+        drv.write_region(dep.in_addr, &pack(&inputs)).unwrap();
+        let cold = dep.run(&mut drv, batch as u32).unwrap();
+        let warm = dep.run(&mut drv, batch as u32).unwrap();
+        let spans = drv.take_trace().map_or(0, |t| t.events.len());
+        (format!("{cold:?} | {warm:?}"), spans)
+    };
+
+    let (metrics_off, spans_off) = run_pair(false);
+    let (metrics_on, spans_on) = run_pair(true);
+    assert_eq!(spans_off, 0, "disabled tracer must emit nothing");
+    assert!(spans_on > 0, "armed tracer must record the run");
+    assert_eq!(metrics_off, metrics_on, "tracing must never perturb the simulated cycle model");
+}
