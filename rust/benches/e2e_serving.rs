@@ -464,6 +464,117 @@ fn main() {
         Err(e) => println!("(could not write BENCH_trace_overhead.json: {e})"),
     }
 
+    // ---- unified cache hierarchy: per-cache hit rates under serving ----
+    // One warm composed scenario through the coordinator (fused +
+    // pipelined + config cache + dedup, 2 replicas): distinct inputs to
+    // warm every cache, then exact repeats to exercise the front door.
+    // The per-replica weight/context/plan rows and the shared dedup row
+    // are the same snapshots `Coordinator::metrics_text` scrapes as
+    // kom_cache_*. Gates: warm dedup, plan and context caches all hit,
+    // and Tiny's working set never pressures the weight cache (0
+    // evictions). Emitted as BENCH_cache_stats.json.
+    println!("===== unified cache hierarchy (warm serving, 2 shards, batch 8) =====");
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            shards: 2,
+            batch: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_micros(500),
+            },
+            ..Default::default()
+        },
+        &inst,
+    )
+    .unwrap();
+    // two rounds of the same 32 inputs: round one warms every cache and
+    // completes before round two begins, so every second-round submit is
+    // a guaranteed front-door dedup hit
+    for _ in 0..2 {
+        let rxs: Vec<_> = inputs
+            .iter()
+            .take(32)
+            .map(|img| coord.submit(img.clone()).unwrap())
+            .collect();
+        for (_, rx) in rxs {
+            rx.recv().unwrap();
+        }
+    }
+    let cache_stats = coord.shutdown();
+    let dedup_row = cache_stats
+        .dedup_cache_stats()
+        .expect("dedup enabled by default");
+    let hit_rate = |h: u64, m: u64| h as f64 / (h + m).max(1) as f64;
+    let mut t = Table::new(&[
+        "cache",
+        "worker",
+        "replica",
+        "hits",
+        "misses",
+        "evictions",
+        "resident words",
+        "hit rate",
+    ]);
+    let mut json_rows = Vec::new();
+    let mut row = |name: &str, w: String, r: String, s: kom_accel::cache::CacheStats| {
+        t.row(vec![
+            name.into(),
+            w.clone(),
+            r.clone(),
+            s.hits.to_string(),
+            s.misses.to_string(),
+            s.evictions.to_string(),
+            s.resident_cost.to_string(),
+            format!("{:.0}%", hit_rate(s.hits, s.misses) * 100.0),
+        ]);
+        json_rows.push(format!(
+            "    {{\"cache\": \"{name}\", \"worker\": \"{w}\", \"replica\": \"{r}\", \
+             \"hits\": {}, \"misses\": {}, \"evictions\": {}, \"resident_words\": {}, \
+             \"hit_rate\": {:.4}}}",
+            s.hits,
+            s.misses,
+            s.evictions,
+            s.resident_cost,
+            hit_rate(s.hits, s.misses)
+        ));
+    };
+    let mut weight_evictions = 0u64;
+    let mut plan_hits = 0u64;
+    let mut ctx_hits = 0u64;
+    for &(w, r, d) in cache_stats.cache_rows() {
+        row("weight", w.to_string(), r.to_string(), d.weight);
+        row("context", w.to_string(), r.to_string(), d.context);
+        row("plan", w.to_string(), r.to_string(), d.plan);
+        weight_evictions += d.weight.evictions;
+        plan_hits += d.plan.hits;
+        ctx_hits += d.context.hits;
+    }
+    row("dedup", "-".into(), "-".into(), dedup_row);
+    drop(row);
+    println!("{}", t.to_ascii());
+    // the gates CI relies on: warm serving must hit every cache tier,
+    // and Tiny must never evict resident weights
+    assert!(dedup_row.hits > 0, "exact repeats must hit the front door");
+    assert!(plan_hits > 0, "warm batches must execute cached plans");
+    assert!(ctx_hits > 0, "warm runs must hit resident engine contexts");
+    assert_eq!(
+        weight_evictions, 0,
+        "Tiny's weights fit the scratchpad budget: no evictions expected"
+    );
+    println!(
+        "gates: dedup hits {} / plan hits {plan_hits} / context hits {ctx_hits} / \
+         weight evictions {weight_evictions} — OK",
+        dedup_row.hits
+    );
+    let json = format!(
+        "{{\n  \"bench\": \"cache_stats\",\n  \"network\": \"tiny\",\n  \"rows\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    match std::fs::write("BENCH_cache_stats.json", &json) {
+        Ok(()) => println!("wrote BENCH_cache_stats.json (per-cache serving hit rates)"),
+        Err(e) => println!("(could not write BENCH_cache_stats.json: {e})"),
+    }
+
     // XLA-artifact execution path (the L1/L2 kernels through PJRT)
     match ArtifactStore::open(Path::new("artifacts")) {
         Ok(store) => match Runtime::cpu() {

@@ -13,6 +13,7 @@ use super::plan::{encode_raw, encode_table_image, CompiledPlan, PlanCache, PlanK
 use super::soc::{map, Soc, SocConfig};
 use super::trace::{RunTrace, SpanKind, TraceRing};
 use super::verify::{self, codes, Diagnostic, Severity};
+use crate::cache::CacheStats;
 use crate::cluster::ShardPlan;
 use crate::error::{Error, Result};
 use crate::riscv::asm::{reg, Assembler};
@@ -53,6 +54,12 @@ pub struct RunMetrics {
     /// configuration was already resident on-chip, so the switch charged
     /// 0 cycles. On a warm run of an unchanged table this equals `layers`.
     pub reconfigs_skipped: u64,
+    /// Contexts the engine's configuration-context store evicted under
+    /// capacity pressure during this run (0 with the cache off). Nonzero
+    /// values mean the table's configurations do not all fit on-chip —
+    /// the run is re-paying reconfigurations a bigger context store would
+    /// skip. Previously these evictions were silent.
+    pub ctx_evictions: u64,
     /// Did this run execute a cached [`CompiledPlan`] (plan-cache hit)
     /// rather than compiling one?
     pub plan_hit: bool,
@@ -180,6 +187,12 @@ impl ShardedMetrics {
         self.shards.iter().map(|s| s.metrics.reconfigs_skipped).sum()
     }
 
+    /// Configuration-context evictions across all shards (0 when every
+    /// replica's context store held its whole table).
+    pub fn ctx_evictions(&self) -> u64 {
+        self.shards.iter().map(|s| s.metrics.ctx_evictions).sum()
+    }
+
     /// Shards of this dispatch that executed a cached plan.
     pub fn plan_hits(&self) -> u64 {
         self.shards.iter().filter(|s| s.metrics.plan_hit).count() as u64
@@ -200,6 +213,20 @@ impl ShardedMetrics {
             self.serial_cycles() as f64 / max as f64
         }
     }
+}
+
+/// Counter snapshots of the three caches one driver/SoC pair owns, all
+/// sharing the [`CacheStats`] shape (see [`crate::cache`]). The fourth
+/// cache of the serving stack — the coordinator's front-door dedup —
+/// lives above the drivers and reports its own snapshot.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DriverCacheStats {
+    /// Weight-stationary cache (cost: resident scratchpad words).
+    pub weight: CacheStats,
+    /// Engine configuration-context store (cost: config words).
+    pub context: CacheStats,
+    /// Compiled-plan cache (cost: entry count).
+    pub plan: CacheStats,
 }
 
 /// Host driver over an accelerator instance.
@@ -271,6 +298,12 @@ impl Driver {
         self.arena_epoch += 1;
         self.plans.clear();
         self.soc.invalidate_all_weights();
+        // the context store keys on configuration-content fingerprints,
+        // which hash coefficient data: a reused address with different
+        // weights can never produce a stale skip. Clearing it anyway
+        // keeps the arena reset a single coherent epoch bump across
+        // every address-adjacent cache the driver owns.
+        self.soc.engine.clear_context();
     }
 
     /// Set the SoC's `PIPELINE` MMIO register: `true` overlaps layer DMA
@@ -363,6 +396,17 @@ impl Driver {
     /// Resident compiled plans.
     pub fn plan_cache_len(&self) -> usize {
         self.plans.len()
+    }
+
+    /// Counter snapshots of every cache this driver owns — the
+    /// per-replica rows behind the coordinator's `kom_cache_*` metrics
+    /// and the cluster rollup a future autotuner reads.
+    pub fn cache_stats(&self) -> DriverCacheStats {
+        DriverCacheStats {
+            weight: self.soc.weight_cache_stats(),
+            context: self.soc.engine.context_stats(),
+            plan: self.plans.cache_stats(),
+        }
     }
 
     /// Allocate + preload data (host-side, zero cycle cost — model load).
@@ -783,6 +827,7 @@ impl Driver {
         let lr0 = self.soc.layers_run;
         let rc0 = self.soc.engine.stats.reconfigs;
         let rs0 = self.soc.engine.stats.reconfigs_skipped;
+        let ce0 = self.soc.engine.context_stats().evictions;
         if let Some(t) = self.soc.tracer.as_mut() {
             t.begin_run(lr0);
         }
@@ -806,6 +851,7 @@ impl Driver {
             fused_saved_cycles: self.soc.fused_saved_cycles - fs0,
             reconfigs: self.soc.engine.stats.reconfigs - rc0,
             reconfigs_skipped: self.soc.engine.stats.reconfigs_skipped - rs0,
+            ctx_evictions: self.soc.engine.context_stats().evictions - ce0,
             plan_hit: false,
             verify_warnings: plan.warnings,
             layers: self.soc.layers_run - lr0,

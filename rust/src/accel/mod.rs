@@ -35,7 +35,7 @@ pub mod trace;
 pub mod verify;
 
 pub use desc::{FusionCtl, LayerDesc};
-pub use driver::{Driver, RunMetrics, ShardRun, ShardedMetrics};
+pub use driver::{Driver, DriverCacheStats, RunMetrics, ShardRun, ShardedMetrics};
 pub use fusion::{FuseMode, FusedEdge, FusionGroup, FusionPlan};
 pub use plan::{CompiledPlan, PlanCache, PlanKey};
 pub use soc::{Soc, SocConfig};

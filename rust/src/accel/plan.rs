@@ -37,6 +37,7 @@
 
 use super::desc::{LayerDesc, DESC_WORDS};
 use super::fusion::{FusionGroup, FusionPlan};
+use crate::cache::{BoundedLru, CacheStats};
 use crate::systolic::config::Fnv;
 
 /// FNV-1a 64-bit over a `u32` word stream (descriptor images) — same
@@ -170,14 +171,22 @@ impl CompiledPlan {
     }
 }
 
-/// Bounded LRU cache of compiled plans (per driver). Replaces the old
-/// unbounded `program_cache`: capped at [`PlanCache::CAPACITY`] entries,
-/// cleared by `reset_arena`, per-plan invalidated by host weight rewrites.
-#[derive(Default)]
+/// Bounded LRU cache of compiled plans (per driver): a [`BoundedLru`]
+/// with a unit cost model (every plan counts 1 against
+/// [`PlanCache::CAPACITY`]). Replaces the old unbounded `program_cache`:
+/// cleared by `reset_arena`, per-plan invalidated by host weight
+/// rewrites.
+#[derive(Debug)]
 pub struct PlanCache {
-    entries: Vec<(PlanKey, std::sync::Arc<CompiledPlan>)>,
-    hits: u64,
-    compiles: u64,
+    lru: BoundedLru<PlanKey, std::sync::Arc<CompiledPlan>>,
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        PlanCache {
+            lru: BoundedLru::new(Self::CAPACITY, |_, _| 1),
+        }
+    }
 }
 
 impl PlanCache {
@@ -189,64 +198,61 @@ impl PlanCache {
 
     /// Look up a plan, refreshing its LRU position and counting the hit.
     pub fn get(&mut self, key: &PlanKey) -> Option<std::sync::Arc<CompiledPlan>> {
-        let pos = self.entries.iter().position(|(k, _)| k == key)?;
-        let entry = self.entries.remove(pos);
-        let plan = entry.1.clone();
-        self.entries.push(entry);
-        self.hits += 1;
-        Some(plan)
+        self.lru.get(key).cloned()
     }
 
     /// Insert a freshly compiled plan, counting the compile and evicting
     /// the LRU entry beyond capacity.
     pub fn insert(&mut self, plan: std::sync::Arc<CompiledPlan>) {
-        self.compiles += 1;
-        self.seed(plan);
+        self.lru.insert(plan.key, plan);
     }
 
     /// Insert without counting a compile — used when a cluster seeds a
     /// replica's cache with a plan another replica compiled.
     pub fn seed(&mut self, plan: std::sync::Arc<CompiledPlan>) {
-        self.entries.retain(|(k, _)| *k != plan.key);
-        if self.entries.len() >= Self::CAPACITY {
-            self.entries.remove(0);
-        }
-        self.entries.push((plan.key, plan));
+        self.lru.seed(plan.key, plan);
     }
 
     /// Drop every plan (arena reset: all DRAM bindings are invalid).
     pub fn clear(&mut self) {
-        self.entries.clear();
+        self.lru.clear();
     }
 
     /// Drop plans whose weight bindings overlap a rewritten host region.
     pub fn invalidate_region(&mut self, addr: u32, len: usize) {
-        self.entries.retain(|(_, p)| !p.binds_region(addr, len));
+        self.lru.retain(|_, p| !p.binds_region(addr, len));
     }
 
     /// Resident plan count.
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.lru.len()
     }
 
     /// True when no plan is cached.
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.lru.is_empty()
     }
 
     /// `(cache hits, compiles)` since construction.
     pub fn stats(&self) -> (u64, u64) {
-        (self.hits, self.compiles)
+        let s = self.lru.stats();
+        (s.hits, s.insertions)
+    }
+
+    /// Full counter snapshot of the underlying [`BoundedLru`].
+    pub fn cache_stats(&self) -> CacheStats {
+        self.lru.stats()
     }
 
     /// Fraction of plan requests served from cache: `hits / (hits +
     /// compiles)`. 0.0 before the first request.
     pub fn hit_rate(&self) -> f64 {
-        let total = self.hits + self.compiles;
+        let (hits, compiles) = self.stats();
+        let total = hits + compiles;
         if total == 0 {
             0.0
         } else {
-            self.hits as f64 / total as f64
+            hits as f64 / total as f64
         }
     }
 }

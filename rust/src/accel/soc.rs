@@ -93,11 +93,12 @@
 use super::desc::{FusionCtl, LayerDesc, DESC_WORDS};
 use super::fusion::FusionPlan;
 use super::trace::{SpanKind, TraceRing};
+use crate::cache::{BoundedLru, CacheStats};
 use crate::error::{Error, Result};
 use crate::mem::{Dma, Dram, Scratchpad, StageCost};
 use crate::riscv::cpu::Bus;
 use crate::systolic::Engine;
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
 
 /// Memory-map constants.
 pub mod map {
@@ -270,15 +271,12 @@ pub struct Soc {
     /// the prefetch state machine can look ahead one layer.
     lookahead: Option<LayerDesc>,
     /// Weight-stationary cache: weights staged once stay resident in the
-    /// scratchpad across inferences (addr, len) → data. Bounded by the
-    /// scratchpad capacity with LRU eviction — repeats of *resident*
-    /// regions skip the DRAM burst; evicted or oversized regions re-pay
-    /// it (EXPERIMENTS.md §Perf records the cycle impact).
-    weight_cache: HashMap<(u32, u32), Vec<i64>>,
-    /// LRU order of `weight_cache` keys (front = coldest).
-    cache_lru: VecDeque<(u32, u32)>,
-    /// Words currently held by `weight_cache`.
-    cache_words: usize,
+    /// scratchpad across inferences (addr, len) → data. A word-costed
+    /// [`BoundedLru`] whose capacity tracks [`Soc::residency_budget`] —
+    /// repeats of *resident* regions skip the DRAM burst; evicted or
+    /// oversized regions re-pay it (EXPERIMENTS.md §Perf records the
+    /// cycle impact).
+    weight_cache: BoundedLru<(u32, u32), Vec<i64>>,
     /// Execution tracer: `None` (the default) costs nothing — no
     /// allocation, and every emission site is one discriminant check.
     /// When armed (see `Driver::set_tracing`), every simulated cycle the
@@ -291,10 +289,12 @@ pub struct Soc {
 impl Soc {
     /// Build a SoC.
     pub fn new(cfg: SocConfig) -> Self {
+        let spad = Scratchpad::new(cfg.spad_words, cfg.spad_banks);
+        let weight_budget = cfg.spad_words.saturating_sub(2 * spad.bank_words());
         Soc {
             ctrl_ram: vec![0; cfg.ctrl_ram_words],
             dram: Dram::new(cfg.dram_words),
-            spad: Scratchpad::new(cfg.spad_words, cfg.spad_banks),
+            spad,
             dma: Dma::new(),
             engine: Engine::new(cfg.cells),
             layers_run: 0,
@@ -309,9 +309,7 @@ impl Soc {
             pending_drain: 0,
             prefetched: HashMap::new(),
             lookahead: None,
-            weight_cache: HashMap::new(),
-            cache_lru: VecDeque::new(),
-            cache_words: 0,
+            weight_cache: BoundedLru::new(weight_budget, |_, v| v.len()),
             tracer: None,
             cfg,
         }
@@ -336,9 +334,6 @@ impl Soc {
         let end = addr as u64 + len as u64;
         let live = |a: u32, l: u32| (a as u64 + l as u64) <= addr as u64 || a as u64 >= end;
         self.weight_cache.retain(|&(a, l), _| live(a, l));
-        let cache = &self.weight_cache;
-        self.cache_lru.retain(|k| cache.contains_key(k));
-        self.cache_words = self.weight_cache.values().map(|v| v.len()).sum();
         self.prefetched.retain(|&(a, l), _| live(a, l));
         self.resident.retain(|&a, r| live(a, r.len as u32));
         self.resident_words = self.resident.values().map(|r| r.footprint).sum();
@@ -351,8 +346,6 @@ impl Soc {
     /// address, mirroring the stale-weight bug the cache flush prevents.
     pub fn invalidate_all_weights(&mut self) {
         self.weight_cache.clear();
-        self.cache_lru.clear();
-        self.cache_words = 0;
         self.prefetched.clear();
         self.clear_resident();
     }
@@ -376,7 +369,15 @@ impl Soc {
     /// ≤ the residency budget: scratchpad capacity minus the two staging
     /// banks the DMA uses for ping/pong tiles).
     pub fn weight_cache_words(&self) -> usize {
-        self.cache_words
+        self.weight_cache.resident_cost()
+    }
+
+    /// Counter snapshot of the weight-stationary cache. The reported
+    /// capacity is the cache's current word budget, which tracks
+    /// [`Soc::residency_budget`] as fused residents claim and release
+    /// scratchpad words.
+    pub fn weight_cache_stats(&self) -> CacheStats {
+        self.weight_cache.stats()
     }
 
     /// Is the pipelined execution model enabled (the `PIPELINE` register)?
@@ -393,9 +394,7 @@ impl Soc {
     fn stage_weights(&mut self, dram_addr: u32, len: u32) -> Result<(Vec<i64>, u64)> {
         let key = (dram_addr, len);
         if let Some(w) = self.weight_cache.get(&key) {
-            let data = w.clone();
-            self.cache_touch(key);
-            return Ok((data, 0));
+            return Ok((w.clone(), 0));
         }
         let credit = self.prefetched.remove(&key).unwrap_or(0);
         let (data, hideable) = if self.pipeline_on {
@@ -411,18 +410,13 @@ impl Soc {
         };
         // only clone for residency if the region can actually fit — an
         // oversized region (VGG-scale FC weights) would otherwise pay a
-        // huge transient copy just for cache_insert to discard it
-        if data.len() <= self.residency_budget() {
-            self.cache_insert(key, data.clone());
+        // huge transient copy just for the cache to discard it
+        let budget = self.residency_budget();
+        if data.len() <= budget {
+            self.weight_cache.set_capacity(budget);
+            self.weight_cache.insert(key, data.clone());
         }
         Ok((data, hideable))
-    }
-
-    fn cache_touch(&mut self, key: (u32, u32)) {
-        if let Some(pos) = self.cache_lru.iter().position(|&k| k == key) {
-            self.cache_lru.remove(pos);
-            self.cache_lru.push_back(key);
-        }
     }
 
     /// Scratchpad words available for resident weights: total capacity
@@ -437,20 +431,6 @@ impl Soc {
             .saturating_sub(self.resident_words)
     }
 
-    /// Evict LRU weight regions until the cache holds at most `budget`
-    /// words — the one eviction loop both [`Soc::cache_insert`] and the
-    /// fused-region claim path share.
-    fn evict_lru_until(&mut self, budget: usize) {
-        while self.cache_words > budget {
-            let Some(old) = self.cache_lru.pop_front() else {
-                break;
-            };
-            if let Some(v) = self.weight_cache.remove(&old) {
-                self.cache_words -= v.len();
-            }
-        }
-    }
-
     /// What staging `len` words DRAM↔scratchpad would cost under the
     /// active execution model, without moving data — serial
     /// whole-scratchpad windows, or pipelined bank-sized tiles. Prices
@@ -461,20 +441,6 @@ impl Soc {
         } else {
             Dma::serial_cost(&self.dram, &self.spad, len)
         }
-    }
-
-    /// Insert under the scratchpad residency budget: oversized regions are
-    /// never cached, and LRU regions are evicted until the new one fits.
-    fn cache_insert(&mut self, key: (u32, u32), data: Vec<i64>) {
-        let words = data.len();
-        let budget = self.residency_budget();
-        if words > budget {
-            return;
-        }
-        self.evict_lru_until(budget - words);
-        self.cache_words += words;
-        self.weight_cache.insert(key, data);
-        self.cache_lru.push_back(key);
     }
 
     /// Config used to build this SoC.
@@ -808,8 +774,10 @@ impl Soc {
             self.resident_words -= old.footprint;
         }
         self.resident_words += footprint;
+        // the claim shrank the weight budget: re-bound the cache,
+        // evicting LRU weights that were using those words
         let budget = self.residency_budget();
-        self.evict_lru_until(budget);
+        self.weight_cache.set_capacity(budget);
         true
     }
 
@@ -920,7 +888,7 @@ impl Soc {
                 }
                 let key = (addr, len);
                 if len == 0
-                    || self.weight_cache.contains_key(&key)
+                    || self.weight_cache.contains(&key)
                     || len as usize > self.spad.len() / 2
                 {
                     continue;

@@ -1,0 +1,583 @@
+//! One bounded, cost-parameterized LRU behind every cache in the stack.
+//!
+//! Four hand-rolled LRUs used to exist — the weight-stationary cache
+//! (`accel/soc.rs`), the engine configuration-context store
+//! (`systolic/engine.rs`), the per-driver plan cache (`accel/plan.rs`)
+//! and the front-door activation dedup cache (`coordinator/dedup.rs`) —
+//! each with its own eviction code, cost unit and (mostly missing)
+//! stats. [`BoundedLru`] replaces all of them: recency is a slab-backed
+//! doubly-linked list (O(1) touch/insert/evict, no stamp scans, no
+//! `Vec::remove(0)` shifts), the cost model is a `fn(&K, &V) -> usize`
+//! (entry count, resident words, …), and every instance exposes the
+//! same [`CacheStats`] snapshot for the `kom_cache_*` metrics families.
+//!
+//! ## Eviction-semantics compatibility contract
+//!
+//! The migration must not change any externally observable eviction
+//! decision — tier-1 gates in `pipelined_execution.rs`,
+//! `fused_execution.rs` and `compiled_plans.rs` pin the pre-refactor
+//! behavior. Concretely:
+//!
+//! * Recency is touch-on-hit, insert-at-hottest, evict-coldest-first —
+//!   the order every replaced implementation used.
+//! * An entry whose cost exceeds the capacity is never admitted:
+//!   [`BoundedLru::insert`] returns `false` and evicts nothing. This is
+//!   the weight cache's oversized-region bypass and the context store's
+//!   oversized-config bypass.
+//! * Replacing an existing key re-costs it in place (touching it) and
+//!   only evicts others if the new cost no longer fits.
+//! * [`BoundedLru::retain`] (predicate invalidation — `write_region`
+//!   overlap drops) and [`BoundedLru::clear`] (epoch invalidation —
+//!   `reset_arena`) do **not** count as evictions; only capacity
+//!   pressure does.
+//! * [`BoundedLru::seed`] inserts without counting an insertion — the
+//!   cluster plan-seeding path, where an adopted plan must not inflate
+//!   the owning driver's compile counter.
+//! * [`BoundedLru::get_verified`] charges a miss (and does not touch)
+//!   when the verifier rejects the stored value — the dedup cache's
+//!   byte-exact comparison behind fingerprint lookup.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::hash::Hash;
+
+/// Sentinel index terminating the intrusive list.
+const NIL: usize = usize::MAX;
+
+/// Counter snapshot shared by every cache instance. `hits + misses`
+/// equals the number of lookups ([`BoundedLru::get`] /
+/// [`BoundedLru::get_verified`] calls); `resident_cost <= capacity`
+/// holds after every operation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups that returned a value (and touched its recency).
+    pub hits: u64,
+    /// Lookups that returned nothing (absent key or failed verify).
+    pub misses: u64,
+    /// Entries admitted via [`BoundedLru::insert`] (seeding excluded).
+    pub insertions: u64,
+    /// Entries dropped under capacity pressure (invalidation excluded).
+    pub evictions: u64,
+    /// Summed cost of the entries currently resident.
+    pub resident_cost: usize,
+    /// Cost budget evictions enforce.
+    pub capacity: usize,
+}
+
+/// One slab slot: the entry plus its intrusive list links.
+struct Node<K, V> {
+    key: K,
+    value: V,
+    cost: usize,
+    prev: usize,
+    next: usize,
+}
+
+/// A bounded LRU parameterized by a cost model.
+///
+/// `capacity` bounds the summed cost of resident entries; the coldest
+/// entries are evicted to admit new ones. The default cost model type
+/// is a plain function pointer so instances stay nameable at call
+/// sites (`BoundedLru<K, V>` with `|_, v| v.len()` coerced).
+pub struct BoundedLru<K, V, C = fn(&K, &V) -> usize> {
+    map: HashMap<K, usize>,
+    slots: Vec<Option<Node<K, V>>>,
+    free: Vec<usize>,
+    /// Coldest entry (eviction candidate), or [`NIL`] when empty.
+    head: usize,
+    /// Hottest entry, or [`NIL`] when empty.
+    tail: usize,
+    cost: C,
+    capacity: usize,
+    resident: usize,
+    epoch: u64,
+    hits: u64,
+    misses: u64,
+    insertions: u64,
+    evictions: u64,
+}
+
+impl<K, V, C> fmt::Debug for BoundedLru<K, V, C> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("BoundedLru")
+            .field("len", &self.map.len())
+            .field("resident", &self.resident)
+            .field("capacity", &self.capacity)
+            .field("epoch", &self.epoch)
+            .finish()
+    }
+}
+
+impl<K, V, C> BoundedLru<K, V, C>
+where
+    K: Eq + Hash + Clone,
+    C: Fn(&K, &V) -> usize,
+{
+    /// Empty cache with the given cost budget and cost model.
+    pub fn new(capacity: usize, cost: C) -> Self {
+        BoundedLru {
+            map: HashMap::new(),
+            slots: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            cost,
+            capacity,
+            resident: 0,
+            epoch: 0,
+            hits: 0,
+            misses: 0,
+            insertions: 0,
+            evictions: 0,
+        }
+    }
+
+    fn node(&self, idx: usize) -> &Node<K, V> {
+        self.slots[idx].as_ref().expect("linked slot occupied")
+    }
+
+    fn node_mut(&mut self, idx: usize) -> &mut Node<K, V> {
+        self.slots[idx].as_mut().expect("linked slot occupied")
+    }
+
+    /// Unlink `idx` from the recency list without freeing the slot.
+    fn detach(&mut self, idx: usize) {
+        let (prev, next) = {
+            let n = self.node(idx);
+            (n.prev, n.next)
+        };
+        if prev == NIL {
+            self.head = next;
+        } else {
+            self.node_mut(prev).next = next;
+        }
+        if next == NIL {
+            self.tail = prev;
+        } else {
+            self.node_mut(next).prev = prev;
+        }
+    }
+
+    /// Link `idx` in as the hottest entry.
+    fn push_tail(&mut self, idx: usize) {
+        let tail = self.tail;
+        {
+            let n = self.node_mut(idx);
+            n.prev = tail;
+            n.next = NIL;
+        }
+        if tail == NIL {
+            self.head = idx;
+        } else {
+            self.node_mut(tail).next = idx;
+        }
+        self.tail = idx;
+    }
+
+    /// Move `idx` to the hottest position.
+    fn touch(&mut self, idx: usize) {
+        if self.tail != idx {
+            self.detach(idx);
+            self.push_tail(idx);
+        }
+    }
+
+    /// Remove `idx` entirely: unlink, free the slot, drop the map entry
+    /// and subtract its cost. Returns the node.
+    fn remove_index(&mut self, idx: usize) -> Node<K, V> {
+        self.detach(idx);
+        let node = self.slots[idx].take().expect("linked slot occupied");
+        self.map.remove(&node.key);
+        self.resident -= node.cost;
+        self.free.push(idx);
+        node
+    }
+
+    /// Evict the coldest entry (counted), if any.
+    fn evict_head(&mut self) -> bool {
+        if self.head == NIL {
+            return false;
+        }
+        let idx = self.head;
+        self.remove_index(idx);
+        self.evictions += 1;
+        true
+    }
+
+    /// Look up `key`: a hit touches the entry's recency and is counted;
+    /// an absent key counts a miss.
+    pub fn get(&mut self, key: &K) -> Option<&V> {
+        let idx = match self.map.get(key) {
+            Some(&i) => i,
+            None => {
+                self.misses += 1;
+                return None;
+            }
+        };
+        self.touch(idx);
+        self.hits += 1;
+        Some(&self.node(idx).value)
+    }
+
+    /// Look up `key` but only count a hit (and touch) when `verify`
+    /// accepts the stored value; a rejected value counts a miss and
+    /// leaves recency untouched — fingerprint collisions must not keep
+    /// a stale entry warm.
+    pub fn get_verified(&mut self, key: &K, verify: impl FnOnce(&V) -> bool) -> Option<&V> {
+        let idx = match self.map.get(key) {
+            Some(&i) => i,
+            None => {
+                self.misses += 1;
+                return None;
+            }
+        };
+        if !verify(&self.node(idx).value) {
+            self.misses += 1;
+            return None;
+        }
+        self.touch(idx);
+        self.hits += 1;
+        Some(&self.node(idx).value)
+    }
+
+    /// Whether `key` is resident. No stats, no touch — the prefetch
+    /// state machine peeks without perturbing recency.
+    pub fn contains(&self, key: &K) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// Admit `key → value`, evicting coldest-first until it fits.
+    /// Returns `false` (a no-op: nothing evicted, nothing counted) when
+    /// the entry's cost alone exceeds the capacity.
+    pub fn insert(&mut self, key: K, value: V) -> bool {
+        self.insert_inner(key, value, true)
+    }
+
+    /// [`BoundedLru::insert`] without counting an insertion — for
+    /// entries adopted from elsewhere (cluster plan seeding).
+    pub fn seed(&mut self, key: K, value: V) -> bool {
+        self.insert_inner(key, value, false)
+    }
+
+    fn insert_inner(&mut self, key: K, value: V, count: bool) -> bool {
+        let cost = (self.cost)(&key, &value);
+        if cost > self.capacity {
+            return false;
+        }
+        if let Some(&idx) = self.map.get(&key) {
+            let old = self.node(idx).cost;
+            self.resident -= old;
+            {
+                let n = self.node_mut(idx);
+                n.value = value;
+                n.cost = cost;
+            }
+            self.resident += cost;
+            self.touch(idx);
+            if count {
+                self.insertions += 1;
+            }
+            while self.resident > self.capacity && self.evict_head() {}
+            return true;
+        }
+        while self.resident + cost > self.capacity && self.evict_head() {}
+        let node = Node {
+            key: key.clone(),
+            value,
+            cost,
+            prev: NIL,
+            next: NIL,
+        };
+        let idx = match self.free.pop() {
+            Some(i) => {
+                self.slots[i] = Some(node);
+                i
+            }
+            None => {
+                self.slots.push(Some(node));
+                self.slots.len() - 1
+            }
+        };
+        self.push_tail(idx);
+        self.map.insert(key, idx);
+        self.resident += cost;
+        if count {
+            self.insertions += 1;
+        }
+        true
+    }
+
+    /// Keep only entries the predicate accepts, preserving recency
+    /// order among survivors. Dropped entries are invalidations, not
+    /// evictions — they are not counted.
+    pub fn retain(&mut self, mut f: impl FnMut(&K, &V) -> bool) {
+        let mut idx = self.head;
+        while idx != NIL {
+            let next = self.node(idx).next;
+            let keep = {
+                let n = self.node(idx);
+                f(&n.key, &n.value)
+            };
+            if !keep {
+                self.remove_index(idx);
+            }
+            idx = next;
+        }
+    }
+
+    /// Drop every entry and bump the epoch (`reset_arena`-style bulk
+    /// invalidation). Not counted as evictions; lifetime counters and
+    /// capacity survive.
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.slots.clear();
+        self.free.clear();
+        self.head = NIL;
+        self.tail = NIL;
+        self.resident = 0;
+        self.epoch += 1;
+    }
+
+    /// Bulk-invalidation generation: bumped by every [`BoundedLru::clear`].
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Evict coldest-first until resident cost fits `budget` (counted).
+    /// The capacity itself is unchanged — for transient external
+    /// pressure (fusion residents intruding on the weight budget).
+    pub fn shrink_to_budget(&mut self, budget: usize) {
+        while self.resident > budget && self.evict_head() {}
+    }
+
+    /// Re-bound the cache, evicting (counted) until the new capacity is
+    /// respected — `resident_cost() <= capacity()` holds on return.
+    pub fn set_capacity(&mut self, capacity: usize) {
+        self.capacity = capacity;
+        self.shrink_to_budget(capacity);
+    }
+
+    /// Summed cost of resident entries.
+    pub fn resident_cost(&self) -> usize {
+        self.resident
+    }
+
+    /// Cost budget evictions enforce.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Resident entry count.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Whether no entries are resident.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Counter snapshot (see [`CacheStats`]).
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            insertions: self.insertions,
+            evictions: self.evictions,
+            resident_cost: self.resident,
+            capacity: self.capacity,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn words(c: usize) -> BoundedLru<u32, Vec<i64>> {
+        BoundedLru::new(c, |_, v: &Vec<i64>| v.len())
+    }
+
+    fn entries(c: usize) -> BoundedLru<u32, u32> {
+        BoundedLru::new(c, |_, _| 1)
+    }
+
+    #[test]
+    fn hit_miss_and_touch_order() {
+        let mut c = entries(2);
+        assert!(c.insert(1, 10));
+        assert!(c.insert(2, 20));
+        // touching 1 makes 2 the eviction candidate
+        assert_eq!(c.get(&1), Some(&10));
+        assert!(c.insert(3, 30));
+        assert!(!c.contains(&2), "coldest entry evicted");
+        assert!(c.contains(&1) && c.contains(&3));
+        assert_eq!(c.get(&2), None);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.insertions, s.evictions), (1, 1, 3, 1));
+    }
+
+    #[test]
+    fn cost_model_bounds_resident_words() {
+        let mut c = words(10);
+        assert!(c.insert(1, vec![0; 4]));
+        assert!(c.insert(2, vec![0; 4]));
+        assert_eq!(c.resident_cost(), 8);
+        // 4 more words force out the coldest entry (key 1)
+        assert!(c.insert(3, vec![0; 4]));
+        assert!(!c.contains(&1));
+        assert_eq!(c.resident_cost(), 8);
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn oversized_entry_is_never_admitted_and_evicts_nothing() {
+        let mut c = words(8);
+        assert!(c.insert(1, vec![0; 8]));
+        assert!(!c.insert(2, vec![0; 9]), "cost > capacity rejected");
+        assert!(c.contains(&1), "rejection must not evict residents");
+        assert_eq!(c.len(), 1);
+        let s = c.stats();
+        assert_eq!(s.insertions, 1, "rejected insert not counted");
+        assert_eq!(s.evictions, 0);
+    }
+
+    #[test]
+    fn replace_recosts_in_place_and_touches() {
+        let mut c = words(10);
+        assert!(c.insert(1, vec![0; 3]));
+        assert!(c.insert(2, vec![0; 3]));
+        // replacing key 1 with a bigger value touches it hottest
+        assert!(c.insert(1, vec![0; 6]));
+        assert_eq!(c.resident_cost(), 9);
+        assert_eq!(c.len(), 2);
+        assert!(c.insert(3, vec![0; 4]));
+        assert!(!c.contains(&2), "2 was coldest after 1's replace-touch");
+        assert!(c.contains(&1));
+    }
+
+    #[test]
+    fn seed_skips_the_insertion_counter() {
+        let mut c = entries(4);
+        assert!(c.seed(1, 10));
+        assert!(c.insert(2, 20));
+        let s = c.stats();
+        assert_eq!(s.insertions, 1);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn get_verified_rejection_is_a_miss_without_touch() {
+        let mut c = entries(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        // failed verify on the coldest entry must not warm it
+        assert_eq!(c.get_verified(&1, |&v| v == 99), None);
+        c.insert(3, 30);
+        assert!(!c.contains(&1), "unverified entry stayed coldest");
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (0, 1));
+        // and a passing verify is a normal hit
+        assert_eq!(c.get_verified(&2, |&v| v == 20), Some(&20));
+        assert_eq!(c.stats().hits, 1);
+    }
+
+    #[test]
+    fn retain_preserves_order_and_counts_no_evictions() {
+        let mut c = entries(4);
+        for k in 1..=4 {
+            c.insert(k, k * 10);
+        }
+        c.retain(|&k, _| k % 2 == 0);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.stats().evictions, 0);
+        // survivors keep their relative order: 2 is now coldest
+        c.insert(5, 50);
+        c.insert(6, 60);
+        c.insert(7, 70);
+        assert!(!c.contains(&2));
+        assert!(c.contains(&4));
+    }
+
+    #[test]
+    fn clear_bumps_epoch_and_keeps_counters() {
+        let mut c = entries(4);
+        c.insert(1, 10);
+        c.get(&1);
+        assert_eq!(c.epoch(), 0);
+        c.clear();
+        assert_eq!(c.epoch(), 1);
+        assert!(c.is_empty());
+        assert_eq!(c.resident_cost(), 0);
+        let s = c.stats();
+        assert_eq!((s.hits, s.insertions, s.evictions), (1, 1, 0));
+        // the slab is reusable after a clear
+        c.insert(2, 20);
+        assert_eq!(c.get(&2), Some(&20));
+    }
+
+    #[test]
+    fn shrink_and_set_capacity_evict_coldest_first() {
+        let mut c = words(12);
+        c.insert(1, vec![0; 4]);
+        c.insert(2, vec![0; 4]);
+        c.insert(3, vec![0; 4]);
+        c.shrink_to_budget(8);
+        assert!(!c.contains(&1));
+        assert_eq!(c.resident_cost(), 8);
+        assert_eq!(c.capacity(), 12, "shrink leaves capacity alone");
+        c.set_capacity(4);
+        assert!(!c.contains(&2));
+        assert_eq!(c.resident_cost(), 4);
+        assert_eq!(c.capacity(), 4);
+        assert_eq!(c.stats().evictions, 2);
+    }
+
+    #[test]
+    fn stats_conservation_under_random_operations() {
+        // deterministic xorshift64 workload; after every operation:
+        // hits + misses == lookups and resident_cost <= capacity.
+        let mut rng: u64 = 0x243F_6A88_85A3_08D3;
+        let mut step = || {
+            rng ^= rng << 13;
+            rng ^= rng >> 7;
+            rng ^= rng << 17;
+            rng
+        };
+        let mut c = words(64);
+        let mut lookups = 0u64;
+        for _ in 0..4000 {
+            let r = step();
+            let key = (r >> 8) as u32 % 24;
+            match r % 10 {
+                0..=3 => {
+                    c.get(&key);
+                    lookups += 1;
+                }
+                4..=6 => {
+                    let len = (r >> 16) as usize % 20;
+                    c.insert(key, vec![0; len]);
+                }
+                7 => {
+                    c.seed(key, vec![0; (r >> 16) as usize % 20]);
+                }
+                8 => match r % 3 {
+                    0 => c.shrink_to_budget((r >> 20) as usize % 64),
+                    1 => c.retain(|&k, _| k % 3 != 0),
+                    _ => c.set_capacity(32 + (r >> 20) as usize % 33),
+                },
+                _ => {
+                    c.get_verified(&key, |v| !v.is_empty());
+                    lookups += 1;
+                }
+            }
+            let s = c.stats();
+            assert_eq!(s.hits + s.misses, lookups);
+            assert!(s.resident_cost <= s.capacity);
+            assert_eq!(s.resident_cost, c.resident_cost());
+        }
+        c.clear();
+        assert_eq!(c.stats().resident_cost, 0);
+        assert_eq!(c.stats().hits + c.stats().misses, lookups);
+    }
+}

@@ -13,7 +13,7 @@ use super::plan::ShardPlan;
 use super::scheduler::Scheduler;
 use crate::accel::driver::ShardedMetrics;
 use crate::accel::trace::RunTrace;
-use crate::accel::{Driver, LayerDesc, SocConfig};
+use crate::accel::{Driver, DriverCacheStats, LayerDesc, SocConfig};
 use crate::error::{Error, Result};
 
 /// Cluster sizing.
@@ -106,6 +106,14 @@ impl Cluster {
             .iter()
             .map(|d| d.plan_cache_stats())
             .fold((0, 0), |(h, c), (dh, dc)| (h + dh, c + dc))
+    }
+
+    /// Per-replica cache-stats rollup: one [`DriverCacheStats`] snapshot
+    /// (weight / context / plan) per replica, in replica order — the
+    /// rows behind the coordinator's `kom_cache_*` metrics and the
+    /// per-configuration cost accounting a `SocConfig` autotuner reads.
+    pub fn cache_stats(&self) -> Vec<DriverCacheStats> {
+        self.drivers.iter().map(|d| d.cache_stats()).collect()
     }
 
     /// Toggle the engine configuration-context cache on every replica:

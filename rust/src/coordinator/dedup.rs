@@ -7,32 +7,41 @@
 //! repeat straight from a result cache without forming an accelerator
 //! batch at all: zero accelerator cycles, zero queueing.
 //!
-//! The cache is a bounded LRU keyed by a content fingerprint of the
-//! quantized input, with every hit **byte-verified** against the stored
-//! full `(shape, data)` — lookups allocate nothing, and a fingerprint
-//! collision degrades to a miss, never to wrong logits. Entries are
-//! worth caching precisely because the input already *is* the canonical
+//! The cache is a word-bounded [`BoundedLru`] keyed by a content
+//! fingerprint of the quantized input, with every hit **byte-verified**
+//! against the stored full `(shape, data)` — lookups allocate nothing,
+//! and a fingerprint collision degrades to a miss, never to wrong
+//! logits. Cost is the entry's resident words (shape + input + logits),
+//! not an entry count: 1024 VGG-sized inputs (~150K words each) would
+//! otherwise be effectively unbounded host memory, and a single input
+//! larger than the whole budget is refused outright. Entries are worth
+//! caching precisely because the input already *is* the canonical
 //! quantized representation: no float fuzz, no near-duplicates to worry
 //! about. On by default (`CoordinatorConfig::dedup`), disabled with
-//! `--no-dedup`; hits are counted in `StatsCollector::dedup_hits` and
-//! answered at `Coordinator::submit` — the actual front door — so they
-//! never occupy a batcher slot or pay the batching wait.
+//! `--no-dedup`, budget set by `CoordinatorConfig::dedup_budget_words`
+//! (`serve --dedup-budget`); hits are counted in
+//! `StatsCollector::dedup_hits` and answered at `Coordinator::submit` —
+//! the actual front door — so they never occupy a batcher slot or pay
+//! the batching wait.
 
+use crate::cache::{BoundedLru, CacheStats};
 use crate::cnn::tensor::Tensor;
 use crate::systolic::config::Fnv;
-use std::collections::HashMap;
 
 /// One cached result: the full input it was computed from (byte-verified
 /// on every hit, so a fingerprint collision can never serve wrong
-/// logits), the logits, and the recency stamp its eviction order is
-/// decided by.
+/// logits) and the logits.
 struct DedupEntry {
     shape: Vec<usize>,
     data: Vec<i64>,
     logits: Vec<i64>,
-    /// Monotonic last-use stamp — the LRU order without a separate list,
-    /// so neither lookups nor inserts ever scan full tensor contents.
-    used: u64,
+}
+
+impl DedupEntry {
+    /// Resident words this entry costs against the cache budget.
+    fn words(&self) -> usize {
+        self.shape.len() + self.data.len() + self.logits.len()
+    }
 }
 
 /// Content fingerprint of an input tensor — computed over borrowed data,
@@ -51,29 +60,32 @@ pub(crate) fn fingerprint(input: &Tensor) -> u64 {
 }
 
 /// Exact-input → logits LRU cache shared by every worker behind the
-/// coordinator front door.
+/// coordinator front door. Bounded by resident **words**, not entries.
 pub struct DedupCache {
-    map: HashMap<u64, DedupEntry>,
-    clock: u64,
-    capacity: usize,
+    lru: BoundedLru<u64, DedupEntry>,
 }
 
-impl DedupCache {
-    /// Default entry capacity the coordinator uses: at Tiny's 256-word
-    /// inputs this is ~2 MB of keys — front-door-sized, not a datastore.
-    pub const DEFAULT_CAPACITY: usize = 1024;
+/// Words one Tiny-sized entry costs: the `[1,16,16]` shape (3), the 256
+/// input words, and the 10 logits.
+const TINY_ENTRY_WORDS: usize = 3 + 256 + 10;
 
-    /// Cache holding at most `capacity` results (≥ 1).
-    pub fn new(capacity: usize) -> Self {
+impl DedupCache {
+    /// Default word budget the coordinator uses: 1024 Tiny-sized entries
+    /// (~2 MB of host memory) — front-door-sized, not a datastore, and
+    /// behaviorally equivalent to the old 1024-entry bound on Tiny
+    /// traffic while actually bounding memory for bigger networks.
+    pub const DEFAULT_BUDGET_WORDS: usize = 1024 * TINY_ENTRY_WORDS;
+
+    /// Cache holding at most `budget_words` resident words (≥ 1). An
+    /// input whose entry alone exceeds the budget is never cached.
+    pub fn new(budget_words: usize) -> Self {
         DedupCache {
-            map: HashMap::new(),
-            clock: 0,
-            capacity: capacity.max(1),
+            lru: BoundedLru::new(budget_words.max(1), |_, e: &DedupEntry| e.words()),
         }
     }
 
     /// Cached logits for an exact repeat of `input`, refreshing its LRU
-    /// stamp. `None` for an unseen input — including a fingerprint
+    /// position. `None` for an unseen input — including a fingerprint
     /// collision, whose byte-verify fails and degrades to a miss, never
     /// to wrong logits. Allocation-free on the miss path.
     pub fn get(&mut self, input: &Tensor) -> Option<Vec<i64>> {
@@ -83,48 +95,46 @@ impl DedupCache {
     /// [`DedupCache::get`] with the fingerprint precomputed by the caller
     /// (outside the cache lock) — the byte-verify still runs here.
     pub(crate) fn get_keyed(&mut self, fp: u64, input: &Tensor) -> Option<Vec<i64>> {
-        self.clock += 1;
-        let clock = self.clock;
-        let e = self.map.get_mut(&fp)?;
-        if e.shape != input.shape || e.data != input.data {
-            return None;
-        }
-        e.used = clock;
-        Some(e.logits.clone())
+        self.lru
+            .get_verified(&fp, |e| e.shape == input.shape && e.data == input.data)
+            .map(|e| e.logits.clone())
     }
 
-    /// Insert (or refresh) a served result, evicting the least recently
-    /// used entry beyond capacity (an O(entries) stamp scan — only on the
-    /// insert of a *new* key into a full cache, and over u64 stamps, not
-    /// tensor contents). Inserts happen only on served misses, so this is
-    /// the one place the input is cloned into the cache.
+    /// Insert (or refresh) a served result, evicting least-recently-used
+    /// entries until the words fit the budget — O(evicted), no stamp
+    /// scan. An entry bigger than the whole budget is refused. Inserts
+    /// happen only on served misses, so this is the one place the input
+    /// is cloned into the cache.
     pub fn insert(&mut self, input: &Tensor, logits: Vec<i64>) {
-        self.clock += 1;
         let key = fingerprint(input);
-        if !self.map.contains_key(&key) && self.map.len() >= self.capacity {
-            if let Some(cold) = self.map.iter().min_by_key(|(_, e)| e.used).map(|(&k, _)| k) {
-                self.map.remove(&cold);
-            }
-        }
-        self.map.insert(
+        self.lru.insert(
             key,
             DedupEntry {
                 shape: input.shape.clone(),
                 data: input.data.clone(),
                 logits,
-                used: self.clock,
             },
         );
     }
 
     /// Cached results.
     pub fn len(&self) -> usize {
-        self.map.len()
+        self.lru.len()
     }
 
     /// True when nothing is cached.
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.lru.is_empty()
+    }
+
+    /// Words currently resident (always ≤ the budget).
+    pub fn resident_words(&self) -> usize {
+        self.lru.resident_cost()
+    }
+
+    /// Counter snapshot of the underlying [`BoundedLru`].
+    pub fn stats(&self) -> CacheStats {
+        self.lru.stats()
     }
 }
 
@@ -140,9 +150,12 @@ mod tests {
         }
     }
 
+    /// Words a `t(vec![2], _)` entry with one logit costs: 1 + 2 + 1.
+    const SMALL: usize = 4;
+
     #[test]
     fn exact_repeats_hit_near_misses_do_not() {
-        let mut c = DedupCache::new(8);
+        let mut c = DedupCache::new(8 * SMALL);
         assert!(c.is_empty());
         let a = t(vec![1, 2, 2], 0);
         c.insert(&a, vec![10, 20]);
@@ -161,7 +174,8 @@ mod tests {
 
     #[test]
     fn lru_bounded_eviction() {
-        let mut c = DedupCache::new(2);
+        // room for exactly two small entries
+        let mut c = DedupCache::new(2 * SMALL);
         let (a, b, d) = (t(vec![2], 0), t(vec![2], 1), t(vec![2], 2));
         c.insert(&a, vec![1]);
         c.insert(&b, vec![2]);
@@ -175,5 +189,37 @@ mod tests {
         c.insert(&a, vec![9]);
         assert_eq!(c.len(), 2);
         assert_eq!(c.get(&a), Some(vec![9]));
+    }
+
+    #[test]
+    fn oversized_input_cannot_blow_the_word_budget() {
+        let mut c = DedupCache::new(2 * SMALL);
+        let small = t(vec![2], 0);
+        c.insert(&small, vec![1]);
+        // an input bigger than the entire budget is refused outright —
+        // it neither enters the cache nor evicts what is there
+        let huge = t(vec![64], 7);
+        c.insert(&huge, vec![1; 10]);
+        assert_eq!(c.len(), 1);
+        assert!(c.get(&huge).is_none());
+        assert!(c.get(&small).is_some(), "residents survive the refusal");
+        assert!(c.resident_words() <= 2 * SMALL);
+        assert_eq!(c.stats().evictions, 0);
+    }
+
+    #[test]
+    fn default_budget_holds_1024_tiny_entries() {
+        let mut c = DedupCache::new(DedupCache::DEFAULT_BUDGET_WORDS);
+        // Tiny-shaped entries: [1,16,16] input + 10 logits = 269 words
+        for s in 0..1024 {
+            c.insert(&t(vec![1, 16, 16], s), vec![0; 10]);
+        }
+        assert_eq!(c.len(), 1024, "old 1024-entry behavior preserved");
+        assert_eq!(c.stats().evictions, 0);
+        // one more evicts exactly the coldest
+        c.insert(&t(vec![1, 16, 16], 5000), vec![0; 10]);
+        assert_eq!(c.len(), 1024);
+        assert_eq!(c.stats().evictions, 1);
+        assert!(c.get(&t(vec![1, 16, 16], 0)).is_none(), "coldest evicted");
     }
 }

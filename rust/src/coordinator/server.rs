@@ -89,6 +89,14 @@ pub struct CoordinatorConfig {
     /// On by default; disable with `--no-dedup` / `dedup: false` for
     /// strictly-isolated request accounting.
     pub dedup: bool,
+    /// Word budget of the front-door activation cache: the sum of resident
+    /// `shape + input + logits` words across cached results never exceeds
+    /// this. Bounding by words (not entries) keeps host memory fixed no
+    /// matter the network's input size; an input whose entry alone exceeds
+    /// the budget is never cached. The default holds exactly 1024
+    /// Tiny-sized entries, matching the old 1024-entry bound on Tiny
+    /// traffic. Set with `serve --dedup-budget`.
+    pub dedup_budget_words: usize,
     /// Arm the execution tracer on every replica: each batch's stitched
     /// per-layer cycle attribution folds into
     /// `StatsCollector::per_layer` (the hotspots table and the
@@ -116,6 +124,7 @@ impl Default for CoordinatorConfig {
             fuse: true,
             config_cache: true,
             dedup: true,
+            dedup_budget_words: DedupCache::DEFAULT_BUDGET_WORDS,
             trace: false,
             batch: BatchPolicy::default(),
             soc: SocConfig::serving(),
@@ -239,7 +248,7 @@ impl Coordinator {
         // hit no matter which worker served the original
         let dedup = cfg
             .dedup
-            .then(|| Arc::new(Mutex::new(DedupCache::new(DedupCache::DEFAULT_CAPACITY))));
+            .then(|| Arc::new(Mutex::new(DedupCache::new(cfg.dedup_budget_words))));
 
         // batcher thread
         let policy = cfg.batch;
@@ -327,9 +336,11 @@ impl Coordinator {
                                 s.record_plan_telemetry(
                                     m.reconfigs(),
                                     m.reconfigs_skipped(),
+                                    m.ctx_evictions(),
                                     m.plan_hits(),
                                     m.shards.len() as u64,
                                 );
+                                s.record_cache_stats(wid, &worker.cluster.cache_stats());
                                 if let Some(t) = &trace {
                                     s.record_trace(t);
                                 }
@@ -448,7 +459,17 @@ impl Coordinator {
     /// [`StatsCollector::metrics_text`]) — what `kom-accel serve
     /// --metrics-interval` prints while serving.
     pub fn metrics_text(&self) -> String {
-        self.stats.lock().expect("stats poisoned").metrics_text()
+        // the dedup cache is owned here, not by a worker, so its counter
+        // snapshot is folded into the collector at render time
+        let snap = self
+            .dedup
+            .as_ref()
+            .map(|d| d.lock().expect("dedup poisoned").stats());
+        let mut s = self.stats.lock().expect("stats poisoned");
+        if let Some(snap) = snap {
+            s.record_dedup_cache(snap);
+        }
+        s.metrics_text()
     }
 
     /// Drain and stop; returns the final statistics.
@@ -459,6 +480,14 @@ impl Coordinator {
         }
         for h in self.worker_handles.drain(..) {
             let _ = h.join();
+        }
+        // final dedup counter snapshot, now that every insert has landed
+        if let Some(d) = self.dedup.as_ref() {
+            let snap = d.lock().expect("dedup poisoned").stats();
+            self.stats
+                .lock()
+                .expect("stats poisoned")
+                .record_dedup_cache(snap);
         }
         Arc::try_unwrap(std::mem::replace(
             &mut self.stats,
@@ -877,6 +906,19 @@ mod tests {
         }
         let metrics = coord.metrics_text();
         assert!(metrics.contains("kom_layer_cycles_total{layer=\"0\",kind=\"compute\"}"));
+        // every cache instance is scraped per replica, plus the shared
+        // front-door dedup cache
+        for cache in ["weight", "context", "plan"] {
+            for replica in 0..2 {
+                assert!(
+                    metrics.contains(&format!(
+                        "kom_cache_hits_total{{cache=\"{cache}\",worker=\"0\",replica=\"{replica}\"}}"
+                    )),
+                    "missing {cache} rows for replica {replica}:\n{metrics}"
+                );
+            }
+        }
+        assert!(metrics.contains("kom_cache_hits_total{cache=\"dedup\"}"));
         let stats = coord.shutdown();
         // Tiny is 6 layers deep; every one must have attributed cycles
         assert_eq!(stats.per_layer().len(), 6);

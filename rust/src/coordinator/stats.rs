@@ -15,6 +15,8 @@ use std::collections::VecDeque;
 use std::time::Instant;
 
 use crate::accel::trace::{LayerCycles, RunTrace};
+use crate::accel::DriverCacheStats;
+use crate::cache::CacheStats;
 
 /// Latency samples retained for percentile estimation. Below this many
 /// recorded requests the reported percentiles are exact.
@@ -126,11 +128,24 @@ pub struct StatsCollector {
     /// across every shard run (warm runs of an unchanged table skip all
     /// of them).
     pub reconfigs_skipped: u64,
+    /// Configuration-context evictions across every shard run — nonzero
+    /// means some replica's table no longer fits its context store and
+    /// warm runs are re-paying reconfigurations (previously uncounted).
+    pub ctx_evictions: u64,
     /// Shard runs that executed a cached compiled plan.
     pub plan_hits: u64,
     /// Total shard runs (the denominator of
     /// [`StatsCollector::plan_cache_hit_rate`]).
     pub plan_runs: u64,
+    /// Latest per-cache counter snapshots, upserted per
+    /// `(worker, replica)` by [`StatsCollector::record_cache_stats`] —
+    /// snapshots are cumulative on the driver side, so keeping the most
+    /// recent one per slot is exact, not sampled. Bounded by the worker ×
+    /// replica topology.
+    cache_rows: Vec<(usize, usize, DriverCacheStats)>,
+    /// Latest front-door dedup cache snapshot (`None` when dedup is
+    /// disabled or nothing was recorded yet).
+    dedup_cache: Option<CacheStats>,
 }
 
 impl Default for StatsCollector {
@@ -159,8 +174,11 @@ impl StatsCollector {
             dedup_hits: 0,
             reconfigs: 0,
             reconfigs_skipped: 0,
+            ctx_evictions: 0,
             plan_hits: 0,
             plan_runs: 0,
+            cache_rows: Vec::new(),
+            dedup_cache: None,
         }
     }
 
@@ -279,19 +297,54 @@ impl StatsCollector {
     }
 
     /// Record one shard batch's plan/reconfiguration telemetry:
-    /// reconfigurations performed and skipped, plus how many of the
-    /// `shard_runs` executed a cached compiled plan.
+    /// reconfigurations performed and skipped, context-store evictions,
+    /// plus how many of the `shard_runs` executed a cached compiled plan.
     pub fn record_plan_telemetry(
         &mut self,
         reconfigs: u64,
         reconfigs_skipped: u64,
+        ctx_evictions: u64,
         plan_hits: u64,
         shard_runs: u64,
     ) {
         self.reconfigs += reconfigs;
         self.reconfigs_skipped += reconfigs_skipped;
+        self.ctx_evictions += ctx_evictions;
         self.plan_hits += plan_hits;
         self.plan_runs += shard_runs;
+    }
+
+    /// Upsert the latest per-replica cache snapshots for `worker` (one
+    /// [`DriverCacheStats`] per replica, in replica order). Driver-side
+    /// counters are cumulative, so replacing the previous snapshot is
+    /// exact; the row set is bounded by the worker × replica topology.
+    pub fn record_cache_stats(&mut self, worker: usize, rows: &[DriverCacheStats]) {
+        for (replica, &stats) in rows.iter().enumerate() {
+            match self
+                .cache_rows
+                .iter_mut()
+                .find(|(w, r, _)| *w == worker && *r == replica)
+            {
+                Some(row) => row.2 = stats,
+                None => self.cache_rows.push((worker, replica, stats)),
+            }
+        }
+    }
+
+    /// Latest per-`(worker, replica)` cache snapshots, in recording order.
+    pub fn cache_rows(&self) -> &[(usize, usize, DriverCacheStats)] {
+        &self.cache_rows
+    }
+
+    /// Record the latest front-door dedup cache snapshot (cumulative —
+    /// the newest replaces the previous).
+    pub fn record_dedup_cache(&mut self, stats: CacheStats) {
+        self.dedup_cache = Some(stats);
+    }
+
+    /// Latest front-door dedup cache snapshot, if one was recorded.
+    pub fn dedup_cache_stats(&self) -> Option<CacheStats> {
+        self.dedup_cache
     }
 
     /// Fold a drained execution trace's per-layer cycle attribution into
@@ -488,7 +541,37 @@ impl StatsCollector {
         let _ = writeln!(out, "kom_fused_saved_cycles_total {}", self.fused_saved_cycles);
         let _ = writeln!(out, "kom_reconfigs_total {}", self.reconfigs);
         let _ = writeln!(out, "kom_reconfigs_skipped_total {}", self.reconfigs_skipped);
+        let _ = writeln!(out, "kom_ctx_evictions_total {}", self.ctx_evictions);
         let _ = writeln!(out, "kom_plan_cache_hit_rate {:.6}", self.plan_cache_hit_rate());
+        if !self.cache_rows.is_empty() || self.dedup_cache.is_some() {
+            let _ = writeln!(
+                out,
+                "# HELP kom_cache_hits_total Per-cache counters (misses/evictions/resident_words share the label set)."
+            );
+            let _ = writeln!(out, "# TYPE kom_cache_hits_total counter");
+            let mut cache_line = |labels: &str, s: &CacheStats| {
+                let _ = writeln!(out, "kom_cache_hits_total{{{labels}}} {}", s.hits);
+                let _ = writeln!(out, "kom_cache_misses_total{{{labels}}} {}", s.misses);
+                let _ = writeln!(out, "kom_cache_evictions_total{{{labels}}} {}", s.evictions);
+                let _ = writeln!(
+                    out,
+                    "kom_cache_resident_words_total{{{labels}}} {}",
+                    s.resident_cost
+                );
+            };
+            for (w, r, d) in &self.cache_rows {
+                for (name, s) in [
+                    ("weight", &d.weight),
+                    ("context", &d.context),
+                    ("plan", &d.plan),
+                ] {
+                    cache_line(&format!("cache=\"{name}\",worker=\"{w}\",replica=\"{r}\""), s);
+                }
+            }
+            if let Some(s) = &self.dedup_cache {
+                cache_line("cache=\"dedup\"", s);
+            }
+        }
         let _ = writeln!(out, "# HELP kom_latency_us Request latency in microseconds.");
         let _ = writeln!(out, "# TYPE kom_latency_us summary");
         let _ = writeln!(out, "kom_latency_us{{quantile=\"0.5\"}} {}", l.p50_us);
@@ -617,13 +700,14 @@ mod tests {
         assert_eq!(s.count(), 1, "a dedup hit is a served request");
         assert_eq!(s.accel_cycles, 0, "…that cost no accelerator cycles");
         assert_eq!(s.mean_batch(), 0.0, "…and rode in no accelerator batch");
-        // cold batch over 4 shards: no hits, 24 reconfigs
-        s.record_plan_telemetry(24, 0, 0, 4);
+        // cold batch over 4 shards: no hits, 24 reconfigs, 2 ctx evictions
+        s.record_plan_telemetry(24, 0, 2, 0, 4);
         // two warm batches: all plans hit, all reconfigs skipped
-        s.record_plan_telemetry(0, 24, 4, 4);
-        s.record_plan_telemetry(0, 24, 4, 4);
+        s.record_plan_telemetry(0, 24, 0, 4, 4);
+        s.record_plan_telemetry(0, 24, 0, 4, 4);
         assert_eq!(s.reconfigs, 24);
         assert_eq!(s.reconfigs_skipped, 48);
+        assert_eq!(s.ctx_evictions, 2);
         assert!((s.plan_cache_hit_rate() - 8.0 / 12.0).abs() < 1e-12);
     }
 
@@ -713,15 +797,76 @@ mod tests {
         let mut r = TraceRing::new(16);
         r.record(SpanKind::Compute, 75, 0, 4);
         s.record_trace(&r.drain());
+        let weight = CacheStats {
+            hits: 7,
+            misses: 3,
+            insertions: 3,
+            evictions: 1,
+            resident_cost: 40,
+            capacity: 48,
+        };
+        s.record_cache_stats(
+            1,
+            &[DriverCacheStats {
+                weight,
+                ..Default::default()
+            }],
+        );
+        s.record_dedup_cache(CacheStats {
+            hits: 5,
+            ..Default::default()
+        });
         let text = s.metrics_text();
         assert!(text.contains("kom_requests_total 4"));
         assert!(text.contains("kom_accel_cycles_total 1000"));
+        assert!(text.contains("kom_ctx_evictions_total 0"));
         assert!(text.contains("kom_latency_us{quantile=\"0.5\"} 50"));
         assert!(text.contains("kom_layer_cycles_total{layer=\"0\",kind=\"compute\"} 75"));
         assert!(text.contains("kom_throughput_rps_window"));
+        assert!(text.contains("kom_cache_hits_total{cache=\"weight\",worker=\"1\",replica=\"0\"} 7"));
+        assert!(
+            text.contains("kom_cache_evictions_total{cache=\"weight\",worker=\"1\",replica=\"0\"} 1")
+        );
+        assert!(text.contains(
+            "kom_cache_resident_words_total{cache=\"weight\",worker=\"1\",replica=\"0\"} 40"
+        ));
+        assert!(text.contains("kom_cache_misses_total{cache=\"plan\",worker=\"1\",replica=\"0\"} 0"));
+        assert!(text.contains("kom_cache_hits_total{cache=\"dedup\"} 5"));
         // every non-comment line is `name[{labels}] value`
         for line in text.lines().filter(|l| !l.starts_with('#')) {
             assert_eq!(line.split_whitespace().count(), 2, "bad line: {line}");
         }
+    }
+
+    #[test]
+    fn cache_rows_upsert_per_worker_replica() {
+        let mut s = StatsCollector::new();
+        assert!(s.cache_rows().is_empty());
+        assert!(s.dedup_cache_stats().is_none());
+        let snap = |hits| DriverCacheStats {
+            plan: CacheStats {
+                hits,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        // two replicas on worker 0, one on worker 1
+        s.record_cache_stats(0, &[snap(1), snap(2)]);
+        s.record_cache_stats(1, &[snap(3)]);
+        assert_eq!(s.cache_rows().len(), 3);
+        // a later snapshot replaces, never duplicates
+        s.record_cache_stats(0, &[snap(10), snap(20)]);
+        assert_eq!(s.cache_rows().len(), 3);
+        let row = s
+            .cache_rows()
+            .iter()
+            .find(|(w, r, _)| *w == 0 && *r == 1)
+            .expect("row for worker 0 replica 1");
+        assert_eq!(row.2.plan.hits, 20);
+        s.record_dedup_cache(CacheStats {
+            hits: 9,
+            ..Default::default()
+        });
+        assert_eq!(s.dedup_cache_stats().expect("recorded").hits, 9);
     }
 }

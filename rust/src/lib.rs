@@ -27,7 +27,9 @@
 //! * [`cnn`] — integer tensors, quantisation and the AlexNet/VGG16/VGG19
 //!   network descriptions (§V analysis),
 //! * [`runtime`] — the PJRT bridge that loads JAX/Pallas-AOT HLO artifacts,
-//! * [`coordinator`] — the inference request router / dynamic batcher.
+//! * [`coordinator`] — the inference request router / dynamic batcher,
+//! * [`cache`] — the bounded, cost-parameterized LRU behind the weight,
+//!   configuration-context, plan and dedup caches.
 //!
 //! Support substrates (offline environment — no clap/criterion/proptest):
 //! [`cli`], [`bench_harness`], [`report`], [`testing`].
@@ -35,6 +37,7 @@
 pub mod accel;
 pub mod bench_harness;
 pub mod bits;
+pub mod cache;
 pub mod cli;
 pub mod cluster;
 pub mod cnn;

@@ -24,7 +24,7 @@ use kom_accel::cli::Args;
 use kom_accel::cluster::{Cluster, ClusterConfig, SchedulePolicy, Scheduler};
 use kom_accel::cnn::networks::{Network, NetworkInstance, NetworkKind};
 use kom_accel::cnn::{analysis, Tensor};
-use kom_accel::coordinator::{Coordinator, CoordinatorConfig, StatsCollector};
+use kom_accel::coordinator::{Coordinator, CoordinatorConfig, DedupCache, StatsCollector};
 use kom_accel::multipliers::{generate, MultKind, MultiplierSpec};
 use kom_accel::report::Table;
 use kom_accel::runtime::{golden, ArtifactStore};
@@ -44,7 +44,8 @@ COMMANDS
   analyze  [--net alexnet]           network analysis (paper Sec V)
   golden   [--artifacts artifacts]   XLA vs systolic vs reference
   serve    [--requests 64] [--workers 2] [--batch 8] [--shards 1] [--no-pipeline]
-           [--no-fuse] [--no-dedup] [--no-config-cache] [--metrics-interval N]
+           [--no-fuse] [--no-dedup] [--dedup-budget W] [--no-config-cache]
+           [--metrics-interval N]
   cluster  [--batch 16] [--shards 4] [--policy rr|least-outstanding] [--net tiny]
            [--no-pipeline] [--no-fuse] [--no-config-cache]
   lint     [--net tiny] [--batch 8] [--shards 1] [--no-fuse] [--deny-warnings]
@@ -61,7 +62,8 @@ Compiled plans: descriptor tables compile once into cached execution
 plans, and warm runs skip every per-layer engine reconfiguration through
 the configuration-context cache; --no-config-cache restores the cold
 reconfiguration model. --no-dedup disables the front-door exact-input
-result cache.
+result cache; --dedup-budget W bounds it to W resident words (default
+holds 1024 Tiny-sized entries).
 Lint: deploy the network's descriptor table exactly as serving would,
 then run the static plan verifier over it (region aliasing, dataflow
 chaining, fusion-binding soundness, encoding round-trip, cycle-model
@@ -231,6 +233,8 @@ fn cmd_serve(args: &Args) -> kom_accel::Result<()> {
     let pipeline = !args.has("no-pipeline");
     let fuse = !args.has("no-fuse");
     let dedup = !args.has("no-dedup");
+    let dedup_budget_words: usize =
+        args.get_num("dedup-budget", DedupCache::DEFAULT_BUDGET_WORDS)?;
     let config_cache = !args.has("no-config-cache");
     let metrics_interval: usize = args.get_num("metrics-interval", 0usize)?;
     let inst = NetworkInstance::random(Network::build(NetworkKind::Tiny), 42)?;
@@ -240,6 +244,7 @@ fn cmd_serve(args: &Args) -> kom_accel::Result<()> {
         pipeline,
         fuse,
         dedup,
+        dedup_budget_words,
         config_cache,
         // the demo always traces so it can close with the per-layer
         // hotspots table (serving defaults keep tracing off)

@@ -7,6 +7,7 @@
 
 use super::config::{EngineConfig, EngineMode};
 use super::{conv2d, fc, fir, pool};
+use crate::cache::{BoundedLru, CacheStats};
 use crate::error::{Error, Result};
 
 /// Cumulative engine statistics.
@@ -74,13 +75,10 @@ pub struct Engine {
     config: Option<EngineConfig>,
     /// Is the configuration-context cache enabled?
     ctx_enabled: bool,
-    /// Resident context fingerprints in LRU order (front = coldest), with
-    /// each context's size in config words.
-    ctx_lru: Vec<(u64, u64)>,
-    /// Config words currently held by resident contexts.
-    ctx_words: u64,
-    /// Context-store capacity in config words.
-    ctx_capacity: u64,
+    /// Resident contexts: configuration fingerprint → size in config
+    /// words, word-bounded by [`DEFAULT_CTX_WORDS`] via the shared
+    /// [`BoundedLru`] (cost = the context's config words).
+    ctx: BoundedLru<u64, u64>,
     /// Statistics since construction (or [`Engine::clear_stats`]).
     pub stats: EngineStats,
 }
@@ -103,9 +101,7 @@ impl Engine {
             cells,
             config: None,
             ctx_enabled: false,
-            ctx_lru: Vec::new(),
-            ctx_words: 0,
-            ctx_capacity: DEFAULT_CTX_WORDS,
+            ctx: BoundedLru::new(DEFAULT_CTX_WORDS as usize, |_, w| *w as usize),
             stats: EngineStats::default(),
         }
     }
@@ -116,8 +112,7 @@ impl Engine {
     pub fn set_context_cache(&mut self, on: bool) {
         self.ctx_enabled = on;
         if !on {
-            self.ctx_lru.clear();
-            self.ctx_words = 0;
+            self.ctx.clear();
         }
     }
 
@@ -128,7 +123,20 @@ impl Engine {
 
     /// Config words currently resident in the context store.
     pub fn context_words(&self) -> u64 {
-        self.ctx_words
+        self.ctx.resident_cost() as u64
+    }
+
+    /// Drop every resident context (arena-reset coherence: the driver
+    /// clears all stateful caches in one epoch bump). The cache stays
+    /// enabled; lifetime counters survive.
+    pub fn clear_context(&mut self) {
+        self.ctx.clear();
+    }
+
+    /// Counter snapshot of the context store (hits = context switches
+    /// served free, evictions = contexts displaced by capacity pressure).
+    pub fn context_stats(&self) -> CacheStats {
+        self.ctx.stats()
     }
 
     /// Load a configuration (validates; charges reconfiguration cycles
@@ -140,24 +148,16 @@ impl Engine {
         config.validate()?;
         if self.ctx_enabled {
             let fp = config.fingerprint();
-            if let Some(pos) = self.ctx_lru.iter().position(|&(f, _)| f == fp) {
+            if self.ctx.get(&fp).is_some() {
                 // context hit: the plane is already loaded on-chip —
                 // switching to it charges nothing
-                let entry = self.ctx_lru.remove(pos);
-                self.ctx_lru.push(entry);
                 self.stats.reconfigs_skipped += 1;
                 self.config = Some(config);
                 return Ok(0);
             }
-            let words = config.config_words();
-            if words <= self.ctx_capacity {
-                while self.ctx_words + words > self.ctx_capacity {
-                    let (_, w) = self.ctx_lru.remove(0);
-                    self.ctx_words -= w;
-                }
-                self.ctx_lru.push((fp, words));
-                self.ctx_words += words;
-            }
+            // an oversized configuration is rejected by the word-bounded
+            // LRU itself (cost > capacity) and never cached
+            self.ctx.insert(fp, config.config_words());
         }
         let charged = config.config_words();
         self.stats.config_cycles += charged;
@@ -539,6 +539,8 @@ mod tests {
         assert!(e.context_words() <= DEFAULT_CTX_WORDS);
         e.reconfigure(fir(2, big)).unwrap();
         assert_eq!(e.stats.reconfigs_skipped, 0, "evicted context re-pays");
+        // both displacements were capacity evictions, now counted
+        assert_eq!(e.context_stats().evictions, 2);
     }
 
     #[test]
