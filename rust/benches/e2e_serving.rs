@@ -3,9 +3,9 @@
 //! speedup (measured, not asserted), plus the XLA-artifact execution path
 //! (when built).
 
-use kom_accel::accel::{Driver, SocConfig, DEFAULT_RING_CAPACITY};
+use kom_accel::accel::{Driver, FaultConfig, FaultPlan, SocConfig, DEFAULT_RING_CAPACITY};
 use kom_accel::cluster::{Cluster, ClusterConfig, SchedulePolicy, Scheduler};
-use kom_accel::cnn::networks::{Network, NetworkInstance, NetworkKind};
+use kom_accel::cnn::networks::{Network, NetworkInstance, NetworkKind, DEFAULT_SHARD_RETRIES};
 use kom_accel::cnn::Tensor;
 use kom_accel::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
 use kom_accel::report::Table;
@@ -573,6 +573,116 @@ fn main() {
     match std::fs::write("BENCH_cache_stats.json", &json) {
         Ok(()) => println!("wrote BENCH_cache_stats.json (per-cache serving hit rates)"),
         Err(e) => println!("(could not write BENCH_cache_stats.json: {e})"),
+    }
+
+    // ---- fault injection: clean vs disabled plan vs hard-fail ----------
+    // The fault plan's contract mirrors the tracer's: armed-but-disabled
+    // (rate 0, no scheduled fault) must cost exactly zero simulated
+    // cycles (hard-asserted — the gate CI runs), and a hard replica
+    // failure must recover bit-exact through retry/failover while
+    // charging honest extra cycles for the degraded dispatch. Emitted as
+    // BENCH_fault.json so CI tracks the failover cost trajectory.
+    println!("===== fault injection: clean vs disabled plan vs hard-fail (4 shards, batch 16) =====");
+    let fault_batch = 16usize;
+    let fault_slices: Vec<&[i64]> = inputs[..fault_batch].iter().map(|t| t.data.as_slice()).collect();
+    let run_mode = |plan: Option<FaultPlan>| {
+        let mut cluster = Cluster::new(ClusterConfig {
+            replicas: 4,
+            soc: bench_soc(),
+        })
+        .unwrap();
+        let cdep = inst
+            .deploy_cluster(&mut cluster, fault_batch.div_ceil(4))
+            .unwrap();
+        cluster.set_fault_plan(0, plan);
+        let mut sched = Scheduler::new(SchedulePolicy::LeastOutstandingCycles, 4).unwrap();
+        let (outs, m) = cdep
+            .run_sharded_degraded(&mut cluster, &mut sched, &fault_slices, DEFAULT_SHARD_RETRIES)
+            .unwrap();
+        let outs: Vec<Vec<i64>> = outs
+            .into_iter()
+            .enumerate()
+            .map(|(i, o)| o.unwrap_or_else(|e| panic!("request {i} must be served after failover: {e}")))
+            .collect();
+        (outs, m, cluster.faults_injected())
+    };
+    let (outs_clean, m_clean, faults_clean) = run_mode(None);
+    let (outs_disabled, m_disabled, faults_disabled) = run_mode(Some(FaultPlan::new(FaultConfig {
+        seed: 7,
+        rate: 0.0,
+        ..Default::default()
+    })));
+    let (outs_faulted, m_faulted, faults_faulted) = run_mode(Some(FaultPlan::new(FaultConfig {
+        seed: 7,
+        rate: 0.0,
+        hard_fail_run: Some(0),
+        ..Default::default()
+    })));
+    // the gates: a disabled plan perturbs nothing, and a hard failure
+    // recovers bit-exact at an honestly-charged cycle cost
+    assert_eq!(
+        m_clean.total_cycles(),
+        m_disabled.total_cycles(),
+        "a disabled fault plan must cost zero simulated cycles \
+         (clean: {}, armed rate-0: {})",
+        m_clean.total_cycles(),
+        m_disabled.total_cycles()
+    );
+    assert_eq!(outs_clean, outs_disabled, "a disabled fault plan must not touch logits");
+    assert_eq!(faults_clean, 0);
+    assert_eq!(faults_disabled, 0, "a rate-0 plan never fires");
+    assert_eq!(faults_faulted, 1, "the scheduled hard failure fires exactly once");
+    assert_eq!(outs_faulted, outs_clean, "failover recovery must be bit-exact");
+    assert!(
+        m_faulted.total_cycles() > m_clean.total_cycles(),
+        "a degraded dispatch charges honest extra cycles \
+         (clean: {}, faulted: {})",
+        m_clean.total_cycles(),
+        m_faulted.total_cycles()
+    );
+    let mut t = Table::new(&[
+        "mode",
+        "cycles/req",
+        "faults",
+        "retries",
+        "failovers",
+        "quarantined",
+        "vs clean",
+    ]);
+    let mut json_rows = Vec::new();
+    for (mode, m, faults) in [
+        ("clean", &m_clean, faults_clean),
+        ("armed rate-0", &m_disabled, faults_disabled),
+        ("hard-fail replica 0", &m_faulted, faults_faulted),
+    ] {
+        let per_req = m.total_cycles() as f64 / fault_batch as f64;
+        let vs_clean = m.total_cycles() as f64 / m_clean.total_cycles().max(1) as f64;
+        t.row(vec![
+            mode.into(),
+            format!("{per_req:.0}"),
+            faults.to_string(),
+            m.retries.to_string(),
+            m.failovers.to_string(),
+            m.quarantined.to_string(),
+            format!("{vs_clean:.2}x"),
+        ]);
+        json_rows.push(format!(
+            "    {{\"mode\": \"{mode}\", \"shards\": 4, \"batch\": {fault_batch}, \
+             \"cycles_per_req\": {per_req:.1}, \"faults_injected\": {faults}, \
+             \"retries\": {}, \"failovers\": {}, \"quarantined\": {}, \
+             \"cycles_vs_clean\": {vs_clean:.4}, \"extra_cycles_disabled\": 0}}",
+            m.retries, m.failovers, m.quarantined
+        ));
+    }
+    println!("{}", t.to_ascii());
+    println!("gates: disabled plan costs 0 extra cycles; failover recovery bit-exact — OK");
+    let json = format!(
+        "{{\n  \"bench\": \"fault\",\n  \"network\": \"tiny\",\n  \"rows\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    match std::fs::write("BENCH_fault.json", &json) {
+        Ok(()) => println!("wrote BENCH_fault.json (clean vs disabled-plan vs hard-fail failover)"),
+        Err(e) => println!("(could not write BENCH_fault.json: {e})"),
     }
 
     // XLA-artifact execution path (the L1/L2 kernels through PJRT)

@@ -26,8 +26,10 @@ use std::sync::Arc;
 /// another driver's DRAM just because two epoch counters coincide.
 static NEXT_DRIVER_ID: AtomicU64 = AtomicU64::new(0);
 
-/// Metrics from one accelerator run.
-#[derive(Clone, Copy, Debug, Default)]
+/// Metrics from one accelerator run. `PartialEq`/`Eq` so robustness
+/// tests can assert bit-identity between runs with and without a
+/// disabled fault plan armed (the zero-cost-when-off contract).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct RunMetrics {
     /// Control-CPU cycles.
     pub cpu_cycles: u64,
@@ -132,25 +134,55 @@ pub struct ShardRun {
     pub metrics: RunMetrics,
 }
 
+/// One shard's attempt within a fault-aware sharded dispatch: the
+/// per-shard `Result` the failover layer retries from, instead of the
+/// wholesale error [`Driver::run_table_sharded`] collapses to.
+#[derive(Debug)]
+pub struct ShardAttempt {
+    /// Shard index within the plan.
+    pub shard: usize,
+    /// Replica that attempted it.
+    pub replica: usize,
+    /// The attempt's outcome: metrics, or the typed fault/error that
+    /// stopped it.
+    pub result: Result<RunMetrics>,
+}
+
 /// Aggregate metrics from one sharded dispatch across replicated
 /// accelerators. The headline number is [`ShardedMetrics::total_cycles`]:
-/// **max over shards, not sum** — replicas run concurrently, so the batch
-/// completes when the slowest shard does. The sum is still available as
+/// **max over replicas, not sum** — replicas run concurrently, so the
+/// batch completes when the slowest replica does. With one shard per
+/// replica (the fault-free case) that is exactly max-over-shards; after
+/// a failover, the replica that absorbed a retried shard ran two shards
+/// back to back and its cycles sum — degraded dispatches charge honest
+/// cycles. The sum is still available as
 /// [`ShardedMetrics::serial_cycles`] for speedup reporting.
 #[derive(Clone, Debug, Default)]
 pub struct ShardedMetrics {
     /// Per-shard runs, in shard (batch) order.
     pub shards: Vec<ShardRun>,
+    /// Shard retry attempts performed after injected faults.
+    pub retries: u64,
+    /// Retries that completed on a *different* replica than the one that
+    /// faulted (successful failovers).
+    pub failovers: u64,
+    /// Replicas quarantined during this dispatch.
+    pub quarantined: u64,
 }
 
 impl ShardedMetrics {
-    /// Cluster cycles for the dispatch: the slowest shard's total.
+    /// Cluster cycles for the dispatch: the slowest replica's serial sum
+    /// over the shards it ran (one shard per replica ⇒ the slowest
+    /// shard's total).
     pub fn total_cycles(&self) -> u64 {
-        self.shards
-            .iter()
-            .map(|s| s.metrics.total_cycles())
-            .max()
-            .unwrap_or(0)
+        let mut per: Vec<(usize, u64)> = Vec::new();
+        for s in &self.shards {
+            match per.iter_mut().find(|(r, _)| *r == s.replica) {
+                Some((_, c)) => *c += s.metrics.total_cycles(),
+                None => per.push((s.replica, s.metrics.total_cycles())),
+            }
+        }
+        per.into_iter().map(|(_, c)| c).max().unwrap_or(0)
     }
 
     /// Sum of per-shard cycles — what one replica running the shards back
@@ -381,6 +413,33 @@ impl Driver {
     /// [`RunMetrics`] components exactly (see `accel::trace`).
     pub fn take_trace(&mut self) -> Option<RunTrace> {
         self.soc.tracer.as_mut().map(|t| t.drain())
+    }
+
+    /// Arm a deterministic fault-injection plan on this driver's SoC
+    /// (`None` disarms). Off by default, exactly like the tracer: a
+    /// disarmed driver allocates nothing and pays one discriminant check
+    /// per DMA site, and a rate-0 plan with no scheduled hard-fail is
+    /// cycle-identical to no plan at all.
+    pub fn set_fault_plan(&mut self, plan: Option<super::fault::FaultPlan>) {
+        self.soc.faults = plan;
+    }
+
+    /// Is a fault-injection plan armed?
+    pub fn fault_plan_enabled(&self) -> bool {
+        self.soc.faults.is_some()
+    }
+
+    /// Faults injected on this driver since its plan was armed (fatal
+    /// and non-fatal stalls both count; 0 with no plan).
+    pub fn faults_injected(&self) -> u64 {
+        self.soc.faults.as_ref().map_or(0, |p| p.injected())
+    }
+
+    /// Emit a [`SpanKind::FaultRetry`] marker (0 simulated cycles) so a
+    /// failover is visible on the trace timeline. No-op when tracing is
+    /// off — same contract as every other span site.
+    pub fn note_fault_retry(&mut self) {
+        self.soc.trace(SpanKind::FaultRetry, 0);
     }
 
     /// `(plan-cache hits, plan compiles)` since this driver came up.
@@ -814,6 +873,18 @@ impl Driver {
                 plan.epoch, self.arena_epoch
             )));
         }
+        // a scheduled hard-fail drops the board before any layer runs —
+        // the run counter advances either way, so the schedule stays
+        // deterministic across retries on other replicas
+        if let Some(p) = self.soc.faults.as_mut() {
+            if let Some(kind) = p.begin_run() {
+                return Err(Error::Fault {
+                    kind,
+                    replica: p.replica(),
+                    layer: 0,
+                });
+            }
+        }
         // resident claims only have meaning within one run; drop anything
         // a previous (possibly aborted) run left behind
         self.soc.clear_resident();
@@ -875,6 +946,36 @@ impl Driver {
         plan: &ShardPlan,
         assignments: &[usize],
     ) -> Result<ShardedMetrics> {
+        let attempts = Self::run_table_sharded_results(replicas, tables, plan, assignments)?;
+        let mut shards = Vec::with_capacity(attempts.len());
+        for a in attempts {
+            let metrics = a.result.map_err(|e| {
+                Error::Cluster(format!("shard {} on replica {}: {e}", a.shard, a.replica))
+            })?;
+            shards.push(ShardRun {
+                shard: a.shard,
+                replica: a.replica,
+                metrics,
+            });
+        }
+        Ok(ShardedMetrics {
+            shards,
+            ..Default::default()
+        })
+    }
+
+    /// The fault-aware core of [`Driver::run_table_sharded`]: identical
+    /// validation, plan sharing and concurrent dispatch, but each shard's
+    /// outcome comes back as its own [`ShardAttempt`] `Result` instead of
+    /// the first failure poisoning the whole dispatch — the raw material
+    /// the cluster's retry/failover layer works from. The outer `Result`
+    /// covers setup errors only (bad placements, compile failures).
+    pub fn run_table_sharded_results(
+        replicas: &mut [Driver],
+        tables: &[&[LayerDesc]],
+        plan: &ShardPlan,
+        assignments: &[usize],
+    ) -> Result<Vec<ShardAttempt>> {
         if assignments.len() != plan.len() {
             return Err(Error::Cluster(format!(
                 "{} assignments for {} shards",
@@ -949,18 +1050,14 @@ impl Driver {
                 .collect()
         });
         results.sort_by_key(|&(shard, ..)| shard);
-        let mut shards = Vec::with_capacity(results.len());
-        for (shard, replica, res) in results {
-            let metrics = res.map_err(|e| {
-                Error::Cluster(format!("shard {shard} on replica {replica}: {e}"))
-            })?;
-            shards.push(ShardRun {
+        Ok(results
+            .into_iter()
+            .map(|(shard, replica, result)| ShardAttempt {
                 shard,
                 replica,
-                metrics,
-            });
-        }
-        Ok(ShardedMetrics { shards })
+                result,
+            })
+            .collect())
     }
 }
 

@@ -1,0 +1,297 @@
+//! Deterministic fault injection: the schedule of board/DMA faults the
+//! robustness layer is tested against.
+//!
+//! A [`FaultPlan`] is armed on a `Soc` behind an `Option`, exactly like the
+//! execution tracer: `None` by default, no allocation when disabled, and a
+//! single discriminant check per would-be injection site. Injection never
+//! mutates a cycle counter on its own — a plan with `rate == 0.0` and no
+//! scheduled hard-fail produces bit-identical [`super::RunMetrics`] to no
+//! plan at all (pinned by `rust/tests/fault_tolerance.rs`).
+//!
+//! Faults are *sampled deterministically*: the plan owns a seeded
+//! xorshift64 stream, so the same seed over the same run sequence injects
+//! the same faults — CI can assert exact recovery behavior. Every fatal
+//! fault surfaces as a typed [`crate::error::Error::Fault`], never a
+//! panic; the one non-fatal kind ([`FaultKind::StuckReplica`]) models a
+//! late board by charging extra DMA cycles and letting the run complete.
+
+use std::fmt;
+
+/// What kind of fault was injected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FaultKind {
+    /// A DMA burst failed mid-transfer (activation staging).
+    DmaTransfer,
+    /// A weight load came back with a bad checksum (detected corruption).
+    WeightCorruption,
+    /// The replica is stuck/late: the transfer completes but charges
+    /// extra cycles. Non-fatal — the run finishes with honest (higher)
+    /// cycle counts.
+    StuckReplica,
+    /// The replica hard-fails at run granularity (board dropped off the
+    /// bus): scheduled for one specific run, fails before any layer
+    /// executes.
+    HardFail,
+}
+
+impl FaultKind {
+    /// Stable lower-snake name (metrics labels, log lines).
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::DmaTransfer => "dma_transfer",
+            FaultKind::WeightCorruption => "weight_corruption",
+            FaultKind::StuckReplica => "stuck_replica",
+            FaultKind::HardFail => "hard_fail",
+        }
+    }
+}
+
+impl fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Where in the SoC's execution a fault could be injected. Only sites
+/// that model real DMA traffic are probed — cache hits and
+/// scratchpad-resident hand-offs involve no transfer and cannot fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Activation staging, DRAM → scratchpad.
+    DmaIn,
+    /// Weight/bias/tap staging, DRAM → scratchpad (weight-cache miss).
+    WeightLoad,
+}
+
+/// Configuration of a deterministic fault schedule.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Seed for the xorshift64 sampling stream. Two plans with the same
+    /// seed inject identically over the same run sequence.
+    pub seed: u64,
+    /// Per-site injection probability in `[0, 1]`. `0.0` disables
+    /// sampling entirely (the PRNG is not even advanced), so a rate-0
+    /// plan is cycle-identical to no plan.
+    pub rate: f64,
+    /// Extra DMA cycles a [`FaultKind::StuckReplica`] injection charges.
+    pub stall_cycles: u64,
+    /// Hard-fail the replica on exactly this run index (0-based, counted
+    /// by [`FaultPlan::begin_run`]). `None` disables the schedule.
+    pub hard_fail_run: Option<u64>,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            seed: 1,
+            rate: 0.0,
+            stall_cycles: 10_000,
+            hard_fail_run: None,
+        }
+    }
+}
+
+/// What an injection site probe decided.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultOutcome {
+    /// No fault at this site.
+    None,
+    /// Non-fatal stall: charge this many extra DMA cycles and continue.
+    Stall(u64),
+    /// Fatal fault of this kind: the run must error out.
+    Fail(FaultKind),
+}
+
+/// A seeded, deterministic fault schedule armed on one replica's `Soc`.
+///
+/// Scalar-only state: arming a plan allocates nothing, and a disabled
+/// (`rate == 0`, no hard-fail) plan's probes are two compares.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    cfg: FaultConfig,
+    /// xorshift64 state; never 0.
+    rng: u64,
+    /// Runs started under this plan (drives the hard-fail schedule).
+    runs: u64,
+    /// Faults injected since the plan was armed (fatal + stalls).
+    injected: u64,
+    /// Replica tag stamped into surfaced `Error::Fault`s (set by the
+    /// cluster when arming per-replica plans; 0 for a standalone driver).
+    replica: usize,
+}
+
+impl FaultPlan {
+    /// Arm a schedule from `cfg`.
+    pub fn new(cfg: FaultConfig) -> Self {
+        FaultPlan {
+            cfg,
+            // the same seed-whitening constant the stats reservoir uses;
+            // a zero seed must not produce the degenerate all-zero stream
+            rng: cfg.seed ^ 0x9E37_79B9_7F4A_7C15,
+            runs: 0,
+            injected: 0,
+            replica: 0,
+        }
+    }
+
+    /// Tag the plan with the replica it is armed on, so surfaced faults
+    /// name their failure domain.
+    pub fn with_replica(mut self, replica: usize) -> Self {
+        self.replica = replica;
+        self
+    }
+
+    /// The replica this plan is armed on.
+    pub fn replica(&self) -> usize {
+        self.replica
+    }
+
+    /// The schedule's configuration.
+    pub fn config(&self) -> FaultConfig {
+        self.cfg
+    }
+
+    /// Faults injected since arming (fatal and stalls both count).
+    pub fn injected(&self) -> u64 {
+        self.injected
+    }
+
+    /// Mark the start of a run. Returns `Some(HardFail)` when the
+    /// schedule says this exact run drops the board.
+    pub fn begin_run(&mut self) -> Option<FaultKind> {
+        let run = self.runs;
+        self.runs += 1;
+        if self.cfg.hard_fail_run == Some(run) {
+            self.injected += 1;
+            return Some(FaultKind::HardFail);
+        }
+        None
+    }
+
+    /// Probe one DMA site. Deterministic in the (seed, probe-sequence)
+    /// pair; a rate-0 plan never advances the PRNG, so arming it is
+    /// behaviorally invisible.
+    pub fn probe(&mut self, site: FaultSite) -> FaultOutcome {
+        if !(self.cfg.rate > 0.0) {
+            return FaultOutcome::None;
+        }
+        if self.draw() >= self.cfg.rate {
+            return FaultOutcome::None;
+        }
+        self.injected += 1;
+        // second draw picks the kind: ~1/4 of injections are non-fatal
+        // stalls, the rest fail the transfer with the site's fatal kind
+        if self.draw() < 0.25 {
+            FaultOutcome::Stall(self.cfg.stall_cycles)
+        } else {
+            FaultOutcome::Fail(match site {
+                FaultSite::DmaIn => FaultKind::DmaTransfer,
+                FaultSite::WeightLoad => FaultKind::WeightCorruption,
+            })
+        }
+    }
+
+    /// Uniform draw in `[0, 1)` from the xorshift64 stream.
+    fn draw(&mut self) -> f64 {
+        self.rng ^= self.rng << 13;
+        self.rng ^= self.rng >> 7;
+        self.rng ^= self.rng << 17;
+        (self.rng >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_injects_identically() {
+        let cfg = FaultConfig {
+            seed: 7,
+            rate: 0.3,
+            ..Default::default()
+        };
+        let mut a = FaultPlan::new(cfg);
+        let mut b = FaultPlan::new(cfg);
+        for _ in 0..256 {
+            assert_eq!(a.probe(FaultSite::DmaIn), b.probe(FaultSite::DmaIn));
+        }
+        assert_eq!(a.injected(), b.injected());
+        assert!(a.injected() > 0, "rate 0.3 over 256 probes must inject");
+    }
+
+    #[test]
+    fn rate_zero_never_injects_or_advances() {
+        let mut p = FaultPlan::new(FaultConfig::default());
+        for _ in 0..64 {
+            assert_eq!(p.probe(FaultSite::WeightLoad), FaultOutcome::None);
+            assert!(p.begin_run().is_none());
+        }
+        assert_eq!(p.injected(), 0);
+    }
+
+    #[test]
+    fn hard_fail_fires_on_exactly_the_scheduled_run() {
+        let mut p = FaultPlan::new(FaultConfig {
+            hard_fail_run: Some(2),
+            ..Default::default()
+        });
+        assert!(p.begin_run().is_none());
+        assert!(p.begin_run().is_none());
+        assert_eq!(p.begin_run(), Some(FaultKind::HardFail));
+        assert!(p.begin_run().is_none(), "fires once, not every later run");
+        assert_eq!(p.injected(), 1);
+    }
+
+    #[test]
+    fn rate_one_faults_every_site() {
+        let mut p = FaultPlan::new(FaultConfig {
+            seed: 3,
+            rate: 1.0,
+            stall_cycles: 500,
+            ..Default::default()
+        });
+        let mut stalls = 0;
+        let mut fails = 0;
+        for _ in 0..128 {
+            match p.probe(FaultSite::DmaIn) {
+                FaultOutcome::Stall(c) => {
+                    assert_eq!(c, 500);
+                    stalls += 1;
+                }
+                FaultOutcome::Fail(k) => {
+                    assert_eq!(k, FaultKind::DmaTransfer);
+                    fails += 1;
+                }
+                FaultOutcome::None => panic!("rate 1.0 must always inject"),
+            }
+        }
+        assert_eq!(stalls + fails, 128);
+        assert!(stalls > 0 && fails > 0, "both kinds appear over 128 draws");
+        assert_eq!(p.injected(), 128);
+    }
+
+    #[test]
+    fn weight_site_fails_as_corruption() {
+        let mut p = FaultPlan::new(FaultConfig {
+            seed: 11,
+            rate: 1.0,
+            ..Default::default()
+        });
+        let saw_corruption = (0..64).any(|_| {
+            matches!(
+                p.probe(FaultSite::WeightLoad),
+                FaultOutcome::Fail(FaultKind::WeightCorruption)
+            )
+        });
+        assert!(saw_corruption);
+    }
+
+    #[test]
+    fn kind_names_are_stable() {
+        assert_eq!(FaultKind::DmaTransfer.to_string(), "dma_transfer");
+        assert_eq!(FaultKind::WeightCorruption.to_string(), "weight_corruption");
+        assert_eq!(FaultKind::StuckReplica.to_string(), "stuck_replica");
+        assert_eq!(FaultKind::HardFail.to_string(), "hard_fail");
+    }
+}

@@ -4,6 +4,10 @@
 //! * [`desc`] — layer descriptors (the "instructions to configure systolic
 //!   cells" of §III) with a packed u32 in-memory format and the versioned
 //!   fusion side-band ([`desc::FusionCtl`]),
+//! * [`fault`] — deterministic, seeded fault injection: a [`FaultPlan`]
+//!   armed on a SoC (off by default, zero-cost when disabled) samples
+//!   DMA/weight-load faults, stalls and run-granular hard-fails so the
+//!   retry/failover machinery above it can be tested reproducibly,
 //! * [`fusion`] — the layer-fusion planner: producer→consumer chains
 //!   whose intermediates fit the scratchpad budget skip the DRAM round
 //!   trip (whole-buffer or row-band-tiled residency),
@@ -28,6 +32,7 @@
 
 pub mod desc;
 pub mod driver;
+pub mod fault;
 pub mod fusion;
 pub mod plan;
 pub mod soc;
@@ -35,7 +40,8 @@ pub mod trace;
 pub mod verify;
 
 pub use desc::{FusionCtl, LayerDesc};
-pub use driver::{Driver, DriverCacheStats, RunMetrics, ShardRun, ShardedMetrics};
+pub use driver::{Driver, DriverCacheStats, RunMetrics, ShardAttempt, ShardRun, ShardedMetrics};
+pub use fault::{FaultConfig, FaultKind, FaultPlan};
 pub use fusion::{FuseMode, FusedEdge, FusionGroup, FusionPlan};
 pub use plan::{CompiledPlan, PlanCache, PlanKey};
 pub use soc::{Soc, SocConfig};

@@ -91,6 +91,7 @@
 //! re-pays its DMA every run, as it would in hardware).
 
 use super::desc::{FusionCtl, LayerDesc, DESC_WORDS};
+use super::fault::{FaultOutcome, FaultPlan, FaultSite};
 use super::fusion::FusionPlan;
 use super::trace::{SpanKind, TraceRing};
 use crate::cache::{BoundedLru, CacheStats};
@@ -283,6 +284,13 @@ pub struct Soc {
     /// SoC charges is attributed to a typed span; tracing never mutates a
     /// cycle counter, so enabling it cannot perturb the simulation.
     pub(crate) tracer: Option<TraceRing>,
+    /// Fault-injection plan: `None` (the default) costs nothing — no
+    /// allocation, one discriminant check per DMA site. When armed (see
+    /// `Driver::set_fault_plan`), DMA and weight-load transfers are
+    /// probed against the deterministic schedule; fatal injections
+    /// surface as typed `Error::Fault`s, stalls charge honest extra DMA
+    /// cycles.
+    pub(crate) faults: Option<FaultPlan>,
     cfg: SocConfig,
 }
 
@@ -311,7 +319,31 @@ impl Soc {
             lookahead: None,
             weight_cache: BoundedLru::new(weight_budget, |_, v| v.len()),
             tracer: None,
+            faults: None,
             cfg,
+        }
+    }
+
+    /// Probe the fault-injection plan at a DMA site. Zero-cost when no
+    /// plan is armed (one discriminant check). A stall charges extra DMA
+    /// cycles (a late board, not a failed one); a fatal injection
+    /// surfaces as a typed [`Error::Fault`] — never a panic.
+    #[inline]
+    fn fault_at(&mut self, site: FaultSite) -> Result<()> {
+        let Some(p) = self.faults.as_mut() else {
+            return Ok(());
+        };
+        match p.probe(site) {
+            FaultOutcome::None => Ok(()),
+            FaultOutcome::Stall(c) => {
+                self.dma.cycles += c;
+                Ok(())
+            }
+            FaultOutcome::Fail(kind) => Err(Error::Fault {
+                kind,
+                replica: p.replica(),
+                layer: self.layers_run as usize,
+            }),
         }
     }
 
@@ -396,6 +428,9 @@ impl Soc {
         if let Some(w) = self.weight_cache.get(&key) {
             return Ok((w.clone(), 0));
         }
+        // cache hits issue no transfer and cannot fault; a miss is a real
+        // DRAM burst whose checksum the injection schedule may fail
+        self.fault_at(FaultSite::WeightLoad)?;
         let credit = self.prefetched.remove(&key).unwrap_or(0);
         let (data, hideable) = if self.pipeline_on {
             let (data, cost) = self.dma.load_staged(
@@ -826,6 +861,9 @@ impl Soc {
                 "read [{dram_addr:#x}, +{len}) overlaps a fused-resident region out of order"
             )));
         }
+        // scratchpad-resident consumes above issue no DMA and cannot
+        // fault; this is the real DRAM transfer the schedule probes
+        self.fault_at(FaultSite::DmaIn)?;
         let (data, cost) = self.stage_in(dram_addr as usize, len)?;
         Ok((data, cost, None))
     }

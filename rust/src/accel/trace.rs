@@ -55,11 +55,15 @@ pub enum SpanKind {
     PlanCompile,
     /// Host-side static plan verification (0 simulated cycles).
     PlanVerify,
+    /// A failed shard was retried on another replica (0 simulated cycles;
+    /// marks failover events on the timeline so degraded dispatches are
+    /// visible in Perfetto exports).
+    FaultRetry,
 }
 
 impl SpanKind {
     /// Every kind, in declaration order (metrics/table iteration).
-    pub const ALL: [SpanKind; 9] = [
+    pub const ALL: [SpanKind; 10] = [
         SpanKind::Compute,
         SpanKind::Reconfig,
         SpanKind::DmaIn,
@@ -69,6 +73,7 @@ impl SpanKind {
         SpanKind::FusionSkip,
         SpanKind::PlanCompile,
         SpanKind::PlanVerify,
+        SpanKind::FaultRetry,
     ];
 
     /// Stable lower-snake name (trace JSON categories, metrics labels).
@@ -83,6 +88,7 @@ impl SpanKind {
             SpanKind::FusionSkip => "fusion_skip",
             SpanKind::PlanCompile => "plan_compile",
             SpanKind::PlanVerify => "plan_verify",
+            SpanKind::FaultRetry => "fault_retry",
         }
     }
 
@@ -247,7 +253,7 @@ impl LayerCycles {
             SpanKind::WeightLoad => self.weight_load += cycles,
             SpanKind::OverlapCredit => self.overlapped += cycles,
             SpanKind::FusionSkip => self.fused_saved += cycles,
-            SpanKind::PlanCompile | SpanKind::PlanVerify => {}
+            SpanKind::PlanCompile | SpanKind::PlanVerify | SpanKind::FaultRetry => {}
         }
         self.spans += 1;
     }
@@ -321,7 +327,10 @@ impl RunTrace {
     pub fn layer_totals(&self) -> Vec<LayerCycles> {
         let mut rows: Vec<LayerCycles> = Vec::new();
         for ev in &self.events {
-            if matches!(ev.kind, SpanKind::PlanCompile | SpanKind::PlanVerify) {
+            if matches!(
+                ev.kind,
+                SpanKind::PlanCompile | SpanKind::PlanVerify | SpanKind::FaultRetry
+            ) {
                 continue;
             }
             let i = ev.layer as usize;
@@ -406,7 +415,7 @@ impl RunTrace {
                             e.start_cycle + 1
                         ));
                     }
-                    SpanKind::PlanCompile | SpanKind::PlanVerify => {
+                    SpanKind::PlanCompile | SpanKind::PlanVerify | SpanKind::FaultRetry => {
                         parts.push(format!(
                             "{{\"name\":\"{0}\",\"cat\":\"plan\",\"ph\":\"i\",\
                              \"s\":\"t\",\"pid\":{shard},\"tid\":0,\"ts\":{1}}}",

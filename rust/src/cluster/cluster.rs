@@ -11,7 +11,8 @@
 
 use super::plan::ShardPlan;
 use super::scheduler::Scheduler;
-use crate::accel::driver::ShardedMetrics;
+use crate::accel::driver::{ShardAttempt, ShardedMetrics};
+use crate::accel::fault::FaultPlan;
 use crate::accel::trace::RunTrace;
 use crate::accel::{Driver, DriverCacheStats, LayerDesc, SocConfig};
 use crate::error::{Error, Result};
@@ -141,6 +142,19 @@ impl Cluster {
         !self.drivers.is_empty() && self.drivers.iter().all(|d| d.tracing_enabled())
     }
 
+    /// Arm a deterministic fault-injection plan on one replica (`None`
+    /// disarms). The plan is stamped with the replica index so surfaced
+    /// `Error::Fault`s name their failure domain.
+    pub fn set_fault_plan(&mut self, replica: usize, plan: Option<FaultPlan>) {
+        self.drivers[replica].set_fault_plan(plan.map(|p| p.with_replica(replica)));
+    }
+
+    /// Faults injected across every replica since their plans were armed
+    /// (cumulative; 0 with no plans).
+    pub fn faults_injected(&self) -> u64 {
+        self.drivers.iter().map(|d| d.faults_injected()).sum()
+    }
+
     /// Drain every replica's trace ring and stitch the spans into one
     /// [`RunTrace`], tagging each replica's events with the shard it ran
     /// (from `m`'s placement). When several shards landed on one replica
@@ -180,6 +194,30 @@ impl Cluster {
             sched.complete(run.replica, run.metrics.requests, run.metrics.total_cycles());
         }
         Ok(m)
+    }
+
+    /// Fault-aware variant of [`Cluster::run_assigned`]: per-shard
+    /// `Result`s instead of wholesale failure. Successful shards complete
+    /// into `sched` (so its load view stays truthful), failed shards are
+    /// retired without completion — the caller's retry/failover layer
+    /// (see `NetworkInstance::run_sharded_degraded`) decides what happens
+    /// to them. The outer `Result` covers setup errors only.
+    pub fn run_assigned_results(
+        &mut self,
+        tables: &[&[LayerDesc]],
+        plan: &ShardPlan,
+        assignments: &[usize],
+        sched: &mut Scheduler,
+    ) -> Result<Vec<ShardAttempt>> {
+        let attempts =
+            Driver::run_table_sharded_results(&mut self.drivers, tables, plan, assignments)?;
+        for a in &attempts {
+            match &a.result {
+                Ok(m) => sched.complete(a.replica, m.requests, m.total_cycles()),
+                Err(_) => sched.retire(a.replica, plan.shards[a.shard].len as u64),
+            }
+        }
+        Ok(attempts)
     }
 }
 

@@ -51,6 +51,13 @@ pub struct Scheduler {
     cycles_per_req: u64,
     /// Cumulative completed cycles per replica (busy time, for reports).
     busy_cycles: Vec<u64>,
+    /// Per-replica quarantine: `Some(end)` bars the replica from
+    /// placement until the scheduler's cycle clock reaches `end` *and* a
+    /// health probe readmits it. `None` = healthy.
+    quarantined: Vec<Option<u64>>,
+    /// Scheduler-local cycle clock, advanced by completed work — the
+    /// time base probation is measured against.
+    clock: u64,
 }
 
 impl Scheduler {
@@ -65,6 +72,8 @@ impl Scheduler {
             in_flight: vec![0; replicas],
             cycles_per_req: 1,
             busy_cycles: vec![0; replicas],
+            quarantined: vec![None; replicas],
+            clock: 0,
         })
     }
 
@@ -91,16 +100,70 @@ impl Scheduler {
         &self.busy_cycles
     }
 
+    /// Bar a replica from placement for `probation_cycles` of completed
+    /// cluster work. After probation it stays barred until a successful
+    /// health probe calls [`Scheduler::readmit`].
+    pub fn quarantine(&mut self, replica: usize, probation_cycles: u64) {
+        if let Some(q) = self.quarantined.get_mut(replica) {
+            *q = Some(self.clock.saturating_add(probation_cycles));
+        }
+    }
+
+    /// Is the replica currently barred from placement?
+    pub fn is_quarantined(&self, replica: usize) -> bool {
+        self.quarantined.get(replica).is_some_and(|q| q.is_some())
+    }
+
+    /// Has a quarantined replica served out its cycle-based probation
+    /// (making it eligible for a health probe)? `false` for healthy
+    /// replicas.
+    pub fn probation_over(&self, replica: usize) -> bool {
+        self.quarantined
+            .get(replica)
+            .and_then(|q| *q)
+            .is_some_and(|end| self.clock >= end)
+    }
+
+    /// Readmit a replica after a successful health probe.
+    pub fn readmit(&mut self, replica: usize) {
+        if let Some(q) = self.quarantined.get_mut(replica) {
+            *q = None;
+        }
+    }
+
+    /// Replicas currently quarantined.
+    pub fn quarantined_replicas(&self) -> Vec<usize> {
+        (0..self.quarantined.len())
+            .filter(|&r| self.quarantined[r].is_some())
+            .collect()
+    }
+
+    /// Replicas currently eligible for placement.
+    pub fn healthy_count(&self) -> usize {
+        self.quarantined.iter().filter(|q| q.is_none()).count()
+    }
+
+    /// The healthy replica with the least in-flight work, skipping any in
+    /// `exclude` (the replica whose shard just faulted must not retry
+    /// onto itself). Ties go to the lowest index; `None` when every
+    /// candidate is quarantined or excluded.
+    pub fn pick_healthy(&self, exclude: &[usize]) -> Option<usize> {
+        (0..self.in_flight.len())
+            .filter(|&r| !self.is_quarantined(r) && !exclude.contains(&r))
+            .min_by_key(|&r| (self.in_flight[r], r))
+    }
+
     /// Assign every shard of `plan` to a distinct replica and mark the
     /// work in flight. Errors when the plan holds more shards than there
     /// are replicas (one shard's inputs would overwrite another's DRAM
     /// region on the shared replica).
     pub fn assign_plan(&mut self, plan: &ShardPlan) -> Result<Vec<usize>> {
         let n = self.in_flight.len();
-        if plan.len() > n {
+        if plan.len() > self.healthy_count() {
             return Err(Error::Cluster(format!(
-                "plan has {} shards but the cluster has {n} replicas",
-                plan.len()
+                "plan has {} shards but the cluster has {} healthy replicas of {n}",
+                plan.len(),
+                self.healthy_count()
             )));
         }
         let order: Vec<usize> = match self.policy {
@@ -120,7 +183,14 @@ impl Scheduler {
                 idx
             }
         };
-        let assignments: Vec<usize> = order.into_iter().take(plan.len()).collect();
+        // quarantined replicas drop out of the candidate order; with
+        // nothing quarantined this filter is the identity, so the pinned
+        // rotation behavior is unchanged
+        let assignments: Vec<usize> = order
+            .into_iter()
+            .filter(|&r| !self.is_quarantined(r))
+            .take(plan.len())
+            .collect();
         for (shard, &r) in plan.shards.iter().zip(&assignments) {
             self.in_flight[r] += shard.len as u64;
         }
@@ -132,6 +202,7 @@ impl Scheduler {
     /// replica's busy time and the learned per-request estimate.
     pub fn complete(&mut self, replica: usize, requests: u64, cycles: u64) {
         self.retire(replica, requests);
+        self.clock = self.clock.saturating_add(cycles);
         if let Some(b) = self.busy_cycles.get_mut(replica) {
             *b += cycles;
         }
@@ -222,6 +293,48 @@ mod tests {
         let mut s = Scheduler::new(SchedulePolicy::RoundRobin, 2).unwrap();
         let plan = ShardPlan::split(9, 3).unwrap();
         assert!(s.assign_plan(&plan).is_err());
+    }
+
+    #[test]
+    fn quarantine_bars_placement_until_probation_and_readmission() {
+        let mut s = Scheduler::new(SchedulePolicy::RoundRobin, 3).unwrap();
+        s.quarantine(1, 1000);
+        assert!(s.is_quarantined(1));
+        assert_eq!(s.healthy_count(), 2);
+        assert_eq!(s.quarantined_replicas(), vec![1]);
+        assert!(!s.probation_over(1), "clock has not advanced yet");
+        // placement skips the quarantined replica
+        let one = ShardPlan::split(3, 1).unwrap();
+        assert_eq!(s.assign_plan(&one).unwrap(), vec![0]);
+        assert_eq!(s.assign_plan(&one).unwrap(), vec![2], "1 is barred");
+        // two shards over two healthy replicas still place; three cannot
+        s.retire(0, 3);
+        s.retire(2, 3);
+        let two = ShardPlan::split(6, 2).unwrap();
+        let asg = s.assign_plan(&two).unwrap();
+        assert!(!asg.contains(&1), "{asg:?}");
+        let three = ShardPlan::split(9, 3).unwrap();
+        assert!(s.assign_plan(&three).is_err(), "only 2 healthy replicas");
+        // completed work advances the clock past probation
+        s.complete(0, 3, 600);
+        s.complete(2, 3, 600);
+        assert!(s.probation_over(1), "1200 cycles ≥ 1000-cycle probation");
+        assert!(s.is_quarantined(1), "probation alone does not readmit");
+        s.readmit(1);
+        assert!(!s.is_quarantined(1));
+        assert_eq!(s.healthy_count(), 3);
+    }
+
+    #[test]
+    fn pick_healthy_prefers_idle_and_respects_exclusions() {
+        let mut s = Scheduler::new(SchedulePolicy::LeastOutstandingCycles, 3).unwrap();
+        let one = ShardPlan::split(4, 1).unwrap();
+        assert_eq!(s.assign_plan(&one).unwrap(), vec![0]);
+        // 1 and 2 are idle; the faulted replica 1 is excluded
+        assert_eq!(s.pick_healthy(&[1]), Some(2));
+        s.quarantine(2, 100);
+        assert_eq!(s.pick_healthy(&[1]), Some(0), "2 quarantined, 1 excluded");
+        assert_eq!(s.pick_healthy(&[0, 1]), None, "nobody left");
     }
 
     #[test]

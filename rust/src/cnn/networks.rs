@@ -4,6 +4,7 @@
 
 use super::layers::{Layer, LayerShape};
 use super::tensor::{self, Tensor};
+use crate::accel::driver::ShardRun;
 use crate::accel::{
     CompiledPlan, Driver, FusionGroup, FusionPlan, LayerDesc, RunMetrics, ShardedMetrics,
 };
@@ -11,6 +12,15 @@ use std::sync::Arc;
 use crate::cluster::{Cluster, ShardPlan, Scheduler};
 use crate::error::{Error, Result};
 use crate::systolic::PoolKind;
+
+/// Bounded retry attempts [`ClusterDeployment::run_sharded`] grants each
+/// failed shard before its requests surface errors.
+pub const DEFAULT_SHARD_RETRIES: usize = 2;
+
+/// Cycle-based probation a faulted replica serves (measured on the
+/// scheduler's completed-work clock) before the routine re-admission
+/// sweep will health-probe it. Emergency capacity probes ignore it.
+pub const FAULT_PROBATION_CYCLES: u64 = 50_000;
 
 /// Which network.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -422,7 +432,20 @@ impl NetworkInstance {
             .iter_mut()
             .map(|drv| self.deploy_batched(drv, max_batch_per_shard))
             .collect::<Result<Vec<_>>>()?;
-        Ok(ClusterDeployment { deps })
+        // health-probe material: one deterministic input and its golden
+        // logits, fixed at deploy time — a replica is readmitted after a
+        // fault only by reproducing these bit-exactly
+        let dims = match &self.net.input {
+            LayerShape::Chw(c, h, w) => vec![*c, *h, *w],
+            LayerShape::Flat(n) => vec![*n],
+        };
+        let probe = Tensor::random(dims, 127, 0xFA01);
+        let probe_logits = self.forward_ref(&probe)?.data;
+        Ok(ClusterDeployment {
+            deps,
+            probe_input: probe.data,
+            probe_logits,
+        })
     }
 }
 
@@ -484,6 +507,12 @@ impl Deployment {
 pub struct ClusterDeployment {
     /// Per-replica deployments, indexed by replica.
     pub deps: Vec<Deployment>,
+    /// Deterministic health-probe input (one image), fixed at deploy time.
+    pub probe_input: Vec<i64>,
+    /// Golden logits for `probe_input` from the host reference pass — a
+    /// quarantined replica must reproduce them bit-exactly to be
+    /// readmitted.
+    pub probe_logits: Vec<i64>,
 }
 
 impl ClusterDeployment {
@@ -513,13 +542,83 @@ impl ClusterDeployment {
     /// replica, run all shards concurrently (one batched descriptor-table
     /// run per replica), and read the outputs back in request order.
     /// Returns per-request logits plus the [`ShardedMetrics`] aggregate
-    /// (total = max over shards).
+    /// (total = max over replicas' serial work).
+    ///
+    /// Strict wrapper over [`ClusterDeployment::run_sharded_degraded`]
+    /// with [`DEFAULT_SHARD_RETRIES`]: a faulted shard is retried on a
+    /// healthy replica transparently (the metrics record the recovery);
+    /// only a shard that exhausts its retries fails the whole call.
     pub fn run_sharded(
         &self,
         cluster: &mut Cluster,
         sched: &mut Scheduler,
         inputs: &[&[i64]],
     ) -> Result<(Vec<Vec<i64>>, ShardedMetrics)> {
+        let (outs, metrics) =
+            self.run_sharded_degraded(cluster, sched, inputs, DEFAULT_SHARD_RETRIES)?;
+        let mut ok = Vec::with_capacity(outs.len());
+        for (i, o) in outs.into_iter().enumerate() {
+            match o {
+                Ok(v) => ok.push(v),
+                Err(e) => return Err(Error::Cluster(format!("request {i}: {e}"))),
+            }
+        }
+        Ok((ok, metrics))
+    }
+
+    /// Health-probe one replica: run the deploy-time probe image through
+    /// its descriptor table and compare against the golden logits. A
+    /// probe is non-destructive control-plane traffic — it reuses the
+    /// deployed weights/descriptors (which survive a board-reset
+    /// `reset_arena`; plans recompile on demand) and only scribbles the
+    /// replica's input/output activation regions, which every dispatch
+    /// restages anyway. Returns `true` when the replica is bit-exact.
+    pub fn probe_replica(&self, cluster: &mut Cluster, replica: usize) -> bool {
+        let Some(dep) = self.deps.get(replica) else {
+            return false;
+        };
+        let drv = cluster.driver_mut(replica);
+        if drv.write_region(dep.in_addr, &self.probe_input).is_err() {
+            return false;
+        }
+        if drv.run_table_batch(&dep.descs, 1).is_err() {
+            return false;
+        }
+        match drv.read_region(dep.out_addr, dep.out_len) {
+            Ok(got) => got == self.probe_logits,
+            Err(_) => false,
+        }
+    }
+
+    /// Fault-tolerant sharded serve: like
+    /// [`ClusterDeployment::run_sharded`], but per-request `Result`s —
+    /// one faulted shard degrades only its own requests instead of
+    /// poisoning the batch.
+    ///
+    /// Recovery flow per failed shard:
+    /// 1. the faulted replica is board-reset (`reset_arena`) and
+    ///    quarantined for [`FAULT_PROBATION_CYCLES`] of completed work,
+    /// 2. the shard is retried (up to `shard_retries` attempts) on the
+    ///    healthy replica with the least in-flight work, re-staging its
+    ///    inputs there; each attempt emits a `FaultRetry` trace marker,
+    /// 3. a retry that faults quarantines its replica too and moves on,
+    /// 4. exhausted retries surface as per-request errors; sibling
+    ///    shards' logits are unaffected (they are read back *before* any
+    ///    retry reuses a replica's activation regions).
+    ///
+    /// Quarantined replicas re-enter through a health probe: routinely
+    /// once their probation is served, or immediately ("emergency") when
+    /// the healthy set is too small to hold the batch. Degraded runs
+    /// charge honest cycles — [`ShardedMetrics::total_cycles`] is the max
+    /// over each replica's *serial* work, so a failover replica running
+    /// two shards back to back pays for both.
+    pub fn run_sharded_degraded(
+        &self,
+        cluster: &mut Cluster,
+        sched: &mut Scheduler,
+        inputs: &[&[i64]],
+        shard_retries: usize,
+    ) -> Result<(Vec<Result<Vec<i64>>>, ShardedMetrics)> {
         if cluster.len() != self.deps.len() {
             return Err(Error::Cluster(format!(
                 "deployment spans {} replicas but the cluster has {}",
@@ -543,12 +642,37 @@ impl ClusterDeployment {
                 )));
             }
         }
-        let plan = ShardPlan::split(inputs.len(), cluster.len())?;
+        // routine re-admission: any replica that has served out its
+        // probation gets a health probe before this batch is planned
+        for r in sched.quarantined_replicas() {
+            if sched.probation_over(r) && self.probe_replica(cluster, r) {
+                sched.readmit(r);
+            }
+        }
+        // emergency re-admission: when the healthy set cannot hold the
+        // batch, probe the bench immediately — capacity outranks
+        // probation (and this breaks the clock deadlock where errored
+        // batches complete no work, so probation would never end)
+        let per_shard = self.max_shard_batch().max(1);
+        if inputs.len().div_ceil(per_shard) > sched.healthy_count() {
+            for r in sched.quarantined_replicas() {
+                if self.probe_replica(cluster, r) {
+                    sched.readmit(r);
+                }
+            }
+        }
+        let healthy = sched.healthy_count();
+        if healthy == 0 {
+            return Err(Error::Cluster(
+                "no healthy replicas (every probe failed)".into(),
+            ));
+        }
+        let plan = ShardPlan::split(inputs.len(), healthy.min(cluster.len()))?;
         if plan.max_shard_len() > self.max_shard_batch() {
             return Err(Error::Cluster(format!(
-                "batch {} exceeds cluster capacity {} replicas × {} per shard",
+                "batch {} exceeds cluster capacity {} healthy replicas × {} per shard",
                 inputs.len(),
-                self.deps.len(),
+                healthy,
                 self.max_shard_batch()
             )));
         }
@@ -572,23 +696,118 @@ impl ClusterDeployment {
             }
         }
         let tables: Vec<&[LayerDesc]> = self.deps.iter().map(|d| d.descs.as_slice()).collect();
-        let metrics = match cluster.run_assigned(&tables, &plan, &assignments, sched) {
-            Ok(m) => m,
+        let attempts = match cluster.run_assigned_results(&tables, &plan, &assignments, sched) {
+            Ok(a) => a,
             Err(e) => {
-                // run_assigned only completes shards on full success
+                // setup errors never started any shard
                 retire_all(sched);
                 return Err(e);
             }
         };
-        // reassemble outputs in request order
         let out_len = self.out_len();
-        let mut outs = vec![Vec::new(); inputs.len()];
-        for (shard, &r) in plan.shards.iter().zip(&assignments) {
-            let flat = cluster
-                .driver_mut(r)
-                .read_region(self.deps[r].out_addr, shard.len * out_len)?;
-            for (j, chunk) in flat.chunks(out_len).enumerate() {
-                outs[shard.offset + j] = chunk.to_vec();
+        let mut outs: Vec<Result<Vec<i64>>> = Vec::with_capacity(inputs.len());
+        outs.resize_with(inputs.len(), || {
+            Err(Error::Cluster("request was never served".into()))
+        });
+        let mut metrics = ShardedMetrics::default();
+        // read every successful shard back FIRST: a retry re-stages its
+        // inputs into (and runs over) a healthy replica's activation
+        // regions, which would clobber that replica's own outputs
+        let mut failed: Vec<(usize, usize, String)> = Vec::new();
+        for a in attempts {
+            match a.result {
+                Ok(m) => {
+                    let shard = plan.shards[a.shard];
+                    let flat = cluster
+                        .driver_mut(a.replica)
+                        .read_region(self.deps[a.replica].out_addr, shard.len * out_len)?;
+                    for (j, chunk) in flat.chunks(out_len).enumerate() {
+                        outs[shard.offset + j] = Ok(chunk.to_vec());
+                    }
+                    metrics.shards.push(ShardRun {
+                        shard: a.shard,
+                        replica: a.replica,
+                        metrics: m,
+                    });
+                }
+                Err(e) => failed.push((a.shard, a.replica, e.to_string())),
+            }
+        }
+        // bounded retry/failover per failed shard
+        for (shard_idx, faulted, mut last_err) in failed {
+            let shard = plan.shards[shard_idx];
+            sched.quarantine(faulted, FAULT_PROBATION_CYCLES);
+            cluster.driver_mut(faulted).reset_arena();
+            metrics.quarantined += 1;
+            let mut exclude = vec![faulted];
+            let mut served = false;
+            for _ in 0..shard_retries {
+                let target = match sched.pick_healthy(&exclude) {
+                    Some(t) => t,
+                    None => {
+                        // the healthy set is exhausted: emergency-probe
+                        // quarantined replicas this shard has not already
+                        // faulted on
+                        let readmitted = sched
+                            .quarantined_replicas()
+                            .into_iter()
+                            .find(|r| !exclude.contains(r) && self.probe_replica(cluster, *r));
+                        match readmitted {
+                            Some(r) => {
+                                sched.readmit(r);
+                                r
+                            }
+                            None => break,
+                        }
+                    }
+                };
+                metrics.retries += 1;
+                let mut packed = Vec::with_capacity(shard.len * in_len);
+                for input in &inputs[shard.offset..shard.offset + shard.len] {
+                    packed.extend_from_slice(input);
+                }
+                let drv = cluster.driver_mut(target);
+                if let Err(e) = drv.write_region(self.deps[target].in_addr, &packed) {
+                    last_err = e.to_string();
+                    exclude.push(target);
+                    continue;
+                }
+                drv.note_fault_retry();
+                match drv.run_table_batch(&self.deps[target].descs, shard.len as u32) {
+                    Ok(m) => {
+                        let flat = drv
+                            .read_region(self.deps[target].out_addr, shard.len * out_len)?;
+                        sched.complete(target, shard.len as u64, m.total_cycles());
+                        for (j, chunk) in flat.chunks(out_len).enumerate() {
+                            outs[shard.offset + j] = Ok(chunk.to_vec());
+                        }
+                        metrics.shards.push(ShardRun {
+                            shard: shard_idx,
+                            replica: target,
+                            metrics: m,
+                        });
+                        metrics.failovers += 1;
+                        served = true;
+                        break;
+                    }
+                    Err(e) => {
+                        last_err = e.to_string();
+                        sched.quarantine(target, FAULT_PROBATION_CYCLES);
+                        cluster.driver_mut(target).reset_arena();
+                        metrics.quarantined += 1;
+                        exclude.push(target);
+                    }
+                }
+            }
+            if !served {
+                // every attempted replica (original + failed retries) is
+                // in `exclude`, so its length is the honest attempt count
+                for j in 0..shard.len {
+                    outs[shard.offset + j] = Err(Error::Cluster(format!(
+                        "shard {shard_idx}: unserved after {} attempt(s): {last_err}",
+                        exclude.len()
+                    )));
+                }
             }
         }
         Ok((outs, metrics))
@@ -732,6 +951,109 @@ mod tests {
         // instead of indexing out of bounds
         let mut wrong = Scheduler::new(SchedulePolicy::RoundRobin, 5).unwrap();
         assert!(cdep.run_sharded(&mut cluster, &mut wrong, &slices).is_err());
+    }
+
+    #[test]
+    fn sharded_run_fails_over_a_hard_failed_replica_bit_exact() {
+        use crate::accel::{FaultConfig, FaultPlan};
+        use crate::cluster::{ClusterConfig, SchedulePolicy};
+        let inst = NetworkInstance::random(Network::build(NetworkKind::Tiny), 42).unwrap();
+        let mut cluster = Cluster::new(ClusterConfig {
+            replicas: 3,
+            soc: SocConfig {
+                dram_words: 1 << 21,
+                spad_words: 1 << 14,
+                ..Default::default()
+            },
+        })
+        .unwrap();
+        let cdep = inst.deploy_cluster(&mut cluster, 3).unwrap();
+        // replica 0 drops off the bus on its very first run
+        cluster.set_fault_plan(
+            0,
+            Some(FaultPlan::new(FaultConfig {
+                hard_fail_run: Some(0),
+                ..Default::default()
+            })),
+        );
+        let mut sched = Scheduler::new(SchedulePolicy::RoundRobin, 3).unwrap();
+        let inputs: Vec<Tensor> = (0..7)
+            .map(|i| Tensor::random(vec![1, 16, 16], 127, 500 + i as u64))
+            .collect();
+        let slices: Vec<&[i64]> = inputs.iter().map(|t| t.data.as_slice()).collect();
+        let (outs, m) = cdep.run_sharded(&mut cluster, &mut sched, &slices).unwrap();
+        assert_eq!(outs.len(), 7);
+        for (i, t) in inputs.iter().enumerate() {
+            let want = inst.forward_ref(t).unwrap();
+            assert_eq!(outs[i], want.data, "request {i} bit-exact despite the fault");
+        }
+        assert_eq!(m.failovers, 1, "the failed shard moved to a healthy replica");
+        assert_eq!(m.retries, 1);
+        assert_eq!(m.quarantined, 1);
+        assert_eq!(cluster.faults_injected(), 1);
+        assert!(sched.is_quarantined(0), "faulted replica benched");
+        // the retry replica ran two shards serially: honest max cycles
+        assert!(m.total_cycles() > 0);
+        assert_eq!(m.requests(), 7);
+        // next batch needs ceil(7/3)=3 shards but only 2 replicas are
+        // healthy: the emergency probe readmits replica 0 (its scheduled
+        // fault already fired) and the batch runs clean
+        let (outs2, m2) = cdep.run_sharded(&mut cluster, &mut sched, &slices).unwrap();
+        assert!(!sched.is_quarantined(0), "probe readmitted replica 0");
+        assert_eq!(m2.failovers, 0);
+        for (i, t) in inputs.iter().enumerate() {
+            let want = inst.forward_ref(t).unwrap();
+            assert_eq!(outs2[i], want.data, "request {i} after re-admission");
+        }
+    }
+
+    #[test]
+    fn degraded_run_isolates_an_unrecoverable_shard() {
+        use crate::accel::{FaultConfig, FaultPlan};
+        use crate::cluster::{ClusterConfig, SchedulePolicy};
+        let inst = NetworkInstance::random(Network::build(NetworkKind::Tiny), 42).unwrap();
+        let mut cluster = Cluster::new(ClusterConfig {
+            replicas: 2,
+            soc: SocConfig {
+                dram_words: 1 << 21,
+                spad_words: 1 << 14,
+                ..Default::default()
+            },
+        })
+        .unwrap();
+        let cdep = inst.deploy_cluster(&mut cluster, 2).unwrap();
+        cluster.set_fault_plan(
+            0,
+            Some(FaultPlan::new(FaultConfig {
+                hard_fail_run: Some(0),
+                ..Default::default()
+            })),
+        );
+        let mut sched = Scheduler::new(SchedulePolicy::RoundRobin, 2).unwrap();
+        let inputs: Vec<Tensor> = (0..4)
+            .map(|i| Tensor::random(vec![1, 16, 16], 127, 800 + i as u64))
+            .collect();
+        let slices: Vec<&[i64]> = inputs.iter().map(|t| t.data.as_slice()).collect();
+        // zero retries: the faulted shard's requests must fail alone,
+        // while the sibling shard's logits stay bit-exact
+        let (outs, m) = cdep
+            .run_sharded_degraded(&mut cluster, &mut sched, &slices, 0)
+            .unwrap();
+        assert_eq!(outs.len(), 4);
+        let failed = outs.iter().filter(|o| o.is_err()).count();
+        assert_eq!(failed, 2, "exactly the faulted shard's two requests fail");
+        for (i, (o, t)) in outs.iter().zip(&inputs).enumerate() {
+            if let Ok(got) = o {
+                let want = inst.forward_ref(t).unwrap();
+                assert_eq!(got, &want.data, "surviving request {i} bit-exact");
+            } else {
+                let msg = o.as_ref().unwrap_err().to_string();
+                assert!(msg.contains("unserved"), "typed per-request error: {msg}");
+            }
+        }
+        assert_eq!(m.retries, 0);
+        assert_eq!(m.failovers, 0);
+        assert_eq!(m.quarantined, 1);
     }
 
     #[test]

@@ -20,9 +20,10 @@ pub struct InferenceRequest {
 }
 
 /// One inference response. A failed request gets an *explicit* response
-/// with [`InferenceResponse::error`] set (and empty logits) — clients can
-/// always distinguish "my request failed" from "the coordinator shut
-/// down" (which closes the channel instead).
+/// with [`InferenceResponse::error`] set (and empty logits) — shed, dead
+/// shard, expired deadline and shutdown-drained requests all arrive this
+/// way, so a waiting client's `recv()` always yields a response rather
+/// than a disconnected channel.
 #[derive(Clone, Debug)]
 pub struct InferenceResponse {
     /// Request id.

@@ -40,16 +40,24 @@ use super::batcher::{BatchPolicy, Batcher};
 use super::dedup::DedupCache;
 use super::request::{InferenceRequest, InferenceResponse, RequestId};
 use super::stats::StatsCollector;
-use crate::accel::{ShardedMetrics, SocConfig, DEFAULT_RING_CAPACITY};
+use crate::accel::{FaultConfig, FaultPlan, ShardedMetrics, SocConfig, DEFAULT_RING_CAPACITY};
 use crate::cluster::{Cluster, ClusterConfig, SchedulePolicy, Scheduler};
-use crate::cnn::networks::{ClusterDeployment, NetworkInstance};
+use crate::cnn::networks::{ClusterDeployment, NetworkInstance, DEFAULT_SHARD_RETRIES};
 use crate::cnn::tensor::Tensor;
 use crate::error::{Error, Result};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// Lock a mutex, recovering the guard if a previous holder panicked: the
+/// protected state (counters, caches, the batch queue) stays internally
+/// consistent across a panic, so serving must continue rather than
+/// cascade the poison into every worker thread.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Coordinator sizing/policy.
 #[derive(Clone, Debug)]
@@ -112,6 +120,35 @@ pub struct CoordinatorConfig {
     /// Simulated accelerator clock (MHz) used to convert cycles into
     /// simulated service time for reporting.
     pub clock_mhz: f64,
+    /// Bound on requests admitted into the serving pipeline and not yet
+    /// picked up by a worker (`0` = unbounded, the legacy behavior). A
+    /// submission over the bound is **shed** at the front door: it gets
+    /// an immediate, explicit `overloaded` failure response — never a
+    /// dropped channel — and occupies no batcher slot. Set with `serve
+    /// --queue-depth`.
+    pub queue_depth: usize,
+    /// Per-request service deadline. A request older than this when its
+    /// worker forms the batch is failed explicitly *before* the
+    /// accelerator run, so expired work never wastes cycles. `None` =
+    /// no deadline. Set with `serve --deadline-us`.
+    pub deadline: Option<Duration>,
+    /// Deterministic fault-injection seed: `Some` arms a seeded
+    /// [`FaultPlan`] (rate `fault_rate`) on replica 0 of every worker's
+    /// cluster — the robustness drill behind `--fault-seed`. `None`
+    /// (default) leaves every replica unarmed, cycle-identical to the
+    /// pre-fault build.
+    pub fault_seed: Option<u64>,
+    /// Per-DMA-site injection probability used when `fault_seed` is
+    /// armed. Set with `--fault-rate`.
+    pub fault_rate: f64,
+    /// Schedule a one-shot hard failure on replica 0's K-th batch run
+    /// (requires `fault_seed`). Deterministic drills and tests only — no
+    /// CLI flag.
+    pub fault_hard_fail_run: Option<u64>,
+    /// Bounded retry attempts a faulted shard gets on healthy replicas
+    /// before its requests surface per-request errors (sibling requests
+    /// in the batch are unaffected either way).
+    pub shard_retries: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -129,6 +166,12 @@ impl Default for CoordinatorConfig {
             batch: BatchPolicy::default(),
             soc: SocConfig::serving(),
             clock_mhz: 200.0,
+            queue_depth: 0,
+            deadline: None,
+            fault_seed: None,
+            fault_rate: 0.0,
+            fault_hard_fail_run: None,
+            shard_retries: DEFAULT_SHARD_RETRIES,
         }
     }
 }
@@ -152,6 +195,11 @@ struct Worker {
     capacity: usize,
     /// Expected per-request input shape, for upfront validation.
     input_dims: Vec<usize>,
+    /// Bounded retry attempts per faulted shard.
+    shard_retries: usize,
+    /// Cluster-cumulative fault count at the last stats report, so each
+    /// batch records only its own delta.
+    faults_seen: u64,
 }
 
 impl Worker {
@@ -172,6 +220,19 @@ impl Worker {
         // deploy_cluster compiles every replica's full-capacity plan here,
         // at worker start — the per-batch hot loop only executes plans
         let cdep = inst.deploy_cluster(&mut cluster, per_shard)?;
+        if let Some(seed) = cfg.fault_seed {
+            // the drill arms exactly one replica (0) per worker: the
+            // other replicas stay healthy failover targets
+            cluster.set_fault_plan(
+                0,
+                Some(FaultPlan::new(FaultConfig {
+                    seed,
+                    rate: cfg.fault_rate,
+                    hard_fail_run: cfg.fault_hard_fail_run,
+                    ..Default::default()
+                })),
+            );
+        }
         let sched = Scheduler::new(cfg.sched, cfg.shards)?;
         let input_dims = inst.net.input.dims();
         Ok(Worker {
@@ -180,6 +241,8 @@ impl Worker {
             sched,
             capacity: per_shard * cfg.shards,
             input_dims,
+            shard_retries: cfg.shard_retries,
+            faults_seen: 0,
         })
     }
 
@@ -199,9 +262,14 @@ impl Worker {
     /// Run a whole batch sharded across the worker's cluster: split it
     /// data-parallel over the replicas, dispatch one batched
     /// descriptor-table run per shard concurrently, and reassemble the
-    /// per-request logits. Returns the [`ShardedMetrics`] aggregate whose
-    /// total is the max over shards (the parallel-completion model).
-    fn infer_batch(&mut self, inputs: &[&Tensor]) -> Result<(Vec<Vec<i64>>, ShardedMetrics)> {
+    /// per-request logits. Per-request `Result`s: a shard that faults
+    /// past its bounded retries fails only its own requests. Returns the
+    /// [`ShardedMetrics`] aggregate whose total is the max over each
+    /// replica's serial work (the parallel-completion model).
+    fn infer_batch(
+        &mut self,
+        inputs: &[&Tensor],
+    ) -> Result<(Vec<Result<Vec<i64>>>, ShardedMetrics)> {
         let n = inputs.len();
         if n == 0 || n > self.capacity {
             return Err(Error::Coordinator(format!(
@@ -210,7 +278,12 @@ impl Worker {
             )));
         }
         let slices: Vec<&[i64]> = inputs.iter().map(|t| t.data.as_slice()).collect();
-        self.cdep.run_sharded(&mut self.cluster, &mut self.sched, &slices)
+        self.cdep.run_sharded_degraded(
+            &mut self.cluster,
+            &mut self.sched,
+            &slices,
+            self.shard_retries,
+        )
     }
 }
 
@@ -225,6 +298,15 @@ pub struct Coordinator {
     /// immediately and never occupies a batcher slot; workers insert
     /// served results.
     dedup: Option<Arc<Mutex<DedupCache>>>,
+    /// Requests admitted into the pipeline and not yet picked up by a
+    /// worker — the quantity [`CoordinatorConfig::queue_depth`] bounds.
+    queued: Arc<AtomicUsize>,
+    /// The admission bound (0 = unbounded).
+    queue_depth: usize,
+    /// Raised by [`Coordinator::shutdown`] before the channels close:
+    /// workers answer every still-queued request with an explicit
+    /// "shutting down" failure instead of serving (or dropping) it.
+    shutting: Arc<AtomicBool>,
     /// Shared statistics.
     pub stats: Arc<Mutex<StatsCollector>>,
 }
@@ -244,6 +326,8 @@ impl Coordinator {
         let (batch_tx, batch_rx) = channel::<Vec<InferenceRequest>>();
         let batch_rx = Arc::new(Mutex::new(batch_rx));
         let stats = Arc::new(Mutex::new(StatsCollector::new()));
+        let queued = Arc::new(AtomicUsize::new(0));
+        let shutting = Arc::new(AtomicBool::new(false));
         // one activation cache behind the whole front door: a repeat can
         // hit no matter which worker served the original
         let dedup = cfg
@@ -271,22 +355,66 @@ impl Coordinator {
             let rx = Arc::clone(&batch_rx);
             let stats = Arc::clone(&stats);
             let dedup = dedup.clone();
+            let queued = Arc::clone(&queued);
+            let shutting = Arc::clone(&shutting);
+            let deadline = cfg.deadline;
             let handle = std::thread::Builder::new()
                 .name(format!("kom-worker-{wid}"))
                 .spawn(move || loop {
                     let batch = {
-                        let guard = rx.lock().expect("queue poisoned");
+                        // a panicking sibling poisons the shared queue
+                        // mutex; the receiver itself is still coherent, so
+                        // recover the guard and keep serving
+                        let guard = lock_recover(&rx);
                         guard.recv()
                     };
                     let Ok(batch) = batch else { break };
-                    // reject malformed requests with an explicit error
-                    // response before the accelerator batch forms
+                    // these requests have left the admission queue
+                    queued.fetch_sub(batch.len(), Ordering::AcqRel);
+                    if shutting.load(Ordering::Acquire) {
+                        // drain, don't serve: every queued request gets an
+                        // explicit shutdown failure, never a dropped
+                        // channel
+                        for req in batch {
+                            let latency_us = req.submitted.elapsed().as_micros() as u64;
+                            let _ = req.reply.send(InferenceResponse::failure(
+                                req.id,
+                                wid,
+                                latency_us,
+                                "coordinator shutting down".into(),
+                            ));
+                        }
+                        continue;
+                    }
+                    // reject expired and malformed requests with explicit
+                    // error responses before the accelerator batch forms —
+                    // neither may cost accelerator cycles
                     let mut valid = Vec::with_capacity(batch.len());
                     for req in batch {
+                        if let Some(dl) = deadline {
+                            let age = req.submitted.elapsed();
+                            if age > dl {
+                                let mut s = lock_recover(&stats);
+                                s.record_deadline_expired();
+                                s.record_error();
+                                drop(s);
+                                let _ = req.reply.send(InferenceResponse::failure(
+                                    req.id,
+                                    wid,
+                                    age.as_micros() as u64,
+                                    format!(
+                                        "deadline exceeded: waited {}us of {}us",
+                                        age.as_micros(),
+                                        dl.as_micros()
+                                    ),
+                                ));
+                                continue;
+                            }
+                        }
                         match worker.validate(&req.input) {
                             Ok(()) => valid.push(req),
                             Err(e) => {
-                                stats.lock().expect("stats poisoned").record_error();
+                                lock_recover(&stats).record_error();
                                 let latency_us = req.submitted.elapsed().as_micros() as u64;
                                 let _ = req.reply.send(InferenceResponse::failure(
                                     req.id,
@@ -324,12 +452,20 @@ impl Coordinator {
                                 .cluster
                                 .tracing_enabled()
                                 .then(|| worker.cluster.take_stitched_trace(&m));
+                            // fault/recovery telemetry: the injected count
+                            // is cluster-cumulative, so report the delta
+                            let injected = worker.cluster.faults_injected();
+                            let fault_delta = injected - worker.faults_seen;
+                            worker.faults_seen = injected;
+                            let quarantine: Vec<bool> = (0..worker.cluster.len())
+                                .map(|r| worker.sched.is_quarantined(r))
+                                .collect();
                             {
                                 // one lock for the whole batch: the batch
                                 // is charged its critical-path (max over
                                 // shards) cycles once, each shard logs its
                                 // own busy time, requests carry latency
-                                let mut s = stats.lock().expect("stats poisoned");
+                                let mut s = lock_recover(&stats);
                                 s.record_sharded_batch(&per_shard);
                                 s.record_overlapped(m.overlapped_cycles());
                                 s.record_fused_saved(m.fused_saved_cycles());
@@ -341,32 +477,50 @@ impl Coordinator {
                                     m.shards.len() as u64,
                                 );
                                 s.record_cache_stats(wid, &worker.cluster.cache_stats());
+                                s.record_fault_telemetry(fault_delta, m.retries, m.failovers);
+                                s.record_quarantine(wid, &quarantine);
                                 if let Some(t) = &trace {
                                     s.record_trace(t);
                                 }
-                                for &latency_us in &latencies {
-                                    s.record(latency_us, n, 0);
+                                for (&latency_us, out) in latencies.iter().zip(&outs) {
+                                    match out {
+                                        Ok(_) => s.record(latency_us, n, 0),
+                                        Err(_) => s.record_error(),
+                                    }
                                 }
                             }
-                            for ((req, logits), latency_us) in
+                            for ((req, out), latency_us) in
                                 valid.into_iter().zip(outs).zip(latencies)
                             {
-                                if let Some(d) = dedup.as_ref() {
-                                    d.lock()
-                                        .expect("dedup poisoned")
-                                        .insert(&req.input, logits.clone());
+                                match out {
+                                    Ok(logits) => {
+                                        if let Some(d) = dedup.as_ref() {
+                                            lock_recover(d).insert(&req.input, logits.clone());
+                                        }
+                                        let class = class_of(&logits);
+                                        let _ = req.reply.send(InferenceResponse {
+                                            id: req.id,
+                                            logits,
+                                            class,
+                                            latency_us,
+                                            batch_size: n,
+                                            worker: wid,
+                                            accel_cycles: cycles,
+                                            error: None,
+                                        });
+                                    }
+                                    // a shard that exhausted its retries
+                                    // fails its own requests; the rest of
+                                    // the batch was answered normally
+                                    Err(e) => {
+                                        let _ = req.reply.send(InferenceResponse::failure(
+                                            req.id,
+                                            wid,
+                                            latency_us,
+                                            e.to_string(),
+                                        ));
+                                    }
                                 }
-                                let class = class_of(&logits);
-                                let _ = req.reply.send(InferenceResponse {
-                                    id: req.id,
-                                    logits,
-                                    class,
-                                    latency_us,
-                                    batch_size: n,
-                                    worker: wid,
-                                    accel_cycles: cycles,
-                                    error: None,
-                                });
                             }
                         }
                         Err(e) => {
@@ -374,7 +528,7 @@ impl Coordinator {
                             // explicit error, never a dropped channel
                             let msg = e.to_string();
                             {
-                                let mut s = stats.lock().expect("stats poisoned");
+                                let mut s = lock_recover(&stats);
                                 for _ in 0..valid.len() {
                                     s.record_error();
                                 }
@@ -401,6 +555,9 @@ impl Coordinator {
             worker_handles,
             next_id: AtomicU64::new(0),
             dedup,
+            queued,
+            queue_depth: cfg.queue_depth,
+            shutting,
             stats,
         })
     }
@@ -411,6 +568,13 @@ impl Coordinator {
     /// input is answered right here from the activation cache — real
     /// logits, zero accelerator cycles, no batcher slot, no batching
     /// wait — before anything is enqueued.
+    ///
+    /// Behind the cache sits admission control: with a
+    /// [`CoordinatorConfig::queue_depth`] bound, a submission that finds
+    /// the queue full is **shed** — answered immediately with an explicit
+    /// `overloaded` failure response (the call still returns `Ok`; the
+    /// refusal arrives on the reply channel like any other outcome, never
+    /// as a dropped channel).
     pub fn submit(&self, input: Tensor) -> Result<(RequestId, Receiver<InferenceResponse>)> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = channel();
@@ -419,13 +583,10 @@ impl Coordinator {
             // hash outside the lock: concurrent submitters only serialize
             // on the map probe + byte-verify, not on O(input) hashing
             let fp = super::dedup::fingerprint(&input);
-            let cached = d.lock().expect("dedup poisoned").get_keyed(fp, &input);
+            let cached = lock_recover(d).get_keyed(fp, &input);
             if let Some(logits) = cached {
                 let latency_us = submitted.elapsed().as_micros() as u64;
-                self.stats
-                    .lock()
-                    .expect("stats poisoned")
-                    .record_dedup_hit(latency_us);
+                lock_recover(&self.stats).record_dedup_hit(latency_us);
                 let class = class_of(&logits);
                 let _ = reply.send(InferenceResponse {
                     id,
@@ -442,16 +603,59 @@ impl Coordinator {
                 return Ok((id, rx));
             }
         }
-        self.tx
+        // bounded admission: claim a queue slot or shed. The CAS loop
+        // (rather than a blind increment) means concurrent submitters can
+        // never overshoot the bound.
+        if self.queue_depth > 0 {
+            let mut cur = self.queued.load(Ordering::Acquire);
+            loop {
+                if cur >= self.queue_depth {
+                    lock_recover(&self.stats).record_shed();
+                    let latency_us = submitted.elapsed().as_micros() as u64;
+                    let _ = reply.send(InferenceResponse::failure(
+                        id,
+                        0,
+                        latency_us,
+                        Error::Overloaded(format!(
+                            "submission queue at depth {} — request shed",
+                            self.queue_depth
+                        ))
+                        .to_string(),
+                    ));
+                    return Ok((id, rx));
+                }
+                match self.queued.compare_exchange_weak(
+                    cur,
+                    cur + 1,
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                ) {
+                    Ok(_) => break,
+                    Err(seen) => cur = seen,
+                }
+            }
+        } else {
+            // unbounded: the count still tracks occupancy for the gauge
+            self.queued.fetch_add(1, Ordering::AcqRel);
+        }
+        let send = self
+            .tx
             .as_ref()
-            .ok_or_else(|| Error::Coordinator("coordinator stopped".into()))?
-            .send(InferenceRequest {
-                id,
-                input,
-                submitted,
-                reply,
-            })
-            .map_err(|_| Error::Coordinator("submission channel closed".into()))?;
+            .ok_or_else(|| Error::Coordinator("coordinator stopped".into()))
+            .and_then(|tx| {
+                tx.send(InferenceRequest {
+                    id,
+                    input,
+                    submitted,
+                    reply,
+                })
+                .map_err(|_| Error::Coordinator("submission channel closed".into()))
+            });
+        if let Err(e) = send {
+            // the claimed slot must be released on every failure path
+            self.queued.fetch_sub(1, Ordering::AcqRel);
+            return Err(e);
+        }
         Ok((id, rx))
     }
 
@@ -461,19 +665,29 @@ impl Coordinator {
     pub fn metrics_text(&self) -> String {
         // the dedup cache is owned here, not by a worker, so its counter
         // snapshot is folded into the collector at render time
-        let snap = self
-            .dedup
-            .as_ref()
-            .map(|d| d.lock().expect("dedup poisoned").stats());
-        let mut s = self.stats.lock().expect("stats poisoned");
+        let snap = self.dedup.as_ref().map(|d| lock_recover(d).stats());
+        let mut s = lock_recover(&self.stats);
         if let Some(snap) = snap {
             s.record_dedup_cache(snap);
         }
         s.metrics_text()
     }
 
+    /// Requests currently admitted and waiting for a worker.
+    pub fn queued_len(&self) -> usize {
+        self.queued.load(Ordering::Acquire)
+    }
+
     /// Drain and stop; returns the final statistics.
+    ///
+    /// Every request still queued when shutdown begins receives an
+    /// explicit "coordinator shutting down" failure response — a waiting
+    /// client's `recv()` always yields a response, never a disconnected
+    /// channel.
     pub fn shutdown(mut self) -> StatsCollector {
+        // raise the flag *before* closing the front door: anything the
+        // batcher still flushes is answered with a shutdown failure
+        self.shutting.store(true, Ordering::Release);
         drop(self.tx.take()); // closes front door; batcher drains then exits
         if let Some(h) = self.batcher_handle.take() {
             let _ = h.join();
@@ -483,17 +697,14 @@ impl Coordinator {
         }
         // final dedup counter snapshot, now that every insert has landed
         if let Some(d) = self.dedup.as_ref() {
-            let snap = d.lock().expect("dedup poisoned").stats();
-            self.stats
-                .lock()
-                .expect("stats poisoned")
-                .record_dedup_cache(snap);
+            let snap = lock_recover(d).stats();
+            lock_recover(&self.stats).record_dedup_cache(snap);
         }
         Arc::try_unwrap(std::mem::replace(
             &mut self.stats,
             Arc::new(Mutex::new(StatsCollector::new())),
         ))
-        .map(|m| m.into_inner().expect("stats poisoned"))
+        .map(|m| m.into_inner().unwrap_or_else(|e| e.into_inner()))
         .unwrap_or_default()
     }
 }
@@ -945,6 +1156,264 @@ mod tests {
         assert!(rx.recv().unwrap().is_ok());
         let stats = coord.shutdown();
         assert!(stats.per_layer().is_empty());
+    }
+
+    #[test]
+    fn faulted_shard_fails_only_its_own_requests() {
+        let inst = tiny_instance();
+        // deterministic drill: replica 0 of the only worker hard-fails its
+        // first batch run; with retries disabled, that shard's requests
+        // must surface explicit errors while siblings stay bit-exact
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                shards: 2,
+                dedup: false,
+                fault_seed: Some(1),
+                fault_rate: 0.0,
+                fault_hard_fail_run: Some(0),
+                shard_retries: 0,
+                batch: BatchPolicy {
+                    max_batch: 8,
+                    max_wait: Duration::from_millis(200),
+                },
+                ..Default::default()
+            },
+            &inst,
+        )
+        .unwrap();
+        let inputs: Vec<Tensor> = (0..8)
+            .map(|i| Tensor::random(vec![1, 16, 16], 127, 6100 + i))
+            .collect();
+        let rxs: Vec<_> = inputs
+            .iter()
+            .map(|t| coord.submit(t.clone()).unwrap())
+            .collect();
+        let mut oks = 0usize;
+        let mut fails = 0usize;
+        for ((id, rx), input) in rxs.into_iter().zip(&inputs) {
+            let resp = rx
+                .recv()
+                .expect("every request gets a response, even on a dead shard");
+            assert_eq!(resp.id, id);
+            if resp.is_ok() {
+                let want = inst.forward_ref(input).unwrap();
+                assert_eq!(resp.logits, want.data, "sibling request {id} corrupted");
+                oks += 1;
+            } else {
+                let msg = resp.error.as_deref().unwrap_or("");
+                assert!(msg.contains("unserved"), "unexpected error: {msg}");
+                fails += 1;
+            }
+        }
+        // exactly one shard run hard-failed: some requests died with it,
+        // the rest of the batch was answered normally
+        assert!(fails >= 1, "the hard-failed shard must surface errors");
+        assert!(oks >= 1, "sibling requests must still be served");
+        assert_eq!(oks + fails, 8);
+        let stats = coord.shutdown();
+        assert_eq!(stats.count(), oks);
+        assert_eq!(stats.errors, fails as u64);
+        assert_eq!(stats.faults_injected, 1);
+        assert_eq!(stats.failovers, 0, "retries were disabled");
+    }
+
+    #[test]
+    fn coordinator_fails_over_injected_faults_bit_exact() {
+        let inst = tiny_instance();
+        // same drill with the default retry budget: the faulted shard
+        // fails over to a healthy replica and every answer stays bit-exact
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                shards: 2,
+                dedup: false,
+                fault_seed: Some(1),
+                fault_rate: 0.0,
+                fault_hard_fail_run: Some(0),
+                batch: BatchPolicy {
+                    max_batch: 8,
+                    max_wait: Duration::from_millis(200),
+                },
+                ..Default::default()
+            },
+            &inst,
+        )
+        .unwrap();
+        let inputs: Vec<Tensor> = (0..8)
+            .map(|i| Tensor::random(vec![1, 16, 16], 127, 6200 + i))
+            .collect();
+        let rxs: Vec<_> = inputs
+            .iter()
+            .map(|t| coord.submit(t.clone()).unwrap())
+            .collect();
+        for ((id, rx), input) in rxs.into_iter().zip(&inputs) {
+            let resp = rx.recv().expect("response");
+            assert!(resp.is_ok(), "request {id}: {:?}", resp.error);
+            let want = inst.forward_ref(input).unwrap();
+            assert_eq!(resp.logits, want.data, "request {id} after failover");
+        }
+        let stats = coord.shutdown();
+        assert_eq!(stats.count(), 8);
+        assert_eq!(stats.errors, 0);
+        assert_eq!(stats.faults_injected, 1);
+        assert_eq!(stats.failovers, 1, "the dead shard re-ran elsewhere");
+        assert!(stats.retries >= 1);
+    }
+
+    #[test]
+    fn full_queue_sheds_with_explicit_overloaded_responses() {
+        let inst = tiny_instance();
+        // max_wait far exceeds the submission burst and max_batch exceeds
+        // queue_depth, so no batch can form (and free slots) until long
+        // after every submission returned: admission is deterministic
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                dedup: false,
+                queue_depth: 4,
+                batch: BatchPolicy {
+                    max_batch: 8,
+                    max_wait: Duration::from_millis(300),
+                },
+                ..Default::default()
+            },
+            &inst,
+        )
+        .unwrap();
+        let inputs: Vec<Tensor> = (0..8)
+            .map(|i| Tensor::random(vec![1, 16, 16], 127, 6300 + i))
+            .collect();
+        let rxs: Vec<_> = inputs
+            .iter()
+            .map(|t| coord.submit(t.clone()).unwrap())
+            .collect();
+        assert_eq!(coord.queued_len(), 4, "the bound admits exactly queue_depth");
+        for (i, ((id, rx), input)) in rxs.into_iter().zip(&inputs).enumerate() {
+            let resp = rx
+                .recv()
+                .expect("shed requests get explicit responses, never dropped channels");
+            assert_eq!(resp.id, id);
+            if i < 4 {
+                // admitted: served bit-exact once the batch window closes
+                assert!(resp.is_ok(), "admitted request {i}: {:?}", resp.error);
+                let want = inst.forward_ref(input).unwrap();
+                assert_eq!(resp.logits, want.data);
+            } else {
+                // shed at the front door
+                assert!(!resp.is_ok());
+                let msg = resp.error.as_deref().unwrap_or("");
+                assert!(msg.contains("overloaded"), "unexpected error: {msg}");
+                assert_eq!(resp.accel_cycles, 0);
+            }
+        }
+        let stats = coord.shutdown();
+        assert_eq!(stats.shed, 4);
+        assert_eq!(stats.count(), 4);
+        assert_eq!(stats.errors, 0, "a shed is not a served-then-failed request");
+    }
+
+    #[test]
+    fn expired_deadlines_fail_before_spending_cycles() {
+        let inst = tiny_instance();
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                dedup: false,
+                deadline: Some(Duration::ZERO),
+                ..Default::default()
+            },
+            &inst,
+        )
+        .unwrap();
+        let rxs: Vec<_> = (0..3)
+            .map(|i| {
+                coord
+                    .submit(Tensor::random(vec![1, 16, 16], 127, 6400 + i))
+                    .unwrap()
+            })
+            .collect();
+        for (_, rx) in rxs {
+            let resp = rx.recv().expect("expired requests still get responses");
+            assert!(!resp.is_ok());
+            let msg = resp.error.as_deref().unwrap_or("");
+            assert!(msg.contains("deadline exceeded"), "unexpected error: {msg}");
+        }
+        let stats = coord.shutdown();
+        assert_eq!(stats.deadline_expired, 3);
+        assert_eq!(stats.errors, 3);
+        assert_eq!(stats.count(), 0);
+        assert_eq!(stats.batches, 0, "no accelerator batch may form");
+        assert_eq!(stats.accel_cycles, 0, "expired work must cost no cycles");
+    }
+
+    #[test]
+    fn shutdown_drains_queued_requests_with_explicit_failures() {
+        let inst = tiny_instance();
+        // the batch window is far longer than the test: queued requests
+        // can only leave the batcher when shutdown closes the front door
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                dedup: false,
+                batch: BatchPolicy {
+                    max_batch: 64,
+                    max_wait: Duration::from_secs(5),
+                },
+                ..Default::default()
+            },
+            &inst,
+        )
+        .unwrap();
+        let rxs: Vec<_> = (0..6)
+            .map(|i| {
+                coord
+                    .submit(Tensor::random(vec![1, 16, 16], 127, 6500 + i))
+                    .unwrap()
+            })
+            .collect();
+        let stats = coord.shutdown();
+        for (id, rx) in rxs {
+            let resp = rx
+                .recv()
+                .expect("a draining shutdown answers every request — no dropped channels");
+            assert_eq!(resp.id, id);
+            assert!(!resp.is_ok());
+            let msg = resp.error.as_deref().unwrap_or("");
+            assert!(msg.contains("shutting down"), "unexpected error: {msg}");
+        }
+        assert_eq!(stats.count(), 0, "drained requests are not served requests");
+    }
+
+    #[test]
+    fn serving_survives_a_poisoned_stats_mutex() {
+        let inst = tiny_instance();
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                ..Default::default()
+            },
+            &inst,
+        )
+        .unwrap();
+        // poison the shared stats mutex the way a panicking thread would
+        let stats = Arc::clone(&coord.stats);
+        let h = std::thread::spawn(move || {
+            let _g = stats.lock().unwrap();
+            panic!("induced panic while holding the stats lock");
+        });
+        assert!(h.join().is_err());
+        assert!(coord.stats.lock().is_err(), "mutex must actually be poisoned");
+        // the coordinator keeps serving through the poison, bit-exact
+        let input = Tensor::random(vec![1, 16, 16], 127, 6600);
+        let (_, rx) = coord.submit(input.clone()).unwrap();
+        let resp = rx.recv().expect("service continues after an induced panic");
+        assert!(resp.is_ok(), "{:?}", resp.error);
+        assert_eq!(resp.logits, inst.forward_ref(&input).unwrap().data);
+        // metrics and shutdown recover the guard instead of cascading
+        assert!(coord.metrics_text().contains("kom_requests_total 1"));
+        let stats = coord.shutdown();
+        assert_eq!(stats.count(), 1);
     }
 
     #[test]

@@ -137,6 +137,23 @@ pub struct StatsCollector {
     /// Total shard runs (the denominator of
     /// [`StatsCollector::plan_cache_hit_rate`]).
     pub plan_runs: u64,
+    /// Faults the injection layer fired across every worker's cluster
+    /// (0 forever when no fault plan is armed).
+    pub faults_injected: u64,
+    /// Shard retry attempts the degraded path made after a shard failed.
+    pub retries: u64,
+    /// Shards successfully re-run on a different healthy replica.
+    pub failovers: u64,
+    /// Requests shed at the front door because the bounded submission
+    /// queue was full (each got an explicit `Overloaded` failure).
+    pub shed: u64,
+    /// Requests failed at batch-formation time because their deadline
+    /// had already expired (no accelerator cycles were spent on them).
+    pub deadline_expired: u64,
+    /// Latest per-`(worker, replica)` quarantine flag, upserted by
+    /// [`StatsCollector::record_quarantine`]. Bounded by the worker ×
+    /// replica topology, like `cache_rows`.
+    quarantine_rows: Vec<(usize, usize, bool)>,
     /// Latest per-cache counter snapshots, upserted per
     /// `(worker, replica)` by [`StatsCollector::record_cache_stats`] —
     /// snapshots are cumulative on the driver side, so keeping the most
@@ -177,6 +194,12 @@ impl StatsCollector {
             ctx_evictions: 0,
             plan_hits: 0,
             plan_runs: 0,
+            faults_injected: 0,
+            retries: 0,
+            failovers: 0,
+            shed: 0,
+            deadline_expired: 0,
+            quarantine_rows: Vec::new(),
             cache_rows: Vec::new(),
             dedup_cache: None,
         }
@@ -395,6 +418,54 @@ impl StatsCollector {
         self.errors += 1;
     }
 
+    /// Record one batch's fault-tolerance telemetry: faults the injection
+    /// layer fired since the last batch, shard retry attempts, and shards
+    /// successfully failed over to another replica. All three are 0 on
+    /// every batch of a healthy run, so this is free to call
+    /// unconditionally.
+    pub fn record_fault_telemetry(&mut self, faults: u64, retries: u64, failovers: u64) {
+        self.faults_injected += faults;
+        self.retries += retries;
+        self.failovers += failovers;
+    }
+
+    /// Upsert the latest quarantine flags for `worker` (one bool per
+    /// replica, in replica order). Scheduler-side state is current, not
+    /// cumulative, so replacing the previous snapshot is exact.
+    pub fn record_quarantine(&mut self, worker: usize, flags: &[bool]) {
+        for (replica, &q) in flags.iter().enumerate() {
+            match self
+                .quarantine_rows
+                .iter_mut()
+                .find(|(w, r, _)| *w == worker && *r == replica)
+            {
+                Some(row) => row.2 = q,
+                None => self.quarantine_rows.push((worker, replica, q)),
+            }
+        }
+    }
+
+    /// Replicas currently quarantined, as `(worker, replica)` pairs.
+    pub fn quarantined_replicas(&self) -> Vec<(usize, usize)> {
+        self.quarantine_rows
+            .iter()
+            .filter(|(_, _, q)| *q)
+            .map(|&(w, r, _)| (w, r))
+            .collect()
+    }
+
+    /// Record one request shed at the front door (bounded submission
+    /// queue full; the caller already sent the `Overloaded` failure).
+    pub fn record_shed(&mut self) {
+        self.shed += 1;
+    }
+
+    /// Record one request failed at batch-formation time because its
+    /// deadline had expired before an accelerator ever saw it.
+    pub fn record_deadline_expired(&mut self) {
+        self.deadline_expired += 1;
+    }
+
     /// Requests completed successfully (exact, never sampled).
     pub fn count(&self) -> usize {
         self.latencies.seen as usize
@@ -543,6 +614,18 @@ impl StatsCollector {
         let _ = writeln!(out, "kom_reconfigs_skipped_total {}", self.reconfigs_skipped);
         let _ = writeln!(out, "kom_ctx_evictions_total {}", self.ctx_evictions);
         let _ = writeln!(out, "kom_plan_cache_hit_rate {:.6}", self.plan_cache_hit_rate());
+        let _ = writeln!(out, "kom_faults_injected_total {}", self.faults_injected);
+        let _ = writeln!(out, "kom_retries_total {}", self.retries);
+        let _ = writeln!(out, "kom_failovers_total {}", self.failovers);
+        let _ = writeln!(out, "kom_shed_total {}", self.shed);
+        let _ = writeln!(out, "kom_deadline_expired_total {}", self.deadline_expired);
+        for (w, r, q) in &self.quarantine_rows {
+            let _ = writeln!(
+                out,
+                "kom_replica_quarantined{{worker=\"{w}\",replica=\"{r}\"}} {}",
+                u64::from(*q)
+            );
+        }
         if !self.cache_rows.is_empty() || self.dedup_cache.is_some() {
             let _ = writeln!(
                 out,
@@ -833,6 +916,44 @@ mod tests {
         assert!(text.contains("kom_cache_misses_total{cache=\"plan\",worker=\"1\",replica=\"0\"} 0"));
         assert!(text.contains("kom_cache_hits_total{cache=\"dedup\"} 5"));
         // every non-comment line is `name[{labels}] value`
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(line.split_whitespace().count(), 2, "bad line: {line}");
+        }
+    }
+
+    #[test]
+    fn fault_telemetry_counters_and_quarantine_rows() {
+        let mut s = StatsCollector::new();
+        assert_eq!(s.faults_injected, 0);
+        assert!(s.quarantined_replicas().is_empty());
+        // healthy batch: all zeros, free to call unconditionally
+        s.record_fault_telemetry(0, 0, 0);
+        // a batch that hit one fault, retried once, failed over once
+        s.record_fault_telemetry(1, 1, 1);
+        s.record_fault_telemetry(2, 3, 1);
+        s.record_shed();
+        s.record_shed();
+        s.record_deadline_expired();
+        assert_eq!(s.faults_injected, 3);
+        assert_eq!(s.retries, 4);
+        assert_eq!(s.failovers, 2);
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.deadline_expired, 1);
+        // quarantine snapshots upsert per (worker, replica), never duplicate
+        s.record_quarantine(0, &[false, true]);
+        s.record_quarantine(1, &[false]);
+        assert_eq!(s.quarantined_replicas(), vec![(0, 1)]);
+        s.record_quarantine(0, &[false, false]);
+        assert!(s.quarantined_replicas().is_empty());
+        let text = s.metrics_text();
+        assert!(text.contains("kom_faults_injected_total 3"));
+        assert!(text.contains("kom_retries_total 4"));
+        assert!(text.contains("kom_failovers_total 2"));
+        assert!(text.contains("kom_shed_total 2"));
+        assert!(text.contains("kom_deadline_expired_total 1"));
+        assert!(text.contains("kom_replica_quarantined{worker=\"0\",replica=\"1\"} 0"));
+        assert!(text.contains("kom_replica_quarantined{worker=\"1\",replica=\"0\"} 0"));
+        // the page stays scrapeable: every non-comment line is two tokens
         for line in text.lines().filter(|l| !l.starts_with('#')) {
             assert_eq!(line.split_whitespace().count(), 2, "bad line: {line}");
         }

@@ -38,6 +38,22 @@ pub enum Error {
     /// Multi-SoC cluster error (shard planning, replica dispatch).
     Cluster(String),
 
+    /// An injected fault surfaced by the fault-injection layer
+    /// (`accel/fault.rs`): typed, never a panic, carrying where it hit.
+    Fault {
+        /// What kind of fault was injected.
+        kind: crate::accel::fault::FaultKind,
+        /// Replica the fault was injected on.
+        replica: usize,
+        /// Layer index within the run when it hit (0 for run-granular
+        /// hard-fails, which fire before any layer executes).
+        layer: usize,
+    },
+
+    /// Front-door admission control shed the request (bounded submission
+    /// queue full, or deadline already expired).
+    Overloaded(String),
+
     /// XLA / PJRT runtime error. Also carries host-side tooling failures
     /// with no better category — e.g. `kom-accel trace` reporting a trace
     /// that failed its cycle-conservation check or overflowed its ring.
@@ -68,6 +84,12 @@ impl fmt::Display for Error {
             Error::Shape(m) => write!(f, "shape error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
             Error::Cluster(m) => write!(f, "cluster error: {m}"),
+            Error::Fault {
+                kind,
+                replica,
+                layer,
+            } => write!(f, "injected fault: {kind} on replica {replica} at layer {layer}"),
+            Error::Overloaded(m) => write!(f, "overloaded: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Usage(m) => write!(f, "usage error: {m}"),
             Error::PlanVerify(diags) => {
@@ -122,6 +144,20 @@ mod tests {
             "systolic engine error: bad taps"
         );
         assert_eq!(Error::Riscv("misaligned".into()).to_string(), "riscv fault: misaligned");
+    }
+
+    #[test]
+    fn fault_and_overload_display_are_typed() {
+        let e = Error::Fault {
+            kind: crate::accel::fault::FaultKind::DmaTransfer,
+            replica: 2,
+            layer: 5,
+        };
+        assert_eq!(e.to_string(), "injected fault: dma_transfer on replica 2 at layer 5");
+        assert_eq!(
+            Error::Overloaded("queue full".into()).to_string(),
+            "overloaded: queue full"
+        );
     }
 
     #[test]

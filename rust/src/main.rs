@@ -16,13 +16,13 @@
 //! ```
 
 use kom_accel::accel::{
-    verify, Driver, LayerCycles, LayerDesc, RunTrace, Severity, ShardedMetrics, SocConfig,
-    SpanKind, DEFAULT_RING_CAPACITY,
+    verify, Driver, FaultConfig, FaultPlan, LayerCycles, LayerDesc, RunTrace, Severity,
+    ShardedMetrics, SocConfig, SpanKind, DEFAULT_RING_CAPACITY,
 };
 use kom_accel::bits::BitVec;
 use kom_accel::cli::Args;
 use kom_accel::cluster::{Cluster, ClusterConfig, SchedulePolicy, Scheduler};
-use kom_accel::cnn::networks::{Network, NetworkInstance, NetworkKind};
+use kom_accel::cnn::networks::{Network, NetworkInstance, NetworkKind, DEFAULT_SHARD_RETRIES};
 use kom_accel::cnn::{analysis, Tensor};
 use kom_accel::coordinator::{Coordinator, CoordinatorConfig, DedupCache, StatsCollector};
 use kom_accel::multipliers::{generate, MultKind, MultiplierSpec};
@@ -45,9 +45,11 @@ COMMANDS
   golden   [--artifacts artifacts]   XLA vs systolic vs reference
   serve    [--requests 64] [--workers 2] [--batch 8] [--shards 1] [--no-pipeline]
            [--no-fuse] [--no-dedup] [--dedup-budget W] [--no-config-cache]
-           [--metrics-interval N]
+           [--metrics-interval N] [--queue-depth N] [--deadline-us N]
+           [--fault-seed S] [--fault-rate P]
   cluster  [--batch 16] [--shards 4] [--policy rr|least-outstanding] [--net tiny]
            [--no-pipeline] [--no-fuse] [--no-config-cache]
+           [--fault-seed S] [--fault-rate P]
   lint     [--net tiny] [--batch 8] [--shards 1] [--no-fuse] [--deny-warnings]
   trace    [--net tiny] [--batch 8] [--shards 2] [--out trace.json]
            [--no-pipeline] [--no-fuse] [--no-config-cache]
@@ -76,7 +78,27 @@ chrome://tracing JSON — one track per shard, nested layer spans. serve's
 --metrics-interval N prints the Prometheus-style metrics page every N
 completed responses (0 = off); serve and cluster both end with a
 per-layer cycle-hotspots table from the aggregated trace.
+Robustness: --queue-depth N bounds serve's admission queue (excess
+submissions are shed with explicit overloaded failures); --deadline-us N
+fails requests that waited longer than N microseconds before the
+accelerator batch forms (0 = no deadline). --fault-seed S arms a
+deterministic seeded fault plan on replica 0 (DMA transfer errors,
+weight-load corruption, stuck replicas) at per-site probability
+--fault-rate P; faulted shards retry on healthy replicas, the faulty
+replica is quarantined and re-admitted after a health probe, and every
+served answer must stay bit-exact with the host reference.
 ";
+
+/// Optional numeric flag: absent → `None`, present → parsed or a usage
+/// error (the `Args::get_num` default-value shape can't express "unset").
+fn opt_num<T: std::str::FromStr>(args: &Args, key: &str) -> kom_accel::Result<Option<T>> {
+    match args.get(key) {
+        None => Ok(None),
+        Some(v) => v.parse().map(Some).map_err(|_| {
+            kom_accel::Error::Usage(format!("--{key} expects a number, got '{v}'"))
+        }),
+    }
+}
 
 fn mult_spec(name: &str) -> kom_accel::Result<(String, MultiplierSpec)> {
     Ok(match name {
@@ -237,6 +259,10 @@ fn cmd_serve(args: &Args) -> kom_accel::Result<()> {
         args.get_num("dedup-budget", DedupCache::DEFAULT_BUDGET_WORDS)?;
     let config_cache = !args.has("no-config-cache");
     let metrics_interval: usize = args.get_num("metrics-interval", 0usize)?;
+    let queue_depth: usize = args.get_num("queue-depth", 0usize)?;
+    let deadline_us: u64 = args.get_num("deadline-us", 0u64)?;
+    let fault_seed: Option<u64> = opt_num(args, "fault-seed")?;
+    let fault_rate: f64 = args.get_num("fault-rate", 0.0f64)?;
     let inst = NetworkInstance::random(Network::build(NetworkKind::Tiny), 42)?;
     let cfg = CoordinatorConfig {
         workers,
@@ -246,6 +272,10 @@ fn cmd_serve(args: &Args) -> kom_accel::Result<()> {
         dedup,
         dedup_budget_words,
         config_cache,
+        queue_depth,
+        deadline: (deadline_us > 0).then(|| std::time::Duration::from_micros(deadline_us)),
+        fault_seed,
+        fault_rate,
         // the demo always traces so it can close with the per-layer
         // hotspots table (serving defaults keep tracing off)
         trace: true,
@@ -305,6 +335,18 @@ fn cmd_serve(args: &Args) -> kom_accel::Result<()> {
     }
     if dedup {
         println!("  front-door dedup hits: {}", stats.dedup_hits);
+    }
+    if queue_depth > 0 || stats.shed > 0 || stats.deadline_expired > 0 {
+        println!(
+            "  shed at front door: {} (queue depth {queue_depth}); deadline-expired: {}",
+            stats.shed, stats.deadline_expired
+        );
+    }
+    if fault_seed.is_some() {
+        println!(
+            "  faults injected: {} → {} retries, {} failover(s), {} request error(s)",
+            stats.faults_injected, stats.retries, stats.failovers, stats.errors
+        );
     }
     if shards > 1 {
         let util: Vec<String> = stats
@@ -471,6 +513,8 @@ fn cmd_cluster(args: &Args) -> kom_accel::Result<()> {
     let config_cache = !args.has("no-config-cache");
     let policy = SchedulePolicy::parse(&args.get_or("policy", "least-outstanding"))?;
     let kind = NetworkKind::parse(&args.get_or("net", "tiny"))?;
+    let fault_seed: Option<u64> = opt_num(args, "fault-seed")?;
+    let fault_rate: f64 = args.get_num("fault-rate", 0.05f64)?;
     let inst = NetworkInstance::random(Network::build(kind), 42)?;
     let inputs: Vec<Tensor> = (0..batch)
         .map(|i| Tensor::random(inst.net.input.dims(), 127, i as u64 + 1))
@@ -484,10 +528,77 @@ fn cmd_cluster(args: &Args) -> kom_accel::Result<()> {
     cluster.set_fusion(fuse);
     cluster.set_config_cache(config_cache);
     cluster.set_tracing(DEFAULT_RING_CAPACITY);
-    let per_shard_cap = batch.div_ceil(shards);
+    // the fault drill must survive one quarantined replica: deploy enough
+    // per-replica capacity for the remaining shards to absorb the batch
+    let per_shard_cap = if fault_seed.is_some() && shards > 1 {
+        batch.div_ceil(shards - 1)
+    } else {
+        batch.div_ceil(shards)
+    };
     let cdep = inst.deploy_cluster(&mut cluster, per_shard_cap)?;
     let mut sched = Scheduler::new(policy, shards)?;
     let slices: Vec<&[i64]> = inputs.iter().map(|t| t.data.as_slice()).collect();
+
+    if let Some(seed) = fault_seed {
+        // fault drill: arm a deterministic plan on replica 0 and run both
+        // dispatches through the degraded path — served answers must stay
+        // bit-exact, failures must be explicit, and the command exits 0
+        // as long as nothing is silently corrupted
+        cluster.set_fault_plan(
+            0,
+            Some(FaultPlan::new(FaultConfig {
+                seed,
+                rate: fault_rate,
+                ..Default::default()
+            })),
+        );
+        println!(
+            "{}: fault drill — batch {batch} over {shards} shard(s), seed {seed}, rate {fault_rate}",
+            inst.net.name
+        );
+        let mut served = 0usize;
+        let mut failed = 0usize;
+        let (mut retries, mut failovers, mut quarantined) = (0u64, 0u64, 0u64);
+        for pass in ["cold", "warm"] {
+            let (outs, m) =
+                cdep.run_sharded_degraded(&mut cluster, &mut sched, &slices, DEFAULT_SHARD_RETRIES)?;
+            for (i, out) in outs.iter().enumerate() {
+                match out {
+                    Ok(data) => {
+                        let want = inst.forward_ref(&inputs[i])?;
+                        if *data != want.data {
+                            return Err(kom_accel::Error::Cluster(format!(
+                                "request {i} diverged from forward_ref under fault injection \
+                                 ({pass} pass)"
+                            )));
+                        }
+                        served += 1;
+                    }
+                    Err(e) => {
+                        println!("  {pass}: request {i} failed explicitly: {e}");
+                        failed += 1;
+                    }
+                }
+            }
+            retries += m.retries;
+            failovers += m.failovers;
+            quarantined += m.quarantined;
+            println!(
+                "  {pass}: {} cycles (max over shards), {} shard run(s)",
+                m.total_cycles(),
+                m.shards.len()
+            );
+        }
+        println!(
+            "fault drill complete: {served} served bit-exact, {failed} explicit failure(s), \
+             {} fault(s) injected, {retries} retries, {failovers} failover(s), \
+             {quarantined} quarantine(s)",
+            cluster.faults_injected()
+        );
+        println!("no silent corruption: every served request matched forward_ref");
+        return Ok(());
+    }
+
     // cold dispatch compiles the plans and loads the engine contexts; the
     // warm dispatch is the steady serving state the table below reports
     let (_, cold_m) = cdep.run_sharded(&mut cluster, &mut sched, &slices)?;

@@ -1,0 +1,255 @@
+//! Fault-tolerance acceptance gates:
+//!
+//! (a) a seeded single-replica fault plan at shards=4 / batch=16 on
+//!     Tiny, AlexNet-mini and VGG-mini — every request's logits must be
+//!     bit-exact with `forward_ref` after the automatic retry/failover;
+//! (b) with `queue_depth` exceeded, shed requests get explicit
+//!     `overloaded` failures (never a dropped channel) while admitted
+//!     requests stay bit-exact;
+//! (c) with injection disabled (no plan, or a rate-0 plan armed), the
+//!     cycle model is bit-identical to the pre-fault build: same logits,
+//!     same `RunMetrics`, zero faults counted.
+
+use kom_accel::accel::{Driver, FaultConfig, FaultPlan, RunMetrics, SocConfig};
+use kom_accel::cluster::{Cluster, ClusterConfig, SchedulePolicy, Scheduler};
+use kom_accel::cnn::networks::{Network, NetworkInstance, NetworkKind, DEFAULT_SHARD_RETRIES};
+use kom_accel::cnn::Tensor;
+use kom_accel::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use std::time::Duration;
+
+fn instance(kind: NetworkKind) -> NetworkInstance {
+    NetworkInstance::random(Network::build(kind), 42).unwrap()
+}
+
+fn inputs_for(inst: &NetworkInstance, n: usize, seed: u64) -> Vec<Tensor> {
+    (0..n)
+        .map(|i| Tensor::random(inst.net.input.dims(), 127, seed + i as u64))
+        .collect()
+}
+
+/// Gate (a): hard-fail replica 0's first run under a 16-request batch
+/// sharded 4 ways; the failover must keep every answer bit-exact on all
+/// three serving networks.
+#[test]
+fn seeded_fault_failover_bit_exact_on_all_networks() {
+    for (kind, seed) in [
+        (NetworkKind::Tiny, 100u64),
+        (NetworkKind::AlexNetMini, 200),
+        (NetworkKind::VggMini, 300),
+    ] {
+        let inst = instance(kind);
+        let inputs = inputs_for(&inst, 16, seed);
+        let mut cluster = Cluster::new(ClusterConfig {
+            replicas: 4,
+            soc: SocConfig::serving(),
+        })
+        .unwrap();
+        let cdep = inst.deploy_cluster(&mut cluster, 4).unwrap();
+        cluster.set_fault_plan(
+            0,
+            Some(FaultPlan::new(FaultConfig {
+                seed: 7,
+                rate: 0.0,
+                hard_fail_run: Some(0),
+                ..Default::default()
+            })),
+        );
+        let mut sched = Scheduler::new(SchedulePolicy::LeastOutstandingCycles, 4).unwrap();
+        let slices: Vec<&[i64]> = inputs.iter().map(|t| t.data.as_slice()).collect();
+        let (outs, m) = cdep
+            .run_sharded_degraded(&mut cluster, &mut sched, &slices, DEFAULT_SHARD_RETRIES)
+            .unwrap();
+        assert_eq!(outs.len(), 16);
+        for (i, (out, input)) in outs.iter().zip(&inputs).enumerate() {
+            let got = out.as_ref().unwrap_or_else(|e| {
+                panic!("{}: request {i} must be served after failover: {e}", inst.net.name)
+            });
+            let want = inst.forward_ref(input).unwrap();
+            assert_eq!(*got, want.data, "{}: request {i} after failover", inst.net.name);
+        }
+        assert_eq!(cluster.faults_injected(), 1, "{}", inst.net.name);
+        assert_eq!(m.failovers, 1, "{}: the dead shard re-ran elsewhere", inst.net.name);
+        assert!(m.retries >= 1, "{}", inst.net.name);
+        assert_eq!(m.quarantined, 1, "{}", inst.net.name);
+        assert!(sched.is_quarantined(0), "{}", inst.net.name);
+        // degraded runs charge honest cycles: the failover replica ran
+        // two shards back to back, so it appears twice in the ledger
+        assert_eq!(m.shards.len(), 4, "{}: every shard ran somewhere", inst.net.name);
+    }
+}
+
+/// Gate (a) continued: after the one-shot fault is consumed, the next
+/// batch re-admits the quarantined replica through the emergency health
+/// probe and serving returns to the fully-healthy state.
+#[test]
+fn quarantined_replica_readmitted_after_probe() {
+    let inst = instance(NetworkKind::Tiny);
+    let inputs = inputs_for(&inst, 16, 400);
+    let mut cluster = Cluster::new(ClusterConfig {
+        replicas: 4,
+        soc: SocConfig::serving(),
+    })
+    .unwrap();
+    let cdep = inst.deploy_cluster(&mut cluster, 4).unwrap();
+    cluster.set_fault_plan(
+        0,
+        Some(FaultPlan::new(FaultConfig {
+            seed: 7,
+            rate: 0.0,
+            hard_fail_run: Some(0),
+            ..Default::default()
+        })),
+    );
+    let mut sched = Scheduler::new(SchedulePolicy::LeastOutstandingCycles, 4).unwrap();
+    let slices: Vec<&[i64]> = inputs.iter().map(|t| t.data.as_slice()).collect();
+    let (_, m1) = cdep
+        .run_sharded_degraded(&mut cluster, &mut sched, &slices, DEFAULT_SHARD_RETRIES)
+        .unwrap();
+    assert_eq!(m1.failovers, 1);
+    assert!(sched.is_quarantined(0));
+    // 16 requests need 4 shards but only 3 replicas are healthy: the
+    // emergency probe re-admits replica 0 (its scheduled fault is spent)
+    let (outs, m2) = cdep
+        .run_sharded_degraded(&mut cluster, &mut sched, &slices, DEFAULT_SHARD_RETRIES)
+        .unwrap();
+    assert!(!sched.is_quarantined(0), "probe must re-admit the healthy board");
+    assert_eq!(m2.failovers, 0);
+    assert_eq!(m2.retries, 0);
+    for (i, (out, input)) in outs.iter().zip(&inputs).enumerate() {
+        let want = inst.forward_ref(input).unwrap();
+        assert_eq!(*out.as_ref().unwrap(), want.data, "request {i} after re-admission");
+    }
+    assert_eq!(cluster.faults_injected(), 1, "the one-shot fault fired exactly once");
+}
+
+/// Gate (b): a full submission queue sheds with explicit overloaded
+/// failures while every admitted request is served bit-exact.
+#[test]
+fn queue_depth_sheds_explicitly_and_admitted_stay_bit_exact() {
+    let inst = instance(NetworkKind::Tiny);
+    // max_batch (8) > queue_depth (4) and a long batch window: the worker
+    // cannot drain admitted requests until well after the submission
+    // burst, so exactly the last 4 of 8 submissions are shed
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            dedup: false,
+            queue_depth: 4,
+            batch: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(300),
+            },
+            ..Default::default()
+        },
+        &inst,
+    )
+    .unwrap();
+    let inputs = inputs_for(&inst, 8, 500);
+    let rxs: Vec<_> = inputs
+        .iter()
+        .map(|t| coord.submit(t.clone()).unwrap())
+        .collect();
+    for (i, ((id, rx), input)) in rxs.into_iter().zip(&inputs).enumerate() {
+        let resp = rx
+            .recv()
+            .expect("a shed request gets an explicit response, never a dropped channel");
+        assert_eq!(resp.id, id);
+        if i < 4 {
+            assert!(resp.is_ok(), "admitted request {i}: {:?}", resp.error);
+            let want = inst.forward_ref(input).unwrap();
+            assert_eq!(resp.logits, want.data, "admitted request {i} bit-exact");
+        } else {
+            assert!(!resp.is_ok(), "request {i} must be shed");
+            let msg = resp.error.as_deref().unwrap_or("");
+            assert!(msg.contains("overloaded"), "request {i}: {msg}");
+            assert_eq!(resp.accel_cycles, 0, "shed work never reaches an accelerator");
+        }
+    }
+    let stats = coord.shutdown();
+    assert_eq!(stats.shed, 4);
+    assert_eq!(stats.count(), 4);
+}
+
+/// Gate (c), single SoC: arming a rate-0 fault plan must leave the run
+/// bit-identical to no plan at all — same logits, same `RunMetrics` on
+/// both the cold and the warm run, zero faults counted.
+#[test]
+fn disabled_injection_is_cycle_and_bit_identical_single_soc() {
+    fn run(arm_disabled_plan: bool) -> (Vec<i64>, RunMetrics, RunMetrics, u64) {
+        let inst = instance(NetworkKind::Tiny);
+        let inputs = inputs_for(&inst, 4, 600);
+        let mut drv = Driver::new(SocConfig::serving());
+        let dep = inst.deploy_batched(&mut drv, 4).unwrap();
+        if arm_disabled_plan {
+            drv.set_fault_plan(Some(FaultPlan::new(FaultConfig {
+                seed: 99,
+                rate: 0.0,
+                ..Default::default()
+            })));
+        }
+        let mut packed = Vec::new();
+        for t in &inputs {
+            packed.extend_from_slice(&t.data);
+        }
+        drv.write_region(dep.in_addr, &packed).unwrap();
+        let cold = drv.run_table_batch(&dep.descs, 4).unwrap();
+        let warm = drv.run_table_batch(&dep.descs, 4).unwrap();
+        let outs = drv.read_region(dep.out_addr, 4 * dep.out_len).unwrap();
+        (outs, cold, warm, drv.faults_injected())
+    }
+    let (outs_off, cold_off, warm_off, faults_off) = run(false);
+    let (outs_on, cold_on, warm_on, faults_on) = run(true);
+    assert_eq!(outs_off, outs_on, "logits must not depend on a disabled plan");
+    assert_eq!(cold_off, cold_on, "cold RunMetrics bit-identical with a rate-0 plan");
+    assert_eq!(warm_off, warm_on, "warm RunMetrics bit-identical with a rate-0 plan");
+    assert_eq!(faults_off, 0);
+    assert_eq!(faults_on, 0, "a rate-0 plan never fires");
+}
+
+/// Gate (c), sharded: the full cluster dispatch is equally unperturbed by
+/// a disabled plan — per-shard `RunMetrics` and total cycles included.
+#[test]
+fn disabled_injection_is_cycle_identical_sharded() {
+    fn run(arm_disabled_plan: bool) -> (Vec<Vec<i64>>, Vec<(usize, usize, RunMetrics)>, u64) {
+        let inst = instance(NetworkKind::Tiny);
+        let inputs = inputs_for(&inst, 16, 700);
+        let mut cluster = Cluster::new(ClusterConfig {
+            replicas: 4,
+            soc: SocConfig::serving(),
+        })
+        .unwrap();
+        let cdep = inst.deploy_cluster(&mut cluster, 4).unwrap();
+        if arm_disabled_plan {
+            cluster.set_fault_plan(
+                0,
+                Some(FaultPlan::new(FaultConfig {
+                    seed: 99,
+                    rate: 0.0,
+                    ..Default::default()
+                })),
+            );
+        }
+        let mut sched = Scheduler::new(SchedulePolicy::LeastOutstandingCycles, 4).unwrap();
+        let slices: Vec<&[i64]> = inputs.iter().map(|t| t.data.as_slice()).collect();
+        cluster_run(&cdep, &mut cluster, &mut sched, &slices)
+    }
+    fn cluster_run(
+        cdep: &kom_accel::cnn::networks::ClusterDeployment,
+        cluster: &mut Cluster,
+        sched: &mut Scheduler,
+        slices: &[&[i64]],
+    ) -> (Vec<Vec<i64>>, Vec<(usize, usize, RunMetrics)>, u64) {
+        let (outs, m) = cdep.run_sharded(cluster, sched, slices).unwrap();
+        let rows = m
+            .shards
+            .iter()
+            .map(|s| (s.shard, s.replica, s.metrics))
+            .collect();
+        (outs, rows, m.total_cycles())
+    }
+    let (outs_off, rows_off, total_off) = run(false);
+    let (outs_on, rows_on, total_on) = run(true);
+    assert_eq!(outs_off, outs_on);
+    assert_eq!(rows_off, rows_on, "per-shard RunMetrics bit-identical");
+    assert_eq!(total_off, total_on, "total cluster cycles bit-identical");
+}
