@@ -7,7 +7,10 @@ use kom_accel::accel::{Driver, FaultConfig, FaultPlan, SocConfig, DEFAULT_RING_C
 use kom_accel::cluster::{Cluster, ClusterConfig, SchedulePolicy, Scheduler};
 use kom_accel::cnn::networks::{Network, NetworkInstance, NetworkKind, DEFAULT_SHARD_RETRIES};
 use kom_accel::cnn::Tensor;
-use kom_accel::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use kom_accel::coordinator::{
+    probe_us_per_req, run_loadgen, Arrivals, BatchMode, BatchPolicy, Coordinator,
+    CoordinatorConfig, LoadGenConfig, LoadGenReport,
+};
 use kom_accel::report::Table;
 use kom_accel::runtime::{golden, ArtifactStore, Runtime};
 use std::path::Path;
@@ -683,6 +686,121 @@ fn main() {
     match std::fs::write("BENCH_fault.json", &json) {
         Ok(()) => println!("wrote BENCH_fault.json (clean vs disabled-plan vs hard-fail failover)"),
         Err(e) => println!("(could not write BENCH_fault.json: {e})"),
+    }
+
+    // ---- continuous vs fixed batching: latency under arrival load ------
+    // The same real cluster driven through the simulated-time load
+    // generator (`coordinator::loadgen`): open-loop Poisson arrivals at
+    // fractions of the cluster's measured capacity, plus a closed-loop
+    // saturation row. Continuous batching dispatches the moment the
+    // worker frees; fixed holds each window for its max-wait. The gates
+    // CI runs: continuous never reports a worse p99 than fixed at the
+    // same arrival rate, and closed-loop saturation throughput does not
+    // regress. Emitted as BENCH_slo.json so CI tracks the latency-SLO
+    // trajectory.
+    println!("===== continuous vs fixed batching: arrival-rate sweep (simulated µs, 4 shards, batch 16) =====");
+    let slo_shards = 4usize;
+    let slo_cap = 16usize;
+    let clock = 200.0f64;
+    let e = probe_us_per_req(&inst, slo_shards, slo_cap, clock).unwrap();
+    // full waves serve `shards` requests every `e` simulated µs
+    let capacity_rps = slo_shards as f64 * 1e6 / e as f64;
+    println!(
+        "measured cost: {e} us/request warm ({capacity_rps:.0} req/s capacity at {slo_shards} shards)"
+    );
+    let lg = |arrivals: Arrivals, mode: BatchMode| {
+        run_loadgen(
+            &inst,
+            &LoadGenConfig {
+                arrivals,
+                mode,
+                requests: 128,
+                max_batch: slo_cap,
+                shards: slo_shards,
+                clock_mhz: clock,
+                slo_p99_us: None,
+                seed: 42_000,
+                warmup: true,
+            },
+        )
+        .unwrap()
+    };
+    let mut t = Table::new(&[
+        "arrivals",
+        "mode",
+        "p50 (us)",
+        "p95 (us)",
+        "p99 (us)",
+        "req/s",
+        "mean batch",
+        "shed",
+    ]);
+    let mut json_rows = Vec::new();
+    let mut push = |arrivals: &str, rate_rps: f64, mode: &str, r: &LoadGenReport| {
+        t.row(vec![
+            arrivals.into(),
+            mode.into(),
+            r.p50_us.to_string(),
+            r.p95_us.to_string(),
+            r.p99_us.to_string(),
+            format!("{:.0}", r.throughput_rps),
+            format!("{:.1}", r.mean_batch),
+            r.shed.to_string(),
+        ]);
+        json_rows.push(format!(
+            "    {{\"arrivals\": \"{arrivals}\", \"mode\": \"{mode}\", \
+             \"rate_rps\": {rate_rps:.0}, \"served\": {}, \"shed\": {}, \
+             \"p50_us\": {}, \"p95_us\": {}, \"p99_us\": {}, \
+             \"throughput_rps\": {:.1}, \"mean_batch\": {:.2}}}",
+            r.served, r.shed, r.p50_us, r.p95_us, r.p99_us, r.throughput_rps, r.mean_batch
+        ));
+    };
+    for frac in [0.2f64, 0.5, 0.8] {
+        let rate = capacity_rps * frac;
+        let arrivals = Arrivals::Poisson {
+            rate_rps: rate,
+            seed: 11,
+        };
+        let fixed = lg(arrivals, BatchMode::Fixed { max_wait_us: 2 * e });
+        let cont = lg(arrivals, BatchMode::Continuous);
+        assert_eq!(fixed.mismatches + cont.mismatches, 0, "responses must be bit-exact");
+        // the hard gate: continuous never loses on p99 at equal load
+        // (tolerance: 2% or 1µs for rounding on the simulated clock)
+        assert!(
+            cont.p99_us <= fixed.p99_us + (fixed.p99_us / 50).max(1),
+            "continuous p99 {}us worse than fixed {}us at {rate:.0} rps",
+            cont.p99_us,
+            fixed.p99_us
+        );
+        let label = format!("poisson {frac:.1}x cap");
+        push(&label, rate, "fixed", &fixed);
+        push(&label, rate, "continuous", &cont);
+    }
+    let closed = Arrivals::Closed {
+        concurrency: 32,
+        think_us: 0,
+    };
+    let fixed = lg(closed, BatchMode::Fixed { max_wait_us: 2 * e });
+    let cont = lg(closed, BatchMode::Continuous);
+    assert!(
+        cont.throughput_rps >= fixed.throughput_rps * 0.98,
+        "closed-loop saturation throughput regressed: continuous {:.0} vs fixed {:.0} rps",
+        cont.throughput_rps,
+        fixed.throughput_rps
+    );
+    push("closed 32", capacity_rps, "fixed", &fixed);
+    push("closed 32", capacity_rps, "continuous", &cont);
+    drop(push);
+    println!("{}", t.to_ascii());
+    println!("gates: continuous p99 <= fixed p99 at every rate; saturation throughput kept — OK");
+    let json = format!(
+        "{{\n  \"bench\": \"slo\",\n  \"network\": \"tiny\",\n  \"shards\": {slo_shards}, \
+         \"max_batch\": {slo_cap}, \"us_per_req\": {e}, \"capacity_rps\": {capacity_rps:.0},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    match std::fs::write("BENCH_slo.json", &json) {
+        Ok(()) => println!("wrote BENCH_slo.json (continuous vs fixed latency under load)"),
+        Err(e) => println!("(could not write BENCH_slo.json: {e})"),
     }
 
     // XLA-artifact execution path (the L1/L2 kernels through PJRT)

@@ -213,6 +213,14 @@ impl Scheduler {
         }
     }
 
+    /// The learned cycles/request estimate (EMA with 1/4 weight on each
+    /// new observation, starting at 1 until the first completion). The
+    /// continuous batcher converts this to simulated microseconds to size
+    /// dispatches against a latency SLO.
+    pub fn cycles_per_req_ema(&self) -> u64 {
+        self.cycles_per_req
+    }
+
     /// Drop in-flight work without recording a completion — for failed or
     /// abandoned dispatches, so an error path cannot leak phantom load
     /// into future placement decisions. Busy time and the learned cycle
@@ -256,6 +264,28 @@ mod tests {
         s.complete(1, 4, 400);
         assert_eq!(s.assign_plan(&one).unwrap(), vec![1]);
         assert_eq!(s.busy_cycles()[1], 400);
+    }
+
+    #[test]
+    fn cycles_per_req_ema_tracks_completions() {
+        let mut s = Scheduler::new(SchedulePolicy::RoundRobin, 2).unwrap();
+        assert_eq!(s.cycles_per_req_ema(), 1, "cold estimate before any completion");
+        let one = ShardPlan::split(4, 1).unwrap();
+        s.assign_plan(&one).unwrap();
+        // 4 requests at 400 cycles -> observed 100/request;
+        // EMA = ceil((1*3 + 100) / 4) = 26
+        s.complete(0, 4, 400);
+        assert_eq!(s.cycles_per_req_ema(), 26);
+        // repeated identical observations converge on the observation
+        for _ in 0..32 {
+            s.assign_plan(&one).unwrap();
+            s.complete(0, 4, 400);
+        }
+        assert_eq!(s.cycles_per_req_ema(), 100);
+        // failed dispatches retire without polluting the estimate
+        s.assign_plan(&one).unwrap();
+        s.retire(0, 4);
+        assert_eq!(s.cycles_per_req_ema(), 100);
     }
 
     #[test]

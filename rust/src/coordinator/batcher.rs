@@ -1,6 +1,16 @@
-//! Dynamic batching: group requests under a max-size / max-wait policy.
+//! Dynamic batching: group requests under a max-size / max-wait policy
+//! ([`Batcher`], the fixed fill-to-max batcher), or admit them into the
+//! next dispatch the moment a worker is free, sized against a latency SLO
+//! ([`ContinuousBatcher`] + [`SloPolicy`]).
+//!
+//! The continuous batcher never waits for company: whatever is queued
+//! when a worker asks is dispatched immediately, and the *size* of that
+//! dispatch comes from the scheduler's measured cycles/request EMA
+//! converted to simulated microseconds — the largest batch whose
+//! predicted queue-wait + execution still meets the p99 target.
 
 use super::request::InferenceRequest;
+use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
@@ -19,6 +29,79 @@ impl Default for BatchPolicy {
             max_batch: 8,
             max_wait: Duration::from_millis(2),
         }
+    }
+}
+
+/// SLO-aware dynamic sizing for the continuous batcher. Pure arithmetic —
+/// no channels, no clocks — so the same policy drives the threaded
+/// coordinator (wall-clock waits) and the simulated-time load generator
+/// ([`crate::coordinator::loadgen`]) identically.
+#[derive(Clone, Copy, Debug)]
+pub struct SloPolicy {
+    /// Maximum requests per dispatch (the deployed batch capacity).
+    pub max_batch: usize,
+    /// Replicas the worker shards each batch across: an `n`-request batch
+    /// executes in `ceil(n / shards)` per-replica sub-batches running
+    /// concurrently, so predicted execution is
+    /// `ceil(n / shards) × us_per_req`.
+    pub shards: usize,
+    /// Simulated accelerator clock (MHz) — converts the scheduler's
+    /// cycles/request EMA into simulated microseconds.
+    pub clock_mhz: f64,
+    /// p99 latency target in simulated microseconds. `None` = pure
+    /// continuous batching: take everything queued up to `max_batch`,
+    /// never shrink, never shed.
+    pub slo_p99_us: Option<u64>,
+}
+
+impl SloPolicy {
+    /// The EMA converted to simulated microseconds per request
+    /// (truncating: the scheduler's cold EMA of 1 cycle maps to 0us, so a
+    /// cold policy never shrinks or sheds — it learns from the first
+    /// completed batches).
+    pub fn us_per_req(&self, ema_cycles_per_req: u64) -> u64 {
+        (ema_cycles_per_req as f64 / self.clock_mhz) as u64
+    }
+
+    /// Predicted execution time of an `n`-request batch in simulated
+    /// microseconds: the shards run concurrently, so the batch costs its
+    /// largest per-replica sub-batch.
+    pub fn exec_us(&self, n: usize, ema_cycles_per_req: u64) -> u64 {
+        n.div_ceil(self.shards.max(1)) as u64 * self.us_per_req(ema_cycles_per_req)
+    }
+
+    /// Is the SLO attainable at all under the learned EMA — does a single
+    /// request dispatched alone, with zero queue wait, meet the target?
+    /// When this is false no batch-size choice can help, and the front
+    /// door sheds via the `overloaded` path instead of queueing work that
+    /// is already doomed. Always true without an SLO, and true for a cold
+    /// (unlearned) EMA.
+    pub fn attainable(&self, ema_cycles_per_req: u64) -> bool {
+        match self.slo_p99_us {
+            None => true,
+            Some(slo) => self.us_per_req(ema_cycles_per_req) <= slo,
+        }
+    }
+
+    /// Dynamic batch size for a dispatch with `queued` requests waiting,
+    /// the oldest of which has already waited `oldest_wait_us`: the
+    /// largest `n <= min(queued, max_batch)` whose predicted
+    /// wait + execution stays inside the SLO. Never 0 — a free worker
+    /// with queued work always dispatches. If even a single request can
+    /// no longer meet the target (the oldest already overstayed), the SLO
+    /// is lost either way, so the policy reverts to throughput-optimal
+    /// `min(queued, max_batch)` rather than dribbling out singletons.
+    pub fn batch_size(&self, queued: usize, oldest_wait_us: u64, ema_cycles_per_req: u64) -> usize {
+        let cap = queued.clamp(1, self.max_batch.max(1));
+        let Some(slo) = self.slo_p99_us else {
+            return cap;
+        };
+        for n in (1..=cap).rev() {
+            if oldest_wait_us + self.exec_us(n, ema_cycles_per_req) <= slo {
+                return n;
+            }
+        }
+        cap
     }
 }
 
@@ -47,7 +130,10 @@ impl Batcher {
             if now >= deadline {
                 break;
             }
-            match self.rx.recv_timeout(deadline - now) {
+            // saturating: `now` can pass `deadline` between the check
+            // above and this subtraction — a plain `deadline - now` would
+            // panic on the underflow
+            match self.rx.recv_timeout(deadline.saturating_duration_since(now)) {
                 Ok(req) => batch.push(req),
                 // `recv_timeout` may report Timeout slightly early on
                 // loaded machines; only the deadline check at the top of
@@ -57,6 +143,69 @@ impl Batcher {
             }
         }
         Some(batch)
+    }
+}
+
+/// Continuous batcher: the worker-facing replacement for the fixed
+/// [`Batcher`]. Instead of filling a fixed-size batch on a timeout, a
+/// free worker takes whatever is queued *right now* — blocking only when
+/// there is nothing at all — and [`SloPolicy::batch_size`] decides how
+/// much of it rides in this dispatch. Requests the policy leaves behind
+/// stay in the backlog, first in line for the next dispatch.
+pub struct ContinuousBatcher {
+    rx: Receiver<InferenceRequest>,
+    backlog: VecDeque<InferenceRequest>,
+    policy: SloPolicy,
+}
+
+impl ContinuousBatcher {
+    /// New continuous batcher over the submission channel.
+    pub fn new(rx: Receiver<InferenceRequest>, policy: SloPolicy) -> Self {
+        assert!(policy.max_batch >= 1);
+        ContinuousBatcher {
+            rx,
+            backlog: VecDeque::new(),
+            policy,
+        }
+    }
+
+    /// The sizing policy.
+    pub fn policy(&self) -> &SloPolicy {
+        &self.policy
+    }
+
+    /// Requests pulled off the channel but not yet dispatched.
+    pub fn backlog_len(&self) -> usize {
+        self.backlog.len()
+    }
+
+    /// Block until at least one request is available, admit everything
+    /// already queued (up to `max_batch`) without waiting for more, and
+    /// size the dispatch from the caller's cycles/request EMA. `None`
+    /// when the channel is closed and the backlog drained (shutdown).
+    pub fn next_batch(&mut self, ema_cycles_per_req: u64) -> Option<Vec<InferenceRequest>> {
+        if self.backlog.is_empty() {
+            match self.rx.recv() {
+                Ok(req) => self.backlog.push_back(req),
+                Err(_) => return None,
+            }
+        }
+        // admit whatever has already arrived — never wait for company
+        while self.backlog.len() < self.policy.max_batch {
+            match self.rx.try_recv() {
+                Ok(req) => self.backlog.push_back(req),
+                Err(_) => break, // empty now, or disconnected (next recv says which)
+            }
+        }
+        let oldest_wait_us = self
+            .backlog
+            .front()
+            .map(|r| r.submitted.elapsed().as_micros() as u64)
+            .unwrap_or(0);
+        let n = self
+            .policy
+            .batch_size(self.backlog.len(), oldest_wait_us, ema_cycles_per_req);
+        Some(self.backlog.drain(..n).collect())
     }
 }
 
@@ -123,10 +272,145 @@ mod tests {
     }
 
     #[test]
+    fn zero_max_wait_flushes_immediately_without_panicking() {
+        // regression: with max_wait = 0 the deadline equals (or precedes)
+        // `now` on entry, so the old `deadline - now` subtraction inside
+        // the recv_timeout call could underflow-panic if the clock ticked
+        // between the loop's deadline check and the subtraction. The
+        // saturating form must flush the partial batch instead.
+        let (tx, rx) = mpsc::channel();
+        let (rtx, _rrx) = mpsc::channel();
+        for i in 0..3 {
+            tx.send(req(i, rtx.clone())).unwrap();
+        }
+        let b = Batcher::new(
+            rx,
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::ZERO,
+            },
+        );
+        let batch = b.next_batch().expect("first request forms a batch");
+        assert!(!batch.is_empty() && batch.len() <= 8);
+        assert_eq!(batch[0].id, 0, "FIFO from the channel");
+    }
+
+    #[test]
     fn none_on_shutdown() {
         let (tx, rx) = mpsc::channel::<InferenceRequest>();
         drop(tx);
         let b = Batcher::new(rx, BatchPolicy::default());
         assert!(b.next_batch().is_none());
+    }
+
+    fn policy(max_batch: usize, shards: usize, slo: Option<u64>) -> SloPolicy {
+        SloPolicy {
+            max_batch,
+            shards,
+            clock_mhz: 200.0,
+            slo_p99_us: slo,
+        }
+    }
+
+    #[test]
+    fn slo_policy_converts_ema_to_simulated_time() {
+        let p = policy(16, 4, Some(1000));
+        // 200 MHz: 200 cycles per microsecond
+        assert_eq!(p.us_per_req(20_000), 100);
+        assert_eq!(p.exec_us(1, 20_000), 100);
+        assert_eq!(p.exec_us(4, 20_000), 100, "4 shards run 4 requests concurrently");
+        assert_eq!(p.exec_us(5, 20_000), 200, "the 5th spills into a second wave");
+        assert_eq!(p.exec_us(16, 20_000), 400);
+        // the cold EMA (1 cycle) truncates to 0us: nothing shrinks or
+        // sheds before the first real completion is learned
+        assert_eq!(p.us_per_req(1), 0);
+        assert!(p.attainable(1));
+    }
+
+    #[test]
+    fn slo_policy_sizes_against_the_target() {
+        // ema 20_000 cycles -> 100us/request; 4 shards
+        let ema = 20_000;
+        // no SLO: pure continuous, take everything up to max_batch
+        assert_eq!(policy(16, 4, None).batch_size(7, 0, ema), 7);
+        assert_eq!(policy(16, 4, None).batch_size(40, 123, ema), 16);
+        // loose SLO (4 waves fit): coalesce to max_batch
+        assert_eq!(policy(16, 4, Some(400)).batch_size(16, 0, ema), 16);
+        // tight SLO (one wave fits): shrink to one wave of 4
+        assert_eq!(policy(16, 4, Some(150)).batch_size(16, 0, ema), 4);
+        // queue wait eats budget: 250us waited of 400 leaves one wave
+        assert_eq!(policy(16, 4, Some(400)).batch_size(16, 250, ema), 4);
+        // a free worker with queued work always dispatches at least 1
+        assert_eq!(policy(16, 4, Some(100)).batch_size(3, 0, ema), 3);
+        assert_eq!(policy(16, 4, Some(100)).batch_size(1, 0, ema), 1);
+        // oldest already blew the budget: SLO is lost either way, revert
+        // to throughput-optimal rather than dribbling singletons
+        assert_eq!(policy(16, 4, Some(400)).batch_size(16, 401, ema), 16);
+        // attainability: a lone request meeting the target
+        assert!(policy(16, 4, Some(100)).attainable(ema));
+        assert!(!policy(16, 4, Some(99)).attainable(ema));
+        assert!(policy(16, 4, None).attainable(ema));
+    }
+
+    #[test]
+    fn continuous_batcher_takes_what_is_queued_without_waiting() {
+        let (tx, rx) = mpsc::channel();
+        let (rtx, _rrx) = mpsc::channel();
+        for i in 0..6 {
+            tx.send(req(i, rtx.clone())).unwrap();
+        }
+        let mut b = ContinuousBatcher::new(rx, policy(4, 1, None));
+        let t0 = Instant::now();
+        let batch = b.next_batch(1).unwrap();
+        assert_eq!(batch.len(), 4, "capped at max_batch");
+        assert_eq!(
+            batch.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3],
+            "FIFO"
+        );
+        // no max-wait window exists to sleep through
+        assert!(
+            t0.elapsed() < Duration::from_millis(250),
+            "continuous admission must not wait for company"
+        );
+        // the leftovers lead the next dispatch
+        let batch = b.next_batch(1).unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4, 5]);
+    }
+
+    #[test]
+    fn continuous_batcher_keeps_slo_leftovers_in_backlog() {
+        let (tx, rx) = mpsc::channel();
+        let (rtx, _rrx) = mpsc::channel();
+        for i in 0..8 {
+            tx.send(req(i, rtx.clone())).unwrap();
+        }
+        // 100ms/request on 4 shards, 150ms target -> one 4-wide wave
+        // fits, two never do; the 50ms of slack absorbs any wall-clock
+        // queue wait a loaded CI machine charges the oldest request
+        // before dispatch
+        let ema = 20_000_000;
+        let mut b = ContinuousBatcher::new(rx, policy(8, 4, Some(150_000)));
+        let batch = b.next_batch(ema).unwrap();
+        assert_eq!(batch.len(), 4, "SLO shrinks the dispatch to one wave");
+        assert_eq!(b.backlog_len(), 4, "the rest stays queued, not dropped");
+        drop(tx);
+        // backlog drains before shutdown is reported
+        let batch = b.next_batch(ema).unwrap();
+        assert!(!batch.is_empty());
+        let mut rest: Vec<u64> = batch.iter().map(|r| r.id).collect();
+        while let Some(more) = b.next_batch(ema) {
+            rest.extend(more.iter().map(|r| r.id));
+        }
+        assert_eq!(rest, vec![4, 5, 6, 7], "backlog drains in order before shutdown");
+        assert_eq!(b.backlog_len(), 0);
+    }
+
+    #[test]
+    fn continuous_batcher_none_on_shutdown() {
+        let (tx, rx) = mpsc::channel::<InferenceRequest>();
+        drop(tx);
+        let mut b = ContinuousBatcher::new(rx, policy(8, 1, None));
+        assert!(b.next_batch(1).is_none());
     }
 }

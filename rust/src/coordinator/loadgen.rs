@@ -1,0 +1,545 @@
+//! Deterministic simulated-time load generator for latency-SLO benches.
+//!
+//! Serving throughput numbers are meaningless without the latency
+//! *distribution* under a realistic arrival process, so this module
+//! drives a real accelerator cluster (real compiled plans, real cycle
+//! model, bit-exact outputs) through a discrete-event simulation of the
+//! serving front end: requests arrive on a simulated-microsecond clock
+//! (open-loop Poisson, closed-loop clients, or deterministic bursts),
+//! batches form under either the fixed fill-to-max/timeout model or the
+//! continuous SLO-sized model ([`super::batcher::SloPolicy`] — the exact
+//! policy the threaded coordinator runs), execution costs
+//! `ceil(cycles / clock_mhz)` simulated microseconds, and every
+//! completion is checked against `forward_ref`. Everything is seeded and
+//! clocked in simulated time, so reports are bit-for-bit reproducible —
+//! no wall-clock flake, no thread scheduling noise.
+
+use super::batcher::SloPolicy;
+use crate::accel::SocConfig;
+use crate::cluster::{Cluster, ClusterConfig, SchedulePolicy, Scheduler};
+use crate::cnn::networks::{ClusterDeployment, NetworkInstance};
+use crate::cnn::tensor::Tensor;
+use crate::error::{Error, Result};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// Arrival process, on the simulated-microsecond clock.
+#[derive(Clone, Copy, Debug)]
+pub enum Arrivals {
+    /// Open-loop Poisson arrivals at `rate_rps` requests/second
+    /// (exponential inter-arrival gaps from a seeded xorshift64 —
+    /// deterministic per seed). Open loop means arrivals never slow down
+    /// when the server falls behind: the queue grows, exactly like real
+    /// front-door traffic past saturation.
+    Poisson { rate_rps: f64, seed: u64 },
+    /// Closed-loop clients: `concurrency` clients each submit, wait for
+    /// the response, think for `think_us`, and submit again. Offered
+    /// load self-limits to completion rate — the classic
+    /// throughput-at-saturation harness.
+    Closed { concurrency: usize, think_us: u64 },
+    /// Deterministic bursts: `burst` requests arrive simultaneously
+    /// every `period_us`. The worst case for fixed-window batching and
+    /// the motivating case for continuous admission.
+    Bursts { burst: usize, period_us: u64 },
+}
+
+/// Batch-formation model under test.
+#[derive(Clone, Copy, Debug)]
+pub enum BatchMode {
+    /// Fixed fill-to-`max_batch`/timeout batching: a window opens on the
+    /// first queued request and the batch dispatches at the earlier of
+    /// `max_batch` arrivals or `max_wait_us`.
+    Fixed { max_wait_us: u64 },
+    /// Continuous batching: a free worker takes whatever is queued
+    /// immediately; [`SloPolicy`] sizes the dispatch (and sheds at
+    /// admission when the learned EMA says the SLO is unattainable).
+    Continuous,
+}
+
+/// Load-generator scenario.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadGenConfig {
+    /// Arrival process.
+    pub arrivals: Arrivals,
+    /// Batch-formation model.
+    pub mode: BatchMode,
+    /// Total requests offered.
+    pub requests: usize,
+    /// Deployed batch capacity.
+    pub max_batch: usize,
+    /// Data-parallel replicas the cluster shards each batch across.
+    pub shards: usize,
+    /// Simulated accelerator clock in MHz (cycles → microseconds).
+    pub clock_mhz: f64,
+    /// p99 target for continuous mode (`None` = pure continuous;
+    /// ignored by fixed mode, which has no sizing freedom).
+    pub slo_p99_us: Option<u64>,
+    /// Seed for the request inputs (and, combined with the arrival
+    /// seed, the whole run).
+    pub seed: u64,
+    /// Run batches of every size `1..=max_batch` before the measured
+    /// timeline: plans compile, the configuration contexts warm, and the
+    /// scheduler's cycles/request EMA learns the real cost — so the
+    /// measured phase has no cold-compile artifacts and SLO sizing is
+    /// deterministic from the first dispatch.
+    pub warmup: bool,
+}
+
+/// One load-generator run's results (all times simulated microseconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LoadGenReport {
+    /// Requests executed to completion.
+    pub served: usize,
+    /// Requests shed at admission (SLO unattainable under the EMA).
+    pub shed: usize,
+    /// Served responses that did **not** match `forward_ref` (always 0
+    /// unless the accelerator model is broken).
+    pub mismatches: usize,
+    /// Batches dispatched.
+    pub batches: usize,
+    /// Largest dispatched batch.
+    pub max_batch_size: usize,
+    /// Mean dispatched batch size.
+    pub mean_batch: f64,
+    /// Latency percentiles over served requests (arrival → completion).
+    pub p50_us: u64,
+    /// 95th percentile latency.
+    pub p95_us: u64,
+    /// 99th percentile latency.
+    pub p99_us: u64,
+    /// Worst served latency.
+    pub max_us: u64,
+    /// Mean served latency.
+    pub mean_us: f64,
+    /// First arrival → last completion.
+    pub makespan_us: u64,
+    /// Served requests per (simulated) second.
+    pub throughput_rps: f64,
+    /// The scheduler's final learned cost, converted to µs/request.
+    pub ema_us_per_req: u64,
+}
+
+/// Real cluster + deployment + scheduler — the same stack a coordinator
+/// worker owns, minus the threads.
+struct Rig {
+    cluster: Cluster,
+    cdep: ClusterDeployment,
+    sched: Scheduler,
+}
+
+fn build_rig(inst: &NetworkInstance, shards: usize, max_batch: usize) -> Result<Rig> {
+    let per_shard = max_batch.div_ceil(shards);
+    let mut cluster = Cluster::new(ClusterConfig {
+        replicas: shards,
+        soc: SocConfig::serving(),
+    })?;
+    cluster.set_pipeline(true)?;
+    cluster.set_fusion(true);
+    cluster.set_config_cache(true);
+    let cdep = inst.deploy_cluster(&mut cluster, per_shard)?;
+    let sched = Scheduler::new(SchedulePolicy::LeastOutstandingCycles, shards)?;
+    Ok(Rig {
+        cluster,
+        cdep,
+        sched,
+    })
+}
+
+/// Run every batch size once so plans, contexts and the EMA are warm.
+fn warm_rig(rig: &mut Rig, inst: &NetworkInstance, max_batch: usize) -> Result<()> {
+    let zero = Tensor::zeros(inst.net.input.dims());
+    for n in 1..=max_batch {
+        let inputs: Vec<&[i64]> = vec![zero.data.as_slice(); n];
+        rig.cdep
+            .run_sharded(&mut rig.cluster, &mut rig.sched, &inputs)?;
+    }
+    Ok(())
+}
+
+/// The cycles/request EMA a warmed deployment learns, in simulated
+/// µs/request. The cycle model is data-independent (same shapes → same
+/// cycles), so this exactly reproduces the post-warmup EMA inside
+/// [`run_loadgen`] — benches and tests use it to express arrival rates
+/// and SLO targets in units of the hardware's actual speed instead of
+/// hard-coding cycle counts.
+pub fn probe_us_per_req(
+    inst: &NetworkInstance,
+    shards: usize,
+    max_batch: usize,
+    clock_mhz: f64,
+) -> Result<u64> {
+    if shards == 0 || max_batch == 0 || clock_mhz <= 0.0 {
+        return Err(Error::Coordinator(
+            "probe needs shards ≥ 1, max_batch ≥ 1, clock_mhz > 0".into(),
+        ));
+    }
+    let mut rig = build_rig(inst, shards, max_batch)?;
+    warm_rig(&mut rig, inst, max_batch)?;
+    let policy = SloPolicy {
+        max_batch,
+        shards,
+        clock_mhz,
+        slo_p99_us: None,
+    };
+    Ok(policy.us_per_req(rig.sched.cycles_per_req_ema()))
+}
+
+fn xorshift(s: &mut u64) -> u64 {
+    *s ^= *s << 13;
+    *s ^= *s >> 7;
+    *s ^= *s << 17;
+    *s
+}
+
+/// Exponential inter-arrival gap in µs for `rate_rps`, from one RNG draw.
+fn exp_gap_us(rng: &mut u64, rate_rps: f64) -> u64 {
+    // uniform in (0, 1]: never ln(0)
+    let u = ((xorshift(rng) >> 11) as f64 + 1.0) / (1u64 << 53) as f64;
+    (-u.ln() / rate_rps * 1e6) as u64
+}
+
+/// Drive one scenario to completion. Deterministic: same config → the
+/// same report, bit for bit.
+pub fn run_loadgen(inst: &NetworkInstance, cfg: &LoadGenConfig) -> Result<LoadGenReport> {
+    if cfg.requests == 0 || cfg.max_batch == 0 || cfg.shards == 0 || cfg.clock_mhz <= 0.0 {
+        return Err(Error::Coordinator(
+            "loadgen needs requests ≥ 1, max_batch ≥ 1, shards ≥ 1, clock_mhz > 0".into(),
+        ));
+    }
+    match cfg.arrivals {
+        Arrivals::Poisson { rate_rps, .. } if rate_rps <= 0.0 => {
+            return Err(Error::Coordinator("poisson rate must be > 0".into()));
+        }
+        Arrivals::Closed { concurrency, .. } if concurrency == 0 => {
+            return Err(Error::Coordinator("closed loop needs concurrency ≥ 1".into()));
+        }
+        Arrivals::Bursts { burst, .. } if burst == 0 => {
+            return Err(Error::Coordinator("bursts need burst ≥ 1".into()));
+        }
+        _ => {}
+    }
+    let mut rig = build_rig(inst, cfg.shards, cfg.max_batch)?;
+    if cfg.warmup {
+        warm_rig(&mut rig, inst, cfg.max_batch)?;
+    }
+    let policy = SloPolicy {
+        max_batch: cfg.max_batch,
+        shards: cfg.shards,
+        clock_mhz: cfg.clock_mhz,
+        slo_p99_us: cfg.slo_p99_us,
+    };
+    // distinct seeded inputs with precomputed references: every
+    // completion is checked bit-exact, whatever batch it rode in
+    let dims = inst.net.input.dims();
+    let tensors: Vec<Tensor> = (0..cfg.requests)
+        .map(|i| Tensor::random(dims.clone(), 127, cfg.seed + i as u64 + 1))
+        .collect();
+    let refs: Vec<Vec<i64>> = tensors
+        .iter()
+        .map(|t| inst.forward_ref(t).map(|r| r.data))
+        .collect::<Result<_>>()?;
+
+    // event state: `pending` holds not-yet-admitted arrivals as
+    // (time, index) min-heap entries; `queue` is the admitted FIFO
+    let mut pending: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+    let mut queue: VecDeque<(usize, u64)> = VecDeque::new();
+    // closed loop: the next unoffered request index, fed by completions
+    let mut next_closed_idx = cfg.requests;
+    let mut think = 0u64;
+    match cfg.arrivals {
+        Arrivals::Poisson { rate_rps, seed } => {
+            let mut rng = (cfg.seed ^ seed ^ 0x9E37_79B9_7F4A_7C15).max(1);
+            let mut t = 0u64;
+            for i in 0..cfg.requests {
+                t += exp_gap_us(&mut rng, rate_rps);
+                pending.push(Reverse((t, i)));
+            }
+        }
+        Arrivals::Closed {
+            concurrency,
+            think_us,
+        } => {
+            let first = concurrency.min(cfg.requests);
+            for i in 0..first {
+                pending.push(Reverse((0, i)));
+            }
+            next_closed_idx = first;
+            think = think_us;
+        }
+        Arrivals::Bursts { burst, period_us } => {
+            for i in 0..cfg.requests {
+                pending.push(Reverse(((i / burst) as u64 * period_us, i)));
+            }
+        }
+    }
+    let closed = matches!(cfg.arrivals, Arrivals::Closed { .. });
+
+    let mut worker_free = 0u64; // one worker: when the cluster goes idle
+    let mut batcher_free = 0u64; // fixed mode: when the window thread frees
+    let mut latencies: Vec<u64> = Vec::with_capacity(cfg.requests);
+    let mut report = LoadGenReport::default();
+    let mut batch_size_sum = 0u64;
+
+    // admit one pending arrival: queue it, or shed it at the front door
+    // when continuous-mode SLO admission says the target is unattainable
+    macro_rules! admit {
+        ($t:expr, $idx:expr) => {{
+            let unattainable = matches!(cfg.mode, BatchMode::Continuous)
+                && !policy.attainable(rig.sched.cycles_per_req_ema());
+            if unattainable {
+                report.shed += 1;
+                report.makespan_us = report.makespan_us.max($t);
+                // a shed client hears back immediately and thinks again
+                if closed && next_closed_idx < cfg.requests {
+                    pending.push(Reverse(($t + think, next_closed_idx)));
+                    next_closed_idx += 1;
+                }
+            } else {
+                queue.push_back(($idx, $t));
+            }
+        }};
+    }
+
+    loop {
+        while queue.is_empty() {
+            match pending.pop() {
+                Some(Reverse((t, idx))) => admit!(t, idx),
+                None => break,
+            }
+        }
+        if queue.is_empty() {
+            break; // everything offered is served or shed
+        }
+        // form one batch
+        let (t_start, n) = match cfg.mode {
+            BatchMode::Continuous => {
+                // the worker dispatches the moment both it and a request
+                // are free; everything arriving up to that moment rides
+                // along (sized below), nothing waits for company
+                let t_start = worker_free.max(queue.front().map(|&(_, t)| t).unwrap_or(0));
+                while let Some(&Reverse((t, _))) = pending.peek() {
+                    if t > t_start {
+                        break;
+                    }
+                    let Reverse((t, idx)) = pending.pop().unwrap();
+                    admit!(t, idx);
+                }
+                let oldest = queue.front().map(|&(_, t)| t).unwrap_or(t_start);
+                let n = policy.batch_size(
+                    queue.len(),
+                    t_start.saturating_sub(oldest),
+                    rig.sched.cycles_per_req_ema(),
+                );
+                (t_start, n)
+            }
+            BatchMode::Fixed { max_wait_us } => {
+                // the window opens on the oldest queued request (once the
+                // batcher thread is free) and closes at the earlier of
+                // max_batch arrivals or the max-wait deadline
+                let oldest = queue.front().map(|&(_, t)| t).unwrap_or(0);
+                let window_start = batcher_free.max(oldest);
+                let deadline = window_start + max_wait_us;
+                let mut t_form = if queue.len() >= cfg.max_batch {
+                    window_start
+                } else {
+                    deadline
+                };
+                while queue.len() < cfg.max_batch {
+                    match pending.peek() {
+                        Some(&Reverse((t, _))) if t <= deadline => {
+                            let Reverse((t, idx)) = pending.pop().unwrap();
+                            queue.push_back((idx, t));
+                            if queue.len() == cfg.max_batch {
+                                t_form = window_start.max(t);
+                            }
+                        }
+                        _ => break,
+                    }
+                }
+                batcher_free = t_form;
+                (worker_free.max(t_form), queue.len().min(cfg.max_batch))
+            }
+        };
+        let batch: Vec<(usize, u64)> = queue.drain(..n).collect();
+        let inputs: Vec<&[i64]> = batch
+            .iter()
+            .map(|&(idx, _)| tensors[idx].data.as_slice())
+            .collect();
+        let (outs, m) = rig
+            .cdep
+            .run_sharded(&mut rig.cluster, &mut rig.sched, &inputs)?;
+        let exec_us = (m.total_cycles() as f64 / cfg.clock_mhz).ceil() as u64;
+        let t_done = t_start + exec_us;
+        worker_free = t_done;
+        report.batches += 1;
+        report.max_batch_size = report.max_batch_size.max(n);
+        batch_size_sum += n as u64;
+        for (k, &(idx, arrived)) in batch.iter().enumerate() {
+            if outs[k] != refs[idx] {
+                report.mismatches += 1;
+            }
+            latencies.push(t_done - arrived);
+            report.served += 1;
+            // this client's next submission enters the open set
+            if closed && next_closed_idx < cfg.requests {
+                pending.push(Reverse((t_done + think, next_closed_idx)));
+                next_closed_idx += 1;
+            }
+        }
+        report.makespan_us = report.makespan_us.max(t_done);
+    }
+
+    if !latencies.is_empty() {
+        let sum: u64 = latencies.iter().sum();
+        report.mean_us = sum as f64 / latencies.len() as f64;
+        latencies.sort_unstable();
+        let pct = |p: f64| latencies[((latencies.len() as f64 - 1.0) * p) as usize];
+        report.p50_us = pct(0.50);
+        report.p95_us = pct(0.95);
+        report.p99_us = pct(0.99);
+        report.max_us = *latencies.last().unwrap();
+    }
+    if report.batches > 0 {
+        report.mean_batch = batch_size_sum as f64 / report.batches as f64;
+    }
+    if report.makespan_us > 0 {
+        report.throughput_rps = report.served as f64 * 1e6 / report.makespan_us as f64;
+    }
+    report.ema_us_per_req = policy.us_per_req(rig.sched.cycles_per_req_ema());
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::networks::{Network, NetworkKind};
+
+    fn tiny() -> NetworkInstance {
+        NetworkInstance::random(Network::build(NetworkKind::Tiny), 42).unwrap()
+    }
+
+    #[test]
+    fn poisson_run_is_deterministic_and_bit_exact() {
+        let inst = tiny();
+        let cfg = LoadGenConfig {
+            arrivals: Arrivals::Poisson {
+                rate_rps: 2000.0,
+                seed: 7,
+            },
+            mode: BatchMode::Continuous,
+            requests: 12,
+            max_batch: 4,
+            shards: 2,
+            clock_mhz: 200.0,
+            slo_p99_us: None,
+            seed: 100,
+            warmup: true,
+        };
+        let a = run_loadgen(&inst, &cfg).unwrap();
+        let b = run_loadgen(&inst, &cfg).unwrap();
+        assert_eq!(a.served, 12);
+        assert_eq!(a.shed, 0);
+        assert_eq!(a.mismatches, 0, "every response must match forward_ref");
+        assert!(a.batches >= 1 && a.max_batch_size <= 4);
+        assert!(a.p99_us >= a.p50_us);
+        assert!(a.throughput_rps > 0.0);
+        // same config, same report — simulated time has no flake
+        assert_eq!(a.served, b.served);
+        assert_eq!(a.batches, b.batches);
+        assert_eq!((a.p50_us, a.p95_us, a.p99_us), (b.p50_us, b.p95_us, b.p99_us));
+        assert_eq!(a.makespan_us, b.makespan_us);
+    }
+
+    #[test]
+    fn closed_loop_serves_every_request_in_both_modes() {
+        let inst = tiny();
+        for mode in [BatchMode::Continuous, BatchMode::Fixed { max_wait_us: 50 }] {
+            let r = run_loadgen(
+                &inst,
+                &LoadGenConfig {
+                    arrivals: Arrivals::Closed {
+                        concurrency: 6,
+                        think_us: 10,
+                    },
+                    mode,
+                    requests: 18,
+                    max_batch: 4,
+                    shards: 2,
+                    clock_mhz: 200.0,
+                    slo_p99_us: None,
+                    seed: 200,
+                    warmup: true,
+                },
+            )
+            .unwrap();
+            assert_eq!(r.served, 18, "{mode:?}");
+            assert_eq!(r.shed, 0);
+            assert_eq!(r.mismatches, 0);
+            assert!(r.mean_batch >= 1.0);
+        }
+    }
+
+    #[test]
+    fn probe_matches_the_post_warmup_ema() {
+        let inst = tiny();
+        let e = probe_us_per_req(&inst, 2, 4, 200.0).unwrap();
+        assert!(e >= 1, "Tiny at 200MHz costs at least a microsecond");
+        // a single measured dispatch moves the EMA at most one 1/4-weight
+        // step, so the reported learned cost stays in the probe's regime
+        let r = run_loadgen(
+            &inst,
+            &LoadGenConfig {
+                arrivals: Arrivals::Bursts {
+                    burst: 1,
+                    period_us: 1,
+                },
+                mode: BatchMode::Continuous,
+                requests: 1,
+                max_batch: 4,
+                shards: 2,
+                clock_mhz: 200.0,
+                slo_p99_us: None,
+                seed: 300,
+                warmup: true,
+            },
+        )
+        .unwrap();
+        assert_eq!(r.served, 1);
+        // one warmed single-request dispatch moves the EMA by at most the
+        // 1/4-weight step toward the single-request cost
+        assert!(r.ema_us_per_req >= e / 2, "{} vs probe {e}", r.ema_us_per_req);
+    }
+
+    #[test]
+    fn rejects_degenerate_configs() {
+        let inst = tiny();
+        let base = LoadGenConfig {
+            arrivals: Arrivals::Poisson {
+                rate_rps: 100.0,
+                seed: 1,
+            },
+            mode: BatchMode::Continuous,
+            requests: 1,
+            max_batch: 1,
+            shards: 1,
+            clock_mhz: 200.0,
+            slo_p99_us: None,
+            seed: 1,
+            warmup: false,
+        };
+        assert!(run_loadgen(&inst, &LoadGenConfig { requests: 0, ..base }).is_err());
+        assert!(run_loadgen(&inst, &LoadGenConfig { shards: 0, ..base }).is_err());
+        assert!(run_loadgen(
+            &inst,
+            &LoadGenConfig {
+                arrivals: Arrivals::Poisson {
+                    rate_rps: 0.0,
+                    seed: 1
+                },
+                ..base
+            }
+        )
+        .is_err());
+        assert!(probe_us_per_req(&inst, 0, 4, 200.0).is_err());
+    }
+}

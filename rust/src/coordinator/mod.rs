@@ -4,20 +4,26 @@
 //!
 //! Shape: a vLLM-router-style serving loop scaled to this paper — clients
 //! submit images, the [`batcher`] groups them under a max-batch/max-wait
-//! policy, and [`server`] workers (each owning a private accelerator
-//! **cluster** of `CoordinatorConfig::shards` replicated SoCs, see
-//! [`crate::cluster`]) shard each batch data-parallel across their
-//! replicas, dispatch the shards concurrently, and report per-request
-//! latency plus per-shard utilization to [`stats`].
+//! policy (or admits them continuously against a p99 SLO, see
+//! [`batcher::ContinuousBatcher`]), and [`server`] workers (each owning a
+//! private accelerator **cluster** of `CoordinatorConfig::shards`
+//! replicated SoCs, see [`crate::cluster`]) shard each batch
+//! data-parallel across their replicas, dispatch the shards
+//! concurrently, and report per-request latency plus per-shard
+//! utilization to [`stats`]. The [`loadgen`] module drives either
+//! batching mode under simulated-time arrival processes (open-loop
+//! Poisson, closed-loop, deterministic bursts) for latency-SLO benches.
 
 pub mod batcher;
 pub mod dedup;
+pub mod loadgen;
 pub mod request;
 pub mod server;
 pub mod stats;
 
-pub use batcher::{BatchPolicy, Batcher};
+pub use batcher::{BatchPolicy, Batcher, ContinuousBatcher, SloPolicy};
 pub use dedup::DedupCache;
+pub use loadgen::{probe_us_per_req, run_loadgen, Arrivals, BatchMode, LoadGenConfig, LoadGenReport};
 pub use request::{InferenceRequest, InferenceResponse, RequestId};
 pub use server::{Coordinator, CoordinatorConfig};
 pub use stats::{LatencyStats, StatsCollector};

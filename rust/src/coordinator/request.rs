@@ -34,6 +34,9 @@ pub struct InferenceResponse {
     pub class: usize,
     /// End-to-end latency in microseconds.
     pub latency_us: u64,
+    /// Time spent queued before a worker picked the request up, in
+    /// microseconds (0 on error and on dedup hits, which never queue).
+    pub queue_wait_us: u64,
     /// Size of the batch this request rode in (0 if it never reached the
     /// accelerator).
     pub batch_size: usize,
@@ -58,6 +61,7 @@ impl InferenceResponse {
             logits: Vec::new(),
             class: 0,
             latency_us,
+            queue_wait_us: 0,
             batch_size: 0,
             worker,
             accel_cycles: 0,

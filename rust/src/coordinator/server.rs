@@ -1,10 +1,20 @@
-//! The coordinator: front door, batcher thread, worker pool.
+//! The coordinator: front door, batch formation, worker pool.
 //!
 //! ```text
 //!   submit() ──tx──► batcher thread ──work queue──► worker 0 (SoC #0)
 //!                                              ├──► worker 1 (SoC #1)
 //!                                              └──► …
 //! ```
+//!
+//! Batch formation comes in two modes. The default **fixed** batcher
+//! (diagrammed above) fills batches to `max_batch` or a timeout on a
+//! dedicated thread. **Continuous** batching
+//! (`CoordinatorConfig::continuous`) removes the thread entirely: a free
+//! worker pulls whatever is queued the moment it goes idle, and the
+//! dispatch size comes from the scheduler's measured cycles/request EMA
+//! against the `slo_p99_us` target (see
+//! [`super::batcher::SloPolicy`]) — no request ever waits for company,
+//! and the front door sheds when the EMA says the SLO is unattainable.
 //!
 //! Each worker owns a **private accelerator** (its own `accel::Driver`
 //! with the network deployed at batch capacity), mirroring a multi-card
@@ -36,7 +46,7 @@
 //! a bounded LRU result cache without forming an accelerator batch at
 //! all (`StatsCollector::dedup_hits`).
 
-use super::batcher::{BatchPolicy, Batcher};
+use super::batcher::{BatchPolicy, Batcher, ContinuousBatcher, SloPolicy};
 use super::dedup::DedupCache;
 use super::request::{InferenceRequest, InferenceResponse, RequestId};
 use super::stats::StatsCollector;
@@ -115,6 +125,20 @@ pub struct CoordinatorConfig {
     pub trace: bool,
     /// Batching policy.
     pub batch: BatchPolicy,
+    /// Continuous batching: instead of the fixed fill-to-`max_batch`/
+    /// timeout batcher thread, a free worker admits whatever is queued
+    /// *right now* — no batch ever waits for company — and sizes the
+    /// dispatch dynamically from the scheduler's measured cycles/request
+    /// EMA against `slo_p99_us` (see [`SloPolicy`]). Off by default; set
+    /// with `serve --continuous`.
+    pub continuous: bool,
+    /// p99 latency target in **simulated** microseconds for continuous
+    /// batching: dispatches shrink so predicted queue-wait + execution
+    /// stays under it, and the front door sheds (via the `overloaded`
+    /// path) when the learned EMA says even a lone request cannot meet
+    /// it. `None` = no target: continuous mode takes everything queued up
+    /// to `max_batch`. Set with `serve --slo-p99-us`.
+    pub slo_p99_us: Option<u64>,
     /// Per-replica SoC configuration.
     pub soc: SocConfig,
     /// Simulated accelerator clock (MHz) used to convert cycles into
@@ -164,6 +188,8 @@ impl Default for CoordinatorConfig {
             dedup_budget_words: DedupCache::DEFAULT_BUDGET_WORDS,
             trace: false,
             batch: BatchPolicy::default(),
+            continuous: false,
+            slo_p99_us: None,
             soc: SocConfig::serving(),
             clock_mhz: 200.0,
             queue_depth: 0,
@@ -185,6 +211,32 @@ fn class_of(logits: &[i64]) -> usize {
         .max_by_key(|(_, &v)| v)
         .map(|(i, _)| i)
         .unwrap_or(0)
+}
+
+/// Where a worker gets its next batch: the fixed batcher thread's output
+/// channel, or the shared continuous batcher pulled directly. Workers
+/// serialize on the inner mutex only while *forming* a batch (the recv);
+/// execution happens after the guard drops, so shards still run
+/// concurrently across workers.
+#[derive(Clone)]
+enum BatchSource {
+    Fixed(Arc<Mutex<Receiver<Vec<InferenceRequest>>>>),
+    Continuous(Arc<Mutex<ContinuousBatcher>>),
+}
+
+impl BatchSource {
+    /// Block for the next batch; `None` on shutdown. `ema_cycles_per_req`
+    /// feeds the continuous batcher's SLO sizing (ignored by the fixed
+    /// path).
+    fn next(&self, ema_cycles_per_req: u64) -> Option<Vec<InferenceRequest>> {
+        match self {
+            // a panicking sibling poisons the shared mutex; the receiver
+            // itself is still coherent, so recover the guard and keep
+            // serving
+            BatchSource::Fixed(rx) => lock_recover(rx).recv().ok(),
+            BatchSource::Continuous(b) => lock_recover(b).next_batch(ema_cycles_per_req),
+        }
+    }
 }
 
 struct Worker {
@@ -307,6 +359,14 @@ pub struct Coordinator {
     /// workers answer every still-queued request with an explicit
     /// "shutting down" failure instead of serving (or dropping) it.
     shutting: Arc<AtomicBool>,
+    /// SLO sizing/admission policy (inert when `slo_p99_us` is `None`).
+    slo: SloPolicy,
+    /// Latest cycles/request EMA published by any worker's scheduler
+    /// (they serve identical replicas, so last-writer-wins is exact
+    /// enough). Read by [`Coordinator::submit`] for SLO admission and by
+    /// the continuous batcher for dispatch sizing. Starts at the
+    /// scheduler's cold estimate of 1.
+    ema: Arc<AtomicU64>,
     /// Shared statistics.
     pub stats: Arc<Mutex<StatsCollector>>,
 }
@@ -323,52 +383,65 @@ impl Coordinator {
             ));
         }
         let (tx, rx) = channel::<InferenceRequest>();
-        let (batch_tx, batch_rx) = channel::<Vec<InferenceRequest>>();
-        let batch_rx = Arc::new(Mutex::new(batch_rx));
         let stats = Arc::new(Mutex::new(StatsCollector::new()));
         let queued = Arc::new(AtomicUsize::new(0));
         let shutting = Arc::new(AtomicBool::new(false));
+        // the scheduler's cold cycles/request estimate, shared so the
+        // continuous batcher and the front door see what workers learn
+        let ema = Arc::new(AtomicU64::new(1));
+        let slo = SloPolicy {
+            max_batch: cfg.batch.max_batch.max(1),
+            shards: cfg.shards,
+            clock_mhz: cfg.clock_mhz,
+            slo_p99_us: cfg.slo_p99_us,
+        };
         // one activation cache behind the whole front door: a repeat can
         // hit no matter which worker served the original
         let dedup = cfg
             .dedup
             .then(|| Arc::new(Mutex::new(DedupCache::new(cfg.dedup_budget_words))));
 
-        // batcher thread
-        let policy = cfg.batch;
-        let batcher_handle = std::thread::Builder::new()
-            .name("kom-batcher".into())
-            .spawn(move || {
-                let b = Batcher::new(rx, policy);
-                while let Some(batch) = b.next_batch() {
-                    if batch_tx.send(batch).is_err() {
-                        break; // workers gone
+        // batch formation: continuous mode pulls straight off the
+        // submission channel (no batcher thread, nothing ever waits for
+        // company); fixed mode keeps the fill-to-max/timeout thread
+        let mut batcher_handle = None;
+        let source = if cfg.continuous {
+            BatchSource::Continuous(Arc::new(Mutex::new(ContinuousBatcher::new(rx, slo))))
+        } else {
+            let (batch_tx, batch_rx) = channel::<Vec<InferenceRequest>>();
+            let policy = cfg.batch;
+            let handle = std::thread::Builder::new()
+                .name("kom-batcher".into())
+                .spawn(move || {
+                    let b = Batcher::new(rx, policy);
+                    while let Some(batch) = b.next_batch() {
+                        if batch_tx.send(batch).is_err() {
+                            break; // workers gone
+                        }
                     }
-                }
-            })
-            .map_err(|e| Error::Coordinator(format!("spawn batcher: {e}")))?;
+                })
+                .map_err(|e| Error::Coordinator(format!("spawn batcher: {e}")))?;
+            batcher_handle = Some(handle);
+            BatchSource::Fixed(Arc::new(Mutex::new(batch_rx)))
+        };
 
         // worker pool
         let mut worker_handles = Vec::new();
         for wid in 0..cfg.workers {
             let mut worker = Worker::build(&cfg, inst)?;
-            let rx = Arc::clone(&batch_rx);
+            let source = source.clone();
             let stats = Arc::clone(&stats);
             let dedup = dedup.clone();
             let queued = Arc::clone(&queued);
             let shutting = Arc::clone(&shutting);
+            let ema = Arc::clone(&ema);
             let deadline = cfg.deadline;
             let handle = std::thread::Builder::new()
                 .name(format!("kom-worker-{wid}"))
                 .spawn(move || loop {
-                    let batch = {
-                        // a panicking sibling poisons the shared queue
-                        // mutex; the receiver itself is still coherent, so
-                        // recover the guard and keep serving
-                        let guard = lock_recover(&rx);
-                        guard.recv()
-                    };
-                    let Ok(batch) = batch else { break };
+                    let batch = source.next(ema.load(Ordering::Acquire));
+                    let Some(batch) = batch else { break };
+                    let picked = Instant::now();
                     // these requests have left the admission queue
                     queued.fetch_sub(batch.len(), Ordering::AcqRel);
                     if shutting.load(Ordering::Acquire) {
@@ -412,7 +485,12 @@ impl Coordinator {
                             }
                         }
                         match worker.validate(&req.input) {
-                            Ok(()) => valid.push(req),
+                            Ok(()) => {
+                                let wait_us =
+                                    picked.saturating_duration_since(req.submitted).as_micros()
+                                        as u64;
+                                valid.push((req, wait_us));
+                            }
                             Err(e) => {
                                 lock_recover(&stats).record_error();
                                 let latency_us = req.submitted.elapsed().as_micros() as u64;
@@ -428,10 +506,24 @@ impl Coordinator {
                     if valid.is_empty() {
                         continue;
                     }
+                    {
+                        // the dispatch is now shaped: log the size the
+                        // batcher chose and how long each rider queued
+                        let mut s = lock_recover(&stats);
+                        s.record_batch_size(valid.len());
+                        for &(_, wait_us) in &valid {
+                            s.record_queue_wait(wait_us);
+                        }
+                    }
                     let result = {
-                        let inputs: Vec<&Tensor> = valid.iter().map(|r| &r.input).collect();
+                        let inputs: Vec<&Tensor> = valid.iter().map(|(r, _)| &r.input).collect();
                         worker.infer_batch(&inputs)
                     };
+                    // publish the scheduler's learned cycles/request
+                    // *before* any response goes out: a client that has
+                    // received an answer may immediately probe SLO
+                    // admission, which must see at least this batch's EMA
+                    ema.store(worker.sched.cycles_per_req_ema(), Ordering::Release);
                     match result {
                         Ok((outs, m)) => {
                             let n = valid.len();
@@ -443,7 +535,7 @@ impl Coordinator {
                                 .collect();
                             let latencies: Vec<u64> = valid
                                 .iter()
-                                .map(|r| r.submitted.elapsed().as_micros() as u64)
+                                .map(|(r, _)| r.submitted.elapsed().as_micros() as u64)
                                 .collect();
                             // drain the batch's stitched trace (if armed)
                             // before the lock: stitching walks the rings,
@@ -489,7 +581,7 @@ impl Coordinator {
                                     }
                                 }
                             }
-                            for ((req, out), latency_us) in
+                            for (((req, queue_wait_us), out), latency_us) in
                                 valid.into_iter().zip(outs).zip(latencies)
                             {
                                 match out {
@@ -503,6 +595,7 @@ impl Coordinator {
                                             logits,
                                             class,
                                             latency_us,
+                                            queue_wait_us,
                                             batch_size: n,
                                             worker: wid,
                                             accel_cycles: cycles,
@@ -533,7 +626,7 @@ impl Coordinator {
                                     s.record_error();
                                 }
                             }
-                            for req in valid {
+                            for (req, _) in valid {
                                 let latency_us = req.submitted.elapsed().as_micros() as u64;
                                 let _ = req.reply.send(InferenceResponse::failure(
                                     req.id,
@@ -551,13 +644,15 @@ impl Coordinator {
 
         Ok(Coordinator {
             tx: Some(tx),
-            batcher_handle: Some(batcher_handle),
+            batcher_handle,
             worker_handles,
             next_id: AtomicU64::new(0),
             dedup,
             queued,
             queue_depth: cfg.queue_depth,
             shutting,
+            slo,
+            ema,
             stats,
         })
     }
@@ -593,6 +688,8 @@ impl Coordinator {
                     logits,
                     class,
                     latency_us,
+                    // a hit never queues
+                    queue_wait_us: 0,
                     // 0 = never reached an accelerator
                     batch_size: 0,
                     // served by the front door itself, not a worker
@@ -602,6 +699,29 @@ impl Coordinator {
                 });
                 return Ok((id, rx));
             }
+        }
+        // SLO admission: when the learned cycles/request EMA says even a
+        // lone request dispatched alone cannot meet the p99 target, no
+        // batch sizing can save it — queueing it would only manufacture a
+        // guaranteed miss, so shed explicitly through the same
+        // `overloaded` path as the depth bound. (Always attainable with
+        // no SLO configured, and under the cold estimate.)
+        let ema = self.ema.load(Ordering::Acquire);
+        if !self.slo.attainable(ema) {
+            lock_recover(&self.stats).record_shed();
+            let latency_us = submitted.elapsed().as_micros() as u64;
+            let _ = reply.send(InferenceResponse::failure(
+                id,
+                0,
+                latency_us,
+                Error::Overloaded(format!(
+                    "p99 SLO {}us unattainable at {}us/request — request shed",
+                    self.slo.slo_p99_us.unwrap_or(0),
+                    self.slo.us_per_req(ema)
+                ))
+                .to_string(),
+            ));
+            return Ok((id, rx));
         }
         // bounded admission: claim a queue slot or shed. The CAS loop
         // (rather than a blind increment) means concurrent submitters can
@@ -1414,6 +1534,86 @@ mod tests {
         assert!(coord.metrics_text().contains("kom_requests_total 1"));
         let stats = coord.shutdown();
         assert_eq!(stats.count(), 1);
+    }
+
+    #[test]
+    fn continuous_mode_serves_bit_exact_with_queue_wait_telemetry() {
+        let inst = tiny_instance();
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 2,
+                continuous: true,
+                ..Default::default()
+            },
+            &inst,
+        )
+        .unwrap();
+        let inputs: Vec<Tensor> = (0..12)
+            .map(|i| Tensor::random(vec![1, 16, 16], 127, 7700 + i))
+            .collect();
+        let rxs: Vec<_> = inputs
+            .iter()
+            .map(|t| coord.submit(t.clone()).unwrap())
+            .collect();
+        for ((id, rx), input) in rxs.into_iter().zip(&inputs) {
+            let resp = rx.recv().expect("response");
+            assert_eq!(resp.id, id);
+            assert!(resp.is_ok(), "{:?}", resp.error);
+            let want = inst.forward_ref(input).unwrap();
+            assert_eq!(resp.logits, want.data, "request {id} under continuous batching");
+            assert!(resp.queue_wait_us <= resp.latency_us, "wait is part of latency");
+        }
+        // the new telemetry surfaces on the metrics page
+        let metrics = coord.metrics_text();
+        assert!(metrics.contains("kom_batch_size_bucket{le=\"+Inf\"}"));
+        assert!(metrics.contains("kom_queue_wait_us{quantile=\"0.99\"}"));
+        let stats = coord.shutdown();
+        assert_eq!(stats.count(), 12);
+        let (_, _, dispatches) = stats.batch_size_histogram();
+        assert!(dispatches >= 1, "every dispatch logs its chosen size");
+        assert!(stats.queue_wait().count >= 12, "every rider logs its wait");
+    }
+
+    #[test]
+    fn continuous_unattainable_slo_sheds_after_warmup() {
+        let inst = tiny_instance();
+        // a 1us p99 target is hopeless for Tiny (thousands of cycles per
+        // request), but the cold EMA of 1 cycle rounds to 0us — so the
+        // first request is admitted, teaches the scheduler the real cost,
+        // and everything after it sheds at the front door
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                dedup: false,
+                continuous: true,
+                slo_p99_us: Some(1),
+                ..Default::default()
+            },
+            &inst,
+        )
+        .unwrap();
+        let first = Tensor::random(vec![1, 16, 16], 127, 7800);
+        let (_, rx) = coord.submit(first.clone()).unwrap();
+        let resp = rx.recv().expect("cold request served");
+        assert!(resp.is_ok(), "{:?}", resp.error);
+        assert_eq!(resp.logits, inst.forward_ref(&first).unwrap().data);
+        // the EMA is published before the response goes out, so these
+        // submissions deterministically see the learned cost
+        for i in 0..3 {
+            let (_, rx) = coord
+                .submit(Tensor::random(vec![1, 16, 16], 127, 7810 + i))
+                .unwrap();
+            let resp = rx.recv().expect("shed requests get explicit responses");
+            assert!(!resp.is_ok());
+            let msg = resp.error.as_deref().unwrap_or("");
+            assert!(msg.contains("overloaded"), "unexpected error: {msg}");
+            assert!(msg.contains("unattainable"), "unexpected error: {msg}");
+            assert_eq!(resp.accel_cycles, 0, "a shed costs no cycles");
+        }
+        let stats = coord.shutdown();
+        assert_eq!(stats.count(), 1, "only the warmup request was served");
+        assert_eq!(stats.shed, 3);
+        assert_eq!(stats.errors, 0, "a shed is not a served-then-failed request");
     }
 
     #[test]

@@ -82,16 +82,55 @@ impl Reservoir {
             }
         }
     }
+
+    /// Percentile summary of the stream. Count, mean and max are exact;
+    /// percentiles come from the retained (possibly subsampled) samples.
+    /// Zeroed [`LatencyStats`] when nothing was recorded — no path through
+    /// here indexes an empty sample vector.
+    fn summary(&self) -> LatencyStats {
+        if self.seen == 0 {
+            return LatencyStats::default();
+        }
+        let mut v = self.samples.clone();
+        v.sort_unstable();
+        let pct = |p: f64| v[((v.len() as f64 - 1.0) * p) as usize];
+        LatencyStats {
+            count: self.seen as usize,
+            mean_us: self.sum as f64 / self.seen as f64,
+            p50_us: pct(0.50),
+            p95_us: pct(0.95),
+            p99_us: pct(0.99),
+            max_us: self.max,
+        }
+    }
 }
+
+/// Upper bounds of the `kom_batch_size` histogram buckets (cumulative,
+/// Prometheus-style; an implicit `+Inf` bucket follows the last one).
+pub const BATCH_SIZE_BUCKETS: [u64; 7] = [1, 2, 4, 8, 16, 32, 64];
 
 /// Collects per-request samples plus per-batch accelerator runs.
 #[derive(Debug)]
 pub struct StatsCollector {
     latencies: Reservoir,
+    /// Queue-wait samples (submission → worker pickup), same bounded
+    /// reservoir scheme as `latencies`.
+    queue_waits: Reservoir,
     /// Sum / count of recorded batch sizes (bounded replacement for the
     /// old per-request `Vec<usize>`).
     batch_size_sum: u64,
     batch_size_n: u64,
+    /// Per-dispatch batch-size histogram: `batch_hist[i]` counts
+    /// dispatches with size ≤ [`BATCH_SIZE_BUCKETS`]`[i]` exclusive of
+    /// smaller buckets (non-cumulative in memory; rendered cumulative);
+    /// the final slot is the `+Inf` overflow. Unlike
+    /// `batch_size_sum`/`batch_size_n` (per *request*), this counts each
+    /// dispatch once — the distribution the continuous batcher's dynamic
+    /// sizing actually produces.
+    batch_hist: [u64; BATCH_SIZE_BUCKETS.len() + 1],
+    /// Sum / count of dispatch sizes behind the histogram's `_sum`/`_count`.
+    batch_hist_sum: u64,
+    batch_hist_n: u64,
     /// One-second request-count buckets covering the last
     /// [`WINDOW_SECS`] seconds, oldest first.
     window: VecDeque<(u64, u64)>,
@@ -176,8 +215,12 @@ impl StatsCollector {
     pub fn new() -> Self {
         StatsCollector {
             latencies: Reservoir::new(),
+            queue_waits: Reservoir::new(),
             batch_size_sum: 0,
             batch_size_n: 0,
+            batch_hist: [0; BATCH_SIZE_BUCKETS.len() + 1],
+            batch_hist_sum: 0,
+            batch_hist_n: 0,
             window: VecDeque::new(),
             batch_cycles_sum: 0,
             shard_busy_cycles: Vec::new(),
@@ -243,6 +286,48 @@ impl StatsCollector {
         self.batches += 1;
         self.batch_cycles_sum += cycles;
         self.accel_cycles += cycles;
+    }
+
+    /// Record the size of one dispatched batch into the
+    /// `kom_batch_size` histogram. Called once per dispatch (unlike
+    /// [`StatsCollector::record`], which carries the batch size once per
+    /// *request* for the mean), so the histogram shows the distribution
+    /// of sizes the batcher actually chose.
+    pub fn record_batch_size(&mut self, n: usize) {
+        let i = BATCH_SIZE_BUCKETS
+            .iter()
+            .position(|&le| n as u64 <= le)
+            .unwrap_or(BATCH_SIZE_BUCKETS.len());
+        self.batch_hist[i] += 1;
+        self.batch_hist_sum += n as u64;
+        self.batch_hist_n += 1;
+    }
+
+    /// Cumulative `kom_batch_size` histogram as
+    /// `(bucket upper bound, dispatches ≤ bound)` rows, ending with the
+    /// `(u64::MAX, total)` `+Inf` bucket, plus the dispatch-size sum.
+    pub fn batch_size_histogram(&self) -> (Vec<(u64, u64)>, u64, u64) {
+        let mut rows = Vec::with_capacity(self.batch_hist.len());
+        let mut cum = 0;
+        for (i, &c) in self.batch_hist.iter().enumerate() {
+            cum += c;
+            let le = BATCH_SIZE_BUCKETS.get(i).copied().unwrap_or(u64::MAX);
+            rows.push((le, cum));
+        }
+        (rows, self.batch_hist_sum, self.batch_hist_n)
+    }
+
+    /// Record one request's queue wait (submission → worker pickup), in
+    /// microseconds. Sheds, dedup hits and expired deadlines never reach
+    /// a worker, so they contribute no sample.
+    pub fn record_queue_wait(&mut self, wait_us: u64) {
+        self.queue_waits.push(wait_us);
+    }
+
+    /// Queue-wait percentiles, same reservoir semantics as
+    /// [`StatsCollector::latency`].
+    pub fn queue_wait(&self) -> LatencyStats {
+        self.queue_waits.summary()
     }
 
     /// Record one **sharded** accelerator batch: `per_shard` holds
@@ -577,20 +662,7 @@ impl StatsCollector {
     /// [`LatencyStats`] — no path through here unwraps on an empty sample
     /// vector.
     pub fn latency(&self) -> LatencyStats {
-        if self.latencies.seen == 0 {
-            return LatencyStats::default();
-        }
-        let mut v = self.latencies.samples.clone();
-        v.sort_unstable();
-        let pct = |p: f64| v[((v.len() as f64 - 1.0) * p) as usize];
-        LatencyStats {
-            count: self.latencies.seen as usize,
-            mean_us: self.latencies.sum as f64 / self.latencies.seen as f64,
-            p50_us: pct(0.50),
-            p95_us: pct(0.95),
-            p99_us: pct(0.99),
-            max_us: self.latencies.max,
-        }
+        self.latencies.summary()
     }
 
     /// Prometheus-style text dump: request/error/dedup counters, latency
@@ -662,6 +734,32 @@ impl StatsCollector {
         let _ = writeln!(out, "kom_latency_us{{quantile=\"0.99\"}} {}", l.p99_us);
         let _ = writeln!(out, "kom_latency_us_max {}", l.max_us);
         let _ = writeln!(out, "kom_latency_us_mean {:.3}", l.mean_us);
+        let q = self.queue_wait();
+        let _ = writeln!(
+            out,
+            "# HELP kom_queue_wait_us Queue wait (submission to worker pickup) in microseconds."
+        );
+        let _ = writeln!(out, "# TYPE kom_queue_wait_us summary");
+        let _ = writeln!(out, "kom_queue_wait_us{{quantile=\"0.5\"}} {}", q.p50_us);
+        let _ = writeln!(out, "kom_queue_wait_us{{quantile=\"0.95\"}} {}", q.p95_us);
+        let _ = writeln!(out, "kom_queue_wait_us{{quantile=\"0.99\"}} {}", q.p99_us);
+        let _ = writeln!(out, "kom_queue_wait_us_max {}", q.max_us);
+        let _ = writeln!(out, "kom_queue_wait_us_count {}", q.count);
+        let (buckets, bsum, bcount) = self.batch_size_histogram();
+        let _ = writeln!(
+            out,
+            "# HELP kom_batch_size Dispatched batch sizes (one observation per dispatch)."
+        );
+        let _ = writeln!(out, "# TYPE kom_batch_size histogram");
+        for (le, cum) in &buckets {
+            if *le == u64::MAX {
+                let _ = writeln!(out, "kom_batch_size_bucket{{le=\"+Inf\"}} {cum}");
+            } else {
+                let _ = writeln!(out, "kom_batch_size_bucket{{le=\"{le}\"}} {cum}");
+            }
+        }
+        let _ = writeln!(out, "kom_batch_size_sum {bsum}");
+        let _ = writeln!(out, "kom_batch_size_count {bcount}");
         let _ = writeln!(out, "kom_throughput_rps {:.3}", self.throughput_rps());
         let _ = writeln!(
             out,
@@ -953,6 +1051,51 @@ mod tests {
         assert!(text.contains("kom_deadline_expired_total 1"));
         assert!(text.contains("kom_replica_quarantined{worker=\"0\",replica=\"1\"} 0"));
         assert!(text.contains("kom_replica_quarantined{worker=\"1\",replica=\"0\"} 0"));
+        // the page stays scrapeable: every non-comment line is two tokens
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(line.split_whitespace().count(), 2, "bad line: {line}");
+        }
+    }
+
+    #[test]
+    fn batch_size_histogram_and_queue_wait_quantiles() {
+        let mut s = StatsCollector::new();
+        // empty collector renders zeroed rows without panicking
+        let (rows, sum, count) = s.batch_size_histogram();
+        assert_eq!(rows.len(), BATCH_SIZE_BUCKETS.len() + 1);
+        assert_eq!((sum, count), (0, 0));
+        assert_eq!(s.queue_wait().count, 0);
+        // dispatches of sizes 1, 3, 4, 16, 100
+        for n in [1, 3, 4, 16, 100] {
+            s.record_batch_size(n);
+        }
+        let (rows, sum, count) = s.batch_size_histogram();
+        assert_eq!(sum, 124);
+        assert_eq!(count, 5);
+        let at = |le: u64| rows.iter().find(|&&(b, _)| b == le).unwrap().1;
+        assert_eq!(at(1), 1, "size 1");
+        assert_eq!(at(2), 1, "cumulative: still just size 1");
+        assert_eq!(at(4), 3, "sizes 1, 3, 4");
+        assert_eq!(at(16), 4, "on-boundary size 16 lands in le=16");
+        assert_eq!(at(64), 4);
+        assert_eq!(at(u64::MAX), 5, "+Inf catches the 100");
+        // queue waits: 1..=100us
+        for w in 1..=100 {
+            s.record_queue_wait(w);
+        }
+        let q = s.queue_wait();
+        assert_eq!(q.count, 100);
+        assert_eq!(q.p50_us, 50);
+        assert_eq!(q.p99_us, 99);
+        assert_eq!(q.max_us, 100);
+        let text = s.metrics_text();
+        assert!(text.contains("kom_batch_size_bucket{le=\"4\"} 3"));
+        assert!(text.contains("kom_batch_size_bucket{le=\"+Inf\"} 5"));
+        assert!(text.contains("kom_batch_size_sum 124"));
+        assert!(text.contains("kom_batch_size_count 5"));
+        assert!(text.contains("kom_queue_wait_us{quantile=\"0.5\"} 50"));
+        assert!(text.contains("kom_queue_wait_us{quantile=\"0.99\"} 99"));
+        assert!(text.contains("kom_queue_wait_us_max 100"));
         // the page stays scrapeable: every non-comment line is two tokens
         for line in text.lines().filter(|l| !l.starts_with('#')) {
             assert_eq!(line.split_whitespace().count(), 2, "bad line: {line}");

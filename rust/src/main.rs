@@ -13,6 +13,7 @@
 //! kom-accel cluster [--batch 16] [--shards 4]               sharded multi-SoC run
 //! kom-accel lint    [--net tiny] [--batch 8]                static plan verifier
 //! kom-accel trace   [--net tiny] [--batch 8] [--shards 2]   Perfetto trace export
+//! kom-accel loadgen [--rate-rps N] [--continuous]           simulated-time SLO bench
 //! ```
 
 use kom_accel::accel::{
@@ -24,7 +25,10 @@ use kom_accel::cli::Args;
 use kom_accel::cluster::{Cluster, ClusterConfig, SchedulePolicy, Scheduler};
 use kom_accel::cnn::networks::{Network, NetworkInstance, NetworkKind, DEFAULT_SHARD_RETRIES};
 use kom_accel::cnn::{analysis, Tensor};
-use kom_accel::coordinator::{Coordinator, CoordinatorConfig, DedupCache, StatsCollector};
+use kom_accel::coordinator::{
+    probe_us_per_req, run_loadgen, Arrivals, BatchMode, Coordinator, CoordinatorConfig,
+    DedupCache, LoadGenConfig, StatsCollector,
+};
 use kom_accel::multipliers::{generate, MultKind, MultiplierSpec};
 use kom_accel::report::Table;
 use kom_accel::runtime::{golden, ArtifactStore};
@@ -46,13 +50,16 @@ COMMANDS
   serve    [--requests 64] [--workers 2] [--batch 8] [--shards 1] [--no-pipeline]
            [--no-fuse] [--no-dedup] [--dedup-budget W] [--no-config-cache]
            [--metrics-interval N] [--queue-depth N] [--deadline-us N]
-           [--fault-seed S] [--fault-rate P]
+           [--fault-seed S] [--fault-rate P] [--continuous] [--slo-p99-us N]
   cluster  [--batch 16] [--shards 4] [--policy rr|least-outstanding] [--net tiny]
            [--no-pipeline] [--no-fuse] [--no-config-cache]
            [--fault-seed S] [--fault-rate P]
   lint     [--net tiny] [--batch 8] [--shards 1] [--no-fuse] [--deny-warnings]
   trace    [--net tiny] [--batch 8] [--shards 2] [--out trace.json]
            [--no-pipeline] [--no-fuse] [--no-config-cache]
+  loadgen  [--requests 128] [--batch 16] [--shards 4] [--seed S]
+           [--rate-rps N | --closed C [--think-us N] | --burst B [--period-us N]]
+           [--continuous] [--slo-p99-us N] [--max-wait-us N]
 
 Pipelining: replica SoCs overlap layer DMA with engine compute by default
 (double-buffered scratchpad staging); --no-pipeline restores the serial
@@ -87,6 +94,17 @@ weight-load corruption, stuck replicas) at per-site probability
 --fault-rate P; faulted shards retry on healthy replicas, the faulty
 replica is quarantined and re-admitted after a health probe, and every
 served answer must stay bit-exact with the host reference.
+Continuous batching: serve's --continuous replaces the fixed
+fill-to-max/timeout batcher with worker-driven admission — a free worker
+takes whatever is queued immediately, sized against --slo-p99-us N (the
+p99 latency target in microseconds, 0 = no target) using the scheduler's
+measured cycles/request; unattainable targets shed at the front door
+with explicit overloaded failures. loadgen drives the same cluster
+through a simulated-time arrival process (open-loop Poisson --rate-rps,
+closed-loop --closed C clients with --think-us, or --burst B every
+--period-us) in either batching mode and prints the latency
+distribution; every response is checked bit-exact against the host
+reference.
 ";
 
 /// Optional numeric flag: absent → `None`, present → parsed or a usage
@@ -263,6 +281,8 @@ fn cmd_serve(args: &Args) -> kom_accel::Result<()> {
     let deadline_us: u64 = args.get_num("deadline-us", 0u64)?;
     let fault_seed: Option<u64> = opt_num(args, "fault-seed")?;
     let fault_rate: f64 = args.get_num("fault-rate", 0.0f64)?;
+    let continuous = args.has("continuous");
+    let slo_p99_us: u64 = args.get_num("slo-p99-us", 0u64)?;
     let inst = NetworkInstance::random(Network::build(NetworkKind::Tiny), 42)?;
     let cfg = CoordinatorConfig {
         workers,
@@ -273,6 +293,8 @@ fn cmd_serve(args: &Args) -> kom_accel::Result<()> {
         dedup_budget_words,
         config_cache,
         queue_depth,
+        continuous,
+        slo_p99_us: (slo_p99_us > 0).then_some(slo_p99_us),
         deadline: (deadline_us > 0).then(|| std::time::Duration::from_micros(deadline_us)),
         fault_seed,
         fault_rate,
@@ -301,11 +323,16 @@ fn cmd_serve(args: &Args) -> kom_accel::Result<()> {
     let l = stats.latency();
     println!(
         "served {requests} requests on {workers} workers (max batch {max_batch}, {shards} \
-         shard(s)/worker, pipelining {}, fusion {})",
+         shard(s)/worker, pipelining {}, fusion {}, {} batching)",
         if pipeline { "on" } else { "off" },
-        if fuse { "on" } else { "off" }
+        if fuse { "on" } else { "off" },
+        if continuous { "continuous" } else { "fixed" }
     );
     println!("  host latency: p50={}us p95={}us p99={}us max={}us", l.p50_us, l.p95_us, l.p99_us, l.max_us);
+    let qw = stats.queue_wait();
+    if qw.count > 0 {
+        println!("  queue wait: p50={}us p99={}us max={}us", qw.p50_us, qw.p99_us, qw.max_us);
+    }
     println!("  mean batch: {:.2}", stats.mean_batch());
     println!("  simulated accel cycles: {}", stats.accel_cycles);
     if pipeline {
@@ -362,6 +389,85 @@ fn cmd_serve(args: &Args) -> kom_accel::Result<()> {
         println!("  per-layer cycle hotspots (top {}):", hot.len());
         println!("{}", hotspot_table(&hot));
     }
+    Ok(())
+}
+
+/// `loadgen`: drive a real cluster through the simulated-time load
+/// generator and print the latency distribution — the CLI face of the
+/// `BENCH_slo.json` bench section.
+fn cmd_loadgen(args: &Args) -> kom_accel::Result<()> {
+    let requests: usize = args.get_num("requests", 128usize)?;
+    let max_batch: usize = args.get_num("batch", 16usize)?;
+    let shards: usize = args.get_num("shards", 4usize)?;
+    let seed: u64 = args.get_num("seed", 42_000u64)?;
+    let slo_p99_us: u64 = args.get_num("slo-p99-us", 0u64)?;
+    let continuous = args.has("continuous");
+    let clock_mhz = 200.0;
+    let inst = NetworkInstance::random(Network::build(NetworkKind::Tiny), 42)?;
+    // measure the warm cost first so rate/wait defaults track the
+    // hardware instead of hard-coding microseconds
+    let e = probe_us_per_req(&inst, shards, max_batch, clock_mhz)?;
+    let capacity_rps = shards as f64 * 1e6 / e as f64;
+    let arrivals = if let Some(concurrency) = opt_num::<usize>(args, "closed")? {
+        Arrivals::Closed {
+            concurrency,
+            think_us: args.get_num("think-us", 0u64)?,
+        }
+    } else if let Some(burst) = opt_num::<usize>(args, "burst")? {
+        Arrivals::Bursts {
+            burst,
+            period_us: args.get_num("period-us", 8 * e.max(1))?,
+        }
+    } else {
+        Arrivals::Poisson {
+            rate_rps: args.get_num("rate-rps", capacity_rps * 0.5)?,
+            seed: 11,
+        }
+    };
+    let mode = if continuous {
+        BatchMode::Continuous
+    } else {
+        BatchMode::Fixed {
+            max_wait_us: args.get_num("max-wait-us", 2 * e.max(1))?,
+        }
+    };
+    println!(
+        "loadgen: {requests} requests, {arrivals:?}, {mode:?}, {shards} shard(s), \
+         batch {max_batch} (warm cost {e} us/req, capacity {capacity_rps:.0} req/s)"
+    );
+    let r = run_loadgen(
+        &inst,
+        &LoadGenConfig {
+            arrivals,
+            mode,
+            requests,
+            max_batch,
+            shards,
+            clock_mhz,
+            slo_p99_us: (slo_p99_us > 0).then_some(slo_p99_us),
+            seed,
+            warmup: true,
+        },
+    )?;
+    println!(
+        "  served {} / shed {} in {} simulated us ({:.0} req/s)",
+        r.served, r.shed, r.makespan_us, r.throughput_rps
+    );
+    println!(
+        "  latency: p50={}us p95={}us p99={}us max={}us mean={:.0}us",
+        r.p50_us, r.p95_us, r.p99_us, r.max_us, r.mean_us
+    );
+    println!(
+        "  batches: {} (mean {:.2}, max {}); learned cost {} us/req",
+        r.batches, r.mean_batch, r.max_batch_size, r.ema_us_per_req
+    );
+    if r.mismatches > 0 {
+        return Err(kom_accel::Error::Coordinator(format!(
+            "{} response(s) diverged from forward_ref",
+            r.mismatches
+        )));
+    }
+    println!("  every served response bit-exact vs forward_ref");
     Ok(())
 }
 
@@ -785,6 +891,7 @@ fn main() {
         Some("cluster") => cmd_cluster(&args),
         Some("lint") => cmd_lint(&args),
         Some("trace") => cmd_trace(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("help") | None => {
             println!("{USAGE}");
             Ok(())

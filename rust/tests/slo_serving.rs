@@ -1,0 +1,180 @@
+//! Latency-SLO acceptance gates for continuous batching (PR 10):
+//!
+//! (a) under a bursty arrival pattern on Tiny at 4 shards, continuous
+//!     batching achieves ≥ 1.3× lower **simulated** p99 latency than the
+//!     fixed fill-to-max/timeout batcher at equal offered load, with
+//!     every response bit-exact vs `forward_ref`;
+//! (b) at closed-loop saturation, continuous throughput is no worse
+//!     than fixed;
+//! (c) a burst under a tight SLO splits into multiple small one-wave
+//!     batches (dynamic sizing shrinks the dispatch);
+//! (d) the same burst under a loose SLO (or none) coalesces into one
+//!     full-capacity dispatch;
+//! (e) requests are shed only when the learned EMA says the SLO is
+//!     unattainable — and then *all* are shed at the front door.
+//!
+//! Everything runs on the simulated-microsecond clock of
+//! `coordinator::loadgen`, with scenario constants expressed in units of
+//! `probe_us_per_req` (the warmed cost of one request on this hardware)
+//! so the gates track the cycle model instead of hard-coding counts.
+
+use kom_accel::cnn::networks::{Network, NetworkInstance, NetworkKind};
+use kom_accel::coordinator::{
+    probe_us_per_req, run_loadgen, Arrivals, BatchMode, LoadGenConfig, LoadGenReport,
+};
+
+fn tiny() -> NetworkInstance {
+    NetworkInstance::random(Network::build(NetworkKind::Tiny), 42).unwrap()
+}
+
+const CLOCK_MHZ: f64 = 200.0;
+
+fn run(inst: &NetworkInstance, cfg: LoadGenConfig) -> LoadGenReport {
+    let r = run_loadgen(inst, &cfg).unwrap();
+    assert_eq!(r.mismatches, 0, "every served response must be bit-exact");
+    r
+}
+
+/// Gate (a): 48 requests in bursts of 4 every 12·e µs, 4 shards,
+/// capacity 16. The fixed batcher holds each burst for its 6·e window
+/// before dispatching; continuous dispatches the moment the worker is
+/// free. p99 must improve by at least 1.3× (it lands near 1 + 6e/e₁,
+/// comfortably above).
+#[test]
+fn bursty_arrivals_continuous_p99_beats_fixed_by_1_3x() {
+    let inst = tiny();
+    let e = probe_us_per_req(&inst, 4, 16, CLOCK_MHZ).unwrap();
+    assert!(e >= 4, "Tiny must cost ≥ 4µs/request at 200MHz, got {e}");
+    let base = LoadGenConfig {
+        arrivals: Arrivals::Bursts {
+            burst: 4,
+            period_us: 12 * e,
+        },
+        mode: BatchMode::Continuous,
+        requests: 48,
+        max_batch: 16,
+        shards: 4,
+        clock_mhz: CLOCK_MHZ,
+        slo_p99_us: None,
+        seed: 7_000,
+        warmup: true,
+    };
+    let cont = run(&inst, base);
+    let fixed = run(
+        &inst,
+        LoadGenConfig {
+            mode: BatchMode::Fixed { max_wait_us: 6 * e },
+            ..base
+        },
+    );
+    assert_eq!(cont.served, 48);
+    assert_eq!(fixed.served, 48);
+    assert_eq!(cont.shed, 0);
+    assert!(
+        fixed.p99_us * 10 >= cont.p99_us * 13,
+        "continuous p99 {}µs must be ≥1.3× below fixed p99 {}µs",
+        cont.p99_us,
+        fixed.p99_us
+    );
+}
+
+/// Gate (b): 32 closed-loop clients with zero think time saturate the
+/// worker; both modes dispatch full batches back to back, so continuous
+/// must not give up throughput for its latency win.
+#[test]
+fn closed_loop_saturation_throughput_no_worse_than_fixed() {
+    let inst = tiny();
+    let e = probe_us_per_req(&inst, 4, 16, CLOCK_MHZ).unwrap();
+    let base = LoadGenConfig {
+        arrivals: Arrivals::Closed {
+            concurrency: 32,
+            think_us: 0,
+        },
+        mode: BatchMode::Continuous,
+        requests: 64,
+        max_batch: 16,
+        shards: 4,
+        clock_mhz: CLOCK_MHZ,
+        slo_p99_us: None,
+        seed: 8_000,
+        warmup: true,
+    };
+    let cont = run(&inst, base);
+    let fixed = run(
+        &inst,
+        LoadGenConfig {
+            mode: BatchMode::Fixed { max_wait_us: 4 * e },
+            ..base
+        },
+    );
+    assert_eq!(cont.served, 64);
+    assert_eq!(fixed.served, 64);
+    assert!(
+        cont.throughput_rps >= fixed.throughput_rps * 0.98,
+        "saturation throughput regressed: continuous {:.0} rps vs fixed {:.0} rps",
+        cont.throughput_rps,
+        fixed.throughput_rps
+    );
+}
+
+fn one_burst_of_8(slo_p99_us: Option<u64>) -> LoadGenConfig {
+    LoadGenConfig {
+        arrivals: Arrivals::Bursts {
+            burst: 8,
+            period_us: 1,
+        },
+        mode: BatchMode::Continuous,
+        requests: 8,
+        max_batch: 8,
+        shards: 4,
+        clock_mhz: CLOCK_MHZ,
+        slo_p99_us,
+        seed: 9_000,
+        warmup: true,
+    }
+}
+
+/// Gate (c): SLO = 1.5·e admits one-wave dispatches (4 over 4 shards,
+/// ≈ e) but rejects two waves (≈ 2e), so a burst of 8 must split into
+/// exactly two batches of 4 — and nothing is shed, because a lone
+/// request still fits the target.
+#[test]
+fn tight_slo_splits_a_burst_into_one_wave_batches() {
+    let inst = tiny();
+    let e = probe_us_per_req(&inst, 4, 8, CLOCK_MHZ).unwrap();
+    assert!(e >= 4, "Tiny must cost ≥ 4µs/request at 200MHz, got {e}");
+    let r = run(&inst, one_burst_of_8(Some(e + e / 2)));
+    assert_eq!(r.served, 8);
+    assert_eq!(r.shed, 0, "attainable SLO must never shed");
+    assert_eq!(r.batches, 2, "burst of 8 must split into two one-wave batches");
+    assert_eq!(r.max_batch_size, 4);
+    assert!((r.mean_batch - 4.0).abs() < f64::EPSILON);
+}
+
+/// Gate (d): with a loose SLO (100·e) or none at all, the same burst
+/// coalesces into a single full-capacity dispatch.
+#[test]
+fn loose_or_absent_slo_coalesces_the_burst() {
+    let inst = tiny();
+    let e = probe_us_per_req(&inst, 4, 8, CLOCK_MHZ).unwrap();
+    for slo in [Some(100 * e), None] {
+        let r = run(&inst, one_burst_of_8(slo));
+        assert_eq!(r.served, 8, "slo {slo:?}");
+        assert_eq!(r.shed, 0);
+        assert_eq!(r.batches, 1, "loose SLO must coalesce, got {} batches", r.batches);
+        assert_eq!(r.max_batch_size, 8);
+    }
+}
+
+/// Gate (e): SLO = e/2 is below the cost of executing a single request,
+/// so admission sheds everything at the front door — no batch ever forms.
+#[test]
+fn unattainable_slo_sheds_at_admission() {
+    let inst = tiny();
+    let e = probe_us_per_req(&inst, 4, 8, CLOCK_MHZ).unwrap();
+    assert!(e >= 4, "need e/2 strictly below e, got e = {e}");
+    let r = run_loadgen(&inst, &one_burst_of_8(Some(e / 2))).unwrap();
+    assert_eq!(r.served, 0);
+    assert_eq!(r.shed, 8, "every request must shed when the SLO is unattainable");
+    assert_eq!(r.batches, 0);
+}
